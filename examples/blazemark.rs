@@ -1,0 +1,60 @@
+//! Blazemark-lite: the paper's §6 evaluation in one command.
+//!
+//! Runs all four benchmarks (dvecdvecadd, daxpy, dmatdmatadd,
+//! dmatdmatmult) on both runtimes at a few sizes around each op's
+//! parallelization threshold and prints the MFLOP/s ratio table — a quick
+//! textual version of Figures 2–9 (the full sweeps live in
+//! `cargo bench` / `hpxmp heatmap`).
+//!
+//! Run: `cargo run --release --example blazemark -- [--threads N] [--policy P]`
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::baseline::BaselineRuntime;
+use hpxmp::coordinator::blazemark::{measure, Op};
+use hpxmp::omp::OmpRuntime;
+use hpxmp::par::HpxMpRuntime;
+use hpxmp::util::cli::Args;
+use hpxmp::util::timing::BenchCfg;
+
+fn main() {
+    let args = Args::from_env(&["threads", "policy"]);
+    let threads = args.get_usize("threads", 4);
+    let policy = args
+        .get("policy")
+        .and_then(PolicyKind::parse)
+        .unwrap_or(PolicyKind::PriorityLocal);
+
+    let hpx = HpxMpRuntime::new(OmpRuntime::new(threads, policy));
+    let base = BaselineRuntime::new(threads);
+    let cfg = BenchCfg::quick();
+
+    println!("blazemark-lite: {threads} threads, policy {}", policy.name());
+    println!(
+        "{:<14} {:>10} {:>14} {:>14} {:>8}",
+        "benchmark", "size", "hpxMP MFLOP/s", "OpenMP MFLOP/s", "ratio"
+    );
+    for op in Op::ALL {
+        // Sizes straddling the threshold: below (serial on both), at, and
+        // well above (parallel, the paper's comparable regime).
+        let sizes: Vec<usize> = if op.is_vector() {
+            vec![10_000, 38_000, 1_048_576]
+        } else if op == Op::DMatDMatAdd {
+            vec![100, 190, 700]
+        } else {
+            vec![32, 55, 300]
+        };
+        for n in sizes {
+            let h = measure(&hpx, op, threads, n, &cfg);
+            let b = measure(&base, op, threads, n, &cfg);
+            println!(
+                "{:<14} {:>10} {:>14.1} {:>14.1} {:>8.3}",
+                op.name(),
+                n,
+                h,
+                b,
+                h / b
+            );
+        }
+    }
+    println!("\n(ratio < 1: hpxMP slower — expected near thresholds, paper §6)");
+}

@@ -1,0 +1,113 @@
+//! OMPT tool example (paper §5.4): build a first-party performance tool
+//! from the Table-3 callbacks — an event timeline of parallel regions,
+//! implicit tasks, and explicit tasks.
+//!
+//! Run: `cargo run --release --example ompt_trace`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::omp::ompt::{Endpoint, TaskStatus};
+use hpxmp::omp::team::{current_ctx, fork_call};
+use hpxmp::omp::OmpRuntime;
+
+#[derive(Debug)]
+#[allow(dead_code)] // fields are shown via Debug
+struct Event {
+    t_us: u128,
+    what: String,
+}
+
+fn main() {
+    let rt = OmpRuntime::new(4, PolicyKind::PriorityLocal);
+    let start = Instant::now();
+    let log: Arc<Mutex<Vec<Event>>> = Arc::new(Mutex::new(Vec::new()));
+    let push = {
+        let log = log.clone();
+        move |what: String| {
+            log.lock().unwrap().push(Event {
+                t_us: start.elapsed().as_micros(),
+                what,
+            })
+        }
+    };
+
+    // Register the Table-3 callback set.
+    {
+        let p = push.clone();
+        rt.ompt.set_parallel_begin(Box::new(move |pid, size| {
+            p(format!("parallel_begin id={pid} team={size}"))
+        }));
+    }
+    {
+        let p = push.clone();
+        rt.ompt
+            .set_parallel_end(Box::new(move |pid| p(format!("parallel_end id={pid}"))));
+    }
+    {
+        let p = push.clone();
+        rt.ompt
+            .set_implicit_task(Box::new(move |ep, pid, size, tid| {
+                let e = if ep == Endpoint::Begin { "begin" } else { "end" };
+                p(format!("implicit_task {e} region={pid} tid={tid}/{size}"))
+            }));
+    }
+    {
+        let p = push.clone();
+        rt.ompt.set_task_create(Box::new(move |parent, child| {
+            p(format!("task_create parent={parent} child={child}"))
+        }));
+    }
+    {
+        let p = push.clone();
+        rt.ompt.set_task_schedule(Box::new(move |prev, st, next| {
+            let s = match st {
+                TaskStatus::Complete => "complete",
+                TaskStatus::Yield => "yield",
+                TaskStatus::Switch => "switch",
+            };
+            p(format!("task_schedule {s} prev={prev} next={next}"))
+        }));
+    }
+
+    // Workload: a region with loop work + tasks.
+    let work = Arc::new(AtomicUsize::new(0));
+    {
+        let work = work.clone();
+        fork_call(&rt, Some(3), move |c| {
+            c.for_static(0..300, None, |_| {
+                work.fetch_add(1, Ordering::Relaxed);
+            });
+            if c.tid == 0 {
+                let ctx = current_ctx().unwrap();
+                for _ in 0..5 {
+                    let work = work.clone();
+                    ctx.task(move || {
+                        work.fetch_add(100, Ordering::Relaxed);
+                    });
+                }
+                ctx.taskwait();
+            }
+        });
+    }
+
+    // Report.
+    let events = log.lock().unwrap();
+    println!("OMPT timeline ({} events):", events.len());
+    for e in events.iter() {
+        println!("  {:>8} us  {}", e.t_us, e.what);
+    }
+    let count = |pat: &str| events.iter().filter(|e| e.what.starts_with(pat)).count();
+    println!("\nsummary:");
+    println!("  parallel regions : {}", count("parallel_begin"));
+    println!("  implicit begins  : {}", count("implicit_task begin"));
+    println!("  tasks created    : {}", count("task_create"));
+    println!("  schedule events  : {}", count("task_schedule"));
+    assert_eq!(count("parallel_begin"), 1);
+    assert_eq!(count("implicit_task begin"), 3);
+    assert_eq!(count("task_create"), 5);
+    assert_eq!(work.load(Ordering::SeqCst), 800);
+    println!("ompt_trace OK");
+}

@@ -1,0 +1,108 @@
+//! Quickstart: the hpxMP API tour — what `#pragma omp ...` lowers to.
+//!
+//! Each block shows the pragma a C/C++ program would write and the runtime
+//! calls Clang would generate against hpxMP (paper §5).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::omp::api::*;
+use hpxmp::omp::sync::{critical, AtomicF64};
+use hpxmp::omp::team::{current_ctx, fork_call};
+use hpxmp::omp::{OmpRuntime, SchedKind, Schedule};
+
+fn main() {
+    // "Start HPX back end" (paper §5.6): 4 workers, default policy.
+    let rt = OmpRuntime::new(4, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(4);
+
+    // ---- #pragma omp parallel ------------------------------------------------
+    println!("== parallel ==");
+    fork_call(&rt, None, |ctx| {
+        println!(
+            "  hello from thread {}/{}",
+            ctx.thread_num(),
+            ctx.num_threads()
+        );
+    });
+
+    // ---- #pragma omp parallel for (static + dynamic) -------------------------
+    println!("== parallel for ==");
+    let sum = Arc::new(AtomicUsize::new(0));
+    {
+        let sum = sum.clone();
+        fork_call(&rt, Some(4), move |ctx| {
+            // static: contiguous blocks
+            ctx.for_static(0..1000, None, |i| {
+                sum.fetch_add(i as usize, Ordering::Relaxed);
+            });
+            ctx.barrier();
+            // dynamic: chunked self-scheduling
+            ctx.for_dynamic(
+                0..1000,
+                Schedule::new(SchedKind::Dynamic, Some(64)),
+                |i| {
+                    sum.fetch_add(i as usize, Ordering::Relaxed);
+                },
+            );
+        });
+    }
+    assert_eq!(sum.load(Ordering::SeqCst), 2 * 999 * 1000 / 2);
+    println!("  sum of 0..1000, twice = {}", sum.load(Ordering::SeqCst));
+
+    // ---- #pragma omp critical / atomic ---------------------------------------
+    println!("== critical & atomic ==");
+    let acc = Arc::new(AtomicF64::new(0.0));
+    {
+        let acc = acc.clone();
+        fork_call(&rt, Some(4), move |_| {
+            for _ in 0..100 {
+                critical("quickstart", || { /* exclusive section */ });
+                acc.fetch_add(0.5); // #pragma omp atomic
+            }
+        });
+    }
+    println!("  atomic sum = {}", acc.load());
+
+    // ---- #pragma omp single / master -----------------------------------------
+    println!("== single & master ==");
+    fork_call(&rt, Some(4), |ctx| {
+        ctx.single(|| println!("  single: ran once (thread {})", ctx.thread_num()));
+        ctx.master(|| println!("  master: thread 0 only"));
+    });
+
+    // ---- #pragma omp task + taskwait ------------------------------------------
+    println!("== tasks ==");
+    let done = Arc::new(AtomicUsize::new(0));
+    {
+        let done = done.clone();
+        fork_call(&rt, Some(2), move |c| {
+            if c.tid == 0 {
+                let ctx = current_ctx().unwrap();
+                for i in 0..8 {
+                    let done = done.clone();
+                    ctx.task(move || {
+                        done.fetch_add(i, Ordering::Relaxed);
+                    });
+                }
+                ctx.taskwait();
+            }
+        });
+    }
+    println!("  8 tasks summed to {}", done.load(Ordering::SeqCst));
+
+    // ---- runtime library (Table 2) --------------------------------------------
+    println!("== omp_* API ==");
+    println!("  omp_get_num_procs   = {}", omp_get_num_procs());
+    println!("  omp_get_max_threads = {}", omp_get_max_threads());
+    println!("  omp_get_wtime       = {:.6}s", omp_get_wtime());
+    let l = omp_init_lock();
+    omp_set_lock(&l);
+    omp_unset_lock(&l);
+    println!("  lock roundtrip ok");
+
+    println!("quickstart OK");
+}

@@ -1,0 +1,128 @@
+//! Task-dependency wavefront: the "more general task based programming
+//! model" the paper's conclusion says OpenMP applications should migrate
+//! toward — expressed with `task depend`, running on the AMT scheduler.
+//!
+//! Computes a 2-D wavefront recurrence over a blocked grid:
+//!     G[i][j] = f(G[i-1][j], G[i][j-1])
+//! Block (i,j) is one task with `depend(in: left, up) depend(out: self)`;
+//! the dependence graph is a DAG the scheduler executes with maximal
+//! parallelism along anti-diagonals.  Verified against a serial sweep.
+//!
+//! Run: `cargo run --release --example task_graph -- [--blocks N] [--block-size B]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::omp::team::{current_ctx, fork_call};
+use hpxmp::omp::{Dep, DepKind, OmpRuntime};
+use hpxmp::util::cli::Args;
+
+/// One block-cell update: a small stencil-ish mixing kernel.
+fn update(cur: &mut [f64], left: &[f64], up: &[f64]) {
+    for k in 0..cur.len() {
+        let l = left[k];
+        let u = up[k % up.len()];
+        cur[k] = 0.5 * (l + u) + 0.25 * (l * u).sin();
+    }
+}
+
+fn run_serial(nb: usize, bs: usize) -> Vec<Vec<f64>> {
+    let mut grid: Vec<Vec<f64>> = (0..nb * nb).map(|c| vec![c as f64 * 1e-3; bs]).collect();
+    for i in 0..nb {
+        for j in 0..nb {
+            let left = if j > 0 { grid[i * nb + j - 1].clone() } else { vec![1.0; bs] };
+            let up = if i > 0 { grid[(i - 1) * nb + j].clone() } else { vec![1.0; bs] };
+            update(&mut grid[i * nb + j], &left, &up);
+        }
+    }
+    grid
+}
+
+fn main() {
+    let args = Args::from_env(&["blocks", "block-size", "threads"]);
+    let nb = args.get_usize("blocks", 16);
+    let bs = args.get_usize("block-size", 1024);
+    let threads = args.get_usize("threads", 4);
+
+    println!("task_graph: {nb}x{nb} blocks of {bs} elements, {threads} workers");
+    let expected = run_serial(nb, bs);
+
+    let rt = OmpRuntime::new(threads, PolicyKind::PriorityLocal);
+    // Shared grid: per-block interior mutability through raw parts, safe
+    // because the dependence DAG serializes conflicting accesses (that is
+    // the whole point of `depend`).
+    let grid: Arc<Vec<std::sync::Mutex<Vec<f64>>>> = Arc::new(
+        (0..nb * nb)
+            .map(|c| std::sync::Mutex::new(vec![c as f64 * 1e-3; bs]))
+            .collect(),
+    );
+
+    let t0 = Instant::now();
+    {
+        let grid = grid.clone();
+        fork_call(&rt, Some(threads), move |c| {
+            if c.tid != 0 {
+                return; // single producer, AMT consumers
+            }
+            let ctx = current_ctx().unwrap();
+            // Address tokens for depend matching: one per block.
+            for i in 0..nb {
+                for j in 0..nb {
+                    let mut deps = vec![Dep {
+                        addr: i * nb + j,
+                        kind: DepKind::Out,
+                    }];
+                    if j > 0 {
+                        deps.push(Dep {
+                            addr: i * nb + j - 1,
+                            kind: DepKind::In,
+                        });
+                    }
+                    if i > 0 {
+                        deps.push(Dep {
+                            addr: (i - 1) * nb + j,
+                            kind: DepKind::In,
+                        });
+                    }
+                    let grid = grid.clone();
+                    ctx.task_with_deps(&deps, move || {
+                        let left = if j > 0 {
+                            grid[i * nb + j - 1].lock().unwrap().clone()
+                        } else {
+                            vec![1.0; bs]
+                        };
+                        let up = if i > 0 {
+                            grid[(i - 1) * nb + j].lock().unwrap().clone()
+                        } else {
+                            vec![1.0; bs]
+                        };
+                        let mut cur = grid[i * nb + j].lock().unwrap();
+                        update(&mut cur, &left, &up);
+                    });
+                }
+            }
+            ctx.taskwait();
+        });
+    }
+    let dt = t0.elapsed();
+
+    // Verify every block against the serial sweep.
+    let mut max_err = 0.0f64;
+    for c in 0..nb * nb {
+        let got = grid[c].lock().unwrap();
+        for (a, b) in got.iter().zip(&expected[c]) {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    let m = rt.sched.metrics();
+    println!(
+        "  {} tasks in {:.1} ms  ({:.0} tasks/s)  max_err={max_err:e}",
+        nb * nb,
+        dt.as_secs_f64() * 1e3,
+        (nb * nb) as f64 / dt.as_secs_f64()
+    );
+    println!("  scheduler: {m}");
+    assert!(max_err < 1e-12, "wavefront result mismatch");
+    println!("task_graph OK");
+}

@@ -1,0 +1,7 @@
+"""Build-time (compile-path) python package for hpxmp-rs.
+
+Layer-2 JAX ops (:mod:`compile.model`) call the Layer-1 Pallas kernels
+(:mod:`compile.kernels`); :mod:`compile.aot` lowers them once to HLO text in
+``artifacts/``, which the rust coordinator loads via PJRT.  Nothing in this
+package is imported at run time.
+"""

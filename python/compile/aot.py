@@ -1,0 +1,143 @@
+"""AOT lowering: JAX/Pallas chunk ops -> HLO text artifacts + manifest.
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 rust crate) rejects
+(``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Produces one ``<name>.hlo.txt`` per (op, dtype, chunk-shape) plus
+``manifest.json`` describing parameter order/shapes/dtypes so the rust
+registry (rust/src/runtime/registry.rs) can marshal literals without
+guessing.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # f64 artifacts (Blaze is double)
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue.  Chunk shapes are the contract between the python
+# compile path and the rust runtime: the rust loop scheduler carves work
+# into exactly these shapes (tails are computed natively in rust).
+# ---------------------------------------------------------------------------
+
+VEC_CHUNK = 65_536       # 512 rows x 128 lanes
+MADD_ROWS = 128          # row band height for dmatdmatadd chunks
+MADD_COLS = 512
+MM_BM = 64               # matmul row-block height
+MM_K = 512
+MM_N = 512
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def catalogue():
+    """Return the list of artifacts to build: (name, fn, example_args, meta)."""
+    arts = []
+    for dt, tag in (("float32", "f32"), ("float64", "f64")):
+        arts.append(
+            (
+                f"daxpy_{tag}_{VEC_CHUNK}",
+                model.daxpy_chunk,
+                (_spec((), dt), _spec((VEC_CHUNK,), dt), _spec((VEC_CHUNK,), dt)),
+                {"op": "daxpy", "dtype": tag, "chunk": VEC_CHUNK},
+            )
+        )
+        arts.append(
+            (
+                f"vadd_{tag}_{VEC_CHUNK}",
+                model.vadd_chunk,
+                (_spec((VEC_CHUNK,), dt), _spec((VEC_CHUNK,), dt)),
+                {"op": "dvecdvecadd", "dtype": tag, "chunk": VEC_CHUNK},
+            )
+        )
+        arts.append(
+            (
+                f"madd_{tag}_{MADD_ROWS}x{MADD_COLS}",
+                model.madd_chunk,
+                (
+                    _spec((MADD_ROWS, MADD_COLS), dt),
+                    _spec((MADD_ROWS, MADD_COLS), dt),
+                ),
+                {
+                    "op": "dmatdmatadd",
+                    "dtype": tag,
+                    "rows": MADD_ROWS,
+                    "cols": MADD_COLS,
+                },
+            )
+        )
+    # Matmul: f32 only — the MXU story (bf16/f32 accumulate) has no f64 path.
+    arts.append(
+        (
+            f"matmul_f32_{MM_BM}x{MM_K}x{MM_N}",
+            model.matmul_rowblock,
+            (_spec((MM_BM, MM_K), "float32"), _spec((MM_K, MM_N), "float32")),
+            {"op": "dmatdmatmult", "dtype": "f32", "bm": MM_BM, "k": MM_K, "n": MM_N},
+        )
+    )
+    return arts
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+    for name, fn, example_args, meta in catalogue():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in example_args
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            **meta,
+        }
+        manifest["artifacts"].append(entry)
+        print(f"  {fname:40s} {len(text):>9d} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    manifest = build(args.out)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the four Blazemark operations.
+
+Each kernel is written in TPU idiom (last dimension = 128 lanes, block
+shapes sized for VMEM, matmul tiles shaped for the MXU) but is lowered with
+``interpret=True`` so the resulting HLO runs on any PJRT backend, including
+the rust CPU client on the request path.  Correctness is pinned against the
+pure-jnp oracles in :mod:`compile.kernels.ref` by the pytest suite.
+"""
+
+from compile.kernels.daxpy import daxpy
+from compile.kernels.vadd import vadd
+from compile.kernels.madd import madd
+from compile.kernels.matmul import matmul
+
+__all__ = ["daxpy", "vadd", "madd", "matmul"]

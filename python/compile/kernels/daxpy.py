@@ -1,0 +1,56 @@
+"""Pallas daxpy kernel: ``o = b + beta * a`` (BLAS-1 axpy, paper Fig 3/7).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's OpenMP loop
+chunks a 1-D double vector across threads.  On TPU the natural layout is a
+``(rows, 128)`` 2-D view — 128 lanes is the VPU/VREG lane width — so the
+kernel tiles ``(BLOCK_ROWS, 128)`` blocks through VMEM, one grid step per
+block.  One grid step plays the role of one OpenMP loop chunk.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 256 rows x 128 lanes x 4 B = 128 KiB per f32 operand block; three operands
+# in flight = 384 KiB of VMEM, comfortably inside a 16 MiB budget and big
+# enough to amortize the HBM->VMEM copy.
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _daxpy_kernel(beta_ref, a_ref, b_ref, o_ref):
+    o_ref[...] = b_ref[...] + beta_ref[0, 0] * a_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def daxpy(beta, a, b, *, block_rows=BLOCK_ROWS):
+    """``b + beta * a`` over a flat vector whose size divides ``128``.
+
+    ``beta`` is a scalar; ``a``/``b`` are rank-1 and equal-shaped.  The
+    vector is viewed as ``(n/128, 128)`` and processed in row blocks.
+    """
+    n = a.shape[0]
+    assert n % LANES == 0, f"n={n} must be a multiple of {LANES}"
+    rows = n // LANES
+    br = min(block_rows, rows)
+    # Grid must tile the row dimension exactly; callers pick chunk sizes so
+    # rows % br == 0 (the rust side pads/splits tails before offload).
+    assert rows % br == 0, f"rows={rows} not divisible by block_rows={br}"
+    a2 = a.reshape(rows, LANES)
+    b2 = b.reshape(rows, LANES)
+    beta2 = jnp.asarray(beta, dtype=a.dtype).reshape(1, 1)
+    out = pl.pallas_call(
+        _daxpy_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),      # beta: replicated
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),  # a row-block
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),  # b row-block
+        ],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), a.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(beta2, a2, b2)
+    return out.reshape(n)

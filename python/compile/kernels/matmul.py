@@ -1,0 +1,57 @@
+"""Pallas dense-matmul kernel: ``O = A @ B`` (paper Fig 5/9).
+
+TPU adaptation: the classic three-level blocked matmul.  The grid walks
+``(m/BM, n/BN, k/BK)``; each step multiplies an MXU-shaped ``(BM, BK)`` x
+``(BK, BN)`` tile pair resident in VMEM and accumulates into the output
+block, which stays pinned in VMEM across the k loop (the k axis is the
+innermost / fastest-varying grid dimension, so ``o_ref`` is revisited).
+
+This is the Pallas restatement of what the paper's substrate (Blaze) does
+with cache blocking on the Xeon: the threadblock/cache hierarchy maps to
+grid-step/VMEM, and the MXU systolic array replaces the FMA units.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm=BM, bn=BN, bk=BK):
+    """``A @ B`` with f32 MXU accumulation; dims must tile exactly."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"({m},{k},{n}) not tiled by ({bm},{bk},{bn})"
+    )
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+These are the ground truth the pytest suite (and hypothesis sweeps) compare
+the Pallas kernels against.  They intentionally contain no Pallas, no
+tiling, and no reshaping tricks — just the textbook definition of each
+Blazemark operation (paper §6):
+
+* ``daxpy``        — ``b[i] = b[i] + beta * a[i]``          (Fig 3/7)
+* ``dvecdvecadd``  — ``c[i] = a[i] + b[i]``                 (Fig 2/6)
+* ``dmatdmatadd``  — ``C[i,j] = A[i,j] + B[i,j]``           (Fig 4/8)
+* ``dmatdmatmult`` — ``C = A @ B``                          (Fig 5/9)
+"""
+
+import jax.numpy as jnp
+
+
+def daxpy_ref(beta, a, b):
+    """``b + beta * a`` — the BLAS-1 daxpy update (paper uses beta = 3.0)."""
+    return b + beta * a
+
+
+def vadd_ref(a, b):
+    """Elementwise dense-vector addition ``a + b``."""
+    return a + b
+
+
+def madd_ref(a, b):
+    """Elementwise dense-matrix addition ``A + B``."""
+    return a + b
+
+
+def matmul_ref(a, b):
+    """Dense matrix multiplication ``A @ B`` with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

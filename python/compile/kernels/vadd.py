@@ -1,0 +1,41 @@
+"""Pallas dense-vector-addition kernel: ``o = a + b`` (paper Fig 2/6).
+
+Same ``(rows, 128)`` TPU layout as :mod:`compile.kernels.daxpy`; one grid
+step = one OpenMP loop chunk.
+"""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _vadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def vadd(a, b, *, block_rows=BLOCK_ROWS):
+    """Elementwise ``a + b`` over a flat vector whose size divides 128."""
+    n = a.shape[0]
+    assert n % LANES == 0, f"n={n} must be a multiple of {LANES}"
+    rows = n // LANES
+    br = min(block_rows, rows)
+    assert rows % br == 0, f"rows={rows} not divisible by block_rows={br}"
+    a2 = a.reshape(rows, LANES)
+    b2 = b.reshape(rows, LANES)
+    out = pl.pallas_call(
+        _vadd_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), a.dtype),
+        interpret=True,
+    )(a2, b2)
+    return out.reshape(n)

@@ -1,0 +1,95 @@
+"""Layer-2 JAX ops: the chunk-level computations the rust coordinator offloads.
+
+The rust hpxMP runtime splits each Blazemark operation into OpenMP-style
+loop chunks; each chunk is one invocation of a compiled artifact produced
+from the functions here.  Every function is a thin JAX wrapper over the
+Layer-1 Pallas kernels, so lowering one of these lowers the kernel into the
+same HLO module.
+
+Chunk conventions (mirrored in ``artifacts/manifest.json`` and in
+``rust/src/runtime/registry.rs``):
+
+* vector ops   — flat ``(CHUNK,)`` f32/f64 slices, ``CHUNK % 128 == 0``;
+* matrix add   — ``(ROWS, COLS)`` row bands of the output matrix;
+* matmul       — row-block decomposition ``C[rb] = A[rb] @ B``: each chunk
+  takes an ``(BM, K)`` band of A and the whole ``(K, N)`` B.  This is the
+  same work decomposition Blaze uses for its OpenMP matmul (rows of C are
+  distributed across the team).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import daxpy as _daxpy_kernel
+from compile.kernels import madd as _madd_kernel
+from compile.kernels import matmul as _matmul_kernel
+from compile.kernels import vadd as _vadd_kernel
+
+
+def daxpy_chunk(beta, a, b):
+    """One daxpy loop chunk: ``b + beta * a`` over a flat slice."""
+    return (_daxpy_kernel(beta, a, b),)
+
+
+def vadd_chunk(a, b):
+    """One dvecdvecadd loop chunk: ``a + b`` over a flat slice."""
+    return (_vadd_kernel(a, b),)
+
+
+def madd_chunk(a, b):
+    """One dmatdmatadd loop chunk: ``A + B`` over a row band."""
+    return (_madd_kernel(a, b),)
+
+
+def matmul_rowblock(a_band, b):
+    """One dmatdmatmult chunk: ``A[rb] @ B`` for one row block of C."""
+    return (_matmul_kernel(a_band, b),)
+
+
+# ---------------------------------------------------------------------------
+# Whole-operation compositions.  Used by the python test suite to check that
+# chunked execution reassembles to the full operation — the same invariant
+# the rust coordinator relies on when it scatters chunks across HPX tasks.
+# ---------------------------------------------------------------------------
+
+def daxpy_full(beta, a, b, chunk):
+    """Chunked daxpy over the whole vector, reassembled."""
+    n = a.shape[0]
+    assert n % chunk == 0
+    outs = [
+        daxpy_chunk(beta, a[i : i + chunk], b[i : i + chunk])[0]
+        for i in range(0, n, chunk)
+    ]
+    return jnp.concatenate(outs)
+
+
+def vadd_full(a, b, chunk):
+    """Chunked dvecdvecadd over the whole vector, reassembled."""
+    n = a.shape[0]
+    assert n % chunk == 0
+    outs = [
+        vadd_chunk(a[i : i + chunk], b[i : i + chunk])[0]
+        for i in range(0, n, chunk)
+    ]
+    return jnp.concatenate(outs)
+
+
+def madd_full(a, b, band_rows):
+    """Row-banded dmatdmatadd over the whole matrix, reassembled."""
+    m = a.shape[0]
+    assert m % band_rows == 0
+    outs = [
+        madd_chunk(a[i : i + band_rows], b[i : i + band_rows])[0]
+        for i in range(0, m, band_rows)
+    ]
+    return jnp.concatenate(outs, axis=0)
+
+
+def matmul_full(a, b, band_rows):
+    """Row-blocked dmatdmatmult over the whole matrix, reassembled."""
+    m = a.shape[0]
+    assert m % band_rows == 0
+    outs = [
+        matmul_rowblock(a[i : i + band_rows], b)[0]
+        for i in range(0, m, band_rows)
+    ]
+    return jnp.concatenate(outs, axis=0)

@@ -1,0 +1,11 @@
+"""Shared test config: enable x64 before any jax import in the suite."""
+
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile` importable when pytest is launched from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,157 @@
+"""L1 correctness: every Pallas kernel vs. the pure-jnp oracle.
+
+This is the CORE numerical signal of the compile path: if these pass, the
+HLO the rust runtime executes computes the paper's operations.  Hypothesis
+sweeps shapes (constrained to the kernels' tiling contracts) and dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import daxpy, madd, matmul, vadd
+from compile.kernels.ref import daxpy_ref, madd_ref, matmul_ref, vadd_ref
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def tol(dtype):
+    return dict(rtol=1e-5, atol=1e-5) if dtype == jnp.float32 else dict(rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape smoke tests (fast, exact shapes the AOT catalogue uses)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", [128, 65_536])
+def test_daxpy_matches_ref(dtype, n):
+    r = rng(0)
+    a = jnp.asarray(r.standard_normal(n), dtype=dtype)
+    b = jnp.asarray(r.standard_normal(n), dtype=dtype)
+    got = daxpy(3.0, a, b)
+    np.testing.assert_allclose(got, daxpy_ref(dtype(3.0), a, b), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", [128, 65_536])
+def test_vadd_matches_ref(dtype, n):
+    r = rng(1)
+    a = jnp.asarray(r.standard_normal(n), dtype=dtype)
+    b = jnp.asarray(r.standard_normal(n), dtype=dtype)
+    np.testing.assert_allclose(vadd(a, b), vadd_ref(a, b), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(8, 128), (128, 512)])
+def test_madd_matches_ref(dtype, shape):
+    r = rng(2)
+    a = jnp.asarray(r.standard_normal(shape), dtype=dtype)
+    b = jnp.asarray(r.standard_normal(shape), dtype=dtype)
+    np.testing.assert_allclose(madd(a, b), madd_ref(a, b), **tol(dtype))
+
+
+@pytest.mark.parametrize("mkn", [(64, 512, 512), (128, 128, 128), (64, 256, 128)])
+def test_matmul_matches_ref(mkn):
+    m, k, n = mkn
+    r = rng(3)
+    a = jnp.asarray(r.standard_normal((m, k)), dtype=jnp.float32)
+    b = jnp.asarray(r.standard_normal((k, n)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        matmul(a, b), matmul_ref(a, b), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_daxpy_beta_zero_is_identity():
+    r = rng(4)
+    a = jnp.asarray(r.standard_normal(256), dtype=jnp.float32)
+    b = jnp.asarray(r.standard_normal(256), dtype=jnp.float32)
+    np.testing.assert_array_equal(daxpy(0.0, a, b), b)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(128, dtype=jnp.float32)
+    a = jnp.asarray(rng(5).standard_normal((128, 128)), dtype=jnp.float32)
+    np.testing.assert_allclose(matmul(a, eye), a, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps over the tiling-contract shape space
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 64).map(lambda r: r * 8),
+    seed=st.integers(0, 2**31 - 1),
+    dti=st.integers(0, 1),
+    beta=st.floats(-10, 10, allow_nan=False, width=32),
+)
+def test_daxpy_hypothesis(rows, seed, dti, beta):
+    dtype = DTYPES[dti]
+    n = rows * 128
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal(n), dtype=dtype)
+    b = jnp.asarray(r.standard_normal(n), dtype=dtype)
+    got = daxpy(beta, a, b, block_rows=rows)  # single block
+    np.testing.assert_allclose(got, daxpy_ref(dtype(beta), a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+    dti=st.integers(0, 1),
+)
+def test_vadd_hypothesis(rows, seed, dti):
+    dtype = DTYPES[dti]
+    n = rows * 128
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal(n), dtype=dtype)
+    b = jnp.asarray(r.standard_normal(n), dtype=dtype)
+    np.testing.assert_allclose(
+        vadd(a, b, block_rows=rows), vadd_ref(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.integers(1, 4).map(lambda x: x * 8),
+    bn=st.integers(1, 2).map(lambda x: x * 128),
+    gm=st.integers(1, 3),
+    gn=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_madd_hypothesis(bm, bn, gm, gn, seed):
+    m, n = bm * gm, bn * gn
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal((m, n)), dtype=jnp.float32)
+    b = jnp.asarray(r.standard_normal((m, n)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        madd(a, b, bm=bm, bn=bn), madd_ref(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    gm=st.integers(1, 2),
+    gk=st.integers(1, 3),
+    gn=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(gm, gk, gn, seed):
+    bm = bk = bn = 64
+    m, k, n = bm * gm, bk * gk, bn * gn
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal((m, k)), dtype=jnp.float32)
+    b = jnp.asarray(r.standard_normal((k, n)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        matmul(a, b, bm=bm, bn=bn, bk=bk),
+        matmul_ref(a, b),
+        rtol=1e-4,
+        atol=1e-3,
+    )

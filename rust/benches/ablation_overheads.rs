@@ -1,0 +1,151 @@
+//! Microbenchmarks of the runtime's hot paths — the quantities the §Perf
+//! optimization loop tracks (EXPERIMENTS.md):
+//!
+//! * empty fork/join round-trip (hpxMP vs baseline pool) — the per-region
+//!   cost that separates the runtimes at small sizes in every figure;
+//! * barrier round-trip inside a live region;
+//! * explicit-task spawn+taskwait throughput;
+//! * dynamic-loop chunk dispatch rate;
+//! * AMT spawn/steal throughput.
+//!
+//! Emits `results/ablation_overheads.csv`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::baseline::BaselinePool;
+use hpxmp::omp::team::{current_ctx, fork_call};
+use hpxmp::omp::{OmpRuntime, SchedKind, Schedule};
+use hpxmp::util::csv::CsvWriter;
+
+const THREADS: usize = 4;
+
+fn time_per<T>(iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let rt = OmpRuntime::new(THREADS, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(THREADS);
+    let pool = BaselinePool::new(THREADS);
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    // --- empty region: hpxMP fork_call vs baseline pool.fork ---------------
+    let hpx_region = time_per(300, || {
+        fork_call(&rt, Some(THREADS), |_| {});
+    });
+    rows.push(("hpxmp_empty_region_us".into(), hpx_region * 1e6));
+
+    let base_region = time_per(300, || {
+        pool.fork(THREADS, &|_, _| {});
+    });
+    rows.push(("baseline_empty_region_us".into(), base_region * 1e6));
+
+    // --- barrier round-trip inside one region ------------------------------
+    {
+        let t_us = Arc::new(std::sync::Mutex::new(0.0f64));
+        let t2 = t_us.clone();
+        fork_call(&rt, Some(THREADS), move |ctx| {
+            const N: usize = 200;
+            ctx.barrier();
+            let t0 = Instant::now();
+            for _ in 0..N {
+                ctx.barrier();
+            }
+            let per = t0.elapsed().as_secs_f64() / N as f64;
+            if ctx.tid == 0 {
+                *t2.lock().unwrap() = per * 1e6;
+            }
+        });
+        rows.push(("hpxmp_barrier_us".into(), *t_us.lock().unwrap()));
+    }
+
+    // --- explicit task spawn + taskwait -------------------------------------
+    {
+        let rate = Arc::new(std::sync::Mutex::new(0.0f64));
+        let r2 = rate.clone();
+        fork_call(&rt, Some(2), move |c| {
+            if c.tid == 0 {
+                let ctx = current_ctx().unwrap();
+                let done = Arc::new(AtomicUsize::new(0));
+                const N: usize = 20_000;
+                let t0 = Instant::now();
+                for _ in 0..N {
+                    let d = done.clone();
+                    ctx.task(move || {
+                        d.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+                ctx.taskwait();
+                let dt = t0.elapsed().as_secs_f64();
+                assert_eq!(done.load(Ordering::SeqCst), N);
+                *r2.lock().unwrap() = N as f64 / dt;
+            }
+        });
+        rows.push(("hpxmp_tasks_per_s".into(), *rate.lock().unwrap()));
+    }
+
+    // --- dynamic chunk dispatch rate ----------------------------------------
+    {
+        let rate = Arc::new(std::sync::Mutex::new(0.0f64));
+        let r2 = rate.clone();
+        let total = Arc::new(AtomicUsize::new(0));
+        fork_call(&rt, Some(THREADS), move |ctx| {
+            const N: i64 = 200_000;
+            let t0 = Instant::now();
+            let desc = ctx.dispatch_init(0..N, Schedule::new(SchedKind::Dynamic, Some(1)));
+            let mut claimed = 0usize;
+            while let Some(r) = ctx.dispatch_next(&desc, 0) {
+                claimed += (r.end - r.start) as usize;
+            }
+            ctx.dispatch_fini(&desc);
+            total.fetch_add(claimed, Ordering::Relaxed);
+            ctx.barrier(); // all claims accounted
+            let dt = t0.elapsed().as_secs_f64();
+            if ctx.tid == 0 {
+                *r2.lock().unwrap() = total.load(Ordering::Relaxed) as f64 / dt;
+            }
+        });
+        rows.push(("hpxmp_chunks_per_s".into(), *rate.lock().unwrap()));
+    }
+
+    // --- raw AMT spawn throughput -------------------------------------------
+    {
+        let done = Arc::new(AtomicUsize::new(0));
+        const N: usize = 100_000;
+        let t0 = Instant::now();
+        for i in 0..N {
+            let d = done.clone();
+            rt.sched.spawn(
+                hpxmp::amt::Priority::Normal,
+                hpxmp::amt::task::Hint::Worker(i),
+                "bench",
+                move || {
+                    d.fetch_add(1, Ordering::Relaxed);
+                },
+            );
+        }
+        rt.sched.wait_quiescent();
+        let dt = t0.elapsed().as_secs_f64();
+        rows.push(("amt_spawn_tasks_per_s".into(), N as f64 / dt));
+    }
+
+    // --- report -----------------------------------------------------------
+    let mut w = CsvWriter::create(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../results/ablation_overheads.csv")).expect("csv");
+    w.row(&["metric", "value"]).unwrap();
+    println!("{:<28} {:>14}", "metric", "value");
+    for (k, v) in &rows {
+        println!("{k:<28} {v:>14.2}");
+        w.row(&[k.clone(), format!("{v:.3}")]).unwrap();
+    }
+    w.flush().unwrap();
+    println!("wrote results/ablation_overheads.csv");
+    let m = rt.sched.metrics();
+    println!("scheduler metrics: {m}");
+}

@@ -1,0 +1,101 @@
+//! Ablation: the seven §3.2 scheduling policies under three workloads —
+//! the design-choice study DESIGN.md calls out (which policy should back
+//! an OpenMP runtime?).  Emits `results/ablation_policies.csv`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use hpxmp::amt::{task::Hint, PolicyKind, Priority, Scheduler};
+use hpxmp::omp::{fork_call, OmpRuntime};
+use hpxmp::util::csv::CsvWriter;
+
+const WORKERS: usize = 4;
+
+/// Raw task throughput: spawn N trivial tasks, quiesce.
+fn bench_spawn(policy: PolicyKind, tasks: usize) -> f64 {
+    let s = Scheduler::new(WORKERS, policy);
+    let done = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    for i in 0..tasks {
+        let d = done.clone();
+        s.spawn(Priority::Normal, Hint::Worker(i), "t", move || {
+            d.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    s.wait_quiescent();
+    let dt = t0.elapsed().as_secs_f64();
+    s.shutdown();
+    tasks as f64 / dt
+}
+
+/// Fork/join churn: OpenMP regions per second.
+fn bench_fork_join(policy: PolicyKind, regions: usize) -> f64 {
+    let rt = OmpRuntime::new(WORKERS, policy);
+    rt.icv.set_nthreads(WORKERS);
+    let sink = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    for _ in 0..regions {
+        let s = sink.clone();
+        fork_call(&rt, Some(WORKERS), move |_| {
+            s.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    regions as f64 / dt
+}
+
+/// Imbalanced work: tasks with skewed costs — stresses stealing.
+fn bench_imbalanced(policy: PolicyKind, tasks: usize) -> f64 {
+    let s = Scheduler::new(WORKERS, policy);
+    let done = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    for i in 0..tasks {
+        let d = done.clone();
+        // Every 16th task is ~100x heavier.
+        let spin = if i % 16 == 0 { 20_000 } else { 200 };
+        s.spawn(Priority::Normal, Hint::Worker(i % WORKERS), "t", move || {
+            let mut acc = 0u64;
+            for k in 0..spin {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            std::hint::black_box(acc);
+            d.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    s.wait_quiescent();
+    let dt = t0.elapsed().as_secs_f64();
+    s.shutdown();
+    tasks as f64 / dt
+}
+
+fn main() {
+    let mut w = CsvWriter::create(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../results/ablation_policies.csv")).expect("csv");
+    w.row(&["policy", "spawn_tasks_per_s", "fork_join_regions_per_s", "imbalanced_tasks_per_s"])
+        .unwrap();
+    println!(
+        "{:<18} {:>16} {:>16} {:>18}",
+        "policy", "spawn ktasks/s", "regions/s", "imbalanced kt/s"
+    );
+    for policy in PolicyKind::ALL {
+        let spawn = bench_spawn(policy, 50_000);
+        let fj = bench_fork_join(policy, 500);
+        let imb = bench_imbalanced(policy, 5_000);
+        println!(
+            "{:<18} {:>16.1} {:>16.1} {:>18.1}",
+            policy.name(),
+            spawn / 1e3,
+            fj,
+            imb / 1e3
+        );
+        w.row(&[
+            policy.name().to_string(),
+            format!("{spawn:.1}"),
+            format!("{fj:.1}"),
+            format!("{imb:.1}"),
+        ])
+        .unwrap();
+    }
+    w.flush().unwrap();
+    println!("wrote results/ablation_policies.csv");
+}

@@ -1,0 +1,10 @@
+//! Paper Fig2: dvecdvecadd performance-ratio heatmap (hpxMP / OpenMP,
+//! threads x size).  Emits `results/fig2_dvecdvecadd_heatmap.csv` + ASCII render.
+
+mod common;
+
+use hpxmp::coordinator::blazemark::Op;
+
+fn main() {
+    common::run_heatmap(Op::parse("dvecdvecadd").unwrap());
+}

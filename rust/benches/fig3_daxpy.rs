@@ -1,0 +1,10 @@
+//! Paper Fig3: daxpy performance-ratio heatmap (hpxMP / OpenMP,
+//! threads x size).  Emits `results/fig3_daxpy_heatmap.csv` + ASCII render.
+
+mod common;
+
+use hpxmp::coordinator::blazemark::Op;
+
+fn main() {
+    common::run_heatmap(Op::parse("daxpy").unwrap());
+}

@@ -1,0 +1,10 @@
+//! Paper Fig4: dmatdmatadd performance-ratio heatmap (hpxMP / OpenMP,
+//! threads x size).  Emits `results/fig4_dmatdmatadd_heatmap.csv` + ASCII render.
+
+mod common;
+
+use hpxmp::coordinator::blazemark::Op;
+
+fn main() {
+    common::run_heatmap(Op::parse("dmatdmatadd").unwrap());
+}

@@ -1,0 +1,10 @@
+//! Paper Fig5: dmatdmatmult performance-ratio heatmap (hpxMP / OpenMP,
+//! threads x size).  Emits `results/fig5_dmatdmatmult_heatmap.csv` + ASCII render.
+
+mod common;
+
+use hpxmp::coordinator::blazemark::Op;
+
+fn main() {
+    common::run_heatmap(Op::parse("dmatdmatmult").unwrap());
+}

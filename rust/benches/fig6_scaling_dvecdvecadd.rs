@@ -1,0 +1,10 @@
+//! Paper Fig6: dvecdvecadd scaling series (MFLOP/s vs size) at 4/8/16
+//! threads, both runtimes.  Emits `results/fig6_*_scaling_*.csv`.
+
+mod common;
+
+use hpxmp::coordinator::blazemark::Op;
+
+fn main() {
+    common::run_scaling(Op::parse("dvecdvecadd").unwrap());
+}

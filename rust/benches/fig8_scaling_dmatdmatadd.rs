@@ -1,0 +1,10 @@
+//! Paper Fig8: dmatdmatadd scaling series (MFLOP/s vs size) at 4/8/16
+//! threads, both runtimes.  Emits `results/fig8_*_scaling_*.csv`.
+
+mod common;
+
+use hpxmp::coordinator::blazemark::Op;
+
+fn main() {
+    common::run_scaling(Op::parse("dmatdmatadd").unwrap());
+}

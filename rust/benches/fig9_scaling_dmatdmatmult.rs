@@ -1,0 +1,10 @@
+//! Paper Fig9: dmatdmatmult scaling series (MFLOP/s vs size) at 4/8/16
+//! threads, both runtimes.  Emits `results/fig9_*_scaling_*.csv`.
+
+mod common;
+
+use hpxmp::coordinator::blazemark::Op;
+
+fn main() {
+    common::run_scaling(Op::parse("dmatdmatmult").unwrap());
+}

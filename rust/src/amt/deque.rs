@@ -1,0 +1,273 @@
+//! A Chase–Lev work-stealing deque, built from scratch on atomics.
+//!
+//! This is the lock-free structure underlying HPX's ABP and thread-local
+//! scheduling policies (paper §3.2: "a double ended lock-free queue per OS
+//! thread; threads are inserted on the top of the queue and are stolen from
+//! the bottom during work stealing").
+//!
+//! Design notes:
+//! * Fixed-capacity ring buffer (power of two).  Growth is delegated to the
+//!   caller: `push` returns the task back when full and the policy layer
+//!   spills to a mutex-guarded overflow queue.  A fixed buffer sidesteps
+//!   the memory-reclamation problem of the growable variant (no
+//!   epochs/hazard pointers needed) while keeping the hot path lock-free.
+//! * Indices are monotonically increasing `isize`s; the ring index is
+//!   `idx & mask`.  The owner pushes/pops at `bottom`; thieves CAS `top`.
+//! * Memory orderings follow Lê/Pop/Cocchiarella/Zappa Nardelli,
+//!   "Correct and Efficient Work-Stealing for Weak Memory Models" (the
+//!   C11 version of Chase–Lev).
+
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, Ordering};
+
+use crossbeam_utils::CachePadded;
+
+use super::task::Task;
+
+/// Owner side pushes/pops at the bottom; thieves steal from the top.
+pub struct ChaseLev {
+    top: CachePadded<AtomicIsize>,
+    bottom: CachePadded<AtomicIsize>,
+    buf: Box<[AtomicPtr<Task>]>,
+    mask: isize,
+}
+
+unsafe impl Send for ChaseLev {}
+unsafe impl Sync for ChaseLev {}
+
+impl ChaseLev {
+    /// `capacity` is rounded up to a power of two (min 64).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(64);
+        let buf = (0..cap)
+            .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Self {
+            top: CachePadded::new(AtomicIsize::new(0)),
+            bottom: CachePadded::new(AtomicIsize::new(0)),
+            buf,
+            mask: (cap - 1) as isize,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, idx: isize) -> &AtomicPtr<Task> {
+        &self.buf[(idx & self.mask) as usize]
+    }
+
+    /// Owner-only push.  Returns `Err(task)` when the ring is full.
+    pub fn push(&self, task: Task) -> Result<(), Task> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b - t > self.mask {
+            return Err(task); // full — caller spills to overflow
+        }
+        let ptr = Box::into_raw(Box::new(task));
+        self.slot(b).store(ptr, Ordering::Relaxed);
+        self.bottom.store(b + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Owner-only pop (LIFO end — cache-warm execution order).
+    pub fn pop(&self) -> Option<Task> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // Empty: restore bottom.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let ptr = self.slot(b).load(Ordering::Relaxed);
+        if t == b {
+            // Last element: race against thieves for it.
+            let won = self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            if !won {
+                return None; // a thief got it
+            }
+        }
+        // Safety: exactly one side (owner or winning thief) takes each slot.
+        Some(*unsafe { Box::from_raw(ptr) })
+    }
+
+    /// Thief-side steal (FIFO end — oldest task, best locality for victim).
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let ptr = self.slot(t).load(Ordering::Relaxed);
+        if self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_err()
+        {
+            return Steal::Retry; // lost the race
+        }
+        // Safety: the CAS made us the unique owner of slot t.
+        Steal::Success(*unsafe { Box::from_raw(ptr) })
+    }
+
+    /// Approximate occupancy (racy; for metrics/back-pressure only).
+    pub fn len_estimate(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    pub fn is_empty_estimate(&self) -> bool {
+        self.len_estimate() == 0
+    }
+}
+
+impl Drop for ChaseLev {
+    fn drop(&mut self) {
+        // Drain remaining tasks so their closures are dropped.
+        while self.pop().is_some() {}
+    }
+}
+
+/// Result of a steal attempt.
+#[derive(Debug)]
+pub enum Steal {
+    Success(Task),
+    Empty,
+    Retry,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::task::Priority;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    fn mk(counter: &Arc<AtomicUsize>) -> Task {
+        let c = counter.clone();
+        Task::new(Priority::Normal, "t", move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        })
+    }
+
+    #[test]
+    fn lifo_pop_fifo_steal() {
+        let q = ChaseLev::with_capacity(64);
+        let c = Arc::new(AtomicUsize::new(0));
+        let ids: Vec<u64> = (0..3)
+            .map(|_| {
+                let t = mk(&c);
+                let id = t.id;
+                q.push(t).unwrap();
+                id
+            })
+            .collect();
+        // Owner pops newest first.
+        assert_eq!(q.pop().unwrap().id, ids[2]);
+        // Thief steals oldest.
+        match q.steal() {
+            Steal::Success(t) => assert_eq!(t.id, ids[0]),
+            other => panic!("expected success, got {other:?}"),
+        }
+        assert_eq!(q.pop().unwrap().id, ids[1]);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn push_full_returns_task() {
+        let q = ChaseLev::with_capacity(64); // rounds to 64
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            q.push(mk(&c)).unwrap();
+        }
+        assert!(q.push(mk(&c)).is_err());
+        // Draining one slot makes room again.
+        q.pop().unwrap();
+        assert!(q.push(mk(&c)).is_ok());
+    }
+
+    #[test]
+    fn steal_empty() {
+        let q = ChaseLev::with_capacity(64);
+        assert!(matches!(q.steal(), Steal::Empty));
+    }
+
+    #[test]
+    fn concurrent_producer_thieves_conserve_tasks() {
+        // The core conservation invariant: every pushed task is executed
+        // exactly once across owner pops and concurrent steals.
+        const N: usize = 10_000;
+        let q = Arc::new(ChaseLev::with_capacity(1024));
+        let executed = Arc::new(AtomicUsize::new(0));
+
+        let thieves: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let done = executed.clone();
+                std::thread::spawn(move || loop {
+                    match q.steal() {
+                        Steal::Success(t) => t.run(),
+                        Steal::Empty => {
+                            if done.load(Ordering::SeqCst) >= N {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                        Steal::Retry => {}
+                    }
+                })
+            })
+            .collect();
+
+        let mut pushed = 0usize;
+        while pushed < N {
+            let t = mk(&executed);
+            match q.push(t) {
+                Ok(()) => pushed += 1,
+                Err(t) => {
+                    // Ring full: owner executes inline (what the policy
+                    // layer's overflow path does).
+                    t.run();
+                    pushed += 1;
+                }
+            }
+            if pushed % 7 == 0 {
+                if let Some(t) = q.pop() {
+                    t.run();
+                }
+            }
+        }
+        // Drain remainder as owner.
+        while let Some(t) = q.pop() {
+            t.run();
+        }
+        while executed.load(Ordering::SeqCst) < N {
+            std::thread::yield_now();
+        }
+        for th in thieves {
+            th.join().unwrap();
+        }
+        assert_eq!(executed.load(Ordering::SeqCst), N);
+    }
+
+    #[test]
+    fn drop_releases_queued_tasks() {
+        let c = Arc::new(AtomicUsize::new(0));
+        {
+            let q = ChaseLev::with_capacity(64);
+            for _ in 0..5 {
+                q.push(mk(&c)).unwrap();
+            }
+            // q dropped with tasks still queued — must not leak (miri-level
+            // property; here we just ensure no panic and closures dropped
+            // unexecuted).
+        }
+        assert_eq!(c.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Scheduler counters — the observability surface of the AMT substrate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counters, all relaxed: observational only.
+#[derive(Default)]
+pub struct Metrics {
+    pub spawned: AtomicU64,
+    pub executed: AtomicU64,
+    pub stolen: AtomicU64,
+    pub overflowed: AtomicU64,
+    pub parked: AtomicU64,
+    pub helped: AtomicU64,
+}
+
+impl Metrics {
+    #[inline]
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            spawned: self.spawned.load(Ordering::Relaxed),
+            executed: self.executed.load(Ordering::Relaxed),
+            stolen: self.stolen.load(Ordering::Relaxed),
+            overflowed: self.overflowed.load(Ordering::Relaxed),
+            parked: self.parked.load(Ordering::Relaxed),
+            helped: self.helped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy, cheap to print/compare.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub spawned: u64,
+    pub executed: u64,
+    pub stolen: u64,
+    pub overflowed: u64,
+    pub parked: u64,
+    pub helped: u64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "spawned={} executed={} stolen={} overflowed={} parked={} helped={}",
+            self.spawned, self.executed, self.stolen, self.overflowed, self.parked, self.helped
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_increments() {
+        let m = Metrics::default();
+        Metrics::inc(&m.spawned);
+        Metrics::inc(&m.spawned);
+        Metrics::inc(&m.executed);
+        let s = m.snapshot();
+        assert_eq!(s.spawned, 2);
+        assert_eq!(s.executed, 1);
+        assert_eq!(s.stolen, 0);
+    }
+
+    #[test]
+    fn display_contains_all_fields() {
+        let m = Metrics::default().snapshot();
+        let s = format!("{m}");
+        for key in ["spawned", "executed", "stolen", "overflowed", "parked", "helped"] {
+            assert!(s.contains(key), "{key} missing from {s}");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! The AMT (asynchronous many-task) substrate — our stand-in for HPX.
+//!
+//! The paper (§3) relies on HPX's lightweight threading system: user-level
+//! tasks multiplexed over OS worker threads under one of eight scheduling
+//! policies.  This module rebuilds that substrate from scratch:
+//!
+//! * [`task`] — the task object (`register_thread_nullary` analog) with the
+//!   three priorities the paper's Listing 3 uses.
+//! * [`deque`] — a hand-built Chase–Lev work-stealing deque (the lock-free
+//!   structure behind HPX's ABP/local policies).
+//! * [`policy`] — the seven §3.2 scheduling policies behind one trait.
+//! * [`worker`] / [`scheduler`] — OS worker threads, parking, spawning,
+//!   cooperative "help" execution (the task-scheduling-point mechanism the
+//!   OpenMP layer's barriers stand on).
+//! * [`metrics`] — counters for spawned/executed/stolen/parked tasks.
+
+pub mod deque;
+pub mod metrics;
+pub mod policy;
+pub mod scheduler;
+pub mod task;
+pub mod worker;
+
+pub use policy::PolicyKind;
+pub use scheduler::Scheduler;
+pub use task::{Priority, Task};

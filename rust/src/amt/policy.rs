@@ -1,0 +1,779 @@
+//! The seven HPX thread-scheduling policies (paper §3.2) behind one trait.
+//!
+//! | Paper policy                | Type here          | Structure |
+//! |-----------------------------|--------------------|-----------|
+//! | priority local (default)    | [`PriorityLocal`]  | per-worker high-prio queue + Chase–Lev deque + global injector, stealing |
+//! | static priority             | [`StaticPriority`] | per-worker priority queues, round-robin placement, **no stealing** |
+//! | local                       | [`Local`]          | per-worker deque + injector, stealing |
+//! | global                      | [`Global`]         | one shared queue |
+//! | ABP                         | [`Abp`]            | lock-free deque per worker, steal from the opposite end |
+//! | hierarchy                   | [`Hierarchical`]   | binary tree of queues, workers traverse leaf→root |
+//! | periodic priority           | [`PeriodicPriority`]| per-worker queue + shared high + shared low queues |
+//!
+//! Every policy upholds the conservation invariant (no task lost, none
+//! duplicated), which `rust/tests/prop_invariants.rs` checks property-style
+//! across all seven.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::deque::{ChaseLev, Steal};
+use super::task::{Hint, Priority, Task};
+
+/// Which policy to instantiate (CLI/env-selectable: `HPXMP_POLICY`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    PriorityLocal,
+    StaticPriority,
+    Local,
+    Global,
+    Abp,
+    Hierarchical,
+    PeriodicPriority,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 7] = [
+        PolicyKind::PriorityLocal,
+        PolicyKind::StaticPriority,
+        PolicyKind::Local,
+        PolicyKind::Global,
+        PolicyKind::Abp,
+        PolicyKind::Hierarchical,
+        PolicyKind::PeriodicPriority,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "priority-local" | "priority_local" | "default" => PolicyKind::PriorityLocal,
+            "static-priority" | "static" => PolicyKind::StaticPriority,
+            "local" => PolicyKind::Local,
+            "global" => PolicyKind::Global,
+            "abp" => PolicyKind::Abp,
+            "hierarchical" | "hierarchy" => PolicyKind::Hierarchical,
+            "periodic-priority" | "periodic" => PolicyKind::PeriodicPriority,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::PriorityLocal => "priority-local",
+            PolicyKind::StaticPriority => "static-priority",
+            PolicyKind::Local => "local",
+            PolicyKind::Global => "global",
+            PolicyKind::Abp => "abp",
+            PolicyKind::Hierarchical => "hierarchical",
+            PolicyKind::PeriodicPriority => "periodic-priority",
+        }
+    }
+
+    pub fn build(&self, workers: usize) -> Box<dyn Queues> {
+        match self {
+            PolicyKind::PriorityLocal => Box::new(PriorityLocal::new(workers)),
+            PolicyKind::StaticPriority => Box::new(StaticPriority::new(workers)),
+            PolicyKind::Local => Box::new(Local::new(workers)),
+            PolicyKind::Global => Box::new(Global::new(workers)),
+            PolicyKind::Abp => Box::new(Abp::new(workers)),
+            PolicyKind::Hierarchical => Box::new(Hierarchical::new(workers)),
+            PolicyKind::PeriodicPriority => Box::new(PeriodicPriority::new(workers)),
+        }
+    }
+}
+
+/// The queue discipline a scheduler instance runs on.
+///
+/// `submitter` is `Some(w)` when the pushing thread *is* worker `w` (deque
+/// owners may use their lock-free push path); `None` for external threads.
+pub trait Queues: Send + Sync {
+    fn push(&self, task: Task, hint: Hint, submitter: Option<usize>);
+    /// Fast local acquisition for worker `w`.
+    fn pop(&self, worker: usize) -> Option<Task>;
+    /// Cross-queue acquisition (work stealing / shared-queue fallback).
+    /// `spin` differentiates steal attempts so victims rotate.
+    fn steal(&self, worker: usize, spin: usize) -> Option<Task>;
+    /// Racy occupancy estimate for idle heuristics.
+    fn approx_len(&self) -> usize;
+    fn workers(&self) -> usize;
+}
+
+/// Mutex-guarded FIFO used as inbox/injector/overflow in several policies.
+#[derive(Default)]
+struct MutexQueue {
+    q: Mutex<VecDeque<Task>>,
+}
+
+impl MutexQueue {
+    fn push_back(&self, t: Task) {
+        self.q.lock().unwrap().push_back(t);
+    }
+    fn pop_front(&self) -> Option<Task> {
+        self.q.lock().unwrap().pop_front()
+    }
+    fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// priority local — the HPX default
+// ---------------------------------------------------------------------------
+
+struct PlWorker {
+    high: MutexQueue,
+    deque: ChaseLev,
+    /// Spill + external-submission inbox (deque push is owner-only).
+    inbox: MutexQueue,
+}
+
+/// One high-priority queue and one deque per worker plus a global injector;
+/// stealing allowed (high queues first, then deques).
+pub struct PriorityLocal {
+    per: Vec<PlWorker>,
+    injector: MutexQueue,
+    rr: AtomicUsize,
+}
+
+impl PriorityLocal {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            per: (0..workers)
+                .map(|_| PlWorker {
+                    high: MutexQueue::default(),
+                    deque: ChaseLev::with_capacity(4096),
+                    inbox: MutexQueue::default(),
+                })
+                .collect(),
+            injector: MutexQueue::default(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    fn target(&self, hint: Hint, submitter: Option<usize>) -> usize {
+        match hint {
+            Hint::Worker(w) => w % self.per.len(),
+            Hint::Any => submitter
+                .unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % self.per.len()),
+        }
+    }
+}
+
+impl Queues for PriorityLocal {
+    fn push(&self, task: Task, hint: Hint, submitter: Option<usize>) {
+        let w = self.target(hint, submitter);
+        match task.priority {
+            Priority::High => self.per[w].high.push_back(task),
+            _ => {
+                if submitter == Some(w) {
+                    if let Err(t) = self.per[w].deque.push(task) {
+                        self.per[w].inbox.push_back(t);
+                    }
+                } else {
+                    self.per[w].inbox.push_back(task);
+                }
+            }
+        }
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        let me = &self.per[w];
+        me.high
+            .pop_front()
+            .or_else(|| me.deque.pop())
+            .or_else(|| me.inbox.pop_front())
+            .or_else(|| self.injector.pop_front())
+    }
+
+    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
+        let n = self.per.len();
+        for k in 1..n {
+            let v = (w + k + spin) % n;
+            if v == w {
+                continue;
+            }
+            if let Some(t) = self.per[v].high.pop_front() {
+                return Some(t);
+            }
+            match self.per[v].deque.steal() {
+                Steal::Success(t) => return Some(t),
+                Steal::Retry => {
+                    if let Steal::Success(t) = self.per[v].deque.steal() {
+                        return Some(t);
+                    }
+                }
+                Steal::Empty => {}
+            }
+            if let Some(t) = self.per[v].inbox.pop_front() {
+                return Some(t);
+            }
+        }
+        self.injector.pop_front()
+    }
+
+    fn approx_len(&self) -> usize {
+        self.injector.len()
+            + self
+                .per
+                .iter()
+                .map(|p| p.high.len() + p.deque.len_estimate() + p.inbox.len())
+                .sum::<usize>()
+    }
+
+    fn workers(&self) -> usize {
+        self.per.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// static priority — round-robin placement, no stealing
+// ---------------------------------------------------------------------------
+
+struct SpWorker {
+    high: MutexQueue,
+    normal: MutexQueue,
+}
+
+/// Round-robin placement at spawn time; workers only ever touch their own
+/// queues (the paper: "thread stealing is not allowed in this policy").
+pub struct StaticPriority {
+    per: Vec<SpWorker>,
+    rr: AtomicUsize,
+}
+
+impl StaticPriority {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            per: (0..workers)
+                .map(|_| SpWorker {
+                    high: MutexQueue::default(),
+                    normal: MutexQueue::default(),
+                })
+                .collect(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Queues for StaticPriority {
+    fn push(&self, task: Task, hint: Hint, _submitter: Option<usize>) {
+        let w = match hint {
+            Hint::Worker(w) => w % self.per.len(),
+            Hint::Any => self.rr.fetch_add(1, Ordering::Relaxed) % self.per.len(),
+        };
+        match task.priority {
+            Priority::High => self.per[w].high.push_back(task),
+            _ => self.per[w].normal.push_back(task),
+        }
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        self.per[w]
+            .high
+            .pop_front()
+            .or_else(|| self.per[w].normal.pop_front())
+    }
+
+    fn steal(&self, _w: usize, _spin: usize) -> Option<Task> {
+        None // no stealing by definition
+    }
+
+    fn approx_len(&self) -> usize {
+        self.per.iter().map(|p| p.high.len() + p.normal.len()).sum()
+    }
+
+    fn workers(&self) -> usize {
+        self.per.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// local — per-worker deques + injector, stealing, no priority lanes
+// ---------------------------------------------------------------------------
+
+struct LWorker {
+    deque: ChaseLev,
+    inbox: MutexQueue,
+}
+
+pub struct Local {
+    per: Vec<LWorker>,
+    injector: MutexQueue,
+    rr: AtomicUsize,
+}
+
+impl Local {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            per: (0..workers)
+                .map(|_| LWorker {
+                    deque: ChaseLev::with_capacity(4096),
+                    inbox: MutexQueue::default(),
+                })
+                .collect(),
+            injector: MutexQueue::default(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Queues for Local {
+    fn push(&self, task: Task, hint: Hint, submitter: Option<usize>) {
+        let w = match hint {
+            Hint::Worker(w) => w % self.per.len(),
+            Hint::Any => submitter
+                .unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % self.per.len()),
+        };
+        if submitter == Some(w) {
+            if let Err(t) = self.per[w].deque.push(task) {
+                self.per[w].inbox.push_back(t);
+            }
+        } else {
+            self.per[w].inbox.push_back(task);
+        }
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        self.per[w]
+            .deque
+            .pop()
+            .or_else(|| self.per[w].inbox.pop_front())
+            .or_else(|| self.injector.pop_front())
+    }
+
+    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
+        let n = self.per.len();
+        for k in 1..n {
+            let v = (w + k + spin) % n;
+            if v == w {
+                continue;
+            }
+            if let Steal::Success(t) = self.per[v].deque.steal() {
+                return Some(t);
+            }
+            if let Some(t) = self.per[v].inbox.pop_front() {
+                return Some(t);
+            }
+        }
+        self.injector.pop_front()
+    }
+
+    fn approx_len(&self) -> usize {
+        self.injector.len()
+            + self
+                .per
+                .iter()
+                .map(|p| p.deque.len_estimate() + p.inbox.len())
+                .sum::<usize>()
+    }
+
+    fn workers(&self) -> usize {
+        self.per.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// global — one shared queue all workers pull from
+// ---------------------------------------------------------------------------
+
+pub struct Global {
+    high: MutexQueue,
+    shared: MutexQueue,
+    n: usize,
+}
+
+impl Global {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            high: MutexQueue::default(),
+            shared: MutexQueue::default(),
+            n: workers,
+        }
+    }
+}
+
+impl Queues for Global {
+    fn push(&self, task: Task, _hint: Hint, _submitter: Option<usize>) {
+        match task.priority {
+            Priority::High => self.high.push_back(task),
+            _ => self.shared.push_back(task),
+        }
+    }
+
+    fn pop(&self, _w: usize) -> Option<Task> {
+        self.high.pop_front().or_else(|| self.shared.pop_front())
+    }
+
+    fn steal(&self, _w: usize, _spin: usize) -> Option<Task> {
+        None // pop already sees everything
+    }
+
+    fn approx_len(&self) -> usize {
+        self.high.len() + self.shared.len()
+    }
+
+    fn workers(&self) -> usize {
+        self.n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ABP — lock-free deque per worker, stealing from the opposite end
+// ---------------------------------------------------------------------------
+
+struct AbpWorker {
+    deque: ChaseLev,
+    inbox: MutexQueue,
+}
+
+pub struct Abp {
+    per: Vec<AbpWorker>,
+    rr: AtomicUsize,
+}
+
+impl Abp {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            per: (0..workers)
+                .map(|_| AbpWorker {
+                    deque: ChaseLev::with_capacity(4096),
+                    inbox: MutexQueue::default(),
+                })
+                .collect(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Queues for Abp {
+    fn push(&self, task: Task, hint: Hint, submitter: Option<usize>) {
+        let w = match hint {
+            Hint::Worker(w) => w % self.per.len(),
+            Hint::Any => submitter
+                .unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % self.per.len()),
+        };
+        if submitter == Some(w) {
+            if let Err(t) = self.per[w].deque.push(task) {
+                self.per[w].inbox.push_back(t);
+            }
+        } else {
+            self.per[w].inbox.push_back(task);
+        }
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        self.per[w]
+            .deque
+            .pop()
+            .or_else(|| self.per[w].inbox.pop_front())
+    }
+
+    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
+        let n = self.per.len();
+        for k in 1..n {
+            let v = (w + k + spin) % n;
+            loop {
+                match self.per[v].deque.steal() {
+                    Steal::Success(t) => return Some(t),
+                    Steal::Retry => continue,
+                    Steal::Empty => break,
+                }
+            }
+            if let Some(t) = self.per[v].inbox.pop_front() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn approx_len(&self) -> usize {
+        self.per
+            .iter()
+            .map(|p| p.deque.len_estimate() + p.inbox.len())
+            .sum()
+    }
+
+    fn workers(&self) -> usize {
+        self.per.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hierarchical — binary tree of queues, workers traverse leaf→root
+// ---------------------------------------------------------------------------
+
+/// Level 0 holds one leaf queue per worker; each level up halves the queue
+/// count; pushes land at the root; a worker popping from an upper level
+/// pulls a batch down toward its leaf (the paper: "constructs a tree of
+/// task items, and each OS thread traverses through the tree to obtain new
+/// task item").
+pub struct Hierarchical {
+    levels: Vec<Vec<MutexQueue>>, // levels[0] = leaves ... last = root
+    batch: usize,
+}
+
+impl Hierarchical {
+    pub fn new(workers: usize) -> Self {
+        let mut levels = Vec::new();
+        let mut n = workers.max(1);
+        levels.push((0..n).map(|_| MutexQueue::default()).collect::<Vec<_>>());
+        while n > 1 {
+            n = n.div_ceil(2);
+            levels.push((0..n).map(|_| MutexQueue::default()).collect());
+        }
+        Self { levels, batch: 8 }
+    }
+
+    fn root(&self) -> &MutexQueue {
+        &self.levels.last().unwrap()[0]
+    }
+}
+
+impl Queues for Hierarchical {
+    fn push(&self, task: Task, hint: Hint, _submitter: Option<usize>) {
+        match hint {
+            // Targeted work lands directly in the leaf so affinity holds.
+            Hint::Worker(w) => self.levels[0][w % self.levels[0].len()].push_back(task),
+            Hint::Any => self.root().push_back(task),
+        }
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        // Leaf first.
+        if let Some(t) = self.levels[0][w].pop_front() {
+            return Some(t);
+        }
+        // Traverse up; on a hit, migrate a batch down to our leaf.
+        let mut idx = w;
+        for lvl in 1..self.levels.len() {
+            idx /= 2;
+            let q = &self.levels[lvl][idx];
+            if let Some(t) = q.pop_front() {
+                for _ in 1..self.batch {
+                    match q.pop_front() {
+                        Some(extra) => self.levels[0][w].push_back(extra),
+                        None => break,
+                    }
+                }
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
+        // Sibling-leaf scan (tree-local stealing).
+        let n = self.levels[0].len();
+        for k in 1..n {
+            let v = (w + k + spin) % n;
+            if let Some(t) = self.levels[0][v].pop_front() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn approx_len(&self) -> usize {
+        self.levels
+            .iter()
+            .map(|lvl| lvl.iter().map(MutexQueue::len).sum::<usize>())
+            .sum()
+    }
+
+    fn workers(&self) -> usize {
+        self.levels[0].len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// periodic priority — per-worker queue + shared high + shared low
+// ---------------------------------------------------------------------------
+
+/// "one queue of task items per OS thread, a couple of high priority queues
+/// and one low priority queue"; high work preempts local, low work is
+/// drained last.
+pub struct PeriodicPriority {
+    per: Vec<MutexQueue>,
+    high: Vec<MutexQueue>,
+    low: MutexQueue,
+    rr: AtomicUsize,
+}
+
+impl PeriodicPriority {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            per: (0..workers).map(|_| MutexQueue::default()).collect(),
+            high: (0..2).map(|_| MutexQueue::default()).collect(),
+            low: MutexQueue::default(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Queues for PeriodicPriority {
+    fn push(&self, task: Task, hint: Hint, _submitter: Option<usize>) {
+        match task.priority {
+            Priority::High => {
+                let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.high.len();
+                self.high[i].push_back(task);
+            }
+            Priority::Low => self.low.push_back(task),
+            Priority::Normal => {
+                let w = match hint {
+                    Hint::Worker(w) => w % self.per.len(),
+                    Hint::Any => self.rr.fetch_add(1, Ordering::Relaxed) % self.per.len(),
+                };
+                self.per[w].push_back(task);
+            }
+        }
+    }
+
+    fn pop(&self, w: usize) -> Option<Task> {
+        for h in &self.high {
+            if let Some(t) = h.pop_front() {
+                return Some(t);
+            }
+        }
+        self.per[w].pop_front().or_else(|| self.low.pop_front())
+    }
+
+    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
+        // Periodic rebalancing: idle workers sweep sibling queues.
+        let n = self.per.len();
+        for k in 1..n {
+            let v = (w + k + spin) % n;
+            if let Some(t) = self.per[v].pop_front() {
+                return Some(t);
+            }
+        }
+        self.low.pop_front()
+    }
+
+    fn approx_len(&self) -> usize {
+        self.per.iter().map(MutexQueue::len).sum::<usize>()
+            + self.high.iter().map(MutexQueue::len).sum::<usize>()
+            + self.low.len()
+    }
+
+    fn workers(&self) -> usize {
+        self.per.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize as AU;
+    use std::sync::Arc;
+
+    fn mk(c: &Arc<AU>, prio: Priority) -> Task {
+        let c = c.clone();
+        Task::new(prio, "t", move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        })
+    }
+
+    /// Push N tasks with mixed hints/priorities, then drain via pop+steal
+    /// from every worker: all tasks must come back exactly once.
+    fn drain_all(policy: &dyn Queues, n_tasks: usize) -> usize {
+        let c = Arc::new(AU::new(0));
+        for i in 0..n_tasks {
+            let prio = match i % 3 {
+                0 => Priority::Low,
+                1 => Priority::Normal,
+                _ => Priority::High,
+            };
+            let hint = if i % 2 == 0 {
+                Hint::Any
+            } else {
+                Hint::Worker(i % 7)
+            };
+            policy.push(mk(&c, prio), hint, None);
+        }
+        let mut got = 0;
+        loop {
+            let mut any = false;
+            for w in 0..policy.workers() {
+                while let Some(t) = policy.pop(w) {
+                    t.run();
+                    got += 1;
+                    any = true;
+                }
+                while let Some(t) = policy.steal(w, 0) {
+                    t.run();
+                    got += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        assert_eq!(c.load(Ordering::SeqCst), got);
+        got
+    }
+
+    #[test]
+    fn all_policies_conserve_tasks() {
+        for kind in PolicyKind::ALL {
+            let q = kind.build(4);
+            let got = drain_all(q.as_ref(), 500);
+            assert_eq!(got, 500, "policy {} lost/duplicated tasks", kind.name());
+            assert_eq!(q.approx_len(), 0, "policy {} not drained", kind.name());
+        }
+    }
+
+    #[test]
+    fn static_priority_never_steals() {
+        let q = StaticPriority::new(4);
+        let c = Arc::new(AU::new(0));
+        q.push(mk(&c, Priority::Normal), Hint::Worker(2), None);
+        assert!(q.steal(0, 0).is_none());
+        assert!(q.pop(0).is_none());
+        assert!(q.pop(2).is_some());
+    }
+
+    #[test]
+    fn priority_local_serves_high_first() {
+        let q = PriorityLocal::new(1);
+        let c = Arc::new(AU::new(0));
+        q.push(mk(&c, Priority::Normal), Hint::Worker(0), None);
+        let high = mk(&c, Priority::High);
+        let high_id = high.id;
+        q.push(high, Hint::Worker(0), None);
+        assert_eq!(q.pop(0).unwrap().id, high_id);
+    }
+
+    #[test]
+    fn global_policy_shares_one_queue() {
+        let q = Global::new(4);
+        let c = Arc::new(AU::new(0));
+        q.push(mk(&c, Priority::Normal), Hint::Any, None);
+        // Any worker can pop it.
+        assert!(q.pop(3).is_some());
+    }
+
+    #[test]
+    fn hierarchical_migrates_batches_to_leaf() {
+        let q = Hierarchical::new(4);
+        let c = Arc::new(AU::new(0));
+        for _ in 0..20 {
+            q.push(mk(&c, Priority::Normal), Hint::Any, None);
+        }
+        // First pop on worker 0 pulls a batch from the root toward leaf 0.
+        assert!(q.pop(0).is_some());
+        assert!(
+            q.levels[0][0].len() > 0,
+            "batch was not migrated to the leaf"
+        );
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(PolicyKind::parse("default"), Some(PolicyKind::PriorityLocal));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,249 @@
+//! The scheduler: worker pool + policy queues + spawn/quiesce/shutdown.
+//!
+//! This is the "HPX runtime" of the reproduction: `Scheduler::spawn` is our
+//! `hpx::applier::register_thread_nullary` (paper Listing 3), taking a
+//! priority, a placement hint and a description.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::policy::{PolicyKind, Queues};
+use super::task::{Hint, Priority, Task};
+use super::worker;
+
+/// State shared by all workers of one scheduler instance.
+pub struct Shared {
+    pub(super) queues: Box<dyn Queues>,
+    /// Tasks spawned but not yet retired (queued + running).
+    pub(super) live: AtomicUsize,
+    pub(super) shutdown: AtomicBool,
+    pub(super) idle_lock: Mutex<()>,
+    pub(super) idle_cv: Condvar,
+    pub(super) sleepers: AtomicUsize,
+    pub(super) metrics: Metrics,
+    pub(super) panics: AtomicU64,
+    policy: PolicyKind,
+}
+
+/// An AMT scheduler instance: `n` OS workers multiplexing tasks under a
+/// [`PolicyKind`].
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    pub fn new(workers: usize, policy: PolicyKind) -> Arc<Self> {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queues: policy.build(workers),
+            live: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            idle_lock: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
+            metrics: Metrics::default(),
+            panics: AtomicU64::new(0),
+            policy,
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let s = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("hpx-worker-{i}"))
+                    .spawn(move || worker::worker_loop(s, i))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Arc::new(Self {
+            shared,
+            handles: Mutex::new(handles),
+        })
+    }
+
+    pub fn policy(&self) -> PolicyKind {
+        self.shared.policy
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shared.queues.workers()
+    }
+
+    /// Register a task — `hpx::applier::register_thread_nullary` analog.
+    pub fn spawn(
+        &self,
+        priority: Priority,
+        hint: Hint,
+        desc: &'static str,
+        f: impl FnOnce() + Send + 'static,
+    ) {
+        let task = Task::new(priority, desc, f);
+        self.shared.live.fetch_add(1, Ordering::Acquire);
+        Metrics::inc(&self.shared.metrics.spawned);
+        let submitter = worker::current().and_then(|(s, w)| {
+            if Arc::ptr_eq(&s, &self.shared) {
+                Some(w)
+            } else {
+                None
+            }
+        });
+        self.shared.queues.push(task, hint, submitter);
+        self.wake_one();
+    }
+
+    fn wake_one(&self) {
+        if self.shared.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.shared.idle_lock.lock().unwrap();
+            self.shared.idle_cv.notify_one();
+        }
+    }
+
+    /// Block the *calling* (non-worker) thread until all spawned tasks have
+    /// retired.  Worker threads must use `worker::help_one` loops instead.
+    pub fn wait_quiescent(&self) {
+        let mut spins = 0u32;
+        while self.shared.live.load(Ordering::Acquire) != 0 {
+            // If we're a worker of this scheduler, help instead of idling.
+            if !worker::help_one() {
+                spins += 1;
+                if spins < 100 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+            } else {
+                spins = 0;
+            }
+        }
+    }
+
+    /// Number of tasks not yet retired.
+    pub fn live_tasks(&self) -> usize {
+        self.shared.live.load(Ordering::Acquire)
+    }
+
+    /// Panics observed inside tasks (isolated, not propagated).
+    pub fn task_panics(&self) -> u64 {
+        self.shared.panics.load(Ordering::SeqCst)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Stop accepting progress and join all workers.  Pending tasks are
+    /// drained before shutdown completes (quiesce-then-stop).
+    pub fn shutdown(&self) {
+        self.wait_quiescent();
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.shared.idle_lock.lock().unwrap();
+            self.shared.idle_cv.notify_all();
+        }
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize as AU;
+
+    #[test]
+    fn spawn_and_quiesce_runs_everything() {
+        for policy in PolicyKind::ALL {
+            let s = Scheduler::new(2, policy);
+            let c = Arc::new(AU::new(0));
+            for _ in 0..200 {
+                let c = c.clone();
+                s.spawn(Priority::Normal, Hint::Any, "t", move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            s.wait_quiescent();
+            assert_eq!(c.load(Ordering::SeqCst), 200, "policy {}", policy.name());
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn tasks_can_spawn_tasks() {
+        let s = Scheduler::new(2, PolicyKind::PriorityLocal);
+        let c = Arc::new(AU::new(0));
+        {
+            let s2 = Arc::downgrade(&s);
+            let c = c.clone();
+            s.spawn(Priority::Normal, Hint::Any, "parent", move || {
+                let s = s2.upgrade().unwrap();
+                for _ in 0..10 {
+                    let c = c.clone();
+                    s.spawn(Priority::Normal, Hint::Any, "child", move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }
+        s.wait_quiescent();
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn panicking_task_is_isolated() {
+        let s = Scheduler::new(1, PolicyKind::PriorityLocal);
+        s.spawn(Priority::Normal, Hint::Any, "boom", || panic!("boom"));
+        let c = Arc::new(AU::new(0));
+        let c2 = c.clone();
+        s.spawn(Priority::Normal, Hint::Any, "after", move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        s.wait_quiescent();
+        assert_eq!(s.task_panics(), 1);
+        assert_eq!(c.load(Ordering::SeqCst), 1, "worker survived the panic");
+    }
+
+    #[test]
+    fn metrics_count_spawned_and_executed() {
+        let s = Scheduler::new(2, PolicyKind::Abp);
+        for _ in 0..50 {
+            s.spawn(Priority::Normal, Hint::Any, "t", || {});
+        }
+        s.wait_quiescent();
+        let m = s.metrics();
+        assert_eq!(m.spawned, 50);
+        assert_eq!(m.executed, 50);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let s = Scheduler::new(2, PolicyKind::Global);
+        s.spawn(Priority::Normal, Hint::Any, "t", || {});
+        s.shutdown();
+        s.shutdown();
+    }
+
+    #[test]
+    fn worker_hint_lands_on_requested_queue_for_static() {
+        // With static-priority (no stealing), a Worker(i) hint pins work.
+        let s = Scheduler::new(4, PolicyKind::StaticPriority);
+        let hits = Arc::new(AU::new(0));
+        for i in 0..4 {
+            let hits = hits.clone();
+            s.spawn(Priority::Normal, Hint::Worker(i), "pinned", move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        s.wait_quiescent();
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+}

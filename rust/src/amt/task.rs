@@ -1,0 +1,98 @@
+//! The unit of scheduling: an HPX-thread analog.
+//!
+//! In hpxMP every OpenMP implicit or explicit task becomes one HPX thread
+//! (`hpx::applier::register_thread_nullary`, paper Listings 3 & 5), tagged
+//! with a priority (`thread_priority_low` for implicit team threads,
+//! normal for explicit tasks).  Our [`Task`] carries the same information.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Scheduling priority, mirroring `hpx::threads::thread_priority_*`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+/// Placement hint given at spawn time, mirroring the `os_thread` hint HPX's
+/// `register_thread_nullary` accepts (Listing 3 passes the loop index `i`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hint {
+    /// No preference: the policy decides (round-robin or submitter-local).
+    Any,
+    /// Prefer the queue of worker `w` (wraps modulo worker count).
+    Worker(usize),
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A schedulable task: an owned closure plus scheduling metadata.
+pub struct Task {
+    pub id: u64,
+    pub priority: Priority,
+    /// Description shown by metrics/tracing ("omp_implicit_task", ...).
+    pub desc: &'static str,
+    f: Box<dyn FnOnce() + Send + 'static>,
+}
+
+impl Task {
+    pub fn new(
+        priority: Priority,
+        desc: &'static str,
+        f: impl FnOnce() + Send + 'static,
+    ) -> Self {
+        Self {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            priority,
+            desc,
+            f: Box::new(f),
+        }
+    }
+
+    /// Consume and execute the task body.
+    pub fn run(self) {
+        (self.f)()
+    }
+}
+
+impl std::fmt::Debug for Task {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Task")
+            .field("id", &self.id)
+            .field("priority", &self.priority)
+            .field("desc", &self.desc)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn task_ids_are_unique_and_increasing() {
+        let a = Task::new(Priority::Normal, "a", || {});
+        let b = Task::new(Priority::Normal, "b", || {});
+        assert!(b.id > a.id);
+    }
+
+    #[test]
+    fn run_executes_closure_once() {
+        let n = Arc::new(AtomicUsize::new(0));
+        let n2 = n.clone();
+        let t = Task::new(Priority::High, "inc", move || {
+            n2.fetch_add(1, Ordering::SeqCst);
+        });
+        t.run();
+        assert_eq!(n.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+    }
+}

@@ -1,0 +1,125 @@
+//! Worker threads and the thread-local scheduling context.
+//!
+//! Each worker is an OS thread bound to one queue slot of the active
+//! policy.  The thread-local [`current`] context is what lets code *inside*
+//! a task reach its scheduler — the mechanism behind cooperative task
+//! scheduling points (`help_one`), which the OpenMP layer's barriers,
+//! `taskwait`, and `taskyield` are built on (an HPX thread yielding to the
+//! scheduler in real hpxMP).
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::metrics::Metrics;
+use super::scheduler::Shared;
+use super::task::Task;
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Shared>, usize)>> = const { RefCell::new(None) };
+    /// Set when the task just executed by `help_one` immediately requeued
+    /// itself (the OMP nesting guard).  Wait loops treat such a "help" as
+    /// a miss so they back off instead of re-stealing the same task in a
+    /// hot loop — without this, a blocked team member can livelock a core
+    /// ping-ponging another member's implicit task (measured: ~900 ms per
+    /// empty parallel region on the 1-core testbed; EXPERIMENTS.md §Perf).
+    static REQUEUED: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Mark that the currently-executing task requeued itself unexecuted.
+pub fn note_requeue() {
+    REQUEUED.with(|r| r.set(true));
+}
+
+/// Consume the requeue flag (true if the last helped task was a requeue).
+pub fn take_requeued() -> bool {
+    REQUEUED.with(|r| r.replace(false))
+}
+
+/// The (scheduler, worker-index) of the calling thread, if it is a worker.
+pub fn current() -> Option<(Arc<Shared>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+pub(super) fn set_current(ctx: Option<(Arc<Shared>, usize)>) {
+    CURRENT.with(|c| *c.borrow_mut() = ctx);
+}
+
+/// Execute one task, with panic isolation and accounting.
+pub(super) fn execute(shared: &Shared, task: Task) {
+    Metrics::inc(&shared.metrics.executed);
+    let result = catch_unwind(AssertUnwindSafe(|| task.run()));
+    if result.is_err() {
+        shared.panics.fetch_add(1, Ordering::SeqCst);
+    }
+    // live was incremented at spawn; the task is now fully retired.
+    shared.live.fetch_sub(1, Ordering::Release);
+}
+
+/// The main loop of one worker thread.
+pub(super) fn worker_loop(shared: Arc<Shared>, me: usize) {
+    set_current(Some((shared.clone(), me)));
+    let mut spin = 0usize;
+    loop {
+        if let Some(task) = shared.queues.pop(me) {
+            spin = 0;
+            execute(&shared, task);
+            continue;
+        }
+        if let Some(task) = shared.queues.steal(me, spin) {
+            Metrics::inc(&shared.metrics.stolen);
+            spin = 0;
+            execute(&shared, task);
+            continue;
+        }
+        spin = spin.wrapping_add(1);
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        // Nothing runnable: brief spin first (new work often arrives
+        // immediately in fork/join phases), then park with a timeout so a
+        // missed notify self-heals.
+        if spin < 64 {
+            std::hint::spin_loop();
+            std::thread::yield_now();
+            continue;
+        }
+        Metrics::inc(&shared.metrics.parked);
+        let guard = shared.idle_lock.lock().unwrap();
+        shared.sleepers.fetch_add(1, Ordering::SeqCst);
+        // Re-check under the lock to close the sleep/wake race.
+        if shared.queues.approx_len() == 0 && !shared.shutdown.load(Ordering::Acquire) {
+            let _ = shared
+                .idle_cv
+                .wait_timeout(guard, Duration::from_micros(500))
+                .unwrap();
+        }
+        shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+        spin = 0;
+    }
+    set_current(None);
+}
+
+/// Cooperative scheduling point: if the calling thread is a worker, try to
+/// pop-or-steal one task and run it inline.  Returns `true` if a task ran.
+///
+/// This is what makes closure-based tasks compose with blocking OpenMP
+/// semantics: a team thread waiting at a barrier *becomes* the scheduler
+/// for a moment (help-first execution), exactly like a task scheduling
+/// point in the OpenMP spec.
+pub fn help_one() -> bool {
+    if let Some((shared, me)) = current() {
+        if let Some(task) = shared
+            .queues
+            .pop(me)
+            .or_else(|| shared.queues.steal(me, 0))
+        {
+            Metrics::inc(&shared.metrics.helped);
+            execute(&shared, task);
+            return true;
+        }
+    }
+    false
+}

@@ -1,0 +1,217 @@
+//! The persistent OS-thread pool behind the baseline runtime.
+//!
+//! Workers are created once and kept hot; each `fork` publishes a job and
+//! bumps a generation counter that workers spin on (then yield, then
+//! nap — the `KMP_BLOCKTIME` active-wait pattern).  This is the structural
+//! design of libomp's fork/join engine, and the reason the baseline wins
+//! on small regions: waking a warm pool is cheaper than registering and
+//! scheduling fresh tasks per region.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased job pointer: `(body, team_size)` published per region.
+/// The raw pointer is valid for the whole region because `fork` joins
+/// before returning.
+#[derive(Clone, Copy)]
+struct Job {
+    body: *const (dyn Fn(usize, usize) + Sync),
+    team: usize,
+}
+
+unsafe impl Send for Job {}
+
+struct PoolShared {
+    generation: AtomicU64,
+    job: Mutex<Option<Job>>,
+    arrived: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// A warm fork/join pool of `size - 1` helper threads (the master — the
+/// caller of [`BaselinePool::fork`] — participates as thread 0, like
+/// libomp's primary thread).
+pub struct BaselinePool {
+    size: usize,
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl BaselinePool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(PoolShared {
+            generation: AtomicU64::new(0),
+            job: Mutex::new(None),
+            arrived: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..size)
+            .map(|tid| {
+                let s = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("omp-baseline-{tid}"))
+                    .spawn(move || worker(s, tid))
+                    .expect("spawn baseline worker")
+            })
+            .collect();
+        Self {
+            size,
+            shared,
+            handles: Mutex::new(handles),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `body(tid, team_size)` on `team_size` threads (master inline as
+    /// tid 0) and join.  Serializes concurrent forks (one region at a
+    /// time, like a single libomp root).
+    pub fn fork(&self, team_size: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+        let team = team_size.clamp(1, self.size);
+        if team == 1 {
+            body(0, 1);
+            return;
+        }
+        // Publish the job, then release workers by bumping the generation.
+        //
+        // SAFETY: the raw trait-object pointer erases `body`'s lifetime;
+        // `fork` joins every team member before returning, so the pointer
+        // never outlives the borrow it came from.
+        let body_erased: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(body) };
+        {
+            let mut job = self.shared.job.lock().unwrap();
+            *job = Some(Job {
+                body: body_erased as *const _,
+                team,
+            });
+        }
+        self.shared.arrived.store(0, Ordering::Release);
+        self.shared.generation.fetch_add(1, Ordering::Release);
+
+        body(0, team); // master participates
+
+        // Join: spin briefly, then yield — on an oversubscribed host
+        // (workers > cores) hot spinning starves the very helpers we are
+        // waiting for.  This mirrors libomp's passive-wait
+        // (`KMP_LIBRARY=throughput`) behaviour, the fair configuration for
+        // the 1-core testbed (DESIGN.md §3).
+        let mut spins = 0u32;
+        while self.shared.arrived.load(Ordering::Acquire) < team - 1 {
+            spins += 1;
+            if spins < 128 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+fn worker(shared: Arc<PoolShared>, tid: usize) {
+    let mut seen_gen = 0u64;
+    let mut spins = 0u32;
+    loop {
+        let gen = shared.generation.load(Ordering::Acquire);
+        if gen == seen_gen {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            // KMP_BLOCKTIME-style escalation: short hot spin, then yield,
+            // then nap (passive-wait tuning for oversubscribed hosts).
+            spins += 1;
+            if spins < 128 {
+                std::hint::spin_loop();
+            } else if spins < 4096 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+            continue;
+        }
+        spins = 0;
+        seen_gen = gen;
+        let job = { *shared.job.lock().unwrap().as_ref().expect("job published") };
+        if tid < job.team {
+            // SAFETY: `fork` keeps `body` alive until all team members
+            // arrive, which happens strictly after this call returns.
+            unsafe { (*job.body)(tid, job.team) };
+            shared.arrived.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+}
+
+impl Drop for BaselinePool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        for h in std::mem::take(&mut *self.handles.lock().unwrap()) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize as AU;
+
+    #[test]
+    fn fork_runs_each_tid_once() {
+        let pool = BaselinePool::new(4);
+        let hits: Vec<AU> = (0..4).map(|_| AU::new(0)).collect();
+        pool.fork(4, &|tid, team| {
+            assert_eq!(team, 4);
+            hits[tid].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn smaller_team_leaves_extras_idle() {
+        let pool = BaselinePool::new(4);
+        let count = AU::new(0);
+        pool.fork(2, &|_tid, team| {
+            assert_eq!(team, 2);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn team_of_one_runs_inline() {
+        let pool = BaselinePool::new(4);
+        let count = AU::new(0);
+        pool.fork(1, &|tid, _| {
+            assert_eq!(tid, 0);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn many_regions_back_to_back() {
+        let pool = BaselinePool::new(3);
+        let total = AU::new(0);
+        for _ in 0..200 {
+            pool.fork(3, &|_, _| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 600);
+    }
+
+    #[test]
+    fn oversized_team_clamps_to_pool() {
+        let pool = BaselinePool::new(2);
+        let count = AU::new(0);
+        pool.fork(16, &|_, team| {
+            assert_eq!(team, 2);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! Blaze-lite: the dense linear-algebra substrate the paper benchmarks.
+//!
+//! The paper runs Blazemark (Blaze 3.4's benchmark suite) on top of either
+//! OpenMP runtime.  This module rebuilds the relevant slice of Blaze:
+//! dynamic vectors/matrices ([`vector`], [`matrix`]), serial kernels
+//! ([`serial`]), the four benchmark operations parallelized over the
+//! [`crate::par::ParallelRuntime`] seam ([`ops`]), and — crucially for the
+//! figures — Blaze's **parallelization thresholds** ([`thresholds`]):
+//! below the per-op element-count threshold the operation is executed
+//! single-threaded, which is why every paper plot is flat until the
+//! threshold and why the heatmaps only show structure to its right.
+
+pub mod matrix;
+pub mod ops;
+pub mod serial;
+pub mod thresholds;
+pub mod vector;
+
+pub use matrix::DynMatrix;
+pub use ops::{daxpy, dmatdmatadd, dmatdmatmult, dvecdvecadd, BlazeConfig};
+pub use vector::DynVector;

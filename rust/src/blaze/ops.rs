@@ -1,0 +1,285 @@
+//! The four Blazemark operations, parallelized over `ParallelRuntime`
+//! with Blaze's threshold gating (paper §6.1–§6.4).
+//!
+//! Each op partitions its index space into OpenMP loop chunks; each chunk
+//! runs the serial kernel on a disjoint slice of the output.  Below the
+//! per-op threshold the whole op runs single-threaded — exactly Blaze's
+//! behaviour, and the cause of the flat region in every paper figure.
+
+use std::ops::Range;
+
+use super::matrix::DynMatrix;
+use super::serial;
+use super::thresholds::*;
+use super::vector::DynVector;
+use crate::par::{LoopSched, ParallelRuntime};
+
+/// Execution configuration for one operation invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct BlazeConfig {
+    pub threads: usize,
+    pub sched: LoopSched,
+}
+
+impl BlazeConfig {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads,
+            sched: LoopSched::default(),
+        }
+    }
+}
+
+/// Covariant raw-pointer smuggle for disjoint parallel writes.  Soundness
+/// rests on the loop-partition invariant (each index claimed exactly once)
+/// which `prop_invariants.rs` checks for every schedule.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// # Safety
+    /// `r` must be within the allocation and disjoint across callers.
+    unsafe fn slice(&self, r: &Range<i64>) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.0.add(r.start as usize), (r.end - r.start) as usize)
+    }
+}
+
+/// dvecdvecadd (paper §6.1): `c = a + b`; threshold 38 000 elements.
+pub fn dvecdvecadd(
+    rt: &dyn ParallelRuntime,
+    cfg: &BlazeConfig,
+    a: &DynVector,
+    b: &DynVector,
+    c: &mut DynVector,
+) {
+    let n = a.len();
+    assert_eq!(n, b.len());
+    assert_eq!(n, c.len());
+    if !parallelize(n, DVECDVECADD_THRESHOLD) || cfg.threads <= 1 {
+        serial::vadd_slice(a.as_slice(), b.as_slice(), c.as_mut_slice());
+        return;
+    }
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    rt.parallel_for(cfg.threads, 0..n as i64, cfg.sched, &|r| {
+        let (s, e) = (r.start as usize, r.end as usize);
+        // SAFETY: chunks partition 0..n disjointly.
+        let c_sub = unsafe { cp.slice(&r) };
+        serial::vadd_slice(&a.as_slice()[s..e], &b.as_slice()[s..e], c_sub);
+    });
+}
+
+/// daxpy (paper §6.2): `b += beta * a`; threshold 38 000 elements.
+/// Blazemark uses `beta = 3.0`.
+pub fn daxpy(
+    rt: &dyn ParallelRuntime,
+    cfg: &BlazeConfig,
+    beta: f64,
+    a: &DynVector,
+    b: &mut DynVector,
+) {
+    let n = a.len();
+    assert_eq!(n, b.len());
+    if !parallelize(n, DAXPY_THRESHOLD) || cfg.threads <= 1 {
+        serial::daxpy_slice(beta, a.as_slice(), b.as_mut_slice());
+        return;
+    }
+    let bp = SendPtr(b.as_mut_slice().as_mut_ptr());
+    rt.parallel_for(cfg.threads, 0..n as i64, cfg.sched, &|r| {
+        let (s, e) = (r.start as usize, r.end as usize);
+        // SAFETY: chunks partition 0..n disjointly.
+        let b_sub = unsafe { bp.slice(&r) };
+        serial::daxpy_slice(beta, &a.as_slice()[s..e], b_sub);
+    });
+}
+
+/// dmatdmatadd (paper §6.3): `C = A + B`, parallel over rows; threshold
+/// 36 100 elements of the target (≈190×190).
+pub fn dmatdmatadd(
+    rt: &dyn ParallelRuntime,
+    cfg: &BlazeConfig,
+    a: &DynMatrix,
+    b: &DynMatrix,
+    c: &mut DynMatrix,
+) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!((m, n), (b.rows(), b.cols()));
+    assert_eq!((m, n), (c.rows(), c.cols()));
+    if !parallelize(m * n, DMATDMATADD_THRESHOLD) || cfg.threads <= 1 {
+        serial::madd_rows(a.as_slice(), b.as_slice(), c.as_mut_slice());
+        return;
+    }
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    rt.parallel_for(cfg.threads, 0..m as i64, cfg.sched, &|r| {
+        let (rs, re) = (r.start as usize, r.end as usize);
+        let flat = (rs * n) as i64..(re * n) as i64;
+        // SAFETY: row bands are disjoint.
+        let c_sub = unsafe { cp.slice(&flat) };
+        serial::madd_rows(
+            &a.as_slice()[rs * n..re * n],
+            &b.as_slice()[rs * n..re * n],
+            c_sub,
+        );
+    });
+}
+
+/// dmatdmatmult (paper §6.4): `C = A * B`, rows of C distributed across
+/// the team (Blaze's row-wise decomposition); threshold 3 025 elements of
+/// the target (≈55×55).
+pub fn dmatdmatmult(
+    rt: &dyn ParallelRuntime,
+    cfg: &BlazeConfig,
+    a: &DynMatrix,
+    b: &DynMatrix,
+    c: &mut DynMatrix,
+) {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    assert_eq!((m, n), (c.rows(), c.cols()));
+    let run_serial = !parallelize(m * n, DMATDMATMULT_THRESHOLD) || cfg.threads <= 1;
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let row_body = |r: Range<i64>| {
+        for i in r.start as usize..r.end as usize {
+            let flat = (i * n) as i64..((i + 1) * n) as i64;
+            // SAFETY: each row of C is written by exactly one claimant.
+            let c_row = unsafe { cp.slice(&flat) };
+            serial::matmul_row(a.row(i), b.as_slice(), n, c_row);
+        }
+    };
+    if run_serial {
+        row_body(0..m as i64);
+        return;
+    }
+    rt.parallel_for(cfg.threads, 0..m as i64, cfg.sched, &row_body);
+}
+
+/// Blazemark FLOP counts per operation (what MFLOP/s is computed from).
+pub mod flops {
+    /// dvecdvecadd: one add per element.
+    pub fn dvecdvecadd(n: usize) -> f64 {
+        n as f64
+    }
+
+    /// daxpy: multiply + add per element.
+    pub fn daxpy(n: usize) -> f64 {
+        2.0 * n as f64
+    }
+
+    /// dmatdmatadd: one add per element.
+    pub fn dmatdmatadd(n: usize) -> f64 {
+        (n * n) as f64
+    }
+
+    /// dmatdmatmult: 2·n³ (multiply-add per inner element).
+    pub fn dmatdmatmult(n: usize) -> f64 {
+        2.0 * (n as f64).powi(3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::BaselineRuntime;
+    use crate::par::SerialRuntime;
+
+    fn vec_ref_add(a: &DynVector, b: &DynVector) -> DynVector {
+        DynVector::from_vec(
+            a.as_slice()
+                .iter()
+                .zip(b.as_slice())
+                .map(|(x, y)| x + y)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn dvecdvecadd_below_threshold_is_serial_and_correct() {
+        let rt = SerialRuntime;
+        let a = DynVector::random(1000, 1);
+        let b = DynVector::random(1000, 2);
+        let mut c = DynVector::zeros(1000);
+        dvecdvecadd(&rt, &BlazeConfig::new(4), &a, &b, &mut c);
+        assert_eq!(c, vec_ref_add(&a, &b));
+    }
+
+    #[test]
+    fn dvecdvecadd_parallel_matches_serial() {
+        let rt = BaselineRuntime::new(4);
+        let n = 50_000; // above threshold
+        let a = DynVector::random(n, 3);
+        let b = DynVector::random(n, 4);
+        let mut c = DynVector::zeros(n);
+        dvecdvecadd(&rt, &BlazeConfig::new(4), &a, &b, &mut c);
+        assert_eq!(c.max_abs_diff(&vec_ref_add(&a, &b)), 0.0);
+    }
+
+    #[test]
+    fn daxpy_parallel_matches_serial() {
+        let rt = BaselineRuntime::new(4);
+        let n = 60_000;
+        let a = DynVector::random(n, 5);
+        let b0 = DynVector::random(n, 6);
+        let mut b_par = b0.clone();
+        daxpy(&rt, &BlazeConfig::new(4), 3.0, &a, &mut b_par);
+        let mut b_ser = b0.clone();
+        serial::daxpy_slice(3.0, a.as_slice(), b_ser.as_mut_slice());
+        assert_eq!(b_par.max_abs_diff(&b_ser), 0.0);
+    }
+
+    #[test]
+    fn dmatdmatadd_parallel_matches_serial() {
+        let rt = BaselineRuntime::new(4);
+        let n = 200; // 40000 elements > 36100
+        let a = DynMatrix::random(n, n, 7);
+        let b = DynMatrix::random(n, n, 8);
+        let mut c = DynMatrix::zeros(n, n);
+        dmatdmatadd(&rt, &BlazeConfig::new(4), &a, &b, &mut c);
+        let mut c_ref = DynMatrix::zeros(n, n);
+        serial::madd_rows(a.as_slice(), b.as_slice(), c_ref.as_mut_slice());
+        assert_eq!(c.max_abs_diff(&c_ref), 0.0);
+    }
+
+    #[test]
+    fn dmatdmatmult_identity_and_parallel_consistency() {
+        let rt = BaselineRuntime::new(4);
+        let n = 64; // 4096 elements > 3025: parallel path
+        let a = DynMatrix::random(n, n, 9);
+        let eye = DynMatrix::identity(n);
+        let mut c = DynMatrix::zeros(n, n);
+        dmatdmatmult(&rt, &BlazeConfig::new(4), &a, &eye, &mut c);
+        assert!(c.max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn dmatdmatmult_small_uses_serial_path() {
+        // 10x10 < 3025 threshold: must still be correct.
+        let rt = BaselineRuntime::new(4);
+        let a = DynMatrix::random(10, 10, 10);
+        let b = DynMatrix::random(10, 10, 11);
+        let mut c = DynMatrix::zeros(10, 10);
+        dmatdmatmult(&rt, &BlazeConfig::new(4), &a, &b, &mut c);
+        // Oracle: naive triple loop.
+        let mut c_ref = DynMatrix::zeros(10, 10);
+        for i in 0..10 {
+            for j in 0..10 {
+                let mut s = 0.0;
+                for k in 0..10 {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c_ref.at_mut(i, j) = s;
+            }
+        }
+        assert!(c.max_abs_diff(&c_ref) < 1e-12);
+    }
+
+    #[test]
+    fn flop_counts() {
+        assert_eq!(flops::dvecdvecadd(100), 100.0);
+        assert_eq!(flops::daxpy(100), 200.0);
+        assert_eq!(flops::dmatdmatadd(10), 100.0);
+        assert_eq!(flops::dmatdmatmult(10), 2000.0);
+    }
+}

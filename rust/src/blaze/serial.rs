@@ -1,0 +1,89 @@
+//! Serial kernels: the single-threaded code both runtimes parallelize.
+//!
+//! Shared by the serial fallback (below threshold), the parallel chunk
+//! bodies (each chunk calls these on its sub-range) and the test oracles.
+//! Hot loops are written so LLVM auto-vectorizes them (no bounds checks in
+//! the inner loop, slice-zip form).
+
+/// `b[i] += beta * a[i]` — daxpy (paper §6.2, beta = 3.0 in Blazemark).
+#[inline]
+pub fn daxpy_slice(beta: f64, a: &[f64], b: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (bi, ai) in b.iter_mut().zip(a.iter()) {
+        *bi += beta * *ai;
+    }
+}
+
+/// `c[i] = a[i] + b[i]` — dense vector addition (paper §6.1).
+#[inline]
+pub fn vadd_slice(a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), c.len());
+    for ((ci, ai), bi) in c.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *ci = *ai + *bi;
+    }
+}
+
+/// One row-band of `C = A + B` (paper §6.3): slices are whole rows.
+#[inline]
+pub fn madd_rows(a: &[f64], b: &[f64], c: &mut [f64]) {
+    vadd_slice(a, b, c);
+}
+
+/// One row of `C = A * B` (paper §6.4): `c_row = a_row * B`, ikj order so
+/// the inner loop streams B and C rows (cache-friendly, vectorizable).
+#[inline]
+pub fn matmul_row(a_row: &[f64], b: &[f64], n: usize, c_row: &mut [f64]) {
+    let k_dim = a_row.len();
+    debug_assert_eq!(b.len(), k_dim * n);
+    debug_assert_eq!(c_row.len(), n);
+    c_row.fill(0.0);
+    for (k, &aik) in a_row.iter().enumerate().take(k_dim) {
+        let b_row = &b[k * n..(k + 1) * n];
+        for (cj, bj) in c_row.iter_mut().zip(b_row.iter()) {
+            *cj += aik * *bj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn daxpy_matches_definition() {
+        let a = [1.0, 2.0, 3.0];
+        let mut b = [10.0, 20.0, 30.0];
+        daxpy_slice(3.0, &a, &mut b);
+        assert_eq!(b, [13.0, 26.0, 39.0]);
+    }
+
+    #[test]
+    fn vadd_matches_definition() {
+        let a = [1.0, 2.0];
+        let b = [0.5, 0.25];
+        let mut c = [0.0; 2];
+        vadd_slice(&a, &b, &mut c);
+        assert_eq!(c, [1.5, 2.25]);
+    }
+
+    #[test]
+    fn matmul_row_identity() {
+        // B = I(3): c_row == a_row.
+        let b = [1., 0., 0., 0., 1., 0., 0., 0., 1.];
+        let a_row = [3.0, 4.0, 5.0];
+        let mut c_row = [0.0; 3];
+        matmul_row(&a_row, &b, 3, &mut c_row);
+        assert_eq!(c_row, a_row);
+    }
+
+    #[test]
+    fn matmul_row_known_product() {
+        // A row [1,2] times B=[[1,2],[3,4]] = [7,10].
+        let b = [1., 2., 3., 4.];
+        let a_row = [1.0, 2.0];
+        let mut c_row = [0.0; 2];
+        matmul_row(&a_row, &b, 2, &mut c_row);
+        assert_eq!(c_row, [7.0, 10.0]);
+    }
+}

@@ -1,0 +1,57 @@
+//! Blaze's parallelization thresholds (paper §6, per benchmark).
+//!
+//! Blaze gates parallel execution on the element count of the target:
+//! below the threshold the operation runs single-threaded.  The paper
+//! quotes, and we reproduce:
+//!
+//! * dvecdvecadd — 38 000 elements
+//! * daxpy       — 38 000 elements
+//! * dmatdmatadd — 36 100 elements (≈ 190 × 190)
+//! * dmatdmatmult —  3 025 elements (≈ 55 × 55)
+
+/// `BLAZE_DVECDVECADD_THRESHOLD`
+pub const DVECDVECADD_THRESHOLD: usize = 38_000;
+
+/// daxpy uses the same assignment threshold as dense vector addition.
+pub const DAXPY_THRESHOLD: usize = 38_000;
+
+/// `BLAZE_DMATDMATADD_THRESHOLD` (element count of the target matrix).
+pub const DMATDMATADD_THRESHOLD: usize = 36_100;
+
+/// `BLAZE_DMATDMATMULT_THRESHOLD` (element count of the target matrix).
+pub const DMATDMATMULT_THRESHOLD: usize = 3_025;
+
+/// Would Blaze parallelize an operation on `elements` under `threshold`?
+#[inline]
+pub fn parallelize(elements: usize, threshold: usize) -> bool {
+    elements >= threshold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_match_paper_values() {
+        assert_eq!(DVECDVECADD_THRESHOLD, 38_000);
+        assert_eq!(DAXPY_THRESHOLD, 38_000);
+        assert_eq!(DMATDMATADD_THRESHOLD, 36_100);
+        assert_eq!(DMATDMATMULT_THRESHOLD, 3_025);
+    }
+
+    #[test]
+    fn matrix_thresholds_correspond_to_paper_sizes() {
+        // dmatdmatadd: 190x190 = 36100 is the first parallel size.
+        assert!(parallelize(190 * 190, DMATDMATADD_THRESHOLD));
+        assert!(!parallelize(189 * 189, DMATDMATADD_THRESHOLD));
+        // dmatdmatmult: 55x55 = 3025.
+        assert!(parallelize(55 * 55, DMATDMATMULT_THRESHOLD));
+        assert!(!parallelize(54 * 54, DMATDMATMULT_THRESHOLD));
+    }
+
+    #[test]
+    fn boundary_is_inclusive() {
+        assert!(parallelize(38_000, DVECDVECADD_THRESHOLD));
+        assert!(!parallelize(37_999, DVECDVECADD_THRESHOLD));
+    }
+}

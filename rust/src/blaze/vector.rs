@@ -1,0 +1,98 @@
+//! `DynVector` — Blaze's `DynamicVector<double>` analog.
+
+use crate::util::rng::Xoshiro256;
+
+/// A heap-allocated dense f64 vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DynVector {
+    data: Vec<f64>,
+}
+
+impl DynVector {
+    pub fn zeros(n: usize) -> Self {
+        Self { data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f64>) -> Self {
+        Self { data }
+    }
+
+    /// Uniform random in [-1, 1) — Blazemark-style operand init.
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut data = vec![0.0; n];
+        rng.fill_f64(&mut data);
+        Self { data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Max |a-b| against another vector (test comparisons).
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<usize> for DynVector {
+    type Output = f64;
+
+    fn index(&self, i: usize) -> &f64 {
+        &self.data[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for DynVector {
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        &mut self.data[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_index() {
+        let mut v = DynVector::zeros(4);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[2], 0.0);
+        v[2] = 5.0;
+        assert_eq!(v[2], 5.0);
+    }
+
+    #[test]
+    fn random_is_seeded_and_bounded() {
+        let a = DynVector::random(100, 7);
+        let b = DynVector::random(100, 7);
+        assert_eq!(a, b);
+        assert!(a.as_slice().iter().all(|&x| (-1.0..1.0).contains(&x)));
+        let c = DynVector::random(100, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = DynVector::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = DynVector::from_vec(vec![1.0, 2.5, 3.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,161 @@
+//! Single-cell measurement: MFLOP/s of one (op, runtime, threads, size).
+//!
+//! Methodology mirrors Blazemark: operands initialized once, the operation
+//! repeated in a steady-state loop, per-iteration median → MFLOP/s.
+
+use crate::blaze::{self, BlazeConfig, DynMatrix, DynVector};
+use crate::par::ParallelRuntime;
+use crate::util::timing::{bench, mflops, BenchCfg};
+
+/// The four paper benchmarks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    DVecDVecAdd,
+    Daxpy,
+    DMatDMatAdd,
+    DMatDMatMult,
+}
+
+impl Op {
+    pub const ALL: [Op; 4] = [Op::DVecDVecAdd, Op::Daxpy, Op::DMatDMatAdd, Op::DMatDMatMult];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dvecdvecadd" | "vadd" => Op::DVecDVecAdd,
+            "daxpy" => Op::Daxpy,
+            "dmatdmatadd" | "madd" => Op::DMatDMatAdd,
+            "dmatdmatmult" | "matmul" | "mmult" => Op::DMatDMatMult,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::DVecDVecAdd => "dvecdvecadd",
+            Op::Daxpy => "daxpy",
+            Op::DMatDMatAdd => "dmatdmatadd",
+            Op::DMatDMatMult => "dmatdmatmult",
+        }
+    }
+
+    /// Is `n` a vector length (true) or a square-matrix dimension (false)?
+    pub fn is_vector(&self) -> bool {
+        matches!(self, Op::DVecDVecAdd | Op::Daxpy)
+    }
+
+    /// Paper figure ids for this op: (heatmap, scaling).
+    pub fn figures(&self) -> (&'static str, &'static str) {
+        match self {
+            Op::DVecDVecAdd => ("fig2", "fig6"),
+            Op::Daxpy => ("fig3", "fig7"),
+            Op::DMatDMatAdd => ("fig4", "fig8"),
+            Op::DMatDMatMult => ("fig5", "fig9"),
+        }
+    }
+
+    /// FLOPs of one invocation at size `n`.
+    pub fn flops(&self, n: usize) -> f64 {
+        match self {
+            Op::DVecDVecAdd => blaze::ops::flops::dvecdvecadd(n),
+            Op::Daxpy => blaze::ops::flops::daxpy(n),
+            Op::DMatDMatAdd => blaze::ops::flops::dmatdmatadd(n),
+            Op::DMatDMatMult => blaze::ops::flops::dmatdmatmult(n),
+        }
+    }
+
+    /// Default size grid for the heatmap sweep (geometric subset of the
+    /// paper's arithmetic 1..10M progression, capped per op so a full
+    /// 16-thread sweep stays tractable on the 1-core testbed).
+    pub fn heatmap_sizes(&self) -> Vec<usize> {
+        match self {
+            Op::DVecDVecAdd | Op::Daxpy => {
+                vec![10_000, 38_000, 65_536, 131_072, 262_144, 524_288, 1_048_576, 2_097_152]
+            }
+            Op::DMatDMatAdd => vec![64, 128, 190, 230, 300, 455, 700, 1000],
+            Op::DMatDMatMult => vec![32, 55, 74, 113, 150, 230, 300, 400],
+        }
+    }
+
+    /// Size grid for the scaling plots (Figs 6–9 x-axis).
+    pub fn scaling_sizes(&self) -> Vec<usize> {
+        match self {
+            Op::DVecDVecAdd | Op::Daxpy => vec![
+                1_000, 4_000, 10_000, 38_000, 100_000, 262_144, 524_288, 1_048_576, 2_097_152,
+                4_194_304,
+            ],
+            Op::DMatDMatAdd => vec![16, 32, 64, 128, 190, 230, 300, 455, 700, 1000],
+            Op::DMatDMatMult => vec![8, 16, 32, 55, 74, 113, 150, 230, 300, 400],
+        }
+    }
+}
+
+/// Measure MFLOP/s of `op` at size `n` under `rt` with `threads` threads.
+pub fn measure(rt: &dyn ParallelRuntime, op: Op, threads: usize, n: usize, cfg: &BenchCfg) -> f64 {
+    let bcfg = BlazeConfig::new(threads);
+    let summary = match op {
+        Op::DVecDVecAdd => {
+            let a = DynVector::random(n, 11);
+            let b = DynVector::random(n, 12);
+            let mut c = DynVector::zeros(n);
+            bench(cfg, || blaze::dvecdvecadd(rt, &bcfg, &a, &b, &mut c))
+        }
+        Op::Daxpy => {
+            let a = DynVector::random(n, 13);
+            let mut b = DynVector::random(n, 14);
+            bench(cfg, || blaze::daxpy(rt, &bcfg, 3.0, &a, &mut b))
+        }
+        Op::DMatDMatAdd => {
+            let a = DynMatrix::random(n, n, 15);
+            let b = DynMatrix::random(n, n, 16);
+            let mut c = DynMatrix::zeros(n, n);
+            bench(cfg, || blaze::dmatdmatadd(rt, &bcfg, &a, &b, &mut c))
+        }
+        Op::DMatDMatMult => {
+            let a = DynMatrix::random(n, n, 17);
+            let b = DynMatrix::random(n, n, 18);
+            let mut c = DynMatrix::zeros(n, n);
+            bench(cfg, || blaze::dmatdmatmult(rt, &bcfg, &a, &b, &mut c))
+        }
+    };
+    mflops(&summary, op.flops(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::SerialRuntime;
+
+    #[test]
+    fn op_parse_roundtrip() {
+        for op in Op::ALL {
+            assert_eq!(Op::parse(op.name()), Some(op));
+        }
+        assert_eq!(Op::parse("matmul"), Some(Op::DMatDMatMult));
+        assert_eq!(Op::parse("nope"), None);
+    }
+
+    #[test]
+    fn measure_returns_positive_mflops() {
+        let cfg = BenchCfg {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 2,
+            min_time: std::time::Duration::from_micros(1),
+        };
+        for op in Op::ALL {
+            let n = if op.is_vector() { 1024 } else { 32 };
+            let m = measure(&SerialRuntime, op, 1, n, &cfg);
+            assert!(m > 0.0, "{}: {m}", op.name());
+        }
+    }
+
+    #[test]
+    fn size_grids_are_sorted_and_nonempty() {
+        for op in Op::ALL {
+            for grid in [op.heatmap_sizes(), op.scaling_sizes()] {
+                assert!(!grid.is_empty());
+                assert!(grid.windows(2).all(|w| w[0] < w[1]), "{}", op.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,387 @@
+//! Live conformance report for the paper's Tables 1–3: every directive,
+//! runtime-library function, and OMPT callback the paper lists is
+//! exercised against the hpxMP runtime and reported pass/fail.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::omp::api::*;
+use crate::omp::sync::{critical, AtomicF64};
+use crate::omp::team::{current_ctx, fork_call};
+use crate::omp::{ompt, OmpRuntime};
+
+/// One checked feature.
+pub struct Check {
+    pub table: &'static str,
+    pub feature: &'static str,
+    pub passed: bool,
+    pub detail: String,
+}
+
+/// Run the full Tables 1–3 conformance suite against `rt`.
+pub fn run_all(rt: &Arc<OmpRuntime>) -> Vec<Check> {
+    let mut checks = Vec::new();
+    let mut add = |table, feature, result: Result<(), String>| {
+        checks.push(Check {
+            table,
+            feature,
+            passed: result.is_ok(),
+            detail: result.err().unwrap_or_default(),
+        });
+    };
+
+    // --- Table 1: directives -------------------------------------------------
+    add("T1", "#pragma omp parallel", check_parallel(rt));
+    add("T1", "#pragma omp for", check_for(rt));
+    add("T1", "#pragma omp barrier", check_barrier(rt));
+    add("T1", "#pragma omp critical", check_critical(rt));
+    add("T1", "#pragma omp atomic", check_atomic(rt));
+    add("T1", "#pragma omp master", check_master(rt));
+    add("T1", "#pragma omp single", check_single(rt));
+    add("T1", "#pragma omp section", check_sections(rt));
+    add("T1", "#pragma omp ordered", check_ordered(rt));
+    add("T1", "#pragma omp task depend", check_task_depend(rt));
+
+    // --- Table 2: runtime library functions ----------------------------------
+    add("T2", "omp_get_thread_num/num_threads", check_thread_ids(rt));
+    add("T2", "omp_get_max_threads/set_num_threads", {
+        let saved = omp_get_max_threads();
+        omp_set_num_threads(3);
+        let r = if omp_get_max_threads() == 3 {
+            Ok(())
+        } else {
+            Err("set/get mismatch".into())
+        };
+        omp_set_num_threads(saved);
+        r
+    });
+    add("T2", "omp_in_parallel", check_in_parallel(rt));
+    add("T2", "omp_get_num_procs", ok_if(omp_get_num_procs() >= 1, "procs < 1"));
+    add(
+        "T2",
+        "omp_get_wtime/wtick",
+        ok_if(
+            omp_get_wtime() >= 0.0 && omp_get_wtick() > 0.0,
+            "non-positive timer",
+        ),
+    );
+    add("T2", "omp_get_dynamic/set_dynamic", {
+        let saved = omp_get_dynamic();
+        omp_set_dynamic(true);
+        let r = ok_if(omp_get_dynamic(), "set_dynamic(true) not visible");
+        omp_set_dynamic(saved);
+        r
+    });
+    add("T2", "omp_init/set/unset/test_lock", {
+        let l = omp_init_lock();
+        omp_set_lock(&l);
+        let t1 = omp_test_lock(&l);
+        omp_unset_lock(&l);
+        let t2 = omp_test_lock(&l);
+        if t2 {
+            omp_unset_lock(&l);
+        }
+        ok_if(!t1 && t2, "lock test semantics wrong")
+    });
+    add("T2", "omp_init/set/unset/test_nest_lock", {
+        let l = omp_init_nest_lock();
+        omp_set_nest_lock(&l);
+        let d = omp_test_nest_lock(&l);
+        omp_unset_nest_lock(&l);
+        omp_unset_nest_lock(&l);
+        ok_if(d == 2, format!("nest depth {d} != 2"))
+    });
+
+    // --- Table 3: OMPT callbacks ----------------------------------------------
+    add("T3", "ompt_callback_parallel_begin/end", check_ompt_parallel(rt));
+    add("T3", "ompt_callback_implicit_task", check_ompt_implicit(rt));
+    add("T3", "ompt_callback_task_create/schedule", check_ompt_task(rt));
+
+    checks
+}
+
+/// Render the checks as the conformance report table.
+pub fn render(checks: &[Check]) -> String {
+    let mut out = String::new();
+    out.push_str("conformance report (paper Tables 1-3)\n");
+    let mut last = "";
+    let mut pass = 0;
+    for c in checks {
+        if c.table != last {
+            out.push_str(&format!("-- {} --\n", c.table));
+            last = c.table;
+        }
+        out.push_str(&format!(
+            "  [{}] {}{}\n",
+            if c.passed { "PASS" } else { "FAIL" },
+            c.feature,
+            if c.detail.is_empty() {
+                String::new()
+            } else {
+                format!("  ({})", c.detail)
+            }
+        ));
+        pass += c.passed as usize;
+    }
+    out.push_str(&format!("{pass}/{} features pass\n", checks.len()));
+    out
+}
+
+fn ok_if(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+fn check_parallel(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let n = Arc::new(AtomicUsize::new(0));
+    let n2 = n.clone();
+    fork_call(rt, Some(4), move |_| {
+        n2.fetch_add(1, Ordering::SeqCst);
+    });
+    ok_if(n.load(Ordering::SeqCst) == 4, "wrong team size")
+}
+
+fn check_for(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let seen = Arc::new(Mutex::new(vec![0u32; 128]));
+    let s = seen.clone();
+    fork_call(rt, Some(4), move |ctx| {
+        ctx.for_static(0..128, None, |i| {
+            s.lock().unwrap()[i as usize] += 1;
+        });
+    });
+    let ok = seen.lock().unwrap().iter().all(|&c| c == 1);
+    ok_if(ok, "loop partition broken")
+}
+
+fn check_barrier(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let phase = Arc::new(AtomicUsize::new(0));
+    let bad = Arc::new(AtomicUsize::new(0));
+    let (p, b) = (phase.clone(), bad.clone());
+    fork_call(rt, Some(4), move |ctx| {
+        p.fetch_add(1, Ordering::SeqCst);
+        ctx.barrier();
+        if p.load(Ordering::SeqCst) != 4 {
+            b.fetch_add(1, Ordering::SeqCst);
+        }
+    });
+    ok_if(bad.load(Ordering::SeqCst) == 0, "barrier leaked")
+}
+
+fn check_critical(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let v = Arc::new(Mutex::new(0i64));
+    let v2 = v.clone();
+    fork_call(rt, Some(4), move |_| {
+        for _ in 0..100 {
+            critical("conf", || {
+                *v2.lock().unwrap() += 1;
+            });
+        }
+    });
+    let ok = *v.lock().unwrap() == 400;
+    ok_if(ok, "lost updates")
+}
+
+fn check_atomic(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let cell = Arc::new(AtomicF64::new(0.0));
+    let c = cell.clone();
+    fork_call(rt, Some(4), move |_| {
+        for _ in 0..1000 {
+            c.fetch_add(1.0);
+        }
+    });
+    ok_if(cell.load() == 4000.0, format!("sum {}", cell.load()))
+}
+
+fn check_master(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let hits = Arc::new(AtomicUsize::new(0));
+    let h = hits.clone();
+    fork_call(rt, Some(4), move |ctx| {
+        ctx.master(|| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+    });
+    ok_if(hits.load(Ordering::SeqCst) == 1, "master ran != 1 times")
+}
+
+fn check_single(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let hits = Arc::new(AtomicUsize::new(0));
+    let h = hits.clone();
+    fork_call(rt, Some(4), move |ctx| {
+        ctx.single(|| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+    });
+    ok_if(hits.load(Ordering::SeqCst) == 1, "single ran != 1 times")
+}
+
+fn check_sections(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let hits = Arc::new(AtomicUsize::new(0));
+    let h = hits.clone();
+    fork_call(rt, Some(3), move |ctx| {
+        let mut secs: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+        for _ in 0..5 {
+            let h = h.clone();
+            secs.push(Box::new(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        ctx.sections(secs);
+    });
+    ok_if(hits.load(Ordering::SeqCst) == 5, "sections ran != 5")
+}
+
+fn check_ordered(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let o = order.clone();
+    fork_call(rt, Some(4), move |ctx| {
+        let o = o.clone();
+        ctx.for_ordered(0..32, |_| {}, move |i| o.lock().unwrap().push(i));
+    });
+    let ok = *order.lock().unwrap() == (0..32).collect::<Vec<_>>();
+    ok_if(ok, "ordered out of order")
+}
+
+fn check_task_depend(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    use crate::omp::{Dep, DepKind};
+    let trace = Arc::new(Mutex::new(Vec::new()));
+    let t = trace.clone();
+    fork_call(rt, Some(2), move |c| {
+        if c.tid == 0 {
+            let ctx = current_ctx().unwrap();
+            for step in 0..6 {
+                let t = t.clone();
+                ctx.task_with_deps(&[Dep { addr: 0xA11CE, kind: DepKind::InOut }], move || {
+                    t.lock().unwrap().push(step);
+                });
+            }
+            ctx.taskwait();
+        }
+    });
+    let ok = *trace.lock().unwrap() == (0..6).collect::<Vec<_>>();
+    ok_if(ok, "dependence chain violated")
+}
+
+fn check_thread_ids(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let ids = Arc::new(Mutex::new(Vec::new()));
+    let i2 = ids.clone();
+    fork_call(rt, Some(4), move |_| {
+        i2.lock()
+            .unwrap()
+            .push((omp_get_thread_num(), omp_get_num_threads()));
+    });
+    let mut got = ids.lock().unwrap().clone();
+    got.sort();
+    ok_if(
+        got == (0..4).map(|i| (i, 4)).collect::<Vec<_>>(),
+        format!("{got:?}"),
+    )
+}
+
+fn check_in_parallel(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    if omp_in_parallel() {
+        return Err("true outside region".into());
+    }
+    let ok = Arc::new(AtomicUsize::new(0));
+    let o = ok.clone();
+    fork_call(rt, Some(2), move |_| {
+        if omp_in_parallel() {
+            o.fetch_add(1, Ordering::SeqCst);
+        }
+    });
+    ok_if(ok.load(Ordering::SeqCst) == 2, "false inside region")
+}
+
+fn check_ompt_parallel(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let begins = Arc::new(AtomicUsize::new(0));
+    let ends = Arc::new(AtomicUsize::new(0));
+    let (b, e) = (begins.clone(), ends.clone());
+    rt.ompt
+        .set_parallel_begin(Box::new(move |_pid, _size| {
+            b.fetch_add(1, Ordering::SeqCst);
+        }));
+    rt.ompt.set_parallel_end(Box::new(move |_pid| {
+        e.fetch_add(1, Ordering::SeqCst);
+    }));
+    fork_call(rt, Some(2), |_| {});
+    ok_if(
+        begins.load(Ordering::SeqCst) == 1 && ends.load(Ordering::SeqCst) == 1,
+        "parallel callbacks not fired",
+    )
+}
+
+fn check_ompt_implicit(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let begins = Arc::new(AtomicUsize::new(0));
+    let b = begins.clone();
+    rt.ompt
+        .set_implicit_task(Box::new(move |ep, _pid, _size, _tid| {
+            if ep == ompt::Endpoint::Begin {
+                b.fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+    fork_call(rt, Some(3), |_| {});
+    ok_if(
+        begins.load(Ordering::SeqCst) == 3,
+        format!("implicit begins {}", begins.load(Ordering::SeqCst)),
+    )
+}
+
+fn check_ompt_task(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let created = Arc::new(AtomicUsize::new(0));
+    let scheduled = Arc::new(AtomicUsize::new(0));
+    let (c, s) = (created.clone(), scheduled.clone());
+    rt.ompt.set_task_create(Box::new(move |_p, _c| {
+        c.fetch_add(1, Ordering::SeqCst);
+    }));
+    rt.ompt.set_task_schedule(Box::new(move |_p, _st, _n| {
+        s.fetch_add(1, Ordering::SeqCst);
+    }));
+    fork_call(rt, Some(2), |c| {
+        if c.tid == 0 {
+            let ctx = current_ctx().unwrap();
+            for _ in 0..4 {
+                ctx.task(|| {});
+            }
+            ctx.taskwait();
+        }
+    });
+    ok_if(
+        created.load(Ordering::SeqCst) == 4 && scheduled.load(Ordering::SeqCst) >= 4,
+        "task callbacks not fired",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_conformance_suite_passes() {
+        let rt = OmpRuntime::for_tests(4);
+        let checks = run_all(&rt);
+        let failed: Vec<_> = checks.iter().filter(|c| !c.passed).collect();
+        assert!(
+            failed.is_empty(),
+            "failures: {:?}",
+            failed
+                .iter()
+                .map(|c| format!("{}: {}", c.feature, c.detail))
+                .collect::<Vec<_>>()
+        );
+        // All three tables represented.
+        for t in ["T1", "T2", "T3"] {
+            assert!(checks.iter().any(|c| c.table == t));
+        }
+    }
+
+    #[test]
+    fn render_contains_counts() {
+        let rt = OmpRuntime::for_tests(2);
+        let checks = run_all(&rt);
+        let s = render(&checks);
+        assert!(s.contains("T1"));
+        assert!(s.contains("features pass"));
+    }
+}

@@ -1,0 +1,17 @@
+//! The Blazemark-style benchmark coordinator.
+//!
+//! Regenerates every figure of the paper's evaluation (§6):
+//!
+//! * [`blazemark`] — one-operation measurement (MFLOP/s under a runtime);
+//! * [`sweep`] — threads×size ratio heatmaps (Figs 2–5) and per-thread
+//!   scaling series (Figs 6–9);
+//! * [`conformance`] — the Tables 1–3 feature inventory, verified live;
+//! * [`report`] — CSV + ASCII emission under `results/`.
+
+pub mod blazemark;
+pub mod conformance;
+pub mod report;
+pub mod sweep;
+
+pub use blazemark::{measure, Op};
+pub use sweep::{heatmap_sweep, scaling_sweep, HeatmapResult, ScalingResult};

@@ -1,0 +1,133 @@
+//! Report emission: CSV files + ASCII rendering under `results/`.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csv::CsvWriter;
+
+use super::sweep::{HeatmapResult, ScalingResult};
+
+/// Write one heatmap figure: `results/<fig>_<op>_heatmap.csv` with rows
+/// (threads, size, hpx_mflops, base_mflops, ratio), plus the ASCII render.
+pub fn write_heatmap(dir: impl AsRef<Path>, r: &HeatmapResult) -> Result<String> {
+    let (fig, _) = r.op.figures();
+    let path = dir
+        .as_ref()
+        .join(format!("{fig}_{}_heatmap.csv", r.op.name()));
+    let mut w = CsvWriter::create(&path)?;
+    w.row(&["threads", "size", "hpx_mflops", "base_mflops", "ratio"])?;
+    for (ti, &t) in r.threads.iter().enumerate() {
+        for (si, &n) in r.sizes.iter().enumerate() {
+            w.row(&[
+                t.to_string(),
+                n.to_string(),
+                format!("{:.3}", r.hpx_mflops[ti][si]),
+                format!("{:.3}", r.base_mflops[ti][si]),
+                format!("{:.4}", r.ratio[ti][si]),
+            ])?;
+        }
+    }
+    w.flush()?;
+    let title = format!(
+        "{} — performance ratio hpxMP/OpenMP (paper {} analog); mean r = {:.3}",
+        r.op.name(),
+        fig,
+        r.mean_ratio()
+    );
+    let art = r.to_heatmap().render(&title);
+    Ok(format!("{art}\nwrote {}\n", path.display()))
+}
+
+/// Write one scaling series: `results/<fig>_<op>_scaling_<T>.csv` with rows
+/// (size, hpx_mflops, base_mflops), plus a console summary.
+pub fn write_scaling(dir: impl AsRef<Path>, r: &ScalingResult) -> Result<String> {
+    let (_, fig) = r.op.figures();
+    let path = dir.as_ref().join(format!(
+        "{fig}_{}_scaling_{}t.csv",
+        r.op.name(),
+        r.threads
+    ));
+    let mut w = CsvWriter::create(&path)?;
+    w.row(&["size", "hpx_mflops", "base_mflops"])?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} scaling @{} threads (paper {} analog)\n{:>10} {:>14} {:>14} {:>8}\n",
+        r.op.name(),
+        r.threads,
+        fig,
+        "size",
+        "hpxMP",
+        "OpenMP",
+        "ratio"
+    ));
+    for (i, &n) in r.sizes.iter().enumerate() {
+        w.row(&[
+            n.to_string(),
+            format!("{:.3}", r.hpx_mflops[i]),
+            format!("{:.3}", r.base_mflops[i]),
+        ])?;
+        out.push_str(&format!(
+            "{:>10} {:>14.1} {:>14.1} {:>8.3}\n",
+            n,
+            r.hpx_mflops[i],
+            r.base_mflops[i],
+            r.hpx_mflops[i] / r.base_mflops[i]
+        ));
+    }
+    w.flush()?;
+    out.push_str(&format!("wrote {}\n", path.display()));
+    Ok(out)
+}
+
+/// Append a named summary line to `results/summary.txt` (used by benches
+/// so `cargo bench` leaves a machine-readable trail).
+pub fn append_summary(dir: impl AsRef<Path>, line: &str) -> Result<()> {
+    std::fs::create_dir_all(dir.as_ref())?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.as_ref().join("summary.txt"))?;
+    writeln!(f, "{line}")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::blazemark::Op;
+
+    #[test]
+    fn heatmap_report_writes_csv_and_renders() {
+        let dir = std::env::temp_dir().join("hpxmp_report_test");
+        let r = HeatmapResult {
+            op: Op::Daxpy,
+            threads: vec![1, 2],
+            sizes: vec![100, 200],
+            ratio: vec![vec![1.0, 0.9], vec![0.8, 1.1]],
+            hpx_mflops: vec![vec![10.0, 9.0], vec![8.0, 11.0]],
+            base_mflops: vec![vec![10.0, 10.0], vec![10.0, 10.0]],
+        };
+        let out = write_heatmap(&dir, &r).unwrap();
+        assert!(out.contains("daxpy"));
+        let csv = std::fs::read_to_string(dir.join("fig3_daxpy_heatmap.csv")).unwrap();
+        assert!(csv.starts_with("threads,size,"));
+        assert_eq!(csv.lines().count(), 5); // header + 4 cells
+    }
+
+    #[test]
+    fn scaling_report_writes_csv() {
+        let dir = std::env::temp_dir().join("hpxmp_report_test2");
+        let r = ScalingResult {
+            op: Op::DMatDMatMult,
+            threads: 8,
+            sizes: vec![10, 20],
+            hpx_mflops: vec![1.0, 2.0],
+            base_mflops: vec![2.0, 2.0],
+        };
+        let out = write_scaling(&dir, &r).unwrap();
+        assert!(out.contains("dmatdmatmult"));
+        assert!(dir.join("fig9_dmatdmatmult_scaling_8t.csv").exists());
+    }
+}

@@ -1,0 +1,172 @@
+//! Sweeps: the paper's figures as data.
+//!
+//! * [`heatmap_sweep`] — Figs 2–5: ratio r = MFLOP/s(hpxMP)/MFLOP/s(OpenMP)
+//!   over a (threads × size) grid.
+//! * [`scaling_sweep`] — Figs 6–9: MFLOP/s vs size for both runtimes at a
+//!   fixed thread count.
+
+use crate::par::ParallelRuntime;
+use crate::util::heatmap::Heatmap;
+use crate::util::timing::BenchCfg;
+
+use super::blazemark::{measure, Op};
+
+/// The full grid of one heatmap figure.
+pub struct HeatmapResult {
+    pub op: Op,
+    pub threads: Vec<usize>,
+    pub sizes: Vec<usize>,
+    /// `ratio[t][s]` = hpxMP / baseline MFLOP/s.
+    pub ratio: Vec<Vec<f64>>,
+    pub hpx_mflops: Vec<Vec<f64>>,
+    pub base_mflops: Vec<Vec<f64>>,
+}
+
+impl HeatmapResult {
+    pub fn to_heatmap(&self) -> Heatmap {
+        let mut h = Heatmap::new(
+            self.threads.iter().map(|t| format!("{t}T")).collect(),
+            self.sizes.iter().map(|s| s.to_string()).collect(),
+        );
+        for (ti, row) in self.ratio.iter().enumerate() {
+            for (si, &v) in row.iter().enumerate() {
+                h.set(ti, si, v);
+            }
+        }
+        h
+    }
+
+    /// Mean ratio over cells at/above the parallelization threshold — the
+    /// quantity the paper's prose summarizes ("between 0% and 30-40%
+    /// slower").
+    pub fn mean_ratio(&self) -> f64 {
+        self.to_heatmap().mean()
+    }
+}
+
+/// Run the (threads × sizes) ratio grid for `op`.
+pub fn heatmap_sweep(
+    hpx: &dyn ParallelRuntime,
+    base: &dyn ParallelRuntime,
+    op: Op,
+    threads: &[usize],
+    sizes: &[usize],
+    cfg: &BenchCfg,
+    progress: bool,
+) -> HeatmapResult {
+    let mut ratio = vec![vec![f64::NAN; sizes.len()]; threads.len()];
+    let mut hpx_m = vec![vec![f64::NAN; sizes.len()]; threads.len()];
+    let mut base_m = vec![vec![f64::NAN; sizes.len()]; threads.len()];
+    for (ti, &t) in threads.iter().enumerate() {
+        for (si, &n) in sizes.iter().enumerate() {
+            let h = measure(hpx, op, t, n, cfg);
+            let b = measure(base, op, t, n, cfg);
+            hpx_m[ti][si] = h;
+            base_m[ti][si] = b;
+            ratio[ti][si] = h / b;
+            if progress {
+                eprintln!(
+                    "  {} threads={t:<2} n={n:<9} hpxMP={h:>10.1} base={b:>10.1} r={:.3}",
+                    op.name(),
+                    h / b
+                );
+            }
+        }
+    }
+    HeatmapResult {
+        op,
+        threads: threads.to_vec(),
+        sizes: sizes.to_vec(),
+        ratio,
+        hpx_mflops: hpx_m,
+        base_mflops: base_m,
+    }
+}
+
+/// One scaling series (Figs 6–9): MFLOP/s vs size at fixed thread count.
+pub struct ScalingResult {
+    pub op: Op,
+    pub threads: usize,
+    pub sizes: Vec<usize>,
+    pub hpx_mflops: Vec<f64>,
+    pub base_mflops: Vec<f64>,
+}
+
+pub fn scaling_sweep(
+    hpx: &dyn ParallelRuntime,
+    base: &dyn ParallelRuntime,
+    op: Op,
+    threads: usize,
+    sizes: &[usize],
+    cfg: &BenchCfg,
+    progress: bool,
+) -> ScalingResult {
+    let mut hpx_m = Vec::with_capacity(sizes.len());
+    let mut base_m = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let h = measure(hpx, op, threads, n, cfg);
+        let b = measure(base, op, threads, n, cfg);
+        if progress {
+            eprintln!(
+                "  {} threads={threads} n={n:<9} hpxMP={h:>10.1} base={b:>10.1}",
+                op.name()
+            );
+        }
+        hpx_m.push(h);
+        base_m.push(b);
+    }
+    ScalingResult {
+        op,
+        threads,
+        sizes: sizes.to_vec(),
+        hpx_mflops: hpx_m,
+        base_mflops: base_m,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::SerialRuntime;
+
+    fn tiny_cfg() -> BenchCfg {
+        BenchCfg {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 2,
+            min_time: std::time::Duration::from_micros(1),
+        }
+    }
+
+    #[test]
+    fn heatmap_sweep_fills_grid() {
+        let r = heatmap_sweep(
+            &SerialRuntime,
+            &SerialRuntime,
+            Op::DVecDVecAdd,
+            &[1, 2],
+            &[512, 1024],
+            &tiny_cfg(),
+            false,
+        );
+        assert_eq!(r.ratio.len(), 2);
+        assert_eq!(r.ratio[0].len(), 2);
+        assert!(r.ratio.iter().flatten().all(|v| v.is_finite() && *v > 0.0));
+        assert!(r.mean_ratio() > 0.0);
+    }
+
+    #[test]
+    fn scaling_sweep_lengths_match() {
+        let r = scaling_sweep(
+            &SerialRuntime,
+            &SerialRuntime,
+            Op::Daxpy,
+            1,
+            &[256, 512, 1024],
+            &tiny_cfg(),
+            false,
+        );
+        assert_eq!(r.hpx_mflops.len(), 3);
+        assert_eq!(r.base_mflops.len(), 3);
+    }
+}

@@ -1,0 +1,32 @@
+//! # hpxmp-rs — an hpxMP reproduction in Rust
+//!
+//! Reproduction of *"An Introduction to hpxMP — a Modern OpenMP
+//! Implementation Leveraging HPX, an Asynchronous Many-Task System"*
+//! (Zhang et al., 2019, DOI 10.1145/3318170.3318191).
+//!
+//! The stack, bottom-up:
+//!
+//! * [`amt`] — the HPX-like asynchronous many-task scheduler (Chase–Lev
+//!   deques, seven scheduling policies from the paper's §3.2).
+//! * [`omp`] — **the paper's contribution**: an OpenMP runtime whose
+//!   threads are AMT tasks; `__kmpc_*` facade, `GOMP_*` shims, OMPT.
+//! * [`baseline`] — a libomp-style OS-thread OpenMP runtime, the
+//!   "compiler-supplied" comparator from the paper's evaluation.
+//! * [`par`] — the `ParallelRuntime` trait both runtimes implement, so the
+//!   same application code (Blaze-lite) runs on either, unchanged.
+//! * [`blaze`] — "Blaze-lite": dense vectors/matrices and the four
+//!   Blazemark operations with Blaze's parallelization thresholds.
+//! * [`runtime`] — PJRT bridge: loads AOT-compiled JAX/Pallas HLO
+//!   artifacts and executes them from hpxMP tasks (the three-layer path).
+//! * [`coordinator`] — the Blazemark-style benchmark harness regenerating
+//!   every figure of the paper's evaluation, plus conformance reports.
+//! * [`util`] — in-tree substrates (RNG, stats, CSV, CLI, property tests).
+
+pub mod amt;
+pub mod baseline;
+pub mod blaze;
+pub mod coordinator;
+pub mod omp;
+pub mod par;
+pub mod runtime;
+pub mod util;

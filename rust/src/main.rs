@@ -1,0 +1,219 @@
+//! `hpxmp` — the launcher CLI.
+//!
+//! Subcommands (each regenerating part of the paper's evaluation):
+//!
+//! ```text
+//! hpxmp info                              runtime/platform summary
+//! hpxmp conformance                       Tables 1-3 live feature report
+//! hpxmp heatmap  --op <op|all> [...]      Figs 2-5 ratio heatmaps
+//! hpxmp scaling  --op <op|all> [...]      Figs 6-9 scaling series
+//! hpxmp offload  [--size N]               three-layer PJRT smoke run
+//! hpxmp policies [--tasks N]              AMT policy ablation
+//! ```
+//!
+//! Common options: `--threads 1,2,4,...`, `--workers N`, `--policy <name>`,
+//! `--quick`, `--out results/`.
+
+use std::sync::Arc;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::baseline::BaselineRuntime;
+use hpxmp::coordinator::{blazemark::Op, conformance, report, sweep};
+use hpxmp::omp::{icv, OmpRuntime};
+use hpxmp::par::HpxMpRuntime;
+use hpxmp::util::cli::Args;
+use hpxmp::util::timing::BenchCfg;
+
+const VALUE_OPTS: &[&str] = &[
+    "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks",
+];
+
+fn main() {
+    let args = Args::from_env(VALUE_OPTS);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(&args),
+        "conformance" => cmd_conformance(&args),
+        "heatmap" => cmd_heatmap(&args),
+        "scaling" => cmd_scaling(&args),
+        "offload" => cmd_offload(&args),
+        "policies" => cmd_policies(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "hpxmp — OpenMP-over-AMT runtime (hpxMP reproduction)\n\n\
+         usage: hpxmp <info|conformance|heatmap|scaling|offload|policies> [options]\n\n\
+         options:\n\
+           --op <dvecdvecadd|daxpy|dmatdmatadd|dmatdmatmult|all>\n\
+           --threads 1,2,4,8,16      thread counts (heatmap) / counts per figure (scaling)\n\
+           --workers N               AMT worker threads (default: max(threads))\n\
+           --policy <name>           priority-local|static|local|global|abp|hierarchical|periodic\n\
+           --sizes a,b,c             override the size grid\n\
+           --quick                   fast measurement profile\n\
+           --out DIR                 report directory (default results/)\n"
+    );
+}
+
+fn build_runtimes(args: &Args, max_threads: usize) -> (HpxMpRuntime, BaselineRuntime) {
+    let workers = args.get_usize("workers", max_threads.max(icv::num_procs()));
+    let policy = args
+        .get("policy")
+        .map(|p| PolicyKind::parse(p).unwrap_or_else(|| panic!("unknown policy '{p}'")))
+        .unwrap_or(PolicyKind::PriorityLocal);
+    let rt = OmpRuntime::new(workers, policy);
+    (HpxMpRuntime::new(rt), BaselineRuntime::new(max_threads))
+}
+
+fn bench_cfg(args: &Args) -> BenchCfg {
+    if args.flag("quick") {
+        BenchCfg::quick()
+    } else {
+        BenchCfg::default()
+    }
+}
+
+fn ops_from(args: &Args) -> Vec<Op> {
+    match args.get_or("op", "all") {
+        "all" => Op::ALL.to_vec(),
+        s => vec![Op::parse(s).unwrap_or_else(|| panic!("unknown op '{s}'"))],
+    }
+}
+
+fn cmd_info(_args: &Args) -> anyhow::Result<()> {
+    println!("hpxmp-rs — hpxMP reproduction (Zhang et al. 2019)");
+    println!("  num_procs        : {}", icv::num_procs());
+    println!("  OMP_NUM_THREADS  : {:?}", std::env::var("OMP_NUM_THREADS").ok());
+    println!("  HPXMP_POLICY     : {}", icv::policy_from_env().name());
+    println!(
+        "  policies         : {}",
+        PolicyKind::ALL
+            .iter()
+            .map(|p| p.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    match hpxmp::runtime::Registry::open("artifacts") {
+        Ok(reg) => {
+            println!("  artifacts        : {} loaded", reg.specs().len());
+            for s in reg.specs() {
+                println!("    - {} ({} {})", s.name, s.op, s.dtype);
+            }
+        }
+        Err(e) => println!("  artifacts        : unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_conformance(args: &Args) -> anyhow::Result<()> {
+    let workers = args.get_usize("workers", 4);
+    let rt = OmpRuntime::new(workers, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(workers);
+    let checks = conformance::run_all(&rt);
+    print!("{}", conformance::render(&checks));
+    if checks.iter().any(|c| !c.passed) {
+        anyhow::bail!("conformance failures");
+    }
+    Ok(())
+}
+
+fn cmd_heatmap(args: &Args) -> anyhow::Result<()> {
+    let threads = args.get_usize_list("threads", &[1, 2, 4, 8, 12, 16]);
+    let max_t = threads.iter().copied().max().unwrap_or(1);
+    let (hpx, base) = build_runtimes(args, max_t);
+    let cfg = bench_cfg(args);
+    let out = args.get_or("out", "results");
+    for op in ops_from(args) {
+        let sizes = args
+            .get("sizes")
+            .map(|_| args.get_usize_list("sizes", &[]))
+            .unwrap_or_else(|| op.heatmap_sizes());
+        let r = sweep::heatmap_sweep(&hpx, &base, op, &threads, &sizes, &cfg, true);
+        print!("{}", report::write_heatmap(out, &r)?);
+    }
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> anyhow::Result<()> {
+    let threads = args.get_usize_list("threads", &[4, 8, 16]);
+    let max_t = threads.iter().copied().max().unwrap_or(1);
+    let (hpx, base) = build_runtimes(args, max_t);
+    let cfg = bench_cfg(args);
+    let out = args.get_or("out", "results");
+    for op in ops_from(args) {
+        let sizes = args
+            .get("sizes")
+            .map(|_| args.get_usize_list("sizes", &[]))
+            .unwrap_or_else(|| op.scaling_sizes());
+        for &t in &threads {
+            let r = sweep::scaling_sweep(&hpx, &base, op, t, &sizes, &cfg, true);
+            print!("{}", report::write_scaling(out, &r)?);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_offload(args: &Args) -> anyhow::Result<()> {
+    use hpxmp::runtime::{Registry, XlaOffload};
+    let reg = Arc::new(Registry::open("artifacts")?);
+    let off = XlaOffload::new(reg);
+    let n = args.get_usize("size", 65_536 * 2 + 1000); // 2 chunks + tail
+    let mut a = vec![0.0f64; n];
+    let mut b = vec![0.0f64; n];
+    for i in 0..n {
+        a[i] = (i % 97) as f64 * 0.01;
+        b[i] = (i % 31) as f64 * 0.1;
+    }
+    let expect: Vec<f64> = a.iter().zip(&b).map(|(x, y)| y + 3.0 * x).collect();
+    let chunks = off.daxpy_full_f64(3.0, &a, &mut b)?;
+    let max_err = b
+        .iter()
+        .zip(&expect)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max);
+    println!("offload daxpy n={n}: {chunks} PJRT chunks + native tail, max_err={max_err:e}");
+    anyhow::ensure!(max_err < 1e-12, "offload numerics mismatch");
+    println!("offload OK");
+    Ok(())
+}
+
+fn cmd_policies(args: &Args) -> anyhow::Result<()> {
+    use hpxmp::amt::{task::Hint, Priority, Scheduler};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Instant;
+    let tasks = args.get_usize("tasks", 100_000);
+    let workers = args.get_usize("workers", icv::num_procs().max(2));
+    println!("policy ablation: {tasks} empty tasks on {workers} workers");
+    for policy in PolicyKind::ALL {
+        let s = Scheduler::new(workers, policy);
+        let done = Arc::new(AtomicUsize::new(0));
+        let t0 = Instant::now();
+        for i in 0..tasks {
+            let d = done.clone();
+            s.spawn(Priority::Normal, Hint::Worker(i), "bench", move || {
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        s.wait_quiescent();
+        let dt = t0.elapsed();
+        let m = s.metrics();
+        println!(
+            "  {:<18} {:>8.1} ktasks/s   (stolen={} parked={})",
+            policy.name(),
+            tasks as f64 / dt.as_secs_f64() / 1e3,
+            m.stolen,
+            m.parked
+        );
+        s.shutdown();
+    }
+    Ok(())
+}

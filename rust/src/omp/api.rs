@@ -1,0 +1,168 @@
+//! The user-facing `omp_*` runtime library (paper Table 2 — all 18
+//! functions, plus the lock constructors/destructors implied by them).
+//!
+//! These are free functions against the global runtime + the calling
+//! thread's innermost OpenMP context, exactly like the C API.
+
+use std::sync::atomic::Ordering;
+
+use super::icv::num_procs;
+use super::lock::{OmpLock, OmpNestLock};
+use super::team::current_ctx;
+use super::runtime;
+
+// --- team/thread introspection --------------------------------------------
+
+/// `omp_get_thread_num`: this thread's id within the innermost team (0
+/// outside parallel regions).
+pub fn omp_get_thread_num() -> usize {
+    current_ctx().map(|c| c.tid).unwrap_or(0)
+}
+
+/// `omp_get_num_threads`: size of the innermost team (1 outside).
+pub fn omp_get_num_threads() -> usize {
+    current_ctx().map(|c| c.team.size).unwrap_or(1)
+}
+
+/// `omp_get_max_threads`: team size an upcoming `parallel` would get.
+pub fn omp_get_max_threads() -> usize {
+    runtime().icv.nthreads()
+}
+
+/// `omp_set_num_threads`.
+pub fn omp_set_num_threads(n: usize) {
+    runtime().icv.set_nthreads(n);
+}
+
+/// `omp_in_parallel`: inside an active (size > 1) parallel region?
+pub fn omp_in_parallel() -> bool {
+    current_ctx().map(|c| c.team.size > 1).unwrap_or(false)
+}
+
+/// `omp_get_num_procs`.
+pub fn omp_get_num_procs() -> usize {
+    num_procs()
+}
+
+/// `omp_get_level`: nesting depth of parallel regions.
+pub fn omp_get_level() -> usize {
+    current_ctx().map(|c| c.team.level).unwrap_or(0)
+}
+
+// --- dynamic/nested ---------------------------------------------------------
+
+/// `omp_get_dynamic`.
+pub fn omp_get_dynamic() -> bool {
+    runtime().icv.dynamic.load(Ordering::Relaxed)
+}
+
+/// `omp_set_dynamic`.
+pub fn omp_set_dynamic(v: bool) {
+    runtime().icv.dynamic.store(v, Ordering::Relaxed);
+}
+
+/// `omp_get_nested`.
+pub fn omp_get_nested() -> bool {
+    runtime().icv.nested.load(Ordering::Relaxed)
+}
+
+/// `omp_set_nested`.
+pub fn omp_set_nested(v: bool) {
+    runtime().icv.nested.store(v, Ordering::Relaxed);
+}
+
+// --- timing ------------------------------------------------------------------
+
+/// `omp_get_wtime`: wall seconds since an arbitrary (fixed) origin.
+pub fn omp_get_wtime() -> f64 {
+    runtime().wtime()
+}
+
+/// `omp_get_wtick`: timer resolution in seconds (Instant is ns-grained).
+pub fn omp_get_wtick() -> f64 {
+    1e-9
+}
+
+// --- locks (Table 2: init/set/unset/test + nest variants) -------------------
+
+/// `omp_init_lock`.
+pub fn omp_init_lock() -> OmpLock {
+    OmpLock::new()
+}
+
+/// `omp_set_lock`.
+pub fn omp_set_lock(l: &OmpLock) {
+    l.set();
+}
+
+/// `omp_unset_lock`.
+pub fn omp_unset_lock(l: &OmpLock) {
+    l.unset();
+}
+
+/// `omp_test_lock`.
+pub fn omp_test_lock(l: &OmpLock) -> bool {
+    l.test()
+}
+
+/// `omp_init_nest_lock`.
+pub fn omp_init_nest_lock() -> OmpNestLock {
+    OmpNestLock::new()
+}
+
+/// `omp_set_nest_lock`.
+pub fn omp_set_nest_lock(l: &OmpNestLock) {
+    l.set();
+}
+
+/// `omp_unset_nest_lock`.
+pub fn omp_unset_nest_lock(l: &OmpNestLock) {
+    l.unset();
+}
+
+/// `omp_test_nest_lock`: new nesting depth, 0 on failure.
+pub fn omp_test_nest_lock(l: &OmpNestLock) -> usize {
+    l.test()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outside_parallel_defaults() {
+        assert_eq!(omp_get_thread_num(), 0);
+        assert_eq!(omp_get_num_threads(), 1);
+        assert!(!omp_in_parallel());
+        assert_eq!(omp_get_level(), 0);
+    }
+
+    #[test]
+    fn wtime_monotone_and_wtick_positive() {
+        let a = omp_get_wtime();
+        let b = omp_get_wtime();
+        assert!(b >= a);
+        assert!(omp_get_wtick() > 0.0);
+    }
+
+    #[test]
+    fn num_procs_at_least_one() {
+        assert!(omp_get_num_procs() >= 1);
+    }
+
+    #[test]
+    fn lock_api_roundtrip() {
+        let l = omp_init_lock();
+        omp_set_lock(&l);
+        assert!(!omp_test_lock(&l));
+        omp_unset_lock(&l);
+        assert!(omp_test_lock(&l));
+        omp_unset_lock(&l);
+
+        let nl = omp_init_nest_lock();
+        omp_set_nest_lock(&nl);
+        assert_eq!(omp_test_nest_lock(&nl), 2);
+        omp_unset_nest_lock(&nl);
+        omp_unset_nest_lock(&nl);
+    }
+}

@@ -1,0 +1,206 @@
+//! Team barrier and wait counters — task-executing synchronization.
+//!
+//! A barrier in a tasking runtime is a *task scheduling point*: a thread
+//! that arrives early must not burn its worker — it executes pending tasks
+//! (explicit OpenMP tasks, or other teams' implicit tasks) while it waits.
+//! This is both what the OpenMP spec demands (pending explicit tasks must
+//! complete at barriers) and what makes closure-based AMT tasks compose
+//! with blocking OpenMP semantics (DESIGN.md §4).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crossbeam_utils::CachePadded;
+
+use crate::amt::worker;
+
+/// Escalating wait: help-run a task, else spin, else yield, else sleep.
+/// A help that merely requeued a guarded implicit task counts as a miss
+/// (see `worker::note_requeue`) so the waiter backs off and the task's
+/// home worker gets the core.
+#[inline]
+pub(crate) fn wait_tick(spins: &mut u32) {
+    if worker::help_one() && !worker::take_requeued() {
+        *spins = 0;
+        return;
+    }
+    *spins += 1;
+    if *spins < 32 {
+        std::hint::spin_loop();
+    } else if *spins < 256 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(std::time::Duration::from_micros(20));
+    }
+}
+
+/// Yield-only wait (no task execution) for contexts where re-entrant task
+/// execution could self-deadlock (e.g. `ordered` region turnstiles).
+#[inline]
+pub(crate) fn wait_tick_no_help(spins: &mut u32) {
+    *spins += 1;
+    if *spins < 32 {
+        std::hint::spin_loop();
+    } else if *spins < 256 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(std::time::Duration::from_micros(20));
+    }
+}
+
+/// Reusable sense-reversing barrier over `size` arrivals per generation.
+pub struct TeamBarrier {
+    size: usize,
+    count: CachePadded<AtomicUsize>,
+    generation: CachePadded<AtomicUsize>,
+}
+
+impl TeamBarrier {
+    pub fn new(size: usize) -> Self {
+        Self {
+            size,
+            count: CachePadded::new(AtomicUsize::new(0)),
+            generation: CachePadded::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Arrive and wait for the whole team, executing pending tasks while
+    /// blocked.  Returns `true` for exactly one caller per generation (the
+    /// "last arriver", useful for cleanup duties).
+    pub fn wait(&self) -> bool {
+        if self.size <= 1 {
+            return true;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.size {
+            // Last arriver: reset for reuse, then release this generation.
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::Release);
+            true
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                wait_tick(&mut spins);
+            }
+            false
+        }
+    }
+}
+
+/// Counter of outstanding work items, waitable with task-executing ticks.
+/// Used for explicit-task child tracking (`taskwait`), taskgroups, and the
+/// team-wide explicit-task pool drained at barriers.
+#[derive(Default)]
+pub struct WaitCounter {
+    n: AtomicUsize,
+}
+
+impl WaitCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn increment(&self) {
+        self.n.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn decrement(&self) {
+        let prev = self.n.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "WaitCounter underflow");
+    }
+
+    pub fn count(&self) -> usize {
+        self.n.load(Ordering::Acquire)
+    }
+
+    /// Wait until zero, executing pending tasks meanwhile.
+    pub fn wait_zero(&self) {
+        let mut spins = 0u32;
+        while self.count() != 0 {
+            wait_tick(&mut spins);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn barrier_of_one_is_trivial() {
+        let b = TeamBarrier::new(1);
+        assert!(b.wait());
+        assert!(b.wait());
+    }
+
+    #[test]
+    fn barrier_synchronizes_os_threads() {
+        // Pure OS threads (no scheduler): help_one is a no-op, so this
+        // exercises the spin/yield path.
+        let b = Arc::new(TeamBarrier::new(4));
+        let phase = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let b = b.clone();
+                let phase = phase.clone();
+                std::thread::spawn(move || {
+                    phase.fetch_add(1, Ordering::SeqCst);
+                    b.wait();
+                    // After the barrier every thread must observe all 4 arrivals.
+                    assert_eq!(phase.load(Ordering::SeqCst), 4);
+                    b.wait(); // reusability
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn barrier_reports_exactly_one_last_arriver() {
+        let b = Arc::new(TeamBarrier::new(8));
+        let lasts = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let b = b.clone();
+                let lasts = lasts.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        if b.wait() {
+                            lasts.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(lasts.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn wait_counter_reaches_zero() {
+        let c = Arc::new(WaitCounter::new());
+        for _ in 0..16 {
+            c.increment();
+        }
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..4 {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                        c.decrement();
+                    }
+                })
+            })
+            .collect();
+        c.wait_zero();
+        assert_eq!(c.count(), 0);
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+}

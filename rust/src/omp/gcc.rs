@@ -1,0 +1,187 @@
+//! `GOMP_*` compatibility shims (paper §5.5): map the entries GCC's code
+//! generator emits onto the Clang/kmpc layer, "preprocess the arguments
+//! provided by the compiler and pass them directly to the hpxMP or call
+//! Clang supported entries" (Listing 7).
+//!
+//! GCC's outlining convention differs from Clang's: the microtask is a
+//! single `fn(data)` pointer and the *master participates inline*
+//! (`GOMP_parallel_start` / work / `GOMP_parallel_end`).  The shims absorb
+//! that difference.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use super::icv::{SchedKind, Schedule};
+use super::kmpc::{self, Ident};
+use super::loops::LoopDesc;
+use super::team::{current_ctx, Ctx};
+
+/// `GOMP_parallel` (GCC ≥ 4.9 combined form): fork, run `f` on every team
+/// member, join.  `num_threads == 0` means "use the ICV default".
+pub fn gomp_parallel(f: impl Fn(&Ctx) + Send + Sync + 'static, num_threads: usize) {
+    if num_threads == 0 {
+        kmpc::kmpc_fork_call(Ident::default(), f);
+    } else {
+        kmpc::kmpc_fork_call_num_threads(Ident::default(), num_threads, f);
+    }
+}
+
+/// `GOMP_barrier`.
+pub fn gomp_barrier() {
+    kmpc::kmpc_barrier(Ident::default(), gomp_thread_num());
+}
+
+/// `omp_get_thread_num` as GCC's libgomp exposes it internally.
+pub fn gomp_thread_num() -> usize {
+    current_ctx().map(|c| c.tid).unwrap_or(0)
+}
+
+/// `GOMP_critical_start` / `GOMP_critical_end` (anonymous section), as a
+/// scoped call — GCC's unnamed critical maps to the empty kmpc name.
+pub fn gomp_critical<R>(body: impl FnOnce() -> R) -> R {
+    kmpc::kmpc_critical(Ident::default(), "", body)
+}
+
+/// `GOMP_critical_name_start` / `_end`.
+pub fn gomp_critical_name<R>(name: &str, body: impl FnOnce() -> R) -> R {
+    kmpc::kmpc_critical(Ident::default(), name, body)
+}
+
+/// `GOMP_single_start`: returns `true` on the executing thread.
+pub fn gomp_single_start() -> bool {
+    match current_ctx() {
+        Some(ctx) => ctx.single(|| {}),
+        None => true,
+    }
+}
+
+/// `GOMP_loop_dynamic_start` + `GOMP_loop_dynamic_next` rolled into the
+/// descriptor API (GCC's start returns the first chunk; subsequent chunks
+/// come from `next`).
+pub struct GompLoop {
+    desc: Arc<LoopDesc>,
+    base: i64,
+}
+
+pub fn gomp_loop_dynamic_start(range: Range<i64>, chunk: usize) -> GompLoop {
+    let (desc, base) = kmpc::kmpc_dispatch_init(
+        Ident::default(),
+        gomp_thread_num(),
+        Schedule::new(SchedKind::Dynamic, Some(chunk)),
+        range,
+    );
+    GompLoop { desc, base }
+}
+
+pub fn gomp_loop_guided_start(range: Range<i64>, chunk: usize) -> GompLoop {
+    let (desc, base) = kmpc::kmpc_dispatch_init(
+        Ident::default(),
+        gomp_thread_num(),
+        Schedule::new(SchedKind::Guided, Some(chunk)),
+        range,
+    );
+    GompLoop { desc, base }
+}
+
+/// `GOMP_loop_*_next`: claim the next chunk.
+pub fn gomp_loop_next(l: &GompLoop) -> Option<Range<i64>> {
+    kmpc::kmpc_dispatch_next(Ident::default(), gomp_thread_num(), &l.desc, l.base)
+}
+
+/// `GOMP_loop_end` (with barrier) / `GOMP_loop_end_nowait`.
+pub fn gomp_loop_end(l: GompLoop) {
+    gomp_loop_end_nowait(l);
+    gomp_barrier();
+}
+
+pub fn gomp_loop_end_nowait(l: GompLoop) {
+    kmpc::kmpc_dispatch_fini(Ident::default(), gomp_thread_num(), &l.desc);
+}
+
+/// `GOMP_task`: GCC's task entry — `if_clause == false` means undeferred
+/// (execute immediately), matching libgomp semantics.
+pub fn gomp_task(body: impl FnOnce() + Send + 'static, if_clause: bool) {
+    match current_ctx() {
+        Some(ctx) if if_clause => ctx.task(body),
+        _ => body(),
+    }
+}
+
+/// `GOMP_taskwait`.
+pub fn gomp_taskwait() {
+    kmpc::kmpc_omp_taskwait(Ident::default(), gomp_thread_num());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::team::fork_call;
+    use crate::omp::OmpRuntime;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn gomp_parallel_runs_team() {
+        // Uses the global runtime via kmpc: the team is 2 clamped to the
+        // global runtime's worker pool (1 on single-core boxes with no
+        // OMP_NUM_THREADS/HPXMP_NUM_WORKERS set).
+        let expected = crate::omp::runtime().sched.workers().min(2);
+        let n = Arc::new(AtomicUsize::new(0));
+        let n2 = n.clone();
+        gomp_parallel(
+            move |_| {
+                n2.fetch_add(1, Ordering::SeqCst);
+            },
+            2,
+        );
+        assert_eq!(n.load(Ordering::SeqCst), expected);
+    }
+
+    #[test]
+    fn gomp_loop_dynamic_covers_range() {
+        let rt = OmpRuntime::for_tests(3);
+        let seen = Arc::new(Mutex::new(vec![0u32; 50]));
+        let s = seen.clone();
+        fork_call(&rt, Some(3), move |_| {
+            let l = gomp_loop_dynamic_start(0..50, 4);
+            while let Some(r) = gomp_loop_next(&l) {
+                for i in r {
+                    s.lock().unwrap()[i as usize] += 1;
+                }
+            }
+            gomp_loop_end_nowait(l);
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn gomp_task_if_false_is_undeferred() {
+        let rt = OmpRuntime::for_tests(2);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o = order.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let o2 = o.clone();
+            gomp_task(
+                move || {
+                    o2.lock().unwrap().push("task");
+                },
+                false, // undeferred: must run before the push below
+            );
+            o.lock().unwrap().push("after");
+        });
+        assert_eq!(*order.lock().unwrap(), vec!["task", "after"]);
+    }
+
+    #[test]
+    fn gomp_single_start_one_winner() {
+        let rt = OmpRuntime::for_tests(4);
+        let winners = Arc::new(AtomicUsize::new(0));
+        let w = winners.clone();
+        fork_call(&rt, Some(4), move |_| {
+            if gomp_single_start() {
+                w.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(winners.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Internal control variables (ICVs) and their environment bindings.
+//!
+//! OpenMP's ICVs govern default team sizes, loop schedules and nesting.
+//! hpxMP reads the same environment variables a compiler-supplied runtime
+//! would (`OMP_NUM_THREADS`, `OMP_SCHEDULE`, `OMP_DYNAMIC`, `OMP_NESTED`),
+//! plus the HPX-side knobs (`HPXMP_POLICY`, `HPXMP_NUM_WORKERS`).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::amt::PolicyKind;
+
+/// `schedule(...)` kinds for worksharing loops (OpenMP 3.1 set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    Static,
+    Dynamic,
+    Guided,
+    Auto,
+    /// Defer to the `run-sched-var` ICV (`OMP_SCHEDULE`).
+    Runtime,
+}
+
+/// A schedule kind plus optional chunk size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub kind: SchedKind,
+    pub chunk: Option<usize>,
+}
+
+impl Schedule {
+    pub const fn new(kind: SchedKind, chunk: Option<usize>) -> Self {
+        Self { kind, chunk }
+    }
+
+    /// Parse `OMP_SCHEDULE` syntax: `kind[,chunk]`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut parts = s.splitn(2, ',');
+        let kind = match parts.next()?.trim().to_ascii_lowercase().as_str() {
+            "static" => SchedKind::Static,
+            "dynamic" => SchedKind::Dynamic,
+            "guided" => SchedKind::Guided,
+            "auto" => SchedKind::Auto,
+            "runtime" => SchedKind::Runtime,
+            _ => return None,
+        };
+        let chunk = match parts.next() {
+            Some(c) => Some(c.trim().parse().ok()?),
+            None => None,
+        };
+        Some(Self { kind, chunk })
+    }
+}
+
+/// The ICV set of one runtime instance (global scope; per-task ICVs are
+/// derived at fork time).
+pub struct Icvs {
+    /// `nthreads-var`: default team size.
+    pub nthreads: AtomicUsize,
+    /// `dyn-var`: runtime may adjust team sizes.
+    pub dynamic: AtomicBool,
+    /// `nest-var`: nested parallel regions create real teams.
+    pub nested: AtomicBool,
+    /// `run-sched-var`: the schedule `schedule(runtime)` resolves to.
+    pub run_sched: Mutex<Schedule>,
+    /// Max nesting depth for active parallel regions.
+    pub max_active_levels: AtomicUsize,
+}
+
+impl Icvs {
+    /// Defaults per the spec, overridden from the environment.
+    pub fn from_env() -> Self {
+        let ncpu = num_procs();
+        let nthreads = std::env::var("OMP_NUM_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n: &usize| n > 0)
+            .unwrap_or(ncpu);
+        let dynamic = env_bool("OMP_DYNAMIC", false);
+        let nested = env_bool("OMP_NESTED", false);
+        let run_sched = std::env::var("OMP_SCHEDULE")
+            .ok()
+            .and_then(|v| Schedule::parse(&v))
+            .unwrap_or(Schedule::new(SchedKind::Static, None));
+        Self {
+            nthreads: AtomicUsize::new(nthreads),
+            dynamic: AtomicBool::new(dynamic),
+            nested: AtomicBool::new(nested),
+            run_sched: Mutex::new(run_sched),
+            max_active_levels: AtomicUsize::new(usize::MAX),
+        }
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads.load(Ordering::Relaxed)
+    }
+
+    pub fn set_nthreads(&self, n: usize) {
+        if n > 0 {
+            self.nthreads.store(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn run_sched(&self) -> Schedule {
+        *self.run_sched.lock().unwrap()
+    }
+}
+
+fn env_bool(name: &str, default: bool) -> bool {
+    match std::env::var(name) {
+        Ok(v) => matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "1" | "true" | "yes" | "on"
+        ),
+        Err(_) => default,
+    }
+}
+
+/// Online processor count (`omp_get_num_procs`).
+pub fn num_procs() -> usize {
+    // SAFETY: plain sysconf query.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n < 1 {
+        1
+    } else {
+        n as usize
+    }
+}
+
+/// Scheduling policy for the AMT backend (`HPXMP_POLICY`).
+pub fn policy_from_env() -> PolicyKind {
+    std::env::var("HPXMP_POLICY")
+        .ok()
+        .and_then(|v| PolicyKind::parse(&v))
+        .unwrap_or(PolicyKind::PriorityLocal)
+}
+
+/// Worker count for the AMT backend (`HPXMP_NUM_WORKERS`).
+///
+/// Defaults to `max(num_procs, OMP_NUM_THREADS)` so every OpenMP thread of
+/// the largest default team gets a dedicated OS worker — required for the
+/// liveness of blocking constructs with closure-based tasks (DESIGN.md §4;
+/// real hpxMP relies on stackful HPX threads instead).
+pub fn workers_from_env(icv_nthreads: usize) -> usize {
+    std::env::var("HPXMP_NUM_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n: &usize| n > 0)
+        .unwrap_or_else(|| num_procs().max(icv_nthreads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_parse_variants() {
+        assert_eq!(
+            Schedule::parse("static"),
+            Some(Schedule::new(SchedKind::Static, None))
+        );
+        assert_eq!(
+            Schedule::parse("dynamic,4"),
+            Some(Schedule::new(SchedKind::Dynamic, Some(4)))
+        );
+        assert_eq!(
+            Schedule::parse("GUIDED, 16"),
+            Some(Schedule::new(SchedKind::Guided, Some(16)))
+        );
+        assert_eq!(Schedule::parse("bogus"), None);
+        assert_eq!(Schedule::parse("dynamic,x"), None);
+    }
+
+    #[test]
+    fn num_procs_positive() {
+        assert!(num_procs() >= 1);
+    }
+
+    #[test]
+    fn icvs_defaults_sane() {
+        let icv = Icvs::from_env();
+        assert!(icv.nthreads() >= 1);
+        icv.set_nthreads(8);
+        assert_eq!(icv.nthreads(), 8);
+        icv.set_nthreads(0); // ignored
+        assert_eq!(icv.nthreads(), 8);
+    }
+}

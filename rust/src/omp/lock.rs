@@ -1,0 +1,184 @@
+//! OpenMP locks: `omp_lock_t` and `omp_nest_lock_t` (paper Table 2).
+//!
+//! Spin locks with escalating backoff.  Workers are OS threads, so a
+//! blocked acquirer is always preemptible; no task execution happens while
+//! spinning (a helped task could try to re-acquire the same lock on this
+//! stack and self-deadlock).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+use super::barrier::wait_tick_no_help;
+
+/// `omp_lock_t`: a non-reentrant mutual-exclusion lock.
+#[derive(Default)]
+pub struct OmpLock {
+    held: AtomicBool,
+}
+
+impl OmpLock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `omp_init_lock` is `new`; `omp_destroy_lock` is `drop`.
+    pub fn set(&self) {
+        let mut spins = 0u32;
+        while self
+            .held
+            .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            wait_tick_no_help(&mut spins);
+        }
+    }
+
+    pub fn unset(&self) {
+        self.held.store(false, Ordering::Release);
+    }
+
+    /// `omp_test_lock`: try once, `true` on acquisition.
+    pub fn test(&self) -> bool {
+        self.held
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+}
+
+thread_local! {
+    static LOCK_OWNER_ID: u64 = fresh_owner_id();
+}
+
+static NEXT_OWNER: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_owner_id() -> u64 {
+    NEXT_OWNER.fetch_add(1, Ordering::Relaxed)
+}
+
+fn my_owner_id() -> u64 {
+    LOCK_OWNER_ID.with(|id| *id)
+}
+
+/// `omp_nest_lock_t`: re-acquirable by its owner, with a nesting count.
+#[derive(Default)]
+pub struct OmpNestLock {
+    owner: AtomicU64, // 0 = free
+    depth: AtomicUsize,
+}
+
+impl OmpNestLock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self) {
+        let me = my_owner_id();
+        if self.owner.load(Ordering::Acquire) == me {
+            self.depth.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut spins = 0u32;
+        while self
+            .owner
+            .compare_exchange_weak(0, me, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            wait_tick_no_help(&mut spins);
+        }
+        self.depth.store(1, Ordering::Relaxed);
+    }
+
+    pub fn unset(&self) {
+        let me = my_owner_id();
+        assert_eq!(
+            self.owner.load(Ordering::Acquire),
+            me,
+            "omp_unset_nest_lock by non-owner"
+        );
+        if self.depth.fetch_sub(1, Ordering::Relaxed) == 1 {
+            self.owner.store(0, Ordering::Release);
+        }
+    }
+
+    /// `omp_test_nest_lock`: returns the new nesting depth, 0 on failure.
+    pub fn test(&self) -> usize {
+        let me = my_owner_id();
+        if self.owner.load(Ordering::Acquire) == me {
+            return self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        }
+        if self
+            .owner
+            .compare_exchange(0, me, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.depth.store(1, Ordering::Relaxed);
+            1
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_provides_mutual_exclusion() {
+        let lock = Arc::new(OmpLock::new());
+        let counter = Arc::new(AtomicUsize::new(0));
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (l, c, m) = (lock.clone(), counter.clone(), max_seen.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..2000 {
+                        l.set();
+                        let inside = c.fetch_add(1, Ordering::SeqCst) + 1;
+                        m.fetch_max(inside, Ordering::SeqCst);
+                        c.fetch_sub(1, Ordering::SeqCst);
+                        l.unset();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(max_seen.load(Ordering::SeqCst), 1, "two threads inside");
+    }
+
+    #[test]
+    fn test_lock_non_blocking() {
+        let l = OmpLock::new();
+        assert!(l.test());
+        assert!(!l.test()); // already held
+        l.unset();
+        assert!(l.test());
+        l.unset();
+    }
+
+    #[test]
+    fn nest_lock_reenters_for_owner() {
+        let l = OmpNestLock::new();
+        l.set();
+        l.set(); // same thread: no deadlock
+        assert_eq!(l.test(), 3);
+        l.unset();
+        l.unset();
+        l.unset();
+        // Fully released: another acquisition works.
+        assert_eq!(l.test(), 1);
+        l.unset();
+    }
+
+    #[test]
+    fn nest_lock_excludes_other_threads() {
+        let l = Arc::new(OmpNestLock::new());
+        l.set();
+        let l2 = l.clone();
+        let t = std::thread::spawn(move || l2.test());
+        assert_eq!(t.join().unwrap(), 0, "other thread acquired a held nest lock");
+        l.unset();
+    }
+}

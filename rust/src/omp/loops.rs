@@ -1,0 +1,360 @@
+//! Worksharing loops (paper §5.2): `#pragma omp for`.
+//!
+//! Static schedules are computed thread-locally (`__kmpc_for_static_init`,
+//! Listing 4: "chunks are distributed among threads in a round-robin
+//! fashion").  Dynamic/guided schedules share a team-wide descriptor that
+//! threads draw chunks from (`__kmpc_dispatch_next`).  `ordered` adds a
+//! per-loop turnstile.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::barrier::wait_tick_no_help;
+use super::icv::{SchedKind, Schedule};
+use super::team::Ctx;
+
+/// Team-shared descriptor for one dynamically-scheduled loop instance.
+pub struct LoopDesc {
+    /// Next unclaimed iteration (normalized, i.e. 0-based).
+    next: AtomicI64,
+    /// One-past-last iteration.
+    end: i64,
+    kind: SchedKind,
+    chunk: i64,
+    team_size: i64,
+    /// Turnstile for `ordered`: next iteration allowed to enter.
+    ordered_next: AtomicI64,
+    /// Threads that have finished this construct (descriptor GC).
+    done: AtomicUsize,
+}
+
+impl LoopDesc {
+    fn new(n: i64, schedule: Schedule, team_size: usize) -> Self {
+        let chunk = schedule.chunk.unwrap_or(1).max(1) as i64;
+        Self {
+            next: AtomicI64::new(0),
+            end: n,
+            kind: schedule.kind,
+            chunk,
+            team_size: team_size as i64,
+            ordered_next: AtomicI64::new(0),
+            done: AtomicUsize::new(0),
+        }
+    }
+
+    /// Claim the next chunk, or `None` when the loop is exhausted.
+    fn next_chunk(&self) -> Option<Range<i64>> {
+        match self.kind {
+            SchedKind::Guided => loop {
+                let cur = self.next.load(Ordering::Acquire);
+                if cur >= self.end {
+                    return None;
+                }
+                let remaining = self.end - cur;
+                // Classic guided: chunk ~ remaining / team, floored at the
+                // requested minimum chunk.
+                let sz = (remaining / (2 * self.team_size)).max(self.chunk).min(remaining);
+                if self
+                    .next
+                    .compare_exchange_weak(cur, cur + sz, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    return Some(cur..cur + sz);
+                }
+            },
+            _ => {
+                // Dynamic (and the shared-descriptor fallback for others):
+                // fixed-size chunks off a shared counter.
+                let cur = self.next.fetch_add(self.chunk, Ordering::AcqRel);
+                if cur >= self.end {
+                    return None;
+                }
+                Some(cur..(cur + self.chunk).min(self.end))
+            }
+        }
+    }
+}
+
+/// Per-thread static schedule: the chunks thread `tid` of `nthreads`
+/// executes for a loop of `n` iterations (normalized).  Pure function —
+/// exactly what `__kmpc_for_static_init` computes (Listing 4).
+///
+/// * `chunk = None`: one contiguous block per thread (default `static`).
+/// * `chunk = Some(c)`: size-`c` blocks dealt round-robin.
+pub fn static_chunks(tid: usize, nthreads: usize, n: i64, chunk: Option<usize>) -> StaticChunks {
+    let (start, block, stride) = match chunk {
+        None => {
+            // Contiguous partition: first `rem` threads get `base+1`.
+            let base = n / nthreads as i64;
+            let rem = n % nthreads as i64;
+            let t = tid as i64;
+            let my = base + if t < rem { 1 } else { 0 };
+            let lo = t * base + t.min(rem);
+            // A single block: encode as block=my, stride past the end.
+            (lo, my, n.max(1))
+        }
+        Some(c) => {
+            let c = c.max(1) as i64;
+            (tid as i64 * c, c, c * nthreads as i64)
+        }
+    };
+    StaticChunks {
+        cur: start,
+        block,
+        stride,
+        end: n,
+    }
+}
+
+/// Iterator over one thread's static chunks (as normalized sub-ranges).
+pub struct StaticChunks {
+    cur: i64,
+    block: i64,
+    stride: i64,
+    end: i64,
+}
+
+impl Iterator for StaticChunks {
+    type Item = Range<i64>;
+
+    fn next(&mut self) -> Option<Range<i64>> {
+        if self.block == 0 || self.cur >= self.end {
+            return None;
+        }
+        let hi = (self.cur + self.block).min(self.end);
+        let r = self.cur..hi;
+        self.cur += self.stride;
+        Some(r)
+    }
+}
+
+impl Ctx {
+    /// `#pragma omp for schedule(static[,chunk])` over `range`.
+    /// No implicit barrier — callers add `ctx.barrier()` unless `nowait`.
+    pub fn for_static(&self, range: Range<i64>, chunk: Option<usize>, mut body: impl FnMut(i64)) {
+        self.next_ws_seq(); // consume a construct slot (ordering with team)
+        let n = range.end - range.start;
+        if n <= 0 {
+            return;
+        }
+        for sub in static_chunks(self.tid, self.team.size, n, chunk) {
+            for i in sub {
+                body(range.start + i);
+            }
+        }
+    }
+
+    /// Whole-chunk variant (the Blaze-lite kernels want slices, not lanes).
+    pub fn for_static_chunks(
+        &self,
+        range: Range<i64>,
+        chunk: Option<usize>,
+        mut body: impl FnMut(Range<i64>),
+    ) {
+        self.next_ws_seq();
+        let n = range.end - range.start;
+        if n <= 0 {
+            return;
+        }
+        for sub in static_chunks(self.tid, self.team.size, n, chunk) {
+            body(range.start + sub.start..range.start + sub.end);
+        }
+    }
+
+    /// `#pragma omp for schedule(dynamic|guided|runtime[,chunk])`.
+    /// All team members must call this with the same arguments.
+    pub fn for_dynamic(
+        &self,
+        range: Range<i64>,
+        schedule: Schedule,
+        mut body: impl FnMut(i64),
+    ) {
+        let desc = self.dispatch_init(range.clone(), schedule);
+        while let Some(sub) = desc.next_chunk() {
+            for i in sub {
+                body(range.start + i);
+            }
+        }
+        self.dispatch_fini(&desc);
+    }
+
+    /// Get-or-create the team-shared descriptor for this construct
+    /// (`__kmpc_dispatch_init`).
+    pub fn dispatch_init(&self, range: Range<i64>, schedule: Schedule) -> Arc<LoopDesc> {
+        let seq = self.next_ws_seq();
+        // Resolve schedule(runtime) against the run-sched ICV.
+        let schedule = if schedule.kind == SchedKind::Runtime {
+            self.team.rt.icv.run_sched()
+        } else {
+            schedule
+        };
+        let n = (range.end - range.start).max(0);
+        let mut ws = self.team.ws.lock().unwrap();
+        ws.entry(seq)
+            .or_insert_with(|| Arc::new(LoopDesc::new(n, schedule, self.team.size)))
+            .clone()
+    }
+
+    /// Claim the next chunk of a dispatch loop (`__kmpc_dispatch_next`),
+    /// de-normalized against `base`.
+    pub fn dispatch_next(&self, desc: &LoopDesc, base: i64) -> Option<Range<i64>> {
+        desc.next_chunk().map(|r| base + r.start..base + r.end)
+    }
+
+    /// Retire this thread from the construct (`__kmpc_dispatch_fini`);
+    /// the last thread garbage-collects the descriptor.
+    pub fn dispatch_fini(&self, desc: &Arc<LoopDesc>) {
+        if desc.done.fetch_add(1, Ordering::AcqRel) + 1 == self.team.size {
+            let mut ws = self.team.ws.lock().unwrap();
+            ws.retain(|_, d| !Arc::ptr_eq(d, desc));
+        }
+    }
+
+    /// `ordered` region turnstile: blocks until all earlier iterations'
+    /// ordered regions have executed.  `iter` is the normalized iteration
+    /// index.  Yield-only wait: re-entrant task execution here could run a
+    /// *later* iteration of the same loop on this stack and self-deadlock.
+    pub fn ordered<R>(&self, desc: &LoopDesc, iter: i64, body: impl FnOnce() -> R) -> R {
+        let mut spins = 0u32;
+        while desc.ordered_next.load(Ordering::Acquire) != iter {
+            wait_tick_no_help(&mut spins);
+        }
+        let r = body();
+        desc.ordered_next.store(iter + 1, Ordering::Release);
+        r
+    }
+
+    /// `#pragma omp for ordered schedule(static,1)` convenience: runs
+    /// `body(i)` in parallel with `ordered_body(i)` serialized in
+    /// iteration order.
+    pub fn for_ordered(
+        &self,
+        range: Range<i64>,
+        mut body: impl FnMut(i64),
+        mut ordered_body: impl FnMut(i64),
+    ) {
+        let desc = self.dispatch_init(range.clone(), Schedule::new(SchedKind::Dynamic, Some(1)));
+        while let Some(sub) = self.dispatch_next(&desc, 0) {
+            for i in sub {
+                body(range.start + i);
+                self.ordered(&desc, i, || ordered_body(range.start + i));
+            }
+        }
+        self.dispatch_fini(&desc);
+    }
+
+    /// `#pragma omp sections`: each closure runs exactly once, distributed
+    /// across the team.  No implicit barrier (`nowait` semantics).
+    pub fn sections(&self, sections: Vec<Box<dyn FnOnce() + Send>>) {
+        let n = sections.len() as i64;
+        let desc = self.dispatch_init(0..n, Schedule::new(SchedKind::Dynamic, Some(1)));
+        let mut sections: Vec<Option<Box<dyn FnOnce() + Send>>> =
+            sections.into_iter().map(Some).collect();
+        while let Some(sub) = self.dispatch_next(&desc, 0) {
+            for i in sub {
+                if let Some(f) = sections[i as usize].take() {
+                    f();
+                }
+            }
+        }
+        self.dispatch_fini(&desc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every iteration covered exactly once — the partition invariant.
+    fn assert_partition(nthreads: usize, n: i64, chunk: Option<usize>) {
+        let mut seen = vec![0u32; n as usize];
+        for tid in 0..nthreads {
+            for sub in static_chunks(tid, nthreads, n, chunk) {
+                for i in sub {
+                    seen[i as usize] += 1;
+                }
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "partition broken: nthreads={nthreads} n={n} chunk={chunk:?}"
+        );
+    }
+
+    #[test]
+    fn static_contiguous_partitions_exactly() {
+        for nthreads in [1, 2, 3, 4, 7, 16] {
+            for n in [0, 1, 2, 15, 16, 17, 100] {
+                assert_partition(nthreads, n, None);
+            }
+        }
+    }
+
+    #[test]
+    fn static_chunked_partitions_exactly() {
+        for nthreads in [1, 2, 3, 8] {
+            for n in [0, 1, 7, 64, 65] {
+                for chunk in [1usize, 2, 3, 10] {
+                    assert_partition(nthreads, n, Some(chunk));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_contiguous_is_balanced() {
+        // 10 iters over 4 threads: 3,3,2,2.
+        let sizes: Vec<i64> = (0..4)
+            .map(|tid| {
+                static_chunks(tid, 4, 10, None)
+                    .map(|r| r.end - r.start)
+                    .sum()
+            })
+            .collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn static_chunked_is_round_robin() {
+        // chunk=2, 3 threads: thread 0 gets [0,2) and [6,8) ...
+        let t0: Vec<_> = static_chunks(0, 3, 12, Some(2)).collect();
+        assert_eq!(t0, vec![0..2, 6..8]);
+        let t2: Vec<_> = static_chunks(2, 3, 12, Some(2)).collect();
+        assert_eq!(t2, vec![4..6, 10..12]);
+    }
+
+    #[test]
+    fn loop_desc_dynamic_claims_disjoint_chunks() {
+        let d = LoopDesc::new(100, Schedule::new(SchedKind::Dynamic, Some(7)), 4);
+        let mut seen = vec![0u32; 100];
+        while let Some(r) = d.next_chunk() {
+            for i in r {
+                seen[i as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn loop_desc_guided_shrinks_and_covers() {
+        let d = LoopDesc::new(1000, Schedule::new(SchedKind::Guided, Some(4)), 4);
+        let mut sizes = Vec::new();
+        let mut covered = 0i64;
+        while let Some(r) = d.next_chunk() {
+            sizes.push(r.end - r.start);
+            covered += r.end - r.start;
+        }
+        assert_eq!(covered, 1000);
+        // First chunk is the largest; all >= the minimum chunk.
+        assert!(sizes[0] >= *sizes.last().unwrap());
+        assert!(sizes.iter().all(|&s| s >= 4 || s == *sizes.last().unwrap()));
+    }
+
+    #[test]
+    fn empty_loop_yields_nothing() {
+        assert_eq!(static_chunks(0, 4, 0, None).count(), 0);
+        let d = LoopDesc::new(0, Schedule::new(SchedKind::Dynamic, None), 2);
+        assert!(d.next_chunk().is_none());
+    }
+}

@@ -1,0 +1,118 @@
+//! hpxMP — the paper's contribution: an OpenMP runtime over the AMT
+//! substrate.
+//!
+//! Layering (paper Figure 1): application code calls the `__kmpc_*` entry
+//! points ([`kmpc`]) or `GOMP_*` shims ([`gcc`]) exactly as Clang/GCC
+//! generated code would; those redirect to the hpxMP runtime
+//! ([`team`]/[`loops`]/[`tasking`]/[`sync`]/[`lock`]), which registers
+//! lightweight AMT tasks ([`crate::amt`]) instead of OS threads.  [`ompt`]
+//! is the performance-tools interface; [`api`] the user-facing `omp_*`
+//! library (Table 2).
+
+pub mod api;
+pub mod barrier;
+pub mod gcc;
+pub mod icv;
+pub mod kmpc;
+pub mod lock;
+pub mod loops;
+pub mod ompt;
+pub mod reduction;
+pub mod sync;
+pub mod tasking;
+pub mod team;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use once_cell::sync::OnceCell;
+
+use crate::amt::{PolicyKind, Scheduler};
+
+pub use icv::{SchedKind, Schedule};
+pub use tasking::{dep_in, dep_inout, dep_out, Dep, DepKind};
+pub use team::{current_ctx, fork_call, Ctx};
+
+/// One hpxMP runtime instance: the AMT scheduler ("HPX backend") plus ICVs
+/// and the OMPT registry.
+pub struct OmpRuntime {
+    pub sched: Arc<Scheduler>,
+    pub icv: icv::Icvs,
+    pub ompt: ompt::OmptRegistry,
+    start: Instant,
+}
+
+impl OmpRuntime {
+    /// Build a runtime with explicit worker count and policy (benchmarks
+    /// and tests); the global singleton uses [`OmpRuntime::from_env`].
+    pub fn new(workers: usize, policy: PolicyKind) -> Arc<Self> {
+        Arc::new(Self {
+            sched: Scheduler::new(workers, policy),
+            icv: icv::Icvs::from_env(),
+            ompt: ompt::OmptRegistry::new(),
+            start: Instant::now(),
+        })
+    }
+
+    /// Environment-configured runtime (`OMP_*`, `HPXMP_*`).
+    pub fn from_env() -> Arc<Self> {
+        let icv = icv::Icvs::from_env();
+        let workers = icv::workers_from_env(icv.nthreads());
+        let policy = icv::policy_from_env();
+        Arc::new(Self {
+            sched: Scheduler::new(workers, policy),
+            icv,
+            ompt: ompt::OmptRegistry::new(),
+            start: Instant::now(),
+        })
+    }
+
+    /// Small fixed-size runtime for unit tests (default policy).
+    #[doc(hidden)]
+    pub fn for_tests(workers: usize) -> Arc<Self> {
+        let rt = Self::new(workers, PolicyKind::PriorityLocal);
+        rt.icv.set_nthreads(workers);
+        rt
+    }
+
+    /// Seconds since runtime start (`omp_get_wtime` base).
+    pub fn wtime(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+static GLOBAL: OnceCell<Arc<OmpRuntime>> = OnceCell::new();
+
+/// The global runtime, initialized on first use — the analog of the
+/// paper's §5.6 "Start HPX back end": every compiler-generated entry
+/// (`__kmpc_*`) routes through here, so HPX is guaranteed to be running
+/// before any `#pragma omp` functionality executes (Listing 8).
+pub fn runtime() -> &'static Arc<OmpRuntime> {
+    GLOBAL.get_or_init(OmpRuntime::from_env)
+}
+
+/// Install a specific runtime as the global one (benchmark harness).
+/// Returns `Err` if the global was already initialized.
+pub fn set_global_runtime(rt: Arc<OmpRuntime>) -> Result<(), Arc<OmpRuntime>> {
+    GLOBAL.set(rt).map_err(|_| GLOBAL.get().unwrap().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_wtime_advances() {
+        let rt = OmpRuntime::for_tests(1);
+        let a = rt.wtime();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(rt.wtime() > a);
+    }
+
+    #[test]
+    fn global_runtime_initializes_once() {
+        let a = runtime();
+        let b = runtime();
+        assert!(Arc::ptr_eq(a, b));
+    }
+}

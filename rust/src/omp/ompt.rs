@@ -1,0 +1,140 @@
+//! OMPT — the OpenMP performance-tools interface (paper §5.4, Table 3).
+//!
+//! First-party tools register callbacks; the runtime invokes them at
+//! thread/parallel/task lifecycle points.  All seven callbacks from the
+//! paper's Table 3 are implemented:
+//! `thread_begin`, `thread_end`, `parallel_begin`, `parallel_end`,
+//! `task_create`, `task_schedule`, `implicit_task`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Why a thread was created (subset of the OMPT enum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThreadType {
+    Initial,
+    Worker,
+}
+
+/// Task-schedule transition cause.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskStatus {
+    Complete,
+    Yield,
+    Switch,
+}
+
+/// Implicit-task endpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    Begin,
+    End,
+}
+
+pub type ThreadBeginCb = Box<dyn Fn(ThreadType, u64) + Send + Sync>;
+pub type ThreadEndCb = Box<dyn Fn(u64) + Send + Sync>;
+pub type ParallelBeginCb = Box<dyn Fn(u64, usize) + Send + Sync>; // (parallel_id, team_size)
+pub type ParallelEndCb = Box<dyn Fn(u64) + Send + Sync>;
+pub type TaskCreateCb = Box<dyn Fn(u64, u64) + Send + Sync>; // (parent_task_id, new_task_id)
+pub type TaskScheduleCb = Box<dyn Fn(u64, TaskStatus, u64) + Send + Sync>; // (prev, status, next)
+pub type ImplicitTaskCb = Box<dyn Fn(Endpoint, u64, usize, usize) + Send + Sync>; // (ep, parallel_id, team_size, tid)
+
+/// The registered tool callbacks (Table 3).  `set_*` replaces; `None`
+/// (never registered) costs one relaxed load + branch on the hot path.
+#[derive(Default)]
+pub struct OmptRegistry {
+    thread_begin: RwLock<Option<ThreadBeginCb>>,
+    thread_end: RwLock<Option<ThreadEndCb>>,
+    parallel_begin: RwLock<Option<ParallelBeginCb>>,
+    parallel_end: RwLock<Option<ParallelEndCb>>,
+    task_create: RwLock<Option<TaskCreateCb>>,
+    task_schedule: RwLock<Option<TaskScheduleCb>>,
+    implicit_task: RwLock<Option<ImplicitTaskCb>>,
+    next_parallel_id: AtomicU64,
+    next_task_id: AtomicU64,
+}
+
+macro_rules! setter_and_emit {
+    ($set:ident, $emit:ident, $field:ident, $cbty:ty, ($($arg:ident : $ty:ty),*)) => {
+        pub fn $set(&self, cb: $cbty) {
+            *self.$field.write().unwrap() = Some(cb);
+        }
+        pub fn $emit(&self, $($arg: $ty),*) {
+            if let Some(cb) = self.$field.read().unwrap().as_ref() {
+                cb($($arg),*);
+            }
+        }
+    };
+}
+
+impl OmptRegistry {
+    pub fn new() -> Self {
+        Self {
+            next_parallel_id: AtomicU64::new(1),
+            next_task_id: AtomicU64::new(1),
+            ..Default::default()
+        }
+    }
+
+    pub fn fresh_parallel_id(&self) -> u64 {
+        self.next_parallel_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn fresh_task_id(&self) -> u64 {
+        self.next_task_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    setter_and_emit!(set_thread_begin, emit_thread_begin, thread_begin, ThreadBeginCb,
+        (tt: ThreadType, thread_id: u64));
+    setter_and_emit!(set_thread_end, emit_thread_end, thread_end, ThreadEndCb,
+        (thread_id: u64));
+    setter_and_emit!(set_parallel_begin, emit_parallel_begin, parallel_begin, ParallelBeginCb,
+        (parallel_id: u64, team_size: usize));
+    setter_and_emit!(set_parallel_end, emit_parallel_end, parallel_end, ParallelEndCb,
+        (parallel_id: u64));
+    setter_and_emit!(set_task_create, emit_task_create, task_create, TaskCreateCb,
+        (parent: u64, child: u64));
+    setter_and_emit!(set_task_schedule, emit_task_schedule, task_schedule, TaskScheduleCb,
+        (prev: u64, status: TaskStatus, next: u64));
+    setter_and_emit!(set_implicit_task, emit_implicit_task, implicit_task, ImplicitTaskCb,
+        (ep: Endpoint, parallel_id: u64, team_size: usize, tid: usize));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn unregistered_callbacks_are_noops() {
+        let r = OmptRegistry::new();
+        r.emit_parallel_begin(1, 4); // must not panic
+        r.emit_thread_end(0);
+    }
+
+    #[test]
+    fn registered_callback_fires_with_args() {
+        let r = OmptRegistry::new();
+        let seen = Arc::new(AtomicUsize::new(0));
+        let s = seen.clone();
+        r.set_parallel_begin(Box::new(move |pid, size| {
+            assert_eq!(pid, 7);
+            assert_eq!(size, 3);
+            s.fetch_add(1, Ordering::SeqCst);
+        }));
+        r.emit_parallel_begin(7, 3);
+        assert_eq!(seen.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn ids_are_fresh_and_increasing() {
+        let r = OmptRegistry::new();
+        let a = r.fresh_parallel_id();
+        let b = r.fresh_parallel_id();
+        assert!(b > a);
+        let t1 = r.fresh_task_id();
+        let t2 = r.fresh_task_id();
+        assert!(t2 > t1);
+    }
+}

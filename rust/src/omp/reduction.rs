@@ -1,0 +1,183 @@
+//! `reduction(op: var)` support — the runtime side of OpenMP reductions.
+//!
+//! Clang lowers a reduction clause to thread-private partials plus a
+//! combine step guarded by `__kmpc_reduce`/`__kmpc_end_reduce` (tree or
+//! atomic combine).  This module provides the same machinery in safe Rust:
+//! a [`Reduction`] accumulator shared by the team, combined with a
+//! monoid's identity + associative combine function.
+
+use std::sync::Mutex;
+
+use super::team::Ctx;
+
+/// A reduction monoid: identity + associative combiner.
+pub trait ReduceOp<T>: Send + Sync {
+    fn identity(&self) -> T;
+    fn combine(&self, a: T, b: T) -> T;
+}
+
+/// The standard OpenMP reduction operators over f64/i64.
+pub struct Sum;
+pub struct Prod;
+pub struct Min;
+pub struct Max;
+
+impl ReduceOp<f64> for Sum {
+    fn identity(&self) -> f64 {
+        0.0
+    }
+    fn combine(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+}
+
+impl ReduceOp<i64> for Sum {
+    fn identity(&self) -> i64 {
+        0
+    }
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a + b
+    }
+}
+
+impl ReduceOp<f64> for Prod {
+    fn identity(&self) -> f64 {
+        1.0
+    }
+    fn combine(&self, a: f64, b: f64) -> f64 {
+        a * b
+    }
+}
+
+impl ReduceOp<f64> for Min {
+    fn identity(&self) -> f64 {
+        f64::INFINITY
+    }
+    fn combine(&self, a: f64, b: f64) -> f64 {
+        a.min(b)
+    }
+}
+
+impl ReduceOp<f64> for Max {
+    fn identity(&self) -> f64 {
+        f64::NEG_INFINITY
+    }
+    fn combine(&self, a: f64, b: f64) -> f64 {
+        a.max(b)
+    }
+}
+
+/// Team-shared reduction accumulator (`__kmpc_reduce` analog with the
+/// critical-section combine strategy).
+pub struct Reduction<T, O: ReduceOp<T>> {
+    op: O,
+    acc: Mutex<T>,
+}
+
+impl<T: Send, O: ReduceOp<T>> Reduction<T, O> {
+    pub fn new(op: O) -> Self {
+        let id = op.identity();
+        Self {
+            op,
+            acc: Mutex::new(id),
+        }
+    }
+
+    /// Combine one thread's private partial into the shared accumulator
+    /// (`__kmpc_reduce` + `__kmpc_end_reduce`).
+    pub fn combine(&self, partial: T) {
+        let mut acc = self.acc.lock().unwrap();
+        // Temporarily take the accumulator to apply the by-value combiner.
+        let cur = std::mem::replace(&mut *acc, self.op.identity());
+        *acc = self.op.combine(cur, partial);
+    }
+
+    /// Read the final value (call after the region joins / a barrier).
+    pub fn into_result(self) -> T {
+        self.acc.into_inner().unwrap()
+    }
+
+    pub fn result(&self) -> T
+    where
+        T: Clone,
+    {
+        self.acc.lock().unwrap().clone()
+    }
+}
+
+impl Ctx {
+    /// `#pragma omp for reduction(op: r)` convenience: run a static loop
+    /// with a thread-private partial, then combine once per thread.
+    pub fn for_reduce<T: Send, O: ReduceOp<T>>(
+        &self,
+        range: std::ops::Range<i64>,
+        red: &Reduction<T, O>,
+        mut body: impl FnMut(i64, T) -> T,
+    ) {
+        let mut partial = red.op.identity();
+        self.for_static(range, None, |i| {
+            let cur = std::mem::replace(&mut partial, red.op.identity());
+            partial = body(i, cur);
+        });
+        red.combine(partial);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::team::fork_call;
+    use crate::omp::OmpRuntime;
+    use std::sync::Arc;
+
+    #[test]
+    fn sum_reduction_over_team() {
+        let rt = OmpRuntime::for_tests(4);
+        let red = Arc::new(Reduction::new(Sum));
+        let r = red.clone();
+        fork_call(&rt, Some(4), move |ctx| {
+            ctx.for_reduce(0..1000, &r, |i, acc: i64| acc + i);
+        });
+        assert_eq!(red.result(), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn min_max_reduction() {
+        let rt = OmpRuntime::for_tests(4);
+        let lo = Arc::new(Reduction::new(Min));
+        let hi = Arc::new(Reduction::new(Max));
+        let (l, h) = (lo.clone(), hi.clone());
+        fork_call(&rt, Some(4), move |ctx| {
+            ctx.for_reduce(0..100, &l, |i, acc: f64| acc.min(((i - 37) * (i - 37)) as f64));
+            ctx.for_reduce(0..100, &h, |i, acc: f64| acc.max(((i - 37) * (i - 37)) as f64));
+        });
+        assert_eq!(lo.result(), 0.0); // i == 37
+        assert_eq!(hi.result(), (62.0f64 * 62.0).max(37.0 * 37.0));
+    }
+
+    #[test]
+    fn product_reduction_identity() {
+        let red = Reduction::new(Prod);
+        red.combine(3.0);
+        red.combine(4.0);
+        assert_eq!(red.into_result(), 12.0);
+    }
+
+    #[test]
+    fn dot_product_matches_serial() {
+        let rt = OmpRuntime::for_tests(4);
+        let n = 10_000usize;
+        let a: Arc<Vec<f64>> = Arc::new((0..n).map(|i| (i as f64).sin()).collect());
+        let b: Arc<Vec<f64>> = Arc::new((0..n).map(|i| (i as f64).cos()).collect());
+        let expect: f64 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+        let red = Arc::new(Reduction::new(Sum));
+        let (r, a2, b2) = (red.clone(), a.clone(), b.clone());
+        fork_call(&rt, Some(4), move |ctx| {
+            ctx.for_reduce(0..n as i64, &r, |i, acc: f64| {
+                acc + a2[i as usize] * b2[i as usize]
+            });
+        });
+        // Partials combine in nondeterministic order: f64 tolerance.
+        assert!((red.result() - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,214 @@
+//! Synchronization constructs: `critical`, `atomic`, `master`, `single`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use super::team::Ctx;
+
+// ---------------------------------------------------------------------------
+// critical — process-global named locks (OpenMP critical sections with the
+// same name exclude each other across ALL teams).
+// ---------------------------------------------------------------------------
+
+static CRITICAL_LOCKS: Lazy<Mutex<HashMap<String, Arc<Mutex<()>>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+fn critical_lock(name: &str) -> Arc<Mutex<()>> {
+    let mut map = CRITICAL_LOCKS.lock().unwrap();
+    map.entry(name.to_string())
+        .or_insert_with(|| Arc::new(Mutex::new(())))
+        .clone()
+}
+
+/// `#pragma omp critical [(name)]` — the anonymous section is the empty
+/// name.  Free function: critical sections are global, not team-scoped.
+pub fn critical<R>(name: &str, body: impl FnOnce() -> R) -> R {
+    let lock = critical_lock(name);
+    let _g = lock.lock().unwrap();
+    body()
+}
+
+// ---------------------------------------------------------------------------
+// atomic — f64/u64 cells with CAS-loop read-modify-write, the lowering of
+// `#pragma omp atomic` on hardware without f64 fetch_add.
+// ---------------------------------------------------------------------------
+
+/// An f64 cell supporting `#pragma omp atomic` update forms.
+#[derive(Default)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        Self {
+            bits: AtomicU64::new(v.to_bits()),
+        }
+    }
+
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    pub fn store(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Release);
+    }
+
+    /// `atomic update`: `x = op(x, operand)`; returns the old value
+    /// (`atomic capture`).
+    pub fn update(&self, f: impl Fn(f64) -> f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let new = f(f64::from_bits(cur)).to_bits();
+            match self.bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(old) => return f64::from_bits(old),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn fetch_add(&self, v: f64) -> f64 {
+        self.update(|x| x + v)
+    }
+
+    pub fn fetch_max(&self, v: f64) -> f64 {
+        self.update(|x| x.max(v))
+    }
+
+    pub fn fetch_min(&self, v: f64) -> f64 {
+        self.update(|x| x.min(v))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// master / single
+// ---------------------------------------------------------------------------
+
+impl Ctx {
+    /// `#pragma omp master`: body runs on thread 0 only; no barrier.
+    pub fn master<R>(&self, body: impl FnOnce() -> R) -> Option<R> {
+        if self.tid == 0 {
+            Some(body())
+        } else {
+            None
+        }
+    }
+
+    /// `#pragma omp single`: the first thread to arrive at this construct
+    /// executes the body; returns whether this thread was it.  No implicit
+    /// barrier (add `ctx.barrier()` unless `nowait`).
+    pub fn single(&self, body: impl FnOnce()) -> bool {
+        let seq = self.next_ws_seq();
+        let claimed = {
+            let mut singles = self.team.singles.lock().unwrap();
+            match singles.get(&seq) {
+                Some(_) => false,
+                None => {
+                    singles.insert(seq, self.tid);
+                    true
+                }
+            }
+        };
+        if claimed {
+            body();
+        }
+        claimed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::team::fork_call;
+    use crate::omp::OmpRuntime;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn atomic_f64_add_is_exact_under_contention() {
+        let cell = Arc::new(AtomicF64::new(0.0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = cell.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.fetch_add(1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cell.load(), 40_000.0);
+    }
+
+    #[test]
+    fn atomic_minmax() {
+        let c = AtomicF64::new(5.0);
+        c.fetch_max(9.0);
+        assert_eq!(c.load(), 9.0);
+        c.fetch_min(-2.0);
+        assert_eq!(c.load(), -2.0);
+    }
+
+    #[test]
+    fn critical_excludes_same_name() {
+        let counter = Arc::new(Mutex::new(0i64));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let counter = counter.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        critical("sum", || {
+                            let mut g = counter.lock().unwrap();
+                            *g += 1;
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*counter.lock().unwrap(), 4000);
+    }
+
+    #[test]
+    fn master_runs_only_on_thread_zero() {
+        let rt = OmpRuntime::for_tests(4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        fork_call(&rt, Some(4), move |ctx| {
+            ctx.master(|| {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn single_runs_exactly_once_per_construct() {
+        let rt = OmpRuntime::for_tests(4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        fork_call(&rt, Some(4), move |ctx| {
+            // Two consecutive single constructs: each must fire once.
+            ctx.single(|| {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+            ctx.barrier();
+            ctx.single(|| {
+                h.fetch_add(10, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 11);
+    }
+}

@@ -1,0 +1,424 @@
+//! Explicit tasks (paper §5.3): `task`, `task depend`, `taskwait`,
+//! `taskgroup`, `taskyield`, `taskloop` (the OpenMP 4.5 extension the
+//! paper's §2 timeline calls out).
+//!
+//! `#pragma omp task` becomes `__kmpc_omp_task_alloc` + `__kmpc_omp_task`
+//! (Listing 5): allocate a task object, then register a normal-priority
+//! AMT task.  `depend` clauses build a dependence graph over sibling tasks
+//! keyed by storage address (in/out/inout), resolved at creation time.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::amt::task::Hint;
+use crate::amt::{worker, Priority};
+
+use super::barrier::WaitCounter;
+use super::ompt::TaskStatus;
+use super::team::{with_ctx, Ctx};
+
+/// Dependence kind of one `depend` clause item.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DepKind {
+    In,
+    Out,
+    InOut,
+}
+
+/// One `depend` clause item: a storage location + access mode.  Use
+/// [`dep_in`]/[`dep_out`]/[`dep_inout`] to build from references.
+#[derive(Clone, Copy, Debug)]
+pub struct Dep {
+    pub addr: usize,
+    pub kind: DepKind,
+}
+
+pub fn dep_in<T: ?Sized>(x: &T) -> Dep {
+    Dep {
+        addr: x as *const T as *const u8 as usize,
+        kind: DepKind::In,
+    }
+}
+
+pub fn dep_out<T: ?Sized>(x: &T) -> Dep {
+    Dep {
+        addr: x as *const T as *const u8 as usize,
+        kind: DepKind::Out,
+    }
+}
+
+pub fn dep_inout<T: ?Sized>(x: &T) -> Dep {
+    Dep {
+        addr: x as *const T as *const u8 as usize,
+        kind: DepKind::InOut,
+    }
+}
+
+/// A created-but-possibly-blocked explicit task.
+pub(super) struct TaskNode {
+    /// Unreleased predecessors + 1 creation hold.
+    preds: AtomicUsize,
+    done: AtomicBool,
+    /// Successor edges; guarded together with `done` (edges may only be
+    /// added while the task is provably not finished).
+    succs: Mutex<Vec<Arc<TaskNode>>>,
+    payload: Mutex<Option<Box<dyn FnOnce() + Send>>>,
+    /// Context the body runs under (the creating thread's team binding).
+    ctx: Arc<Ctx>,
+    /// Counters to release on completion.
+    parent_children: Arc<WaitCounter>,
+    groups: Vec<Arc<WaitCounter>>,
+    ompt_id: u64,
+}
+
+impl TaskNode {
+    fn enqueue(self: &Arc<Self>) {
+        let node = self.clone();
+        let sched = self.ctx.team.rt.sched.clone();
+        sched.spawn(Priority::Normal, Hint::Any, "omp_explicit_task", move || {
+            node.execute();
+        });
+    }
+
+    fn release_pred(self: &Arc<Self>) {
+        if self.preds.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.enqueue();
+        }
+    }
+
+    fn execute(self: &Arc<Self>) {
+        let rt = self.ctx.team.rt.clone();
+        rt.ompt
+            .emit_task_schedule(0, TaskStatus::Switch, self.ompt_id);
+        let payload = self.payload.lock().unwrap().take();
+        if let Some(f) = payload {
+            // Run under a task-private context: same team binding as the
+            // creator (so team constructs resolve), but a fresh parent
+            // frame — the task's own children/dependence scope.  Without
+            // this, `taskwait` inside a task would wait on the *creator's*
+            // children, which include this task itself: self-deadlock.
+            let task_ctx = Arc::new(Ctx {
+                team: self.ctx.team.clone(),
+                tid: self.ctx.tid,
+                ws_seq: AtomicUsize::new(0),
+                parent: Arc::new(super::team::ParentFrame::default()),
+                task_id: self.ompt_id,
+            });
+            with_ctx(task_ctx, f);
+        }
+        // Publish completion, then drain successor edges.  Edge insertion
+        // checks `done` under the same lock, so no successor can be added
+        // after this point.
+        let succs = {
+            let mut g = self.succs.lock().unwrap();
+            self.done.store(true, Ordering::Release);
+            std::mem::take(&mut *g)
+        };
+        for s in succs {
+            s.release_pred();
+        }
+        for g in &self.groups {
+            g.decrement();
+        }
+        self.parent_children.decrement();
+        self.ctx.team.explicit.decrement();
+        rt.ompt
+            .emit_task_schedule(self.ompt_id, TaskStatus::Complete, 0);
+    }
+
+    /// Try to add `self -> succ`; fails (no edge) if `self` already done.
+    fn add_successor(self: &Arc<Self>, succ: &Arc<TaskNode>) {
+        let mut g = self.succs.lock().unwrap();
+        if !self.done.load(Ordering::Acquire) {
+            succ.preds.fetch_add(1, Ordering::AcqRel);
+            g.push(succ.clone());
+        }
+    }
+}
+
+/// Last-accessor records per storage address (the sibling dependence map).
+#[derive(Default)]
+pub struct DepMap {
+    records: HashMap<usize, DepRecord>,
+}
+
+#[derive(Default)]
+struct DepRecord {
+    last_out: Option<Arc<TaskNode>>,
+    readers: Vec<Arc<TaskNode>>,
+}
+
+impl DepMap {
+    /// Register `node`'s dependences and add the required edges:
+    /// * `in`    — after the last writer.
+    /// * `out`/`inout` — after the last writer AND all readers since.
+    fn register(&mut self, node: &Arc<TaskNode>, deps: &[Dep]) {
+        for dep in deps {
+            let rec = self.records.entry(dep.addr).or_default();
+            match dep.kind {
+                DepKind::In => {
+                    if let Some(w) = &rec.last_out {
+                        w.add_successor(node);
+                    }
+                    rec.readers.push(node.clone());
+                }
+                DepKind::Out | DepKind::InOut => {
+                    if let Some(w) = &rec.last_out {
+                        w.add_successor(node);
+                    }
+                    for r in &rec.readers {
+                        r.add_successor(node);
+                    }
+                    rec.readers.clear();
+                    rec.last_out = Some(node.clone());
+                }
+            }
+        }
+    }
+}
+
+impl Ctx {
+    /// `#pragma omp task` — fire-and-forget; completion observable via
+    /// `taskwait`, `taskgroup`, or the region-end barrier.
+    pub fn task(self: &Arc<Self>, body: impl FnOnce() + Send + 'static) {
+        self.task_with_deps(&[], body)
+    }
+
+    /// `#pragma omp task depend(...)`.
+    pub fn task_with_deps(self: &Arc<Self>, deps: &[Dep], body: impl FnOnce() + Send + 'static) {
+        let rt = self.team.rt.clone();
+        let ompt_id = rt.ompt.fresh_task_id();
+        rt.ompt.emit_task_create(self.task_id, ompt_id);
+
+        self.parent.children.increment();
+        self.team.explicit.increment();
+        let groups: Vec<Arc<WaitCounter>> = self.parent.groups.lock().unwrap().clone();
+        for g in &groups {
+            g.increment();
+        }
+
+        let node = Arc::new(TaskNode {
+            preds: AtomicUsize::new(1), // creation hold
+            done: AtomicBool::new(false),
+            succs: Mutex::new(Vec::new()),
+            payload: Mutex::new(Some(Box::new(body))),
+            ctx: self.clone(),
+            parent_children: self.parent.children.clone(),
+            groups,
+            ompt_id,
+        });
+
+        if !deps.is_empty() {
+            let mut map = self.parent.deps.lock().unwrap();
+            map.register(&node, deps);
+        }
+        // Drop the creation hold: if no predecessor held it back, enqueue.
+        node.release_pred();
+    }
+
+    /// `#pragma omp taskwait`: wait for *direct* children (executes pending
+    /// tasks meanwhile — a task scheduling point).
+    pub fn taskwait(&self) {
+        self.parent.children.wait_zero();
+    }
+
+    /// `#pragma omp taskgroup`: run `body`, then wait for all tasks created
+    /// inside (transitively, via group inheritance at creation).
+    pub fn taskgroup(&self, body: impl FnOnce()) {
+        let group = Arc::new(WaitCounter::new());
+        self.parent.groups.lock().unwrap().push(group.clone());
+        body();
+        self.parent.groups.lock().unwrap().pop();
+        group.wait_zero();
+    }
+
+    /// `#pragma omp taskyield`: give the scheduler a chance to run one
+    /// pending task on this worker.
+    pub fn taskyield(&self) {
+        worker::help_one();
+    }
+
+    /// `#pragma omp taskloop grainsize(g)` (OpenMP 4.5): split `range` into
+    /// grains, one task each, and wait (implicit taskgroup).
+    pub fn taskloop(
+        self: &Arc<Self>,
+        range: std::ops::Range<i64>,
+        grainsize: usize,
+        body: impl Fn(i64) + Send + Sync + 'static,
+    ) {
+        let g = grainsize.max(1) as i64;
+        let body = Arc::new(body);
+        self.taskgroup(|| {
+            let mut lo = range.start;
+            while lo < range.end {
+                let hi = (lo + g).min(range.end);
+                let body = body.clone();
+                self.task(move || {
+                    for i in lo..hi {
+                        body(i);
+                    }
+                });
+                lo = hi;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::team::{current_ctx, fork_call};
+    use crate::omp::OmpRuntime;
+    use std::sync::atomic::AtomicUsize as AU;
+
+    #[test]
+    fn tasks_run_and_taskwait_joins() {
+        let rt = OmpRuntime::for_tests(4);
+        let done = Arc::new(AU::new(0));
+        let d = done.clone();
+        fork_call(&rt, Some(2), move |ctx| {
+            let ctx = current_ctx().unwrap();
+            if ctx.tid == 0 {
+                for _ in 0..32 {
+                    let d = d.clone();
+                    ctx.task(move || {
+                        d.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+                ctx.taskwait();
+                assert_eq!(d.load(Ordering::SeqCst), 32);
+            }
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn region_end_barrier_drains_tasks_without_taskwait() {
+        let rt = OmpRuntime::for_tests(4);
+        let done = Arc::new(AU::new(0));
+        let d = done.clone();
+        fork_call(&rt, Some(4), move |_| {
+            let ctx = current_ctx().unwrap();
+            let d = d.clone();
+            ctx.task(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+            // no taskwait: the implicit region barrier must drain
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn depend_out_in_orders_writer_before_readers() {
+        let rt = OmpRuntime::for_tests(4);
+        let ok = Arc::new(AU::new(0));
+        let ok2 = ok.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let slot = Arc::new(AU::new(0));
+            let target = 7usize; // address token for depend matching
+            let w = slot.clone();
+            ctx.task_with_deps(&[Dep { addr: target, kind: DepKind::Out }], move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                w.store(42, Ordering::SeqCst);
+            });
+            for _ in 0..4 {
+                let rsl = slot.clone();
+                let ok = ok2.clone();
+                ctx.task_with_deps(&[Dep { addr: target, kind: DepKind::In }], move || {
+                    if rsl.load(Ordering::SeqCst) == 42 {
+                        ok.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+            ctx.taskwait();
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4, "readers ran before writer");
+    }
+
+    #[test]
+    fn depend_chain_executes_in_order() {
+        let rt = OmpRuntime::for_tests(4);
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let t2 = trace.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let token = 0xDEAD_BEEFusize;
+            for step in 0..8 {
+                let t = t2.clone();
+                ctx.task_with_deps(
+                    &[Dep { addr: token, kind: DepKind::InOut }],
+                    move || {
+                        t.lock().unwrap().push(step);
+                    },
+                );
+            }
+            ctx.taskwait();
+        });
+        assert_eq!(*trace.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn taskgroup_waits_for_nested_tasks() {
+        let rt = OmpRuntime::for_tests(4);
+        let done = Arc::new(AU::new(0));
+        let d = done.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let d_in = d.clone();
+            ctx.taskgroup(|| {
+                for _ in 0..8 {
+                    let d = d_in.clone();
+                    ctx.task(move || {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                        d.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+            assert_eq!(d.load(Ordering::SeqCst), 8, "taskgroup returned early");
+        });
+    }
+
+    #[test]
+    fn taskloop_covers_range_exactly_once() {
+        let rt = OmpRuntime::for_tests(4);
+        let seen = Arc::new(Mutex::new(vec![0u32; 100]));
+        let s = seen.clone();
+        fork_call(&rt, Some(2), move |ctx| {
+            if ctx.tid == 0 {
+                let ctx = current_ctx().unwrap();
+                let s = s.clone();
+                ctx.taskloop(0..100, 7, move |i| {
+                    s.lock().unwrap()[i as usize] += 1;
+                });
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn nested_tasks_spawn_from_tasks() {
+        let rt = OmpRuntime::for_tests(4);
+        let done = Arc::new(AU::new(0));
+        let d = done.clone();
+        fork_call(&rt, Some(2), move |_| {
+            let ctx = current_ctx().unwrap();
+            if ctx.tid == 0 {
+                let d = d.clone();
+                ctx.task(move || {
+                    let ctx = current_ctx().unwrap();
+                    for _ in 0..4 {
+                        let d = d.clone();
+                        ctx.task(move || {
+                            d.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                    ctx.taskwait();
+                    d.fetch_add(100, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 104);
+    }
+}

@@ -1,0 +1,397 @@
+//! Teams, implicit tasks, and the fork/join core (paper §5.1).
+//!
+//! `#pragma omp parallel` reaches the runtime as `__kmpc_fork_call`
+//! (Listing 2), which calls [`fork_call`] here — the analog of
+//! `hpx_runtime::fork` (Listing 3): one AMT task per requested OpenMP
+//! thread is registered (`"omp_implicit_task"`, low priority, one per
+//! worker queue), and the calling thread blocks until the team joins.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::amt::task::Hint;
+use crate::amt::{worker, Priority};
+
+use super::barrier::{wait_tick, TeamBarrier, WaitCounter};
+use super::loops::LoopDesc;
+use super::ompt::Endpoint;
+use super::tasking::DepMap;
+use super::OmpRuntime;
+
+/// A parallel team: `size` implicit tasks sharing barriers, worksharing
+/// descriptors and an explicit-task pool.
+pub struct Team {
+    pub rt: Arc<OmpRuntime>,
+    pub size: usize,
+    /// OMPT parallel region id.
+    pub parallel_id: u64,
+    /// Nesting level (outermost parallel region = 1).
+    pub level: usize,
+    pub barrier: TeamBarrier,
+    /// Explicit tasks bound to this region; drained at barriers/join.
+    pub explicit: WaitCounter,
+    /// Worksharing descriptors, keyed by per-thread construct sequence.
+    pub(super) ws: Mutex<HashMap<u64, Arc<LoopDesc>>>,
+    /// `single` construct claims: seq -> claiming tid.
+    pub(super) singles: Mutex<HashMap<u64, usize>>,
+}
+
+impl Team {
+    fn new(rt: Arc<OmpRuntime>, size: usize, parallel_id: u64, level: usize) -> Arc<Self> {
+        Arc::new(Self {
+            rt,
+            size,
+            parallel_id,
+            level,
+            barrier: TeamBarrier::new(size),
+            explicit: WaitCounter::new(),
+            ws: Mutex::new(HashMap::new()),
+            singles: Mutex::new(HashMap::new()),
+        })
+    }
+}
+
+/// Parent frame for explicit-task tracking: children counter (taskwait),
+/// sibling dependence map (`depend` clauses), and the taskgroup stack.
+pub struct ParentFrame {
+    pub children: Arc<WaitCounter>,
+    pub deps: Mutex<DepMap>,
+    pub groups: Mutex<Vec<Arc<WaitCounter>>>,
+}
+
+impl Default for ParentFrame {
+    fn default() -> Self {
+        Self {
+            children: Arc::new(WaitCounter::new()),
+            deps: Mutex::new(DepMap::default()),
+            groups: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+/// The per-implicit-task (OpenMP thread) context: everything a structured
+/// block needs to use worksharing/sync/tasking constructs.
+pub struct Ctx {
+    pub team: Arc<Team>,
+    pub tid: usize,
+    /// Worksharing construct counter — all team members traverse constructs
+    /// in the same order, so equal counts identify the same construct.
+    pub(super) ws_seq: AtomicUsize,
+    pub(super) parent: Arc<ParentFrame>,
+    /// OMPT id of this implicit task.
+    pub task_id: u64,
+}
+
+impl Ctx {
+    pub fn thread_num(&self) -> usize {
+        self.tid
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.team.size
+    }
+
+    /// Team barrier including the explicit-task drain the spec requires.
+    pub fn barrier(&self) {
+        // Execute pending explicit tasks before blocking: barrier is a task
+        // scheduling point.
+        let mut spins = 0u32;
+        while self.team.explicit.count() > 0 {
+            wait_tick(&mut spins);
+        }
+        self.team.barrier.wait();
+    }
+
+    pub(super) fn next_ws_seq(&self) -> u64 {
+        self.ws_seq.fetch_add(1, Ordering::Relaxed) as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TLS: the implicit-task stack.
+//
+// A stack (not a slot) because help-first barriers may run *another team
+// member's* implicit task nested on the same OS stack; the inner member's
+// context must shadow the outer one for the duration.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CTX_STACK: std::cell::RefCell<Vec<Arc<Ctx>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// The innermost OpenMP thread context of the calling OS thread, if any.
+pub fn current_ctx() -> Option<Arc<Ctx>> {
+    CTX_STACK.with(|s| s.borrow().last().cloned())
+}
+
+pub(super) fn push_ctx(ctx: Arc<Ctx>) {
+    CTX_STACK.with(|s| s.borrow_mut().push(ctx));
+}
+
+pub(super) fn pop_ctx() {
+    CTX_STACK.with(|s| {
+        s.borrow_mut().pop();
+    });
+}
+
+/// Run `f` with `ctx` as the innermost context (used by explicit tasks,
+/// which execute on arbitrary workers but must observe their team).
+pub(super) fn with_ctx<R>(ctx: Arc<Ctx>, f: impl FnOnce() -> R) -> R {
+    push_ctx(ctx);
+    let r = f();
+    pop_ctx();
+    r
+}
+
+// ---------------------------------------------------------------------------
+// fork/join
+// ---------------------------------------------------------------------------
+
+/// Join latch: master blocks here until every implicit task has retired.
+struct Join {
+    remaining: AtomicUsize,
+    lock: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Join {
+    fn new(n: usize) -> Self {
+        Self {
+            remaining: AtomicUsize::new(n),
+            lock: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn arrive(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = self.lock.lock().unwrap();
+            *done = true;
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        if worker::current().is_some() {
+            // Master is itself an AMT worker (nested parallelism): help run
+            // tasks instead of blocking the worker.
+            let mut spins = 0u32;
+            while self.remaining.load(Ordering::Acquire) != 0 {
+                wait_tick(&mut spins);
+            }
+        } else {
+            let mut done = self.lock.lock().unwrap();
+            while !*done {
+                done = self.cv.wait(done).unwrap();
+            }
+        }
+    }
+}
+
+/// The `hpx_runtime::fork` analog (paper Listing 3): create the team,
+/// register one low-priority AMT task per OpenMP thread (hinted to distinct
+/// worker queues, as hpxMP passes the os-thread index), and block the
+/// caller until the region joins.
+///
+/// The microtask runs once per team member with that member's [`Ctx`].
+pub fn fork_call(
+    rt: &Arc<OmpRuntime>,
+    num_threads: Option<usize>,
+    micro: impl Fn(&Ctx) + Send + Sync + 'static,
+) {
+    let nested_in = current_ctx();
+    let level = nested_in.as_ref().map(|c| c.team.level).unwrap_or(0) + 1;
+
+    let mut n = num_threads.unwrap_or_else(|| rt.icv.nthreads());
+    if nested_in.is_some() && !rt.icv.nested.load(Ordering::Relaxed) {
+        n = 1; // inactive nested region
+    }
+    // Closure-based tasks need one OS worker per blocked team member for
+    // liveness (DESIGN.md §4): clamp like hpxMP clamps to its thread pool.
+    n = n.clamp(1, rt.sched.workers());
+
+    let parallel_id = rt.ompt.fresh_parallel_id();
+    rt.ompt.emit_parallel_begin(parallel_id, n);
+
+    let team = Team::new(rt.clone(), n, parallel_id, level);
+    let join = Arc::new(Join::new(n));
+    let micro: Arc<dyn Fn(&Ctx) + Send + Sync> = Arc::new(micro);
+
+    for i in 0..n {
+        spawn_implicit(rt.clone(), team.clone(), join.clone(), micro.clone(), i);
+    }
+
+    join.wait();
+    rt.ompt.emit_parallel_end(parallel_id);
+}
+
+/// Register one implicit task — mirrors Listing 3's
+/// `register_thread_nullary(..., thread_priority_low, i)`.
+///
+/// **Nesting guard.** Blocked waits (barriers, joins, taskwaits) execute
+/// pending tasks cooperatively (`help_one`).  If such a wait popped an
+/// implicit task of the *same or an outer* nesting level, that task could
+/// pass the current barrier and block on a *later* one while the members
+/// pinned below it on the OS stack can never arrive — a deadlock.  So an
+/// implicit task that finds itself started inside a context of
+/// same-or-outer level re-registers itself and bails; only strictly-deeper
+/// teams may nest on a blocked member's stack (deadlock-free by induction
+/// on nesting level; the deepest level has no inner teams).  Real hpxMP
+/// relies on stackful HPX threads here; the requeue guard is the
+/// closure-task equivalent (DESIGN.md §4).
+fn spawn_implicit(
+    rt: Arc<OmpRuntime>,
+    team: Arc<Team>,
+    join: Arc<Join>,
+    micro: Arc<dyn Fn(&Ctx) + Send + Sync>,
+    i: usize,
+) {
+    let n = team.size;
+    let parallel_id = team.parallel_id;
+    let level = team.level;
+    rt.sched.clone().spawn(
+        Priority::Low,
+        Hint::Worker(i),
+        "omp_implicit_task",
+        move || {
+            if let Some(host) = current_ctx() {
+                if host.team.level >= level {
+                    // Helped from a same-or-outer-level wait: requeue for a
+                    // worker that is not nested inside a team, and tell the
+                    // helper this was a miss so it backs off (no hot
+                    // steal/requeue ping-pong).
+                    crate::amt::worker::note_requeue();
+                    spawn_implicit(rt, team, join, micro, i);
+                    return;
+                }
+            }
+            let ctx = Arc::new(Ctx {
+                team: team.clone(),
+                tid: i,
+                ws_seq: AtomicUsize::new(0),
+                parent: Arc::new(ParentFrame::default()),
+                task_id: rt.ompt.fresh_task_id(),
+            });
+            rt.ompt
+                .emit_implicit_task(Endpoint::Begin, parallel_id, n, i);
+            with_ctx(ctx.clone(), || {
+                micro(&ctx);
+                // Implicit region-end barrier (includes explicit-task
+                // drain, per spec).
+                ctx.barrier();
+            });
+            rt.ompt
+                .emit_implicit_task(Endpoint::End, parallel_id, n, i);
+            join.arrive();
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::OmpRuntime;
+
+    #[test]
+    fn fork_runs_every_member_exactly_once() {
+        let rt = OmpRuntime::for_tests(4);
+        let hits = Arc::new(Mutex::new(vec![0usize; 4]));
+        let h = hits.clone();
+        fork_call(&rt, Some(4), move |ctx| {
+            h.lock().unwrap()[ctx.tid] += 1;
+        });
+        assert_eq!(*hits.lock().unwrap(), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn fork_default_uses_icv() {
+        let rt = OmpRuntime::for_tests(3);
+        rt.icv.set_nthreads(3);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        fork_call(&rt, None, move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn team_size_clamped_to_workers() {
+        let rt = OmpRuntime::for_tests(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        fork_call(&rt, Some(64), move |ctx| {
+            assert_eq!(ctx.num_threads(), 2);
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn nested_region_is_serialized_by_default() {
+        let rt = OmpRuntime::for_tests(4);
+        let inner_sizes = Arc::new(Mutex::new(Vec::new()));
+        let s = inner_sizes.clone();
+        let rt2 = rt.clone();
+        fork_call(&rt, Some(2), move |_| {
+            let s = s.clone();
+            fork_call(&rt2, Some(2), move |ctx| {
+                s.lock().unwrap().push(ctx.num_threads());
+            });
+        });
+        let sizes = inner_sizes.lock().unwrap();
+        assert_eq!(sizes.len(), 2);
+        assert!(sizes.iter().all(|&n| n == 1), "nested off => size 1");
+    }
+
+    #[test]
+    fn nested_region_active_when_enabled() {
+        let rt = OmpRuntime::for_tests(4);
+        rt.icv.nested.store(true, Ordering::Relaxed);
+        let total = Arc::new(AtomicUsize::new(0));
+        let t = total.clone();
+        let rt2 = rt.clone();
+        fork_call(&rt, Some(2), move |_| {
+            let t = t.clone();
+            fork_call(&rt2, Some(2), move |_| {
+                t.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn barrier_synchronizes_team_members() {
+        let rt = OmpRuntime::for_tests(4);
+        let before = Arc::new(AtomicUsize::new(0));
+        let after_ok = Arc::new(AtomicUsize::new(0));
+        let (b, a) = (before.clone(), after_ok.clone());
+        fork_call(&rt, Some(4), move |ctx| {
+            b.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+            if b.load(Ordering::SeqCst) == 4 {
+                a.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(after_ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn level_tracks_nesting() {
+        let rt = OmpRuntime::for_tests(4);
+        rt.icv.nested.store(true, Ordering::Relaxed);
+        let rt2 = rt.clone();
+        let levels = Arc::new(Mutex::new(Vec::new()));
+        let l = levels.clone();
+        fork_call(&rt, Some(1), move |ctx| {
+            l.lock().unwrap().push(ctx.team.level);
+            let l = l.clone();
+            fork_call(&rt2, Some(1), move |ctx| {
+                l.lock().unwrap().push(ctx.team.level);
+            });
+        });
+        assert_eq!(*levels.lock().unwrap(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,196 @@
+//! The `ParallelRuntime` abstraction: what Blaze-lite parallelizes over.
+//!
+//! The paper's experiment is "same application (Blaze), two OpenMP
+//! runtimes (hpxMP vs. the compiler-supplied one)".  This trait is the
+//! seam that makes that swap possible here: [`crate::omp`] (hpxMP) and
+//! [`crate::baseline`] (libomp-style) both implement it, and every
+//! benchmark/example takes `&dyn ParallelRuntime`.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::omp::icv::Schedule;
+use crate::omp::{fork_call, OmpRuntime};
+
+/// Loop scheduling requested by the application (maps to
+/// `#pragma omp for schedule(...)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopSched {
+    /// `schedule(static[,chunk])`
+    Static { chunk: Option<usize> },
+    /// `schedule(dynamic,chunk)`
+    Dynamic { chunk: usize },
+    /// `schedule(guided,chunk)`
+    Guided { chunk: usize },
+}
+
+impl Default for LoopSched {
+    fn default() -> Self {
+        LoopSched::Static { chunk: None }
+    }
+}
+
+/// A fork-join parallel runtime executing chunked loops.
+///
+/// `parallel_for` runs `body(sub_range)` over a partition of `range` using
+/// `num_threads` OpenMP threads; it must not return before every
+/// iteration completed (implicit end-of-region barrier).
+pub trait ParallelRuntime: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Largest usable team size.
+    fn max_threads(&self) -> usize;
+
+    /// Fork a team of `num_threads`, partition `range` per `sched`, and
+    /// run `body` on each claimed sub-range.
+    fn parallel_for(
+        &self,
+        num_threads: usize,
+        range: Range<i64>,
+        sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    );
+}
+
+/// hpxMP as a `ParallelRuntime` — the paper's system under test.
+pub struct HpxMpRuntime {
+    pub rt: Arc<OmpRuntime>,
+}
+
+impl HpxMpRuntime {
+    pub fn new(rt: Arc<OmpRuntime>) -> Self {
+        Self { rt }
+    }
+}
+
+impl ParallelRuntime for HpxMpRuntime {
+    fn name(&self) -> &'static str {
+        "hpxMP"
+    }
+
+    fn max_threads(&self) -> usize {
+        self.rt.sched.workers()
+    }
+
+    fn parallel_for(
+        &self,
+        num_threads: usize,
+        range: Range<i64>,
+        sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    ) {
+        // SAFETY-free trick: fork_call requires 'static, but we join before
+        // returning, so re-borrowing body for the region is sound.  Express
+        // it with a raw-pointer smuggle contained to this call.
+        struct Smuggle(*const (dyn Fn(Range<i64>) + Sync));
+        unsafe impl Send for Smuggle {}
+        unsafe impl Sync for Smuggle {}
+        impl Smuggle {
+            /// Method (not field) access so the closure captures the whole
+            /// `Smuggle` (which is Send+Sync), not the raw pointer field.
+            fn get(&self) -> *const (dyn Fn(Range<i64>) + Sync) {
+                self.0
+            }
+        }
+        // SAFETY: erase the borrow's lifetime; validity argued above.
+        let body_erased: &'static (dyn Fn(Range<i64>) + Sync) =
+            unsafe { std::mem::transmute(body) };
+        let smuggled = Smuggle(body_erased as *const _);
+
+        fork_call(&self.rt, Some(num_threads), move |ctx| {
+            // SAFETY: fork_call blocks until the region joins, so `body`
+            // outlives every use here.
+            let body = unsafe { &*smuggled.get() };
+            match sched {
+                LoopSched::Static { chunk } => {
+                    ctx.for_static_chunks(range.clone(), chunk, |r| body(r));
+                }
+                LoopSched::Dynamic { chunk } => {
+                    let desc = ctx.dispatch_init(
+                        range.clone(),
+                        Schedule::new(crate::omp::SchedKind::Dynamic, Some(chunk)),
+                    );
+                    while let Some(r) = ctx.dispatch_next(&desc, range.start) {
+                        body(r);
+                    }
+                    ctx.dispatch_fini(&desc);
+                }
+                LoopSched::Guided { chunk } => {
+                    let desc = ctx.dispatch_init(
+                        range.clone(),
+                        Schedule::new(crate::omp::SchedKind::Guided, Some(chunk)),
+                    );
+                    while let Some(r) = ctx.dispatch_next(&desc, range.start) {
+                        body(r);
+                    }
+                    ctx.dispatch_fini(&desc);
+                }
+            }
+            // implicit region-end barrier joins the loop
+        });
+    }
+}
+
+/// Serial execution (below Blaze's parallelization thresholds both
+/// runtimes fall back to this).
+pub struct SerialRuntime;
+
+impl ParallelRuntime for SerialRuntime {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn max_threads(&self) -> usize {
+        1
+    }
+
+    fn parallel_for(
+        &self,
+        _num_threads: usize,
+        range: Range<i64>,
+        _sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    ) {
+        body(range);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn check_covers(rt: &dyn ParallelRuntime, threads: usize, n: i64, sched: LoopSched) {
+        let seen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        rt.parallel_for(threads, 0..n, sched, &|r| {
+            for i in r {
+                seen[i as usize].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(
+            seen.iter().all(|c| c.load(Ordering::SeqCst) == 1),
+            "{} missed/duplicated iterations (threads={threads}, n={n}, {sched:?})",
+            rt.name()
+        );
+    }
+
+    #[test]
+    fn hpxmp_parallel_for_covers_all_schedules() {
+        let rt = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        for threads in [1, 2, 4] {
+            for sched in [
+                LoopSched::Static { chunk: None },
+                LoopSched::Static { chunk: Some(7) },
+                LoopSched::Dynamic { chunk: 16 },
+                LoopSched::Guided { chunk: 8 },
+            ] {
+                check_covers(&rt, threads, 1000, sched);
+            }
+        }
+    }
+
+    #[test]
+    fn serial_runtime_runs_whole_range_once() {
+        check_covers(&SerialRuntime, 1, 100, LoopSched::default());
+    }
+}

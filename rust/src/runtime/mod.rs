@@ -1,0 +1,15 @@
+//! PJRT runtime bridge: load AOT-compiled JAX/Pallas artifacts and execute
+//! them from hpxMP tasks (the three-layer request path).
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only consumer of its output.  Interchange is HLO *text* (see
+//! `python/compile/aot.py` for why), loaded via
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `PjRtLoadedExecutable`.
+
+pub mod offload;
+pub mod registry;
+pub mod server;
+
+pub use offload::XlaOffload;
+pub use registry::{ArtifactSpec, Registry};
+pub use server::{OffloadClient, OffloadServer};

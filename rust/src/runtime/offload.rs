@@ -1,0 +1,137 @@
+//! Chunked offload executor: run Blazemark operations through the
+//! AOT-compiled XLA artifacts, chunk by chunk, from hpxMP tasks.
+//!
+//! This is the "highly optimized library under OpenMP" path of the paper's
+//! motivation — with XLA standing in for the vendor BLAS: the OpenMP
+//! runtime schedules the chunks; the chunk kernel is a compiled artifact.
+//! Tail elements that don't fill an artifact-shaped chunk are computed
+//! with the native serial kernels (same results, bitwise f64).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::registry::Registry;
+use crate::blaze::serial;
+
+/// High-level offload API over a loaded [`Registry`].
+pub struct XlaOffload {
+    reg: Arc<Registry>,
+}
+
+impl XlaOffload {
+    pub fn new(reg: Arc<Registry>) -> Self {
+        Self { reg }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.reg
+    }
+
+    /// Execute one f64 daxpy chunk (`b_out = b + beta*a`) on PJRT.
+    pub fn daxpy_chunk_f64(&self, beta: f64, a: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+        let spec = self
+            .reg
+            .find_op("daxpy", "f64")
+            .ok_or_else(|| anyhow!("no f64 daxpy artifact"))?;
+        let chunk = spec.input_shapes[1][0];
+        if a.len() != chunk || b.len() != chunk {
+            return Err(anyhow!("daxpy chunk wants {chunk}, got {}", a.len()));
+        }
+        let exe = self.reg.executable(&spec.name)?;
+        let lit_beta = xla::Literal::from(beta);
+        let lit_a = xla::Literal::vec1(a);
+        let lit_b = xla::Literal::vec1(b);
+        let result = exe
+            .execute::<xla::Literal>(&[lit_beta, lit_a, lit_b])
+            .map_err(|e| anyhow!("execute daxpy: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute one f64 vadd chunk (`c = a + b`) on PJRT.
+    pub fn vadd_chunk_f64(&self, a: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+        let spec = self
+            .reg
+            .find_op("dvecdvecadd", "f64")
+            .ok_or_else(|| anyhow!("no f64 vadd artifact"))?;
+        let chunk = spec.input_shapes[0][0];
+        if a.len() != chunk || b.len() != chunk {
+            return Err(anyhow!("vadd chunk wants {chunk}, got {}", a.len()));
+        }
+        let exe = self.reg.executable(&spec.name)?;
+        let result = exe
+            .execute::<xla::Literal>(&[xla::Literal::vec1(a), xla::Literal::vec1(b)])
+            .map_err(|e| anyhow!("execute vadd: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute one f32 matmul row-block (`c_band = a_band @ b`) on PJRT.
+    /// `a_band` is `(bm, k)` row-major flat; `b` is `(k, n)` row-major flat.
+    pub fn matmul_rowblock_f32(
+        &self,
+        a_band: &[f32],
+        b: &[f32],
+    ) -> Result<(Vec<f32>, usize, usize)> {
+        let spec = self
+            .reg
+            .find_op("dmatdmatmult", "f32")
+            .ok_or_else(|| anyhow!("no f32 matmul artifact"))?;
+        let (bm, k) = (spec.input_shapes[0][0], spec.input_shapes[0][1]);
+        let n = spec.input_shapes[1][1];
+        if a_band.len() != bm * k || b.len() != k * n {
+            return Err(anyhow!(
+                "matmul wants a=({bm},{k}) b=({k},{n}); got {} and {}",
+                a_band.len(),
+                b.len()
+            ));
+        }
+        let exe = self.reg.executable(&spec.name)?;
+        let lit_a = xla::Literal::vec1(a_band).reshape(&[bm as i64, k as i64])
+            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+        let lit_b = xla::Literal::vec1(b).reshape(&[k as i64, n as i64])
+            .map_err(|e| anyhow!("reshape b: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit_a, lit_b])
+            .map_err(|e| anyhow!("execute matmul: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let v = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok((v, bm, n))
+    }
+
+    /// The native-tail contract: a full-vector daxpy where whole chunks go
+    /// through PJRT and the remainder runs the serial Rust kernel.
+    pub fn daxpy_full_f64(&self, beta: f64, a: &[f64], b: &mut [f64]) -> Result<usize> {
+        let spec = self
+            .reg
+            .find_op("daxpy", "f64")
+            .ok_or_else(|| anyhow!("no f64 daxpy artifact"))?;
+        let chunk = spec.input_shapes[1][0];
+        let n = a.len();
+        let mut offloaded = 0usize;
+        let mut i = 0usize;
+        while i + chunk <= n {
+            let out = self.daxpy_chunk_f64(beta, &a[i..i + chunk], &b[i..i + chunk])?;
+            b[i..i + chunk].copy_from_slice(&out);
+            offloaded += 1;
+            i += chunk;
+        }
+        if i < n {
+            serial::daxpy_slice(beta, &a[i..], &mut b[i..]);
+        }
+        Ok(offloaded)
+    }
+}

@@ -1,0 +1,247 @@
+//! Artifact registry: parse `artifacts/manifest.json`, load + compile the
+//! HLO text modules, and cache one `PjRtLoadedExecutable` per artifact.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One artifact's manifest entry (subset of the JSON we need).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub op: String,
+    pub dtype: String,
+    /// Parameter shapes, in call order.
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Loaded registry: a PJRT CPU client plus compiled executables.
+pub struct Registry {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    specs: Vec<ArtifactSpec>,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Registry {
+    /// Open `dir` (default `artifacts/`), parsing the manifest.  Fails
+    /// cleanly when artifacts were not built (`make artifacts`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let specs = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            dir,
+            client,
+            specs,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Find by (op, dtype) — the lookup the offload executor uses.
+    pub fn find_op(&self, op: &str, dtype: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.op == op && s.dtype == dtype)
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// Minimal JSON walk for our known manifest shape (offline build: no serde
+/// facade crate).  Tolerates whitespace/ordering but not arbitrary JSON.
+fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    // Split into artifact objects: find `"artifacts": [` then top-level
+    // objects within the array.
+    let arr_start = text
+        .find("\"artifacts\"")
+        .and_then(|i| text[i..].find('[').map(|j| i + j + 1))
+        .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+    let mut depth = 0usize;
+    let mut obj_start = None;
+    for (i, ch) in text[arr_start..].char_indices() {
+        let pos = arr_start + i;
+        match ch {
+            '{' => {
+                if depth == 0 {
+                    obj_start = Some(pos);
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    let obj = &text[obj_start.take().unwrap()..=pos];
+                    specs.push(parse_artifact(obj)?);
+                }
+            }
+            ']' if depth == 0 => break,
+            _ => {}
+        }
+    }
+    if specs.is_empty() {
+        bail!("manifest has no artifacts");
+    }
+    Ok(specs)
+}
+
+fn parse_artifact(obj: &str) -> Result<ArtifactSpec> {
+    // Scalar keys ("dtype", "op", ...) also appear inside the "inputs"
+    // array entries; excise that span before extracting top-level strings.
+    let scalars = match obj.find("\"inputs\"") {
+        Some(i) => {
+            let open = obj[i..].find('[').map(|j| i + j);
+            let close = open.and_then(|o| {
+                let mut depth = 0;
+                obj[o..].char_indices().find_map(|(k, c)| match c {
+                    '[' => {
+                        depth += 1;
+                        None
+                    }
+                    ']' => {
+                        depth -= 1;
+                        (depth == 0).then_some(o + k)
+                    }
+                    _ => None,
+                })
+            });
+            match (open, close) {
+                (Some(_), Some(c)) => format!("{}{}", &obj[..i], &obj[c + 1..]),
+                _ => obj.to_string(),
+            }
+        }
+        None => obj.to_string(),
+    };
+    let name = json_str(&scalars, "name")?;
+    let file = json_str(&scalars, "file")?;
+    let op = json_str(&scalars, "op")?;
+    let dtype = json_str(&scalars, "dtype")?;
+    // "inputs": [{"shape": [..], "dtype": ".."}, ...]
+    let mut input_shapes = Vec::new();
+    let mut rest = obj;
+    while let Some(i) = rest.find("\"shape\"") {
+        let after = &rest[i..];
+        let lb = after.find('[').ok_or_else(|| anyhow!("bad shape"))?;
+        let rb = after.find(']').ok_or_else(|| anyhow!("bad shape"))?;
+        let inner = &after[lb + 1..rb];
+        let dims: Vec<usize> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().map_err(|_| anyhow!("bad dim '{s}'")))
+            .collect::<Result<_>>()?;
+        input_shapes.push(dims);
+        rest = &after[rb..];
+    }
+    Ok(ArtifactSpec {
+        name,
+        file,
+        op,
+        dtype,
+        input_shapes,
+    })
+}
+
+fn json_str(obj: &str, key: &str) -> Result<String> {
+    let pat = format!("\"{key}\"");
+    let i = obj
+        .find(&pat)
+        .ok_or_else(|| anyhow!("manifest entry missing '{key}'"))?;
+    let after = &obj[i + pat.len()..];
+    let colon = after.find(':').ok_or_else(|| anyhow!("bad json"))?;
+    let after = after[colon + 1..].trim_start();
+    if !after.starts_with('"') {
+        bail!("'{key}' is not a string");
+    }
+    let end = after[1..]
+        .find('"')
+        .ok_or_else(|| anyhow!("unterminated string"))?;
+    Ok(after[1..1 + end].to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "vadd_f64_65536", "file": "vadd_f64_65536.hlo.txt",
+         "inputs": [{"shape": [65536], "dtype": "float64"},
+                    {"shape": [65536], "dtype": "float64"}],
+         "sha256": "x", "op": "dvecdvecadd", "dtype": "f64", "chunk": 65536},
+        {"name": "matmul_f32_64x512x512", "file": "m.hlo.txt",
+         "inputs": [{"shape": [64, 512], "dtype": "float32"},
+                    {"shape": [512, 512], "dtype": "float32"}],
+         "sha256": "y", "op": "dmatdmatmult", "dtype": "f32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest_entries() {
+        let specs = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "vadd_f64_65536");
+        assert_eq!(specs[0].op, "dvecdvecadd");
+        assert_eq!(specs[0].input_shapes, vec![vec![65536], vec![65536]]);
+        assert_eq!(specs[1].input_shapes[0], vec![64, 512]);
+    }
+
+    #[test]
+    fn rejects_empty_manifest() {
+        assert!(parse_manifest("{\"artifacts\": []}").is_err());
+        assert!(parse_manifest("{}").is_err());
+    }
+
+    #[test]
+    fn json_str_extracts_values() {
+        assert_eq!(json_str(r#"{"a": "b"}"#, "a").unwrap(), "b");
+        assert!(json_str(r#"{"a": 3}"#, "a").is_err());
+        assert!(json_str(r#"{}"#, "a").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Offload server: a dedicated executor thread owning the PJRT client.
+//!
+//! The `xla` crate's client/executable handles are `Rc`-based (not `Send`),
+//! while hpxMP tasks run on arbitrary workers.  The standard device-executor
+//! pattern decouples them: one thread owns the [`Registry`]; workers submit
+//! requests through a channel and block on a reply channel.  On the 1-core
+//! testbed this costs no parallelism; on a multi-queue device the server
+//! thread would multiplex streams instead.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::offload::XlaOffload;
+use super::registry::Registry;
+
+enum Req {
+    DaxpyChunkF64 {
+        beta: f64,
+        a: Vec<f64>,
+        b: Vec<f64>,
+        reply: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    VaddChunkF64 {
+        a: Vec<f64>,
+        b: Vec<f64>,
+        reply: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    MatmulRowBlockF32 {
+        a_band: Vec<f32>,
+        b: std::sync::Arc<Vec<f32>>,
+        reply: mpsc::Sender<Result<(Vec<f32>, usize, usize)>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle for submitting offload requests.
+#[derive(Clone)]
+pub struct OffloadClient {
+    tx: mpsc::Sender<Req>,
+}
+
+impl OffloadClient {
+    pub fn daxpy_chunk_f64(&self, beta: f64, a: Vec<f64>, b: Vec<f64>) -> Result<Vec<f64>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::DaxpyChunkF64 { beta, a, b, reply })
+            .map_err(|_| anyhow!("offload server gone"))?;
+        rx.recv().map_err(|_| anyhow!("offload server dropped reply"))?
+    }
+
+    pub fn vadd_chunk_f64(&self, a: Vec<f64>, b: Vec<f64>) -> Result<Vec<f64>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::VaddChunkF64 { a, b, reply })
+            .map_err(|_| anyhow!("offload server gone"))?;
+        rx.recv().map_err(|_| anyhow!("offload server dropped reply"))?
+    }
+
+    pub fn matmul_rowblock_f32(
+        &self,
+        a_band: Vec<f32>,
+        b: std::sync::Arc<Vec<f32>>,
+    ) -> Result<(Vec<f32>, usize, usize)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::MatmulRowBlockF32 { a_band, b, reply })
+            .map_err(|_| anyhow!("offload server gone"))?;
+        rx.recv().map_err(|_| anyhow!("offload server dropped reply"))?
+    }
+}
+
+/// The server: owns the PJRT registry on its own thread.
+pub struct OffloadServer {
+    tx: mpsc::Sender<Req>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl OffloadServer {
+    /// Start the server over `artifact_dir`.  Fails (on the calling
+    /// thread) if the registry cannot be opened.
+    pub fn start(artifact_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        let dir = artifact_dir.into();
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("xla-offload".into())
+            .spawn(move || {
+                let reg = match Registry::open(&dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        std::sync::Arc::new(r)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let off = XlaOffload::new(reg);
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::DaxpyChunkF64 { beta, a, b, reply } => {
+                            let _ = reply.send(off.daxpy_chunk_f64(beta, &a, &b));
+                        }
+                        Req::VaddChunkF64 { a, b, reply } => {
+                            let _ = reply.send(off.vadd_chunk_f64(&a, &b));
+                        }
+                        Req::MatmulRowBlockF32 { a_band, b, reply } => {
+                            let _ = reply.send(off.matmul_rowblock_f32(&a_band, &b));
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn offload server");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("offload server died during startup"))??;
+        Ok(Self {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn client(&self) -> OffloadClient {
+        OffloadClient {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for OffloadServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (offline build: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; used by `main.rs` and the example binaries.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `value_opts` lists option names that consume a following value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_opts: &[&str]) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&rest) {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(rest.to_string(), v);
+                        }
+                        None => {
+                            out.flags.push(rest.to_string());
+                        }
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(value_opts: &[&str]) -> Self {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of integers (e.g. `--threads 1,2,4`).
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{t}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], vals: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), vals)
+    }
+
+    #[test]
+    fn parses_positional_and_flags() {
+        let a = parse(&["bench", "--verbose", "x"], &[]);
+        assert_eq!(a.positional, vec!["bench", "x"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = parse(&["--op", "daxpy", "--threads=4"], &["op"]);
+        assert_eq!(a.get("op"), Some("daxpy"));
+        assert_eq!(a.get_usize("threads", 0), 4);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["--threads=1,2,8"], &[]);
+        assert_eq!(a.get_usize_list("threads", &[16]), vec![1, 2, 8]);
+        assert_eq!(a.get_usize_list("missing", &[16]), vec![16]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_or("op", "all"), "all");
+        assert_eq!(a.get_usize("reps", 3), 3);
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal CSV writer for benchmark reports (offline build: no csv crate).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// A simple row-oriented CSV writer; quotes fields containing separators.
+pub struct CsvWriter<W: Write> {
+    out: W,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self {
+            out: BufWriter::new(File::create(path)?),
+        })
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn from_writer(out: W) -> Self {
+        Self { out }
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, fields: &[S]) -> std::io::Result<()> {
+        let mut first = true;
+        for f in fields {
+            if !first {
+                write!(self.out, ",")?;
+            }
+            first = false;
+            let f = f.as_ref();
+            if f.contains(',') || f.contains('"') || f.contains('\n') {
+                write!(self.out, "\"{}\"", f.replace('"', "\"\""))?;
+            } else {
+                write!(self.out, "{f}")?;
+            }
+        }
+        writeln!(self.out)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_plain_rows() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::from_writer(&mut buf);
+            w.row(&["a", "b", "c"]).unwrap();
+            w.row(&["1", "2", "3"]).unwrap();
+        }
+        assert_eq!(String::from_utf8(buf).unwrap(), "a,b,c\n1,2,3\n");
+    }
+
+    #[test]
+    fn quotes_fields_with_commas_and_quotes() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::from_writer(&mut buf);
+            w.row(&["x,y", "he said \"hi\""]).unwrap();
+        }
+        assert_eq!(
+            String::from_utf8(buf).unwrap(),
+            "\"x,y\",\"he said \"\"hi\"\"\"\n"
+        );
+    }
+}

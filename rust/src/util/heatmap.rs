@@ -1,0 +1,136 @@
+//! ASCII heatmap renderer for the paper's Figure 2–5 ratio plots.
+//!
+//! The paper shows r = MFLOP/s(hpxMP) / MFLOP/s(OpenMP) on a
+//! threads-by-size grid.  We render the same grid in the terminal with a
+//! ramp of glyphs and also emit CSV (see `util::csv`) for plotting.
+
+/// A dense grid of ratio cells: `rows` = thread counts, `cols` = sizes.
+pub struct Heatmap {
+    pub row_labels: Vec<String>,
+    pub col_labels: Vec<String>,
+    pub cells: Vec<Vec<f64>>, // cells[row][col]
+}
+
+/// Ramp from "much slower" to "faster": the paper's colour scale, ASCII-fied.
+const RAMP: &[(f64, char)] = &[
+    (0.25, '.'),
+    (0.50, ':'),
+    (0.70, '-'),
+    (0.85, '='),
+    (0.95, '+'),
+    (1.05, '#'),
+    (1.20, '%'),
+    (f64::INFINITY, '@'),
+];
+
+pub fn glyph(ratio: f64) -> char {
+    for &(hi, g) in RAMP {
+        if ratio < hi {
+            return g;
+        }
+    }
+    '@'
+}
+
+impl Heatmap {
+    pub fn new(row_labels: Vec<String>, col_labels: Vec<String>) -> Self {
+        let cells = vec![vec![f64::NAN; col_labels.len()]; row_labels.len()];
+        Self {
+            row_labels,
+            col_labels,
+            cells,
+        }
+    }
+
+    pub fn set(&mut self, row: usize, col: usize, v: f64) {
+        self.cells[row][col] = v;
+    }
+
+    /// Render the grid with per-cell glyphs plus a legend; `title` echoes
+    /// the paper figure this reproduces.
+    pub fn render(&self, title: &str) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{title}\n"));
+        let label_w = self
+            .row_labels
+            .iter()
+            .map(|l| l.len())
+            .max()
+            .unwrap_or(4)
+            .max(4);
+        for (r, rl) in self.row_labels.iter().enumerate() {
+            s.push_str(&format!("{rl:>label_w$} |"));
+            for c in 0..self.col_labels.len() {
+                let v = self.cells[r][c];
+                s.push(if v.is_nan() { ' ' } else { glyph(v) });
+            }
+            s.push('\n');
+        }
+        s.push_str(&format!("{:>label_w$} +{}\n", "", "-".repeat(self.col_labels.len())));
+        s.push_str(&format!(
+            "{:>label_w$}  cols: {} .. {}\n",
+            "",
+            self.col_labels.first().map(String::as_str).unwrap_or(""),
+            self.col_labels.last().map(String::as_str).unwrap_or("")
+        ));
+        s.push_str("legend: <0.25 '.'  <0.5 ':'  <0.7 '-'  <0.85 '='  <0.95 '+'  ~1 '#'  <1.2 '%'  >1.2 '@'\n");
+        s
+    }
+
+    /// Mean ratio over all populated cells (used by shape assertions).
+    pub fn mean(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for row in &self.cells {
+            for &v in row {
+                if !v.is_nan() {
+                    sum += v;
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            f64::NAN
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glyph_ramp_is_monotone() {
+        let gs: Vec<char> = [0.1, 0.3, 0.6, 0.8, 0.9, 1.0, 1.1, 2.0]
+            .iter()
+            .map(|&r| glyph(r))
+            .collect();
+        assert_eq!(gs, vec!['.', ':', '-', '=', '+', '#', '%', '@']);
+    }
+
+    #[test]
+    fn render_contains_labels_and_legend() {
+        let mut h = Heatmap::new(
+            vec!["1".into(), "2".into()],
+            vec!["100".into(), "200".into()],
+        );
+        h.set(0, 0, 1.0);
+        h.set(0, 1, 0.5);
+        h.set(1, 0, 0.9);
+        h.set(1, 1, 1.3);
+        let r = h.render("Fig X");
+        assert!(r.contains("Fig X"));
+        assert!(r.contains("legend:"));
+        assert!(r.contains('#'));
+        assert!(r.contains('@'));
+    }
+
+    #[test]
+    fn mean_ignores_nan() {
+        let mut h = Heatmap::new(vec!["1".into()], vec!["a".into(), "b".into()]);
+        h.set(0, 0, 2.0);
+        assert_eq!(h.mean(), 2.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Support substrates built in-tree (the build environment is offline, so
+//! rand/clap/criterion/proptest equivalents live here).
+
+pub mod cli;
+pub mod csv;
+pub mod heatmap;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timing;

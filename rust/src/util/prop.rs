@@ -1,0 +1,99 @@
+//! In-tree mini property-testing framework (offline build: no proptest).
+//!
+//! `forall` runs a property over `cases` pseudo-random inputs drawn from a
+//! generator; on failure it reports the seed and the case index so the
+//! exact input can be replayed deterministically.  Shrinking is replaced by
+//! deterministic replay — adequate for the scheduler/runtime invariants we
+//! test (task conservation, chunk-partition exactness, dependence order).
+
+use super::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropCfg {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropCfg {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` on `cfg.cases` inputs produced by `gen`.  Panics with the
+/// replay seed on the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: PropCfg,
+    mut gen: impl FnMut(&mut Xoshiro256) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        // Derive a per-case RNG so failures replay independently of the
+        // number of draws earlier cases made.
+        let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ (case as u64).wrapping_mul(0x9E37));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}):\n  input: {input:?}\n  {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_eq<A: PartialEq + std::fmt::Debug>(a: A, b: A, ctx: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(
+            PropCfg { cases: 10, seed: 1 },
+            |r| r.next_below(100),
+            |&x| {
+                n += 1;
+                ensure(x < 100, "bound")
+            },
+        );
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        forall(
+            PropCfg { cases: 50, seed: 2 },
+            |r| r.next_below(10),
+            |&x| ensure(x < 5, "x too big"),
+        );
+    }
+
+    #[test]
+    fn ensure_eq_formats_context() {
+        assert!(ensure_eq(1, 1, "same").is_ok());
+        let e = ensure_eq(1, 2, "diff").unwrap_err();
+        assert!(e.contains("diff"));
+    }
+}

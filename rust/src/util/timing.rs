@@ -1,0 +1,102 @@
+//! Steady-state measurement loop — the in-tree stand-in for criterion
+//! (offline build), methodologically modelled on Blazemark: warm up, then
+//! repeat the operation until a minimum wall-time AND minimum repetition
+//! count are reached, and summarize per-iteration time.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchCfg {
+    /// Iterations run (and discarded) before sampling starts.
+    pub warmup_iters: usize,
+    /// Minimum sampled iterations.
+    pub min_iters: usize,
+    /// Maximum sampled iterations (caps very fast ops).
+    pub max_iters: usize,
+    /// Minimum total sampled wall time.
+    pub min_time: Duration,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            min_time: Duration::from_millis(50),
+        }
+    }
+}
+
+impl BenchCfg {
+    /// A faster profile for sweeps with many cells (heatmaps).
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            min_time: Duration::from_millis(15),
+        }
+    }
+}
+
+/// Run `f` under `cfg`, returning per-iteration seconds.
+pub fn bench(cfg: &BenchCfg, mut f: impl FnMut()) -> Summary {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.min_iters * 2);
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        let done_time = start.elapsed() >= cfg.min_time && samples.len() >= cfg.min_iters;
+        if done_time || samples.len() >= cfg.max_iters {
+            break;
+        }
+    }
+    Summary::of(&samples)
+}
+
+/// MFLOP/s given a per-iteration time summary and the FLOP count of one
+/// iteration (the paper reports Blazemark MFLOP/s; we use the median
+/// iteration like Blazemark's steady-state estimator).
+pub fn mflops(summary: &Summary, flops_per_iter: f64) -> f64 {
+    flops_per_iter / summary.median / 1.0e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let cfg = BenchCfg {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            min_time: Duration::from_micros(1),
+        };
+        let s = bench(&cfg, || n += 1);
+        assert!(s.n >= 3);
+        assert!(n as usize >= s.n + 1); // warmup included
+    }
+
+    #[test]
+    fn mflops_scales_with_flops() {
+        let s = Summary {
+            n: 1,
+            mean: 1e-3,
+            stddev: 0.0,
+            min: 1e-3,
+            max: 1e-3,
+            median: 1e-3,
+        };
+        assert!((mflops(&s, 2.0e6) - 2000.0).abs() < 1e-9);
+    }
+}

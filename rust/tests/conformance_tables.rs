@@ -1,0 +1,81 @@
+//! Integration tests for the paper's Tables 1–3 (experiment ids T1–T3 in
+//! DESIGN.md): the full conformance suite, against several scheduling
+//! policies and team sizes, via the public crate surface only.
+
+use std::sync::Arc;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::coordinator::conformance;
+use hpxmp::omp::OmpRuntime;
+
+fn assert_all_pass(rt: &Arc<OmpRuntime>, label: &str) {
+    let checks = conformance::run_all(rt);
+    let failed: Vec<String> = checks
+        .iter()
+        .filter(|c| !c.passed)
+        .map(|c| format!("{}: {}", c.feature, c.detail))
+        .collect();
+    assert!(failed.is_empty(), "[{label}] failures: {failed:?}");
+    assert_eq!(checks.len(), 21, "feature inventory drifted");
+}
+
+#[test]
+fn tables_pass_on_default_policy() {
+    let rt = OmpRuntime::for_tests(4);
+    assert_all_pass(&rt, "priority-local");
+}
+
+#[test]
+fn tables_pass_on_abp_policy() {
+    let rt = OmpRuntime::new(4, PolicyKind::Abp);
+    rt.icv.set_nthreads(4);
+    assert_all_pass(&rt, "abp");
+}
+
+#[test]
+fn tables_pass_on_global_policy() {
+    let rt = OmpRuntime::new(4, PolicyKind::Global);
+    rt.icv.set_nthreads(4);
+    assert_all_pass(&rt, "global");
+}
+
+#[test]
+fn tables_pass_on_static_priority_policy() {
+    let rt = OmpRuntime::new(4, PolicyKind::StaticPriority);
+    rt.icv.set_nthreads(4);
+    assert_all_pass(&rt, "static-priority");
+}
+
+#[test]
+fn tables_pass_on_hierarchical_policy() {
+    let rt = OmpRuntime::new(4, PolicyKind::Hierarchical);
+    rt.icv.set_nthreads(4);
+    assert_all_pass(&rt, "hierarchical");
+}
+
+#[test]
+fn small_worker_pool_clamps_teams_but_stays_correct() {
+    // The conformance suite assumes 4-thread teams; with only 2 workers
+    // team sizes clamp to 2 (DESIGN.md §4 liveness rule), so instead we
+    // verify the clamp itself plus a correct 2-thread run.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    let rt = OmpRuntime::for_tests(2);
+    let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let count = Arc::new(AtomicUsize::new(0));
+    let (s, c) = (sizes.clone(), count.clone());
+    hpxmp::omp::fork_call(&rt, Some(8), move |ctx| {
+        s.lock().unwrap().push(ctx.num_threads());
+        c.fetch_add(1, Ordering::SeqCst);
+    });
+    assert_eq!(count.load(Ordering::SeqCst), 2);
+    assert!(sizes.lock().unwrap().iter().all(|&n| n == 2));
+}
+
+#[test]
+fn render_reports_21_features() {
+    let rt = OmpRuntime::for_tests(4);
+    let checks = conformance::run_all(&rt);
+    let report = conformance::render(&checks);
+    assert!(report.contains("21/21 features pass"), "{report}");
+}

@@ -1,0 +1,274 @@
+//! Property-based invariants over the scheduler and OpenMP runtime,
+//! via the in-tree mini-prop framework (`util::prop`).
+//!
+//! These are the invariants the whole stack's soundness rests on
+//! (ops.rs's disjoint-write `SendPtr` in particular assumes the loop
+//! partition property).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use hpxmp::amt::task::Hint;
+use hpxmp::amt::{PolicyKind, Priority, Scheduler};
+use hpxmp::omp::loops::static_chunks;
+use hpxmp::omp::team::fork_call;
+use hpxmp::omp::{OmpRuntime, SchedKind, Schedule};
+use hpxmp::util::prop::{ensure, ensure_eq, forall, PropCfg};
+use hpxmp::util::rng::Xoshiro256;
+
+/// Static loop partition: every iteration claimed exactly once, for any
+/// (threads, n, chunk).
+#[test]
+fn prop_static_partition_exact() {
+    forall(
+        PropCfg { cases: 300, seed: 0xA11CE },
+        |r| {
+            let nthreads = 1 + r.next_below(17);
+            let n = r.next_below(5000) as i64;
+            let chunk = match r.next_below(3) {
+                0 => None,
+                _ => Some(1 + r.next_below(64)),
+            };
+            (nthreads, n, chunk)
+        },
+        |&(nthreads, n, chunk)| {
+            let mut seen = vec![0u32; n as usize];
+            for tid in 0..nthreads {
+                for sub in static_chunks(tid, nthreads, n, chunk) {
+                    ensure(sub.start >= 0 && sub.end <= n, "chunk out of range")?;
+                    for i in sub {
+                        seen[i as usize] += 1;
+                    }
+                }
+            }
+            ensure(
+                seen.iter().all(|&c| c == 1),
+                format!("partition broken for t={nthreads} n={n} chunk={chunk:?}"),
+            )
+        },
+    );
+}
+
+/// Static partition is balanced: max-min ≤ chunk (or 1 for contiguous).
+#[test]
+fn prop_static_partition_balanced() {
+    forall(
+        PropCfg { cases: 200, seed: 7 },
+        |r| {
+            let nthreads = 1 + r.next_below(16);
+            let n = r.next_below(2000) as i64;
+            (nthreads, n)
+        },
+        |&(nthreads, n)| {
+            let sizes: Vec<i64> = (0..nthreads)
+                .map(|tid| {
+                    static_chunks(tid, nthreads, n, None)
+                        .map(|r| r.end - r.start)
+                        .sum()
+                })
+                .collect();
+            let max = *sizes.iter().max().unwrap();
+            let min = *sizes.iter().min().unwrap();
+            ensure(
+                max - min <= 1,
+                format!("imbalance {max}-{min} for t={nthreads} n={n}"),
+            )
+        },
+    );
+}
+
+/// Task conservation across every scheduling policy: N spawned tasks run
+/// exactly once each, under mixed priorities/hints, including tasks that
+/// spawn child tasks.
+#[test]
+fn prop_scheduler_conserves_tasks() {
+    forall(
+        PropCfg { cases: 21, seed: 0xBEEF },
+        |r| {
+            let policy = PolicyKind::ALL[r.next_below(7)];
+            let workers = 1 + r.next_below(4);
+            let tasks = 50 + r.next_below(400);
+            let seed = r.next_u64();
+            (policy, workers, tasks, seed)
+        },
+        |&(policy, workers, tasks, seed)| {
+            let sched = Scheduler::new(workers, policy);
+            let count = Arc::new(AtomicUsize::new(0));
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let mut expected = 0usize;
+            for i in 0..tasks {
+                let prio = [Priority::Low, Priority::Normal, Priority::High]
+                    [rng.next_below(3)];
+                let hint = if rng.next_below(2) == 0 {
+                    Hint::Any
+                } else {
+                    Hint::Worker(i % 8)
+                };
+                let spawn_child = rng.next_below(8) == 0;
+                expected += 1 + spawn_child as usize;
+                let c = count.clone();
+                let sref = Arc::downgrade(&sched);
+                sched.spawn(prio, hint, "prop", move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    if spawn_child {
+                        if let Some(s) = sref.upgrade() {
+                            let c = c.clone();
+                            s.spawn(Priority::Normal, Hint::Any, "child", move || {
+                                c.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                    }
+                });
+            }
+            sched.wait_quiescent();
+            let got = count.load(Ordering::SeqCst);
+            sched.shutdown();
+            ensure_eq(got, expected, &format!("policy {}", policy.name()))
+        },
+    );
+}
+
+/// Dynamic/guided worksharing covers the range exactly once for random
+/// team sizes, ranges and chunks.
+#[test]
+fn prop_dispatch_covers_exactly() {
+    forall(
+        PropCfg { cases: 25, seed: 0xD15 },
+        |r| {
+            let threads = 1 + r.next_below(4);
+            let n = 1 + r.next_below(3000) as i64;
+            let chunk = 1 + r.next_below(97);
+            let guided = r.next_below(2) == 1;
+            (threads, n, chunk, guided)
+        },
+        |&(threads, n, chunk, guided)| {
+            let rt = OmpRuntime::for_tests(threads);
+            let seen = Arc::new(Mutex::new(vec![0u32; n as usize]));
+            let s = seen.clone();
+            let kind = if guided {
+                SchedKind::Guided
+            } else {
+                SchedKind::Dynamic
+            };
+            fork_call(&rt, Some(threads), move |ctx| {
+                ctx.for_dynamic(0..n, Schedule::new(kind, Some(chunk)), |i| {
+                    s.lock().unwrap()[i as usize] += 1;
+                });
+            });
+            let seen = seen.lock().unwrap();
+            ensure(
+                seen.iter().all(|&c| c == 1),
+                format!("dispatch broken t={threads} n={n} chunk={chunk} guided={guided}"),
+            )
+        },
+    );
+}
+
+/// Dependence chains execute in program order regardless of team size.
+#[test]
+fn prop_inout_chain_is_serialized() {
+    forall(
+        PropCfg { cases: 12, seed: 0xC0DE },
+        |r| {
+            let threads = 1 + r.next_below(4);
+            let len = 2 + r.next_below(24);
+            (threads, len)
+        },
+        |&(threads, len)| {
+            use hpxmp::omp::{current_ctx, Dep, DepKind};
+            let rt = OmpRuntime::for_tests(threads);
+            let trace = Arc::new(Mutex::new(Vec::new()));
+            let t = trace.clone();
+            fork_call(&rt, Some(threads), move |c| {
+                if c.tid == 0 {
+                    let ctx = current_ctx().unwrap();
+                    for step in 0..len {
+                        let t = t.clone();
+                        ctx.task_with_deps(
+                            &[Dep {
+                                addr: 0x5EED,
+                                kind: DepKind::InOut,
+                            }],
+                            move || t.lock().unwrap().push(step),
+                        );
+                    }
+                    ctx.taskwait();
+                }
+            });
+            let got = trace.lock().unwrap().clone();
+            ensure_eq(got, (0..len).collect::<Vec<_>>(), "chain order")
+        },
+    );
+}
+
+/// The barrier is a full synchronization: writes before it are visible
+/// after it, for every policy.
+#[test]
+fn prop_barrier_publishes_writes() {
+    forall(
+        PropCfg { cases: 14, seed: 0xBA2 },
+        |r| {
+            let policy = PolicyKind::ALL[r.next_below(7)];
+            let threads = 2 + r.next_below(3);
+            (policy, threads)
+        },
+        |&(policy, threads)| {
+            let rt = OmpRuntime::new(threads, policy);
+            rt.icv.set_nthreads(threads);
+            let slots = Arc::new((0..threads).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+            let fails = Arc::new(AtomicUsize::new(0));
+            let (s, f) = (slots.clone(), fails.clone());
+            fork_call(&rt, Some(threads), move |ctx| {
+                s[ctx.tid].store(ctx.tid + 1, Ordering::Relaxed);
+                ctx.barrier();
+                for t in 0..threads {
+                    if s[t].load(Ordering::Relaxed) != t + 1 {
+                        f.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            });
+            ensure_eq(
+                fails.load(Ordering::SeqCst),
+                0,
+                &format!("policy {}", policy.name()),
+            )
+        },
+    );
+}
+
+/// Blaze parallel ops bit-match the serial kernels for any size/threads —
+/// the correctness contract behind every benchmark figure.
+#[test]
+fn prop_blaze_parallel_matches_serial() {
+    use hpxmp::blaze::{self, BlazeConfig, DynVector};
+    use hpxmp::par::{HpxMpRuntime, LoopSched, ParallelRuntime};
+    forall(
+        PropCfg { cases: 10, seed: 0xB1A2E },
+        |r| {
+            let threads = 1 + r.next_below(4);
+            // Straddle the 38k threshold.
+            let n = 30_000 + r.next_below(30_000);
+            let sched = match r.next_below(3) {
+                0 => LoopSched::Static { chunk: None },
+                1 => LoopSched::Dynamic { chunk: 4096 },
+                _ => LoopSched::Guided { chunk: 2048 },
+            };
+            let seed = r.next_u64();
+            (threads, n, sched, seed)
+        },
+        |&(threads, n, sched, seed)| {
+            let rt = HpxMpRuntime::new(OmpRuntime::for_tests(threads));
+            let a = DynVector::random(n, seed);
+            let b0 = DynVector::random(n, seed ^ 1);
+            let mut b_par = b0.clone();
+            let cfg = BlazeConfig { threads, sched };
+            blaze::daxpy(&rt, &cfg, 3.0, &a, &mut b_par);
+            let mut b_ser = b0.clone();
+            hpxmp::blaze::serial::daxpy_slice(3.0, a.as_slice(), b_ser.as_mut_slice());
+            ensure(
+                b_par.max_abs_diff(&b_ser) == 0.0,
+                format!("daxpy mismatch n={n} threads={threads} {:?}", rt.name()),
+            )
+        },
+    );
+}

@@ -1,0 +1,174 @@
+//! Integration over the PJRT bridge: artifacts load, compile, execute, and
+//! match the native kernels — the numerical contract of the three-layer
+//! path.  Skipped gracefully when `make artifacts` has not run.
+
+use std::sync::Arc;
+
+use hpxmp::blaze::serial;
+use hpxmp::runtime::{OffloadServer, Registry, XlaOffload};
+use hpxmp::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    // Tests run from the workspace root or rust/; probe both.
+    for cand in ["artifacts", "../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn registry_loads_all_seven_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::open(dir).expect("open registry");
+    assert_eq!(reg.specs().len(), 7);
+    for op in ["daxpy", "dvecdvecadd", "dmatdmatadd"] {
+        assert!(reg.find_op(op, "f32").is_some(), "{op} f32");
+        assert!(reg.find_op(op, "f64").is_some(), "{op} f64");
+    }
+    assert!(reg.find_op("dmatdmatmult", "f32").is_some());
+}
+
+#[test]
+fn daxpy_chunk_matches_native_bitwise() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Arc::new(Registry::open(dir).unwrap());
+    let off = XlaOffload::new(reg.clone());
+    let chunk = reg.find_op("daxpy", "f64").unwrap().input_shapes[1][0];
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut a = vec![0.0f64; chunk];
+    let mut b = vec![0.0f64; chunk];
+    rng.fill_f64(&mut a);
+    rng.fill_f64(&mut b);
+    let got = off.daxpy_chunk_f64(3.0, &a, &b).unwrap();
+    let mut expect = b.clone();
+    serial::daxpy_slice(3.0, &a, &mut expect);
+    let max = got
+        .iter()
+        .zip(&expect)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max < 1e-15, "daxpy chunk mismatch {max}");
+}
+
+#[test]
+fn vadd_chunk_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Arc::new(Registry::open(dir).unwrap());
+    let off = XlaOffload::new(reg.clone());
+    let chunk = reg.find_op("dvecdvecadd", "f64").unwrap().input_shapes[0][0];
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let mut a = vec![0.0f64; chunk];
+    let mut b = vec![0.0f64; chunk];
+    rng.fill_f64(&mut a);
+    rng.fill_f64(&mut b);
+    let got = off.vadd_chunk_f64(&a, &b).unwrap();
+    let mut expect = vec![0.0f64; chunk];
+    serial::vadd_slice(&a, &b, &mut expect);
+    assert_eq!(got, expect, "vadd must be bitwise-identical");
+}
+
+#[test]
+fn matmul_rowblock_matches_native_f32() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Arc::new(Registry::open(dir).unwrap());
+    let off = XlaOffload::new(reg.clone());
+    let spec = reg.find_op("dmatdmatmult", "f32").unwrap().clone();
+    let (bm, k) = (spec.input_shapes[0][0], spec.input_shapes[0][1]);
+    let n = spec.input_shapes[1][1];
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let mut a = vec![0.0f32; bm * k];
+    let mut b = vec![0.0f32; k * n];
+    rng.fill_f32(&mut a);
+    rng.fill_f32(&mut b);
+    let (got, gbm, gn) = off.matmul_rowblock_f32(&a, &b).unwrap();
+    assert_eq!((gbm, gn), (bm, n));
+    // f64 oracle.
+    let af: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+    let bf: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+    let mut row = vec![0.0f64; n];
+    let mut max_err = 0.0f32;
+    for i in 0..bm {
+        serial::matmul_row(&af[i * k..(i + 1) * k], &bf, n, &mut row);
+        for j in 0..n {
+            max_err = max_err.max((got[i * n + j] - row[j] as f32).abs());
+        }
+    }
+    assert!(max_err < 1e-2, "matmul block err {max_err}");
+}
+
+#[test]
+fn full_daxpy_with_tail_offloads_and_matches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Arc::new(Registry::open(dir).unwrap());
+    let off = XlaOffload::new(reg.clone());
+    let chunk = reg.find_op("daxpy", "f64").unwrap().input_shapes[1][0];
+    let n = 2 * chunk + 777; // two chunks + odd tail
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let mut a = vec![0.0f64; n];
+    let mut b = vec![0.0f64; n];
+    rng.fill_f64(&mut a);
+    rng.fill_f64(&mut b);
+    let mut expect = b.clone();
+    serial::daxpy_slice(2.5, &a, &mut expect);
+    let chunks = off.daxpy_full_f64(2.5, &a, &mut b).unwrap();
+    assert_eq!(chunks, 2);
+    let max = b
+        .iter()
+        .zip(&expect)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max < 1e-15, "full daxpy mismatch {max}");
+}
+
+#[test]
+fn offload_server_is_usable_from_many_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = OffloadServer::start(dir).unwrap();
+    let chunk = 65_536usize;
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let client = server.client();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::seed_from_u64(t);
+                let mut a = vec![0.0f64; chunk];
+                let mut b = vec![0.0f64; chunk];
+                rng.fill_f64(&mut a);
+                rng.fill_f64(&mut b);
+                let got = client.daxpy_chunk_f64(1.5, a.clone(), b.clone()).unwrap();
+                let mut expect = b;
+                serial::daxpy_slice(1.5, &a, &mut expect);
+                // XLA may fuse b + beta*a into an FMA: allow 1-ulp drift.
+                let max = got
+                    .iter()
+                    .zip(&expect)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(max < 1e-15, "thread {t}: max err {max}");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::open(dir).unwrap();
+    let e1 = reg.executable("vadd_f64_65536").unwrap();
+    let e2 = reg.executable("vadd_f64_65536").unwrap();
+    assert!(Arc::ptr_eq(&e1, &e2), "compile cache miss");
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::open(dir).unwrap();
+    assert!(reg.executable("nonexistent").is_err());
+    assert!(reg.find_op("dmatdmatmult", "f64").is_none());
+}
