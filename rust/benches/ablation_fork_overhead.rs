@@ -1,0 +1,216 @@
+//! EPCC syncbench-style fork/join overhead ablation — the regression
+//! guard for the hot-team fast path (ISSUE 1; paper §6's small-size
+//! regime, where hpxMP trails libomp by per-region AMT task-management
+//! overhead).
+//!
+//! Times three constructs at each thread count in `BENCH_THREADS`
+//! (default 1,2,4,8,16):
+//!
+//! * `parallel` — empty fork/join region round-trip;
+//! * `barrier`  — barrier round-trip inside a live region;
+//! * `for`      — region + static worksharing loop over a tiny range.
+//!
+//! Each hpxMP construct runs twice: on the **hot** path (team cache on,
+//! the default) and the **cold** path (`set_hot_team_enabled(false)`,
+//! which re-allocates `Team`/`Ctx`/`Join` per region — the pre-hot-team
+//! behavior).  The baseline warm OS-thread pool is the libomp stand-in.
+//!
+//! Emits `results/BENCH_fork_overhead.json` and prints a table plus the
+//! hot/cold speedup per thread count.  `BENCH_SMOKE=1` shrinks the
+//! iteration counts for CI.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::baseline::BaselinePool;
+use hpxmp::omp::{fork_call, OmpRuntime};
+
+mod common;
+
+/// Mean seconds per call of `f` over `iters` calls.
+fn time_per(iters: usize, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+struct Row {
+    construct: &'static str,
+    runtime: &'static str,
+    threads: usize,
+    us_per_op: f64,
+}
+
+/// Time the three constructs against one hpxMP runtime configuration.
+fn bench_hpxmp(
+    label: &'static str,
+    threads: usize,
+    hot: bool,
+    iters_region: usize,
+    iters_barrier: usize,
+    rows: &mut Vec<Row>,
+) {
+    let rt = OmpRuntime::new(threads, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(threads);
+    rt.set_hot_team_enabled(hot);
+
+    // Warm up workers (and, on the hot path, populate the team cache).
+    for _ in 0..5 {
+        fork_call(&rt, Some(threads), |_| {});
+    }
+
+    let region = time_per(iters_region, || fork_call(&rt, Some(threads), |_| {}));
+    rows.push(Row {
+        construct: "parallel",
+        runtime: label,
+        threads,
+        us_per_op: region * 1e6,
+    });
+
+    // Barrier round-trip inside one live region, timed by thread 0.
+    let per_barrier = Arc::new(Mutex::new(0.0f64));
+    {
+        let out = per_barrier.clone();
+        fork_call(&rt, Some(threads), move |ctx| {
+            ctx.barrier(); // align the team before sampling
+            let t0 = Instant::now();
+            for _ in 0..iters_barrier {
+                ctx.barrier();
+            }
+            let per = t0.elapsed().as_secs_f64() / iters_barrier as f64;
+            if ctx.tid == 0 {
+                *out.lock().unwrap() = per;
+            }
+        });
+    }
+    rows.push(Row {
+        construct: "barrier",
+        runtime: label,
+        threads,
+        us_per_op: *per_barrier.lock().unwrap() * 1e6,
+    });
+
+    // Region + static worksharing loop over a tiny range (EPCC "for").
+    let n = (threads as i64) * 16;
+    let forloop = time_per(iters_region, || {
+        fork_call(&rt, Some(threads), move |ctx| {
+            ctx.for_static(0..n, None, |i| {
+                std::hint::black_box(i);
+            });
+        });
+    });
+    rows.push(Row {
+        construct: "for",
+        runtime: label,
+        threads,
+        us_per_op: forloop * 1e6,
+    });
+}
+
+/// Baseline warm OS-thread pool (the libomp comparator).
+fn bench_baseline(threads: usize, iters_region: usize, rows: &mut Vec<Row>) {
+    let pool = BaselinePool::new(threads);
+    for _ in 0..5 {
+        pool.fork(threads, &|_, _| {});
+    }
+    let region = time_per(iters_region, || pool.fork(threads, &|_, _| {}));
+    rows.push(Row {
+        construct: "parallel",
+        runtime: "baseline",
+        threads,
+        us_per_op: region * 1e6,
+    });
+
+    let n = (threads as i64) * 16;
+    let forloop = time_per(iters_region, || {
+        pool.fork(threads, &|tid, team| {
+            // Contiguous static split, like `schedule(static)`.
+            let per = n / team as i64 + i64::from(n % team as i64 != 0);
+            let lo = (tid as i64 * per).min(n);
+            let hi = ((tid as i64 + 1) * per).min(n);
+            for i in lo..hi {
+                std::hint::black_box(i);
+            }
+        });
+    });
+    rows.push(Row {
+        construct: "for",
+        runtime: "baseline",
+        threads,
+        us_per_op: forloop * 1e6,
+    });
+}
+
+fn main() {
+    let threads = common::heatmap_threads();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let iters_region = if smoke { 50 } else { 500 };
+    let iters_barrier = if smoke { 100 } else { 1000 };
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &t in &threads {
+        eprintln!("[fork_overhead] {t} thread(s)");
+        bench_hpxmp("hpxmp-hot", t, true, iters_region, iters_barrier, &mut rows);
+        bench_hpxmp("hpxmp-cold", t, false, iters_region, iters_barrier, &mut rows);
+        bench_baseline(t, iters_region, &mut rows);
+    }
+
+    // Table + hot/cold speedups.
+    println!(
+        "{:<10} {:<12} {:>8} {:>14}",
+        "construct", "runtime", "threads", "us/op"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:<12} {:>8} {:>14.3}",
+            r.construct, r.runtime, r.threads, r.us_per_op
+        );
+    }
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for &t in &threads {
+        let find = |rt: &str| {
+            rows.iter()
+                .find(|r| r.construct == "parallel" && r.runtime == rt && r.threads == t)
+                .map(|r| r.us_per_op)
+        };
+        if let (Some(hot), Some(cold)) = (find("hpxmp-hot"), find("hpxmp-cold")) {
+            if hot > 0.0 {
+                let s = cold / hot;
+                println!("empty-region speedup hot vs cold @{t} threads: {s:.2}x");
+                speedups.push((t, s));
+            }
+        }
+    }
+
+    // JSON report.
+    let mut json = String::from("{\n  \"bench\": \"fork_overhead\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"construct\": \"{}\", \"runtime\": \"{}\", \"threads\": {}, \"us_per_op\": {:.4}}}{}\n",
+            r.construct,
+            r.runtime,
+            r.threads,
+            r.us_per_op,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"speedup_hot_vs_cold_empty_region\": {");
+    for (i, (t, s)) in speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "{}\"{}\": {:.3}",
+            if i == 0 { "" } else { ", " },
+            t,
+            s
+        ));
+    }
+    json.push_str("}\n}\n");
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_fork_overhead.json");
+    std::fs::write(&path, json).expect("write BENCH_fork_overhead.json");
+    println!("{}", path.display());
+}

@@ -90,13 +90,60 @@ impl Scheduler {
             }
         });
         self.shared.queues.push(task, hint, submitter);
-        self.wake_one();
+        self.wake_n(1);
     }
 
-    fn wake_one(&self) {
-        if self.shared.sleepers.load(Ordering::SeqCst) > 0 {
-            let _g = self.shared.idle_lock.lock().unwrap();
-            self.shared.idle_cv.notify_one();
+    /// Register a whole team of tasks in one pass — the fork fast path
+    /// (paper §5.1: one `register_thread_nullary` per OpenMP thread, but a
+    /// naive loop over [`Scheduler::spawn`] pays one `live` update and one
+    /// idle-lock acquisition *per task*).  Here: one `live` update, one
+    /// queue pass, and one wake covering `min(batch, sleepers)` workers
+    /// under a single lock acquisition.
+    pub fn spawn_batch(
+        &self,
+        priority: Priority,
+        desc: &'static str,
+        bodies: Vec<(Hint, Box<dyn FnOnce() + Send + 'static>)>,
+    ) {
+        let n = bodies.len();
+        if n == 0 {
+            return;
+        }
+        self.shared.live.fetch_add(n, Ordering::Acquire);
+        Metrics::add(&self.shared.metrics.spawned, n as u64);
+        let submitter = worker::current().and_then(|(s, w)| {
+            if Arc::ptr_eq(&s, &self.shared) {
+                Some(w)
+            } else {
+                None
+            }
+        });
+        for (hint, f) in bodies {
+            self.shared
+                .queues
+                .push(Task::from_boxed(priority, desc, f), hint, submitter);
+        }
+        // A submitting worker reaches its next scheduling point immediately
+        // after this call (fork masters help-wait on the join), so it will
+        // run one of the batch itself: only the rest need wake-ups.
+        self.wake_n(if submitter.is_some() { n - 1 } else { n });
+    }
+
+    /// Notify up to `n` sleeping workers under one idle-lock acquisition;
+    /// skips the lock entirely when nobody sleeps (the hot-path case for
+    /// back-to-back fork/join regions that keep workers spinning).
+    fn wake_n(&self, n: usize) {
+        if n == 0 || self.shared.sleepers.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let _g = self.shared.idle_lock.lock().unwrap();
+        let sleeping = self.shared.sleepers.load(Ordering::SeqCst);
+        if n >= sleeping {
+            self.shared.idle_cv.notify_all();
+        } else {
+            for _ in 0..n {
+                self.shared.idle_cv.notify_one();
+            }
         }
     }
 
@@ -175,6 +222,38 @@ mod tests {
             assert_eq!(c.load(Ordering::SeqCst), 200, "policy {}", policy.name());
             s.shutdown();
         }
+    }
+
+    #[test]
+    fn spawn_batch_runs_everything_under_every_policy() {
+        for policy in PolicyKind::ALL {
+            let s = Scheduler::new(2, policy);
+            let c = Arc::new(AU::new(0));
+            let bodies: Vec<(Hint, Box<dyn FnOnce() + Send>)> = (0..64)
+                .map(|i| {
+                    let c = c.clone();
+                    let body: Box<dyn FnOnce() + Send> = Box::new(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    });
+                    (Hint::Worker(i % 2), body)
+                })
+                .collect();
+            s.spawn_batch(Priority::Low, "batch", bodies);
+            s.wait_quiescent();
+            assert_eq!(c.load(Ordering::SeqCst), 64, "policy {}", policy.name());
+            let m = s.metrics();
+            assert_eq!(m.spawned, 64);
+            assert_eq!(m.executed, 64);
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let s = Scheduler::new(1, PolicyKind::PriorityLocal);
+        s.spawn_batch(Priority::Normal, "none", Vec::new());
+        assert_eq!(s.live_tasks(), 0);
+        s.shutdown();
     }
 
     #[test]

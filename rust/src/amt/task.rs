@@ -50,6 +50,22 @@ impl Task {
         }
     }
 
+    /// Build from an already-boxed body — the batch-spawn path hands over
+    /// pre-boxed closures, and re-boxing a `Box<dyn FnOnce>` through
+    /// [`Task::new`] would pay a second allocation per task.
+    pub fn from_boxed(
+        priority: Priority,
+        desc: &'static str,
+        f: Box<dyn FnOnce() + Send + 'static>,
+    ) -> Self {
+        Self {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            priority,
+            desc,
+            f,
+        }
+    }
+
     /// Consume and execute the task body.
     pub fn run(self) {
         (self.f)()

@@ -7,8 +7,11 @@
 //! per-loop turnstile.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
+use std::ptr;
+use std::sync::atomic::{AtomicI64, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+
+use crossbeam_utils::CachePadded;
 
 use super::barrier::wait_tick_no_help;
 use super::icv::{SchedKind, Schedule};
@@ -16,6 +19,9 @@ use super::team::Ctx;
 
 /// Team-shared descriptor for one dynamically-scheduled loop instance.
 pub struct LoopDesc {
+    /// Construct sequence this descriptor belongs to (its [`WsRing`] slot
+    /// tag; all team members observe the same per-thread sequence).
+    seq: u64,
     /// Next unclaimed iteration (normalized, i.e. 0-based).
     next: AtomicI64,
     /// One-past-last iteration.
@@ -30,9 +36,10 @@ pub struct LoopDesc {
 }
 
 impl LoopDesc {
-    fn new(n: i64, schedule: Schedule, team_size: usize) -> Self {
+    fn new(seq: u64, n: i64, schedule: Schedule, team_size: usize) -> Self {
         let chunk = schedule.chunk.unwrap_or(1).max(1) as i64;
         Self {
+            seq,
             next: AtomicI64::new(0),
             end: n,
             kind: schedule.kind,
@@ -65,12 +72,176 @@ impl LoopDesc {
             },
             _ => {
                 // Dynamic (and the shared-descriptor fallback for others):
-                // fixed-size chunks off a shared counter.
-                let cur = self.next.fetch_add(self.chunk, Ordering::AcqRel);
-                if cur >= self.end {
-                    return None;
+                // fixed-size chunks off a shared counter.  CAS-bounded: a
+                // plain `fetch_add` would let every late arrival on an
+                // exhausted loop push `next` past `end` by `chunk` — over
+                // many reused descriptors/loops that unbounded overshoot is
+                // also an i64-wraparound hazard.
+                let mut cur = self.next.load(Ordering::Acquire);
+                loop {
+                    if cur >= self.end {
+                        return None;
+                    }
+                    let hi = (cur + self.chunk).min(self.end);
+                    match self.next.compare_exchange_weak(
+                        cur,
+                        hi,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    ) {
+                        Ok(_) => return Some(cur..hi),
+                        Err(actual) => cur = actual,
+                    }
                 }
-                Some(cur..(cur + self.chunk).min(self.end))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WsRing — lock-free worksharing-descriptor slots (DESIGN.md §6)
+// ---------------------------------------------------------------------------
+
+/// Number of concurrently-live worksharing constructs a team supports
+/// before fast threads must wait for stragglers to retire an old slot.
+/// `nowait` loops let members run ahead; 16 in-flight constructs of
+/// headroom makes the blocking fallback unobservable in practice.
+pub(super) const WS_RING_SLOTS: usize = 16;
+
+/// One descriptor slot: a tag identifying the construct occupying it and
+/// the published descriptor pointer (a manually-managed `Arc` strong ref).
+struct WsSlot {
+    /// `0` = free; otherwise `seq + 1` of the occupying construct.
+    tag: AtomicU64,
+    /// Null while the claiming thread installs the descriptor.
+    desc: AtomicPtr<LoopDesc>,
+}
+
+/// Fixed ring of lock-free descriptor slots indexed by construct sequence —
+/// the hot-path replacement for the former `Mutex<HashMap<u64, Arc<..>>>`:
+/// `dispatch_init`/`dispatch_next`/`dispatch_fini` take no lock as long as
+/// constructs no further than `WS_RING_SLOTS` apart are in flight.
+///
+/// Protocol per slot (tag transitions `0 -> seq+1 -> 0`):
+/// * claim: CAS the tag from `0` to `seq + 1`, build the descriptor, then
+///   publish it with a release store of the pointer;
+/// * join: a thread seeing its own tag spins for the published pointer and
+///   takes an extra strong count;
+/// * retire: the *last* team member through `dispatch_fini` swaps the
+///   pointer out, drops the ring's strong count, and frees the tag last.
+///
+/// A joining thread can never observe a retire in progress: retiring
+/// requires all `team.size` fini calls, and every member inits before it
+/// finis, so a reader in `get_or_insert` still holds the construct open.
+pub(super) struct WsRing {
+    slots: Box<[CachePadded<WsSlot>]>,
+    /// Times a thread found its slot occupied by an older construct and had
+    /// to wait (diagnostics; bounded-overlap fallback, not an error).
+    contended: AtomicU64,
+}
+
+impl WsRing {
+    pub(super) fn new() -> Self {
+        Self {
+            slots: (0..WS_RING_SLOTS)
+                .map(|_| {
+                    CachePadded::new(WsSlot {
+                        tag: AtomicU64::new(0),
+                        desc: AtomicPtr::new(ptr::null_mut()),
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            contended: AtomicU64::new(0),
+        }
+    }
+
+    /// Get-or-create the descriptor for construct `seq`; lock-free unless
+    /// the slot is still held by a construct > `WS_RING_SLOTS` behind.
+    pub(super) fn get_or_insert(
+        &self,
+        seq: u64,
+        make: impl FnOnce() -> LoopDesc,
+    ) -> Arc<LoopDesc> {
+        let slot = &self.slots[(seq as usize) % WS_RING_SLOTS];
+        let tag = seq + 1;
+        let mut make = Some(make);
+        let mut spins = 0u32;
+        loop {
+            match slot.tag.load(Ordering::Acquire) {
+                t if t == tag => {
+                    // A teammate claimed this construct: join its descriptor
+                    // as soon as the claimant publishes the pointer.
+                    let mut inner = 0u32;
+                    loop {
+                        let p = slot.desc.load(Ordering::Acquire);
+                        if !p.is_null() {
+                            // SAFETY: the ring owns one strong count until
+                            // retire, and retire needs this thread's
+                            // `dispatch_fini` first (see type docs), so `p`
+                            // is a live Arc allocation here.
+                            unsafe {
+                                Arc::increment_strong_count(p);
+                                return Arc::from_raw(p);
+                            }
+                        }
+                        wait_tick_no_help(&mut inner);
+                    }
+                }
+                0 => {
+                    if slot
+                        .tag
+                        .compare_exchange(0, tag, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        let arc = Arc::new((make.take().expect("claimed once"))());
+                        let raw = Arc::into_raw(arc.clone()) as *mut LoopDesc;
+                        slot.desc.store(raw, Ordering::Release);
+                        return arc;
+                    }
+                }
+                _ => {
+                    // Occupied by an older construct: bounded-overlap
+                    // fallback — wait (no task help: we may already be
+                    // mid-construct) for its team-wide retire.
+                    if spins == 0 {
+                        self.contended.fetch_add(1, Ordering::Relaxed);
+                    }
+                    wait_tick_no_help(&mut spins);
+                }
+            }
+        }
+    }
+
+    /// Free construct `seq`'s slot (called by the last finishing member).
+    pub(super) fn retire(&self, seq: u64) {
+        let slot = &self.slots[(seq as usize) % WS_RING_SLOTS];
+        debug_assert_eq!(slot.tag.load(Ordering::Acquire), seq + 1);
+        let p = slot.desc.swap(ptr::null_mut(), Ordering::AcqRel);
+        if !p.is_null() {
+            // SAFETY: reclaim the strong count `get_or_insert` leaked into
+            // the slot at publication.
+            unsafe { drop(Arc::from_raw(p)) };
+        }
+        // Tag release is last: a claimer that wins the `0 -> seq'+1` CAS
+        // is ordered after the null pointer store above.
+        slot.tag.store(0, Ordering::Release);
+    }
+
+    /// Diagnostics: slot-occupied waits observed (see field docs).
+    pub(super) fn contended_waits(&self) -> u64 {
+        self.contended.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for WsRing {
+    fn drop(&mut self) {
+        // Paranoia for panicked regions: release any unretired descriptors.
+        for slot in self.slots.iter() {
+            let p = slot.desc.swap(ptr::null_mut(), Ordering::AcqRel);
+            if !p.is_null() {
+                // SAFETY: same leaked strong count as in `retire`.
+                unsafe { drop(Arc::from_raw(p)) };
             }
         }
     }
@@ -180,20 +351,22 @@ impl Ctx {
     }
 
     /// Get-or-create the team-shared descriptor for this construct
-    /// (`__kmpc_dispatch_init`).
+    /// (`__kmpc_dispatch_init`).  Lock-free: first arrival claims a
+    /// [`WsRing`] slot via CAS and publishes the descriptor; teammates
+    /// join it without ever taking a lock (DESIGN.md §6).
     pub fn dispatch_init(&self, range: Range<i64>, schedule: Schedule) -> Arc<LoopDesc> {
         let seq = self.next_ws_seq();
         // Resolve schedule(runtime) against the run-sched ICV.
         let schedule = if schedule.kind == SchedKind::Runtime {
-            self.team.rt.icv.run_sched()
+            self.team.rt().icv.run_sched()
         } else {
             schedule
         };
         let n = (range.end - range.start).max(0);
-        let mut ws = self.team.ws.lock().unwrap();
-        ws.entry(seq)
-            .or_insert_with(|| Arc::new(LoopDesc::new(n, schedule, self.team.size)))
-            .clone()
+        let size = self.team.size;
+        self.team
+            .ws
+            .get_or_insert(seq, || LoopDesc::new(seq, n, schedule, size))
     }
 
     /// Claim the next chunk of a dispatch loop (`__kmpc_dispatch_next`),
@@ -203,11 +376,11 @@ impl Ctx {
     }
 
     /// Retire this thread from the construct (`__kmpc_dispatch_fini`);
-    /// the last thread garbage-collects the descriptor.
+    /// the last thread frees the descriptor's ring slot.  Lock-free: one
+    /// `fetch_add` per member plus one pointer swap by the last one.
     pub fn dispatch_fini(&self, desc: &Arc<LoopDesc>) {
         if desc.done.fetch_add(1, Ordering::AcqRel) + 1 == self.team.size {
-            let mut ws = self.team.ws.lock().unwrap();
-            ws.retain(|_, d| !Arc::ptr_eq(d, desc));
+            self.team.ws.retire(desc.seq);
         }
     }
 
@@ -326,7 +499,7 @@ mod tests {
 
     #[test]
     fn loop_desc_dynamic_claims_disjoint_chunks() {
-        let d = LoopDesc::new(100, Schedule::new(SchedKind::Dynamic, Some(7)), 4);
+        let d = LoopDesc::new(0, 100, Schedule::new(SchedKind::Dynamic, Some(7)), 4);
         let mut seen = vec![0u32; 100];
         while let Some(r) = d.next_chunk() {
             for i in r {
@@ -337,8 +510,68 @@ mod tests {
     }
 
     #[test]
+    fn dynamic_counter_never_overshoots_end() {
+        // Regression: the old `fetch_add` path bumped `next` past `end` by
+        // `chunk` per exhausted-loop call; the CAS bound must clamp it.
+        let d = Arc::new(LoopDesc::new(0, 100, Schedule::new(SchedKind::Dynamic, Some(7)), 8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let d = d.clone();
+                std::thread::spawn(move || {
+                    // Drain, then keep hammering the exhausted descriptor
+                    // like late arrivals would.
+                    while d.next_chunk().is_some() {}
+                    for _ in 0..1000 {
+                        assert!(d.next_chunk().is_none());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            d.next.load(Ordering::SeqCst) <= d.end,
+            "counter overshot: {} > {}",
+            d.next.load(Ordering::SeqCst),
+            d.end
+        );
+    }
+
+    #[test]
+    fn ws_ring_claims_joins_and_retires() {
+        let ring = WsRing::new();
+        // Same seq from "two threads": one claims, the other joins.
+        let a = ring.get_or_insert(5, || {
+            LoopDesc::new(5, 10, Schedule::new(SchedKind::Dynamic, None), 2)
+        });
+        let b = ring.get_or_insert(5, || panic!("second arrival must join, not rebuild"));
+        assert!(Arc::ptr_eq(&a, &b));
+        ring.retire(5);
+        // Slot is reusable for a wrapped sequence (5 + WS_RING_SLOTS).
+        let seq2 = 5 + WS_RING_SLOTS as u64;
+        let c = ring.get_or_insert(seq2, || {
+            LoopDesc::new(seq2, 3, Schedule::new(SchedKind::Dynamic, None), 1)
+        });
+        assert_eq!(c.end, 3);
+        ring.retire(seq2);
+        assert_eq!(ring.contended_waits(), 0);
+    }
+
+    #[test]
+    fn ws_ring_drop_frees_unretired_descriptors() {
+        let ring = WsRing::new();
+        let d = ring.get_or_insert(0, || {
+            LoopDesc::new(0, 1, Schedule::new(SchedKind::Dynamic, None), 4)
+        });
+        assert_eq!(Arc::strong_count(&d), 2); // ours + the ring's
+        drop(ring); // must reclaim the ring's count without retire()
+        assert_eq!(Arc::strong_count(&d), 1);
+    }
+
+    #[test]
     fn loop_desc_guided_shrinks_and_covers() {
-        let d = LoopDesc::new(1000, Schedule::new(SchedKind::Guided, Some(4)), 4);
+        let d = LoopDesc::new(0, 1000, Schedule::new(SchedKind::Guided, Some(4)), 4);
         let mut sizes = Vec::new();
         let mut covered = 0i64;
         while let Some(r) = d.next_chunk() {
@@ -354,7 +587,7 @@ mod tests {
     #[test]
     fn empty_loop_yields_nothing() {
         assert_eq!(static_chunks(0, 4, 0, None).count(), 0);
-        let d = LoopDesc::new(0, Schedule::new(SchedKind::Dynamic, None), 2);
+        let d = LoopDesc::new(0, 0, Schedule::new(SchedKind::Dynamic, None), 2);
         assert!(d.next_chunk().is_none());
     }
 }

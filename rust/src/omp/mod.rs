@@ -22,7 +22,8 @@ pub mod sync;
 pub mod tasking;
 pub mod team;
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use once_cell::sync::OnceCell;
@@ -31,7 +32,7 @@ use crate::amt::{PolicyKind, Scheduler};
 
 pub use icv::{SchedKind, Schedule};
 pub use tasking::{dep_in, dep_inout, dep_out, Dep, DepKind};
-pub use team::{current_ctx, fork_call, Ctx};
+pub use team::{current_ctx, fork_call, Ctx, HotTeam};
 
 /// One hpxMP runtime instance: the AMT scheduler ("HPX backend") plus ICVs
 /// and the OMPT registry.
@@ -40,6 +41,24 @@ pub struct OmpRuntime {
     pub icv: icv::Icvs,
     pub ompt: ompt::OmptRegistry,
     start: Instant,
+    /// Cached idle top-level team (libomp "hot team" style; DESIGN.md §5).
+    /// Teams hold only a `Weak` back-reference, so this cache creates no
+    /// runtime self-cycle.
+    pub(crate) hot_team: Mutex<Option<HotTeam>>,
+    /// Hot-team caching toggle (`HPXMP_HOT_TEAM=0` disables — the
+    /// cold-path baseline the fork-overhead ablation measures against).
+    hot_team_on: AtomicBool,
+}
+
+/// `HPXMP_HOT_TEAM` — defaults to on; `0|false|off|no` disables.
+fn hot_team_from_env() -> bool {
+    match std::env::var("HPXMP_HOT_TEAM") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "0" | "false" | "off" | "no"
+        ),
+        Err(_) => true,
+    }
 }
 
 impl OmpRuntime {
@@ -51,6 +70,8 @@ impl OmpRuntime {
             icv: icv::Icvs::from_env(),
             ompt: ompt::OmptRegistry::new(),
             start: Instant::now(),
+            hot_team: Mutex::new(None),
+            hot_team_on: AtomicBool::new(hot_team_from_env()),
         })
     }
 
@@ -64,7 +85,30 @@ impl OmpRuntime {
             icv,
             ompt: ompt::OmptRegistry::new(),
             start: Instant::now(),
+            hot_team: Mutex::new(None),
+            hot_team_on: AtomicBool::new(hot_team_from_env()),
         })
+    }
+
+    /// Whether top-level teams are cached across regions.
+    pub fn hot_team_enabled(&self) -> bool {
+        self.hot_team_on.load(Ordering::Relaxed)
+    }
+
+    /// Toggle hot-team caching (ablation benches compare both paths).
+    /// Disabling also drops any currently cached team.
+    pub fn set_hot_team_enabled(&self, on: bool) {
+        self.hot_team_on.store(on, Ordering::Relaxed);
+        if !on {
+            self.hot_team.lock().unwrap().take();
+        }
+    }
+
+    /// Remove and return the cached hot team (test/diagnostic hook — lets
+    /// leak checks count `Arc` references on the parked `Ctx`s).
+    #[doc(hidden)]
+    pub fn debug_take_hot_team(&self) -> Option<HotTeam> {
+        self.hot_team.lock().unwrap().take()
     }
 
     /// Small fixed-size runtime for unit tests (default policy).

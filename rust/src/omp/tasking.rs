@@ -75,7 +75,7 @@ pub(super) struct TaskNode {
 impl TaskNode {
     fn enqueue(self: &Arc<Self>) {
         let node = self.clone();
-        let sched = self.ctx.team.rt.sched.clone();
+        let sched = self.ctx.team.rt().sched.clone();
         sched.spawn(Priority::Normal, Hint::Any, "omp_explicit_task", move || {
             node.execute();
         });
@@ -88,7 +88,7 @@ impl TaskNode {
     }
 
     fn execute(self: &Arc<Self>) {
-        let rt = self.ctx.team.rt.clone();
+        let rt = self.ctx.team.rt();
         rt.ompt
             .emit_task_schedule(0, TaskStatus::Switch, self.ompt_id);
         let payload = self.payload.lock().unwrap().take();
@@ -150,6 +150,13 @@ struct DepRecord {
 }
 
 impl DepMap {
+    /// Drop all records — hot-team re-arm between regions (every task of
+    /// the finished region is retired; stale records would only pin dead
+    /// `TaskNode`s and grow without bound across reused frames).
+    pub(super) fn clear(&mut self) {
+        self.records.clear();
+    }
+
     /// Register `node`'s dependences and add the required edges:
     /// * `in`    — after the last writer.
     /// * `out`/`inout` — after the last writer AND all readers since.
@@ -187,7 +194,7 @@ impl Ctx {
 
     /// `#pragma omp task depend(...)`.
     pub fn task_with_deps(self: &Arc<Self>, deps: &[Dep], body: impl FnOnce() + Send + 'static) {
-        let rt = self.team.rt.clone();
+        let rt = self.team.rt();
         let ompt_id = rt.ompt.fresh_task_id();
         rt.ompt.emit_task_create(self.task_id, ompt_id);
 

@@ -5,16 +5,32 @@
 //! `hpx_runtime::fork` (Listing 3): one AMT task per requested OpenMP
 //! thread is registered (`"omp_implicit_task"`, low priority, one per
 //! worker queue), and the calling thread blocks until the team joins.
+//!
+//! The paper's central negative result is that this path trails a warm
+//! libomp pool in the fork-dominated regime, so it is built as a **hot
+//! fast path** (DESIGN.md §5):
+//!
+//! * serialized regions (`n == 1`) run inline on the caller's stack — no
+//!   scheduler round-trip at all;
+//! * top-level teams are cached on the runtime after join (libomp "hot
+//!   team" style) and re-armed for the next same-size region instead of
+//!   reallocating `Team` + `Ctx`s + `Join`;
+//! * on that same hot path the master participates inline as tid 0
+//!   (libomp style): only `n - 1` tasks are registered and the master
+//!   never sleeps on the join condvar for its own share;
+//! * the spawned implicit tasks are submitted through one
+//!   [`Scheduler::spawn_batch`](crate::amt::Scheduler::spawn_batch) call
+//!   (one `live` update, one wake pass).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 
 use crate::amt::task::Hint;
-use crate::amt::{worker, Priority};
+use crate::amt::Priority;
 
 use super::barrier::{wait_tick, TeamBarrier, WaitCounter};
-use super::loops::LoopDesc;
+use super::loops::WsRing;
 use super::ompt::Endpoint;
 use super::tasking::DepMap;
 use super::OmpRuntime;
@@ -22,33 +38,51 @@ use super::OmpRuntime;
 /// A parallel team: `size` implicit tasks sharing barriers, worksharing
 /// descriptors and an explicit-task pool.
 pub struct Team {
-    pub rt: Arc<OmpRuntime>,
+    /// Owning runtime, held weakly to break the
+    /// runtime → hot-team → team → runtime cycle (DESIGN.md §5).
+    rt: Weak<OmpRuntime>,
     pub size: usize,
-    /// OMPT parallel region id.
-    pub parallel_id: u64,
+    /// OMPT parallel region id — atomic so a cached team can be re-armed
+    /// with a fresh id per region.
+    parallel_id: AtomicU64,
     /// Nesting level (outermost parallel region = 1).
     pub level: usize,
     pub barrier: TeamBarrier,
     /// Explicit tasks bound to this region; drained at barriers/join.
     pub explicit: WaitCounter,
-    /// Worksharing descriptors, keyed by per-thread construct sequence.
-    pub(super) ws: Mutex<HashMap<u64, Arc<LoopDesc>>>,
+    /// Worksharing descriptors: a lock-free ring of slots indexed by
+    /// per-thread construct sequence (DESIGN.md §6).
+    pub(super) ws: WsRing,
     /// `single` construct claims: seq -> claiming tid.
     pub(super) singles: Mutex<HashMap<u64, usize>>,
 }
 
 impl Team {
-    fn new(rt: Arc<OmpRuntime>, size: usize, parallel_id: u64, level: usize) -> Arc<Self> {
+    fn new(rt: &Arc<OmpRuntime>, size: usize, parallel_id: u64, level: usize) -> Arc<Self> {
         Arc::new(Self {
-            rt,
+            rt: Arc::downgrade(rt),
             size,
-            parallel_id,
+            parallel_id: AtomicU64::new(parallel_id),
             level,
             barrier: TeamBarrier::new(size),
             explicit: WaitCounter::new(),
-            ws: Mutex::new(HashMap::new()),
+            ws: WsRing::new(),
             singles: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// The owning runtime.  Alive whenever a team member can run: the
+    /// forker holds a strong ref for the whole region, and a cached idle
+    /// team is owned *by* its runtime.
+    pub fn rt(&self) -> Arc<OmpRuntime> {
+        self.rt
+            .upgrade()
+            .expect("OmpRuntime dropped while a team was in use")
+    }
+
+    /// OMPT id of the region this team currently executes.
+    pub fn parallel_id(&self) -> u64 {
+        self.parallel_id.load(Ordering::Relaxed)
     }
 }
 
@@ -70,6 +104,17 @@ impl Default for ParentFrame {
     }
 }
 
+impl ParentFrame {
+    /// Re-arm for hot-team reuse: drop the finished region's dependence
+    /// records (their tasks are all retired — keeping them would only pin
+    /// dead `TaskNode`s in memory).
+    fn reset(&self) {
+        debug_assert_eq!(self.children.count(), 0, "reused frame with live children");
+        self.deps.lock().unwrap().clear();
+        debug_assert!(self.groups.lock().unwrap().is_empty());
+    }
+}
+
 /// The per-implicit-task (OpenMP thread) context: everything a structured
 /// block needs to use worksharing/sync/tasking constructs.
 pub struct Ctx {
@@ -79,7 +124,7 @@ pub struct Ctx {
     /// in the same order, so equal counts identify the same construct.
     pub(super) ws_seq: AtomicUsize,
     pub(super) parent: Arc<ParentFrame>,
-    /// OMPT id of this implicit task.
+    /// OMPT id of this implicit task (first region for cached teams).
     pub task_id: u64,
 }
 
@@ -138,11 +183,20 @@ pub(super) fn pop_ctx() {
 
 /// Run `f` with `ctx` as the innermost context (used by explicit tasks,
 /// which execute on arbitrary workers but must observe their team).
+/// Pops via a drop guard: the inline serialized-region and inline-master
+/// paths run user code on the *application* thread, where a panic is not
+/// swallowed by the worker's isolation — without the guard, an unwound
+/// push would leave a dead context shadowing every later region.
 pub(super) fn with_ctx<R>(ctx: Arc<Ctx>, f: impl FnOnce() -> R) -> R {
+    struct PopGuard;
+    impl Drop for PopGuard {
+        fn drop(&mut self) {
+            pop_ctx();
+        }
+    }
     push_ctx(ctx);
-    let r = f();
-    pop_ctx();
-    r
+    let _guard = PopGuard;
+    f()
 }
 
 // ---------------------------------------------------------------------------
@@ -150,6 +204,7 @@ pub(super) fn with_ctx<R>(ctx: Arc<Ctx>, f: impl FnOnce() -> R) -> R {
 // ---------------------------------------------------------------------------
 
 /// Join latch: master blocks here until every implicit task has retired.
+/// Resettable so a hot team reuses one latch across regions.
 struct Join {
     remaining: AtomicUsize,
     lock: Mutex<bool>,
@@ -165,6 +220,13 @@ impl Join {
         }
     }
 
+    /// Re-arm for the next region (no member may be in flight).
+    fn reset(&self, n: usize) {
+        let mut done = self.lock.lock().unwrap();
+        *done = false;
+        self.remaining.store(n, Ordering::Release);
+    }
+
     fn arrive(&self) {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             let mut done = self.lock.lock().unwrap();
@@ -174,7 +236,7 @@ impl Join {
     }
 
     fn wait(&self) {
-        if worker::current().is_some() {
+        if crate::amt::worker::current().is_some() {
             // Master is itself an AMT worker (nested parallelism): help run
             // tasks instead of blocking the worker.
             let mut spins = 0u32;
@@ -190,16 +252,56 @@ impl Join {
     }
 }
 
-/// The `hpx_runtime::fork` analog (paper Listing 3): create the team,
-/// register one low-priority AMT task per OpenMP thread (hinted to distinct
-/// worker queues, as hpxMP passes the os-thread index), and block the
-/// caller until the region joins.
+/// A cached idle team — the libomp "hot team" analog (DESIGN.md §5).
+/// After a top-level region joins, its `Team`, member `Ctx`s and `Join`
+/// latch are parked on the runtime; the next same-size `fork_call` re-arms
+/// them instead of reallocating, so the steady-state fork cost is just the
+/// batch task registration.
+pub struct HotTeam {
+    pub team: Arc<Team>,
+    pub ctxs: Vec<Arc<Ctx>>,
+    join: Arc<Join>,
+}
+
+impl HotTeam {
+    /// Re-arm every reusable piece for a new region: fresh parallel id,
+    /// cleared `single` claims, reset join latch, zeroed construct
+    /// sequences and dependence scopes.  The sense-reversing barrier and
+    /// the worksharing ring are self-resetting (all slots free once every
+    /// member passed the region-end barrier).
+    ///
+    /// The join latch counts `size - 1`: on the hot path the master
+    /// participates inline as tid 0 (libomp style), so only the spawned
+    /// members arrive at the latch.  Dependence scopes need no reset here
+    /// — teams are only parked pristine (cleared at the park site).
+    fn rearm(&self, parallel_id: u64) {
+        self.team.parallel_id.store(parallel_id, Ordering::Relaxed);
+        self.team.singles.lock().unwrap().clear();
+        self.join.reset(self.team.size - 1);
+        for ctx in &self.ctxs {
+            ctx.ws_seq.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The `hpx_runtime::fork` analog (paper Listing 3): create (or re-arm)
+/// the team, register one low-priority AMT task per OpenMP thread (hinted
+/// to distinct worker queues, as hpxMP passes the os-thread index), and
+/// block the caller until the region joins.
 ///
 /// The microtask runs once per team member with that member's [`Ctx`].
 pub fn fork_call(
     rt: &Arc<OmpRuntime>,
     num_threads: Option<usize>,
     micro: impl Fn(&Ctx) + Send + Sync + 'static,
+) {
+    fork_call_dyn(rt, num_threads, Arc::new(micro))
+}
+
+fn fork_call_dyn(
+    rt: &Arc<OmpRuntime>,
+    num_threads: Option<usize>,
+    micro: Arc<dyn Fn(&Ctx) + Send + Sync>,
 ) {
     let nested_in = current_ctx();
     let level = nested_in.as_ref().map(|c| c.team.level).unwrap_or(0) + 1;
@@ -215,20 +317,120 @@ pub fn fork_call(
     let parallel_id = rt.ompt.fresh_parallel_id();
     rt.ompt.emit_parallel_begin(parallel_id, n);
 
-    let team = Team::new(rt.clone(), n, parallel_id, level);
-    let join = Arc::new(Join::new(n));
-    let micro: Arc<dyn Fn(&Ctx) + Send + Sync> = Arc::new(micro);
+    if n == 1 {
+        // Serialized region fast path: run inline on the caller's stack —
+        // no team task, no scheduler round-trip, no join latch.
+        let team = Team::new(rt, 1, parallel_id, level);
+        let ctx = Arc::new(Ctx {
+            team,
+            tid: 0,
+            ws_seq: AtomicUsize::new(0),
+            parent: Arc::new(ParentFrame::default()),
+            task_id: rt.ompt.fresh_task_id(),
+        });
+        rt.ompt
+            .emit_implicit_task(Endpoint::Begin, parallel_id, 1, 0);
+        with_ctx(ctx.clone(), || {
+            micro(&ctx);
+            // Implicit region-end barrier (drains explicit tasks, per spec).
+            ctx.barrier();
+        });
+        rt.ompt.emit_implicit_task(Endpoint::End, parallel_id, 1, 0);
+        rt.ompt.emit_parallel_end(parallel_id);
+        return;
+    }
 
-    for i in 0..n {
-        spawn_implicit(rt.clone(), team.clone(), join.clone(), micro.clone(), i);
+    // Hot path: only top-level teams are cached (nested teams are rare and
+    // their lifetime nests inside a member's stack anyway).  The hot-team
+    // fast path bundles master participation: the forking thread runs
+    // tid 0 inline (libomp style), so only n-1 tasks are registered and
+    // the master never blocks on the join condvar for its own share.
+    // With caching off (`HPXMP_HOT_TEAM=0` — the ablation's cold path)
+    // the master spawns all n members and blocks, the pre-change shape.
+    let cache = level == 1 && rt.hot_team_enabled();
+    let participate = cache;
+    let hot = if cache {
+        rt.hot_team
+            .lock()
+            .unwrap()
+            .take()
+            .filter(|h| h.team.size == n)
+    } else {
+        None
+    };
+
+    let (team, ctxs, join) = match hot {
+        Some(h) => {
+            h.rearm(parallel_id);
+            let HotTeam { team, ctxs, join } = h;
+            (team, ctxs, join)
+        }
+        None => {
+            let team = Team::new(rt, n, parallel_id, level);
+            let ctxs: Vec<Arc<Ctx>> = (0..n)
+                .map(|i| {
+                    Arc::new(Ctx {
+                        team: team.clone(),
+                        tid: i,
+                        ws_seq: AtomicUsize::new(0),
+                        parent: Arc::new(ParentFrame::default()),
+                        task_id: rt.ompt.fresh_task_id(),
+                    })
+                })
+                .collect();
+            let spawned = if participate { n - 1 } else { n };
+            (team, ctxs, Arc::new(Join::new(spawned)))
+        }
+    };
+
+    // One batch submission for the whole team: one `live` update, one
+    // queue pass, one wake covering min(batch, sleepers) workers.
+    let spawn_ctxs = if participate { &ctxs[1..] } else { &ctxs[..] };
+    let bodies: Vec<(Hint, Box<dyn FnOnce() + Send>)> = spawn_ctxs
+        .iter()
+        .map(|ctx| {
+            (
+                Hint::Worker(ctx.tid),
+                implicit_body(rt.clone(), join.clone(), micro.clone(), ctx.clone()),
+            )
+        })
+        .collect();
+    rt.sched
+        .spawn_batch(Priority::Low, "omp_implicit_task", bodies);
+
+    if participate {
+        // Master is team member 0 on its own stack — deadlock-safe: it is
+        // strictly deeper than any context it could be nested in, and its
+        // barrier arrival is what the spawned members wait for.
+        let ctx0 = ctxs[0].clone();
+        rt.ompt
+            .emit_implicit_task(Endpoint::Begin, parallel_id, n, 0);
+        with_ctx(ctx0.clone(), || {
+            micro(&ctx0);
+            ctx0.barrier();
+        });
+        rt.ompt
+            .emit_implicit_task(Endpoint::End, parallel_id, n, 0);
     }
 
     join.wait();
     rt.ompt.emit_parallel_end(parallel_id);
+
+    // Re-check the toggle: a concurrent `set_hot_team_enabled(false)`
+    // since region entry already dropped the cache, and parking now would
+    // resurrect it against the caller's request.
+    if cache && rt.hot_team_enabled() {
+        // Park pristine: drop the finished region's dependence records now
+        // so an idle cached team never pins retired task graphs in memory.
+        for ctx in &ctxs {
+            ctx.parent.reset();
+        }
+        *rt.hot_team.lock().unwrap() = Some(HotTeam { team, ctxs, join });
+    }
 }
 
-/// Register one implicit task — mirrors Listing 3's
-/// `register_thread_nullary(..., thread_priority_low, i)`.
+/// Build one implicit-task body — mirrors Listing 3's
+/// `register_thread_nullary(..., thread_priority_low, i)` payload.
 ///
 /// **Nesting guard.** Blocked waits (barriers, joins, taskwaits) execute
 /// pending tasks cooperatively (`help_one`).  If such a wait popped an
@@ -241,52 +443,42 @@ pub fn fork_call(
 /// on nesting level; the deepest level has no inner teams).  Real hpxMP
 /// relies on stackful HPX threads here; the requeue guard is the
 /// closure-task equivalent (DESIGN.md §4).
-fn spawn_implicit(
+fn implicit_body(
     rt: Arc<OmpRuntime>,
-    team: Arc<Team>,
     join: Arc<Join>,
     micro: Arc<dyn Fn(&Ctx) + Send + Sync>,
-    i: usize,
-) {
-    let n = team.size;
-    let parallel_id = team.parallel_id;
-    let level = team.level;
-    rt.sched.clone().spawn(
-        Priority::Low,
-        Hint::Worker(i),
-        "omp_implicit_task",
-        move || {
-            if let Some(host) = current_ctx() {
-                if host.team.level >= level {
-                    // Helped from a same-or-outer-level wait: requeue for a
-                    // worker that is not nested inside a team, and tell the
-                    // helper this was a miss so it backs off (no hot
-                    // steal/requeue ping-pong).
-                    crate::amt::worker::note_requeue();
-                    spawn_implicit(rt, team, join, micro, i);
-                    return;
-                }
+    ctx: Arc<Ctx>,
+) -> Box<dyn FnOnce() + Send> {
+    Box::new(move || {
+        let level = ctx.team.level;
+        if let Some(host) = current_ctx() {
+            if host.team.level >= level {
+                // Helped from a same-or-outer-level wait: requeue for a
+                // worker that is not nested inside a team, and tell the
+                // helper this was a miss so it backs off (no hot
+                // steal/requeue ping-pong).
+                crate::amt::worker::note_requeue();
+                let hint = Hint::Worker(ctx.tid);
+                let sched = rt.sched.clone();
+                let body = implicit_body(rt, join, micro, ctx);
+                sched.spawn(Priority::Low, hint, "omp_implicit_task", body);
+                return;
             }
-            let ctx = Arc::new(Ctx {
-                team: team.clone(),
-                tid: i,
-                ws_seq: AtomicUsize::new(0),
-                parent: Arc::new(ParentFrame::default()),
-                task_id: rt.ompt.fresh_task_id(),
-            });
-            rt.ompt
-                .emit_implicit_task(Endpoint::Begin, parallel_id, n, i);
-            with_ctx(ctx.clone(), || {
-                micro(&ctx);
-                // Implicit region-end barrier (includes explicit-task
-                // drain, per spec).
-                ctx.barrier();
-            });
-            rt.ompt
-                .emit_implicit_task(Endpoint::End, parallel_id, n, i);
-            join.arrive();
-        },
-    );
+        }
+        let parallel_id = ctx.team.parallel_id();
+        let (n, i) = (ctx.team.size, ctx.tid);
+        rt.ompt
+            .emit_implicit_task(Endpoint::Begin, parallel_id, n, i);
+        with_ctx(ctx.clone(), || {
+            micro(&ctx);
+            // Implicit region-end barrier (includes explicit-task drain,
+            // per spec).
+            ctx.barrier();
+        });
+        rt.ompt
+            .emit_implicit_task(Endpoint::End, parallel_id, n, i);
+        join.arrive();
+    })
 }
 
 #[cfg(test)]
@@ -327,6 +519,19 @@ mod tests {
             c.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn serialized_region_runs_inline_on_caller() {
+        let rt = OmpRuntime::for_tests(2);
+        let caller = std::thread::current().id();
+        let ran_on = Arc::new(Mutex::new(None));
+        let r = ran_on.clone();
+        fork_call(&rt, Some(1), move |ctx| {
+            assert_eq!(ctx.num_threads(), 1);
+            *r.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(*ran_on.lock().unwrap(), Some(caller));
     }
 
     #[test]
@@ -393,5 +598,40 @@ mod tests {
             });
         });
         assert_eq!(*levels.lock().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn hot_team_is_cached_and_reused() {
+        let rt = OmpRuntime::for_tests(2);
+        fork_call(&rt, Some(2), |_| {});
+        let first = rt
+            .debug_take_hot_team()
+            .expect("top-level team cached after join");
+        let team_ptr = Arc::as_ptr(&first.team);
+        *rt.hot_team.lock().unwrap() = Some(first);
+        fork_call(&rt, Some(2), |_| {});
+        let second = rt.debug_take_hot_team().expect("still cached");
+        assert_eq!(
+            Arc::as_ptr(&second.team),
+            team_ptr,
+            "same-size consecutive regions must reuse the cached team"
+        );
+    }
+
+    #[test]
+    fn hot_team_cache_replaced_on_size_change() {
+        let rt = OmpRuntime::for_tests(4);
+        fork_call(&rt, Some(4), |_| {});
+        fork_call(&rt, Some(2), |_| {});
+        let cached = rt.debug_take_hot_team().expect("cached");
+        assert_eq!(cached.team.size, 2, "cache follows the latest team size");
+    }
+
+    #[test]
+    fn hot_team_disabled_leaves_no_cache() {
+        let rt = OmpRuntime::for_tests(2);
+        rt.set_hot_team_enabled(false);
+        fork_call(&rt, Some(2), |_| {});
+        assert!(rt.debug_take_hot_team().is_none());
     }
 }

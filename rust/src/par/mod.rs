@@ -61,46 +61,32 @@ impl HpxMpRuntime {
     pub fn new(rt: Arc<OmpRuntime>) -> Self {
         Self { rt }
     }
-}
 
-impl ParallelRuntime for HpxMpRuntime {
-    fn name(&self) -> &'static str {
-        "hpxMP"
-    }
-
-    fn max_threads(&self) -> usize {
-        self.rt.sched.workers()
-    }
-
-    fn parallel_for(
+    /// Monomorphized `parallel_for`: the per-chunk inner loop is compiled
+    /// against the concrete `F`, so chunk dispatch is a static call (and
+    /// inlinable) instead of a `dyn Fn` indirect call per chunk.  The
+    /// trait object path ([`ParallelRuntime::parallel_for`]) delegates
+    /// here with `F = &dyn Fn` — identical behavior, one indirection —
+    /// while concrete callers (kernels, the fork-overhead ablation) get
+    /// the fully static loop.
+    pub fn parallel_for_mono<F>(
         &self,
         num_threads: usize,
         range: Range<i64>,
         sched: LoopSched,
-        body: &(dyn Fn(Range<i64>) + Sync),
-    ) {
-        // SAFETY-free trick: fork_call requires 'static, but we join before
-        // returning, so re-borrowing body for the region is sound.  Express
-        // it with a raw-pointer smuggle contained to this call.
-        struct Smuggle(*const (dyn Fn(Range<i64>) + Sync));
-        unsafe impl Send for Smuggle {}
-        unsafe impl Sync for Smuggle {}
-        impl Smuggle {
-            /// Method (not field) access so the closure captures the whole
-            /// `Smuggle` (which is Send+Sync), not the raw pointer field.
-            fn get(&self) -> *const (dyn Fn(Range<i64>) + Sync) {
-                self.0
-            }
-        }
-        // SAFETY: erase the borrow's lifetime; validity argued above.
-        let body_erased: &'static (dyn Fn(Range<i64>) + Sync) =
-            unsafe { std::mem::transmute(body) };
-        let smuggled = Smuggle(body_erased as *const _);
-
+        body: &F,
+    ) where
+        F: Fn(Range<i64>) + Sync,
+    {
+        // fork_call requires 'static, but it joins before returning, so
+        // re-borrowing `body` for the region is sound: smuggle the thin
+        // pointer as an address and re-materialize inside the region.
+        let body_addr = body as *const F as usize;
         fork_call(&self.rt, Some(num_threads), move |ctx| {
             // SAFETY: fork_call blocks until the region joins, so `body`
-            // outlives every use here.
-            let body = unsafe { &*smuggled.get() };
+            // outlives every use here; `F: Sync` makes the shared
+            // re-borrow across team members sound.
+            let body: &F = unsafe { &*(body_addr as *const F) };
             match sched {
                 LoopSched::Static { chunk } => {
                     ctx.for_static_chunks(range.clone(), chunk, |r| body(r));
@@ -128,6 +114,26 @@ impl ParallelRuntime for HpxMpRuntime {
             }
             // implicit region-end barrier joins the loop
         });
+    }
+}
+
+impl ParallelRuntime for HpxMpRuntime {
+    fn name(&self) -> &'static str {
+        "hpxMP"
+    }
+
+    fn max_threads(&self) -> usize {
+        self.rt.sched.workers()
+    }
+
+    fn parallel_for(
+        &self,
+        num_threads: usize,
+        range: Range<i64>,
+        sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    ) {
+        self.parallel_for_mono(num_threads, range, sched, &body)
     }
 }
 
@@ -192,5 +198,27 @@ mod tests {
     #[test]
     fn serial_runtime_runs_whole_range_once() {
         check_covers(&SerialRuntime, 1, 100, LoopSched::default());
+    }
+
+    #[test]
+    fn monomorphized_parallel_for_covers_all_schedules() {
+        let rt = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        for sched in [
+            LoopSched::Static { chunk: Some(3) },
+            LoopSched::Dynamic { chunk: 8 },
+            LoopSched::Guided { chunk: 4 },
+        ] {
+            let seen: Vec<AtomicU32> = (0..500).map(|_| AtomicU32::new(0)).collect();
+            let body = |r: Range<i64>| {
+                for i in r {
+                    seen[i as usize].fetch_add(1, Ordering::SeqCst);
+                }
+            };
+            rt.parallel_for_mono(2, 0..500, sched, &body);
+            assert!(
+                seen.iter().all(|c| c.load(Ordering::SeqCst) == 1),
+                "mono path missed/duplicated iterations ({sched:?})"
+            );
+        }
     }
 }

@@ -1,0 +1,157 @@
+//! Hot-team fork/join fast-path integration tests (ISSUE 1): team-reuse
+//! correctness under alternating sizes, `Ctx` leak checks on the parked
+//! cache, `single` re-arm across regions, and 10k dynamic loops cycling
+//! the lock-free worksharing ring.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hpxmp::omp::{dep_in, dep_out, fork_call, OmpRuntime, SchedKind, Schedule};
+
+/// 1,000 consecutive regions with alternating team sizes (1, 2, 4): every
+/// iteration checks tids, team size, and barrier semantics.  The size
+/// pattern contains same-size neighbors so both cache hits (re-armed
+/// teams) and misses (size-change rebuilds) are exercised, plus the
+/// inline serialized path for size 1.
+#[test]
+fn thousand_regions_alternating_sizes_stay_correct() {
+    let rt = OmpRuntime::for_tests(4);
+    let sizes = [1usize, 2, 2, 4, 4];
+    for i in 0..1000 {
+        let size = sizes[i % sizes.len()];
+        let arrived = Arc::new(AtomicUsize::new(0));
+        let tids = Arc::new(AtomicUsize::new(0));
+        let (a, t) = (arrived.clone(), tids.clone());
+        fork_call(&rt, Some(size), move |ctx| {
+            assert_eq!(ctx.num_threads(), size, "region {i}: wrong team size");
+            assert!(ctx.tid < size, "region {i}: tid out of range");
+            t.fetch_or(1 << ctx.tid, Ordering::SeqCst);
+            a.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+            // After the barrier every member must observe all arrivals.
+            assert_eq!(
+                a.load(Ordering::SeqCst),
+                size,
+                "region {i}: barrier released early"
+            );
+        });
+        assert_eq!(
+            tids.load(Ordering::SeqCst),
+            (1 << size) - 1,
+            "region {i}: some tid missing or duplicated"
+        );
+        assert_eq!(arrived.load(Ordering::SeqCst), size);
+    }
+}
+
+/// The parked cache must hold the only references to the member `Ctx`s
+/// once the scheduler quiesces — even after regions that cloned contexts
+/// into explicit tasks and dependence records.
+#[test]
+fn hot_team_cache_does_not_leak_ctxs() {
+    let rt = OmpRuntime::for_tests(4);
+    let sink = Arc::new(AtomicUsize::new(0));
+    for _ in 0..50 {
+        let s = sink.clone();
+        fork_call(&rt, Some(4), move |_| {
+            let ctx = hpxmp::omp::current_ctx().unwrap();
+            let token = 0usize;
+            let s1 = s.clone();
+            ctx.task_with_deps(&[dep_out(&token)], move || {
+                s1.fetch_add(1, Ordering::SeqCst);
+            });
+            let s2 = s.clone();
+            ctx.task_with_deps(&[dep_in(&token)], move || {
+                s2.fetch_add(1, Ordering::SeqCst);
+            });
+            ctx.taskwait();
+        });
+    }
+    assert_eq!(sink.load(Ordering::SeqCst), 50 * 4 * 2);
+
+    rt.sched.wait_quiescent();
+    let hot = rt
+        .debug_take_hot_team()
+        .expect("top-level team parked after the last region");
+    assert_eq!(hot.ctxs.len(), 4);
+    for (i, ctx) in hot.ctxs.iter().enumerate() {
+        assert_eq!(
+            Arc::strong_count(ctx),
+            1,
+            "ctx {i}: leaked reference pinned by the hot-team lifecycle"
+        );
+    }
+    // Each member holds one Team ref, plus the cache's own handle.
+    assert_eq!(Arc::strong_count(&hot.team), hot.ctxs.len() + 1);
+}
+
+/// `single` claims are keyed by construct sequence, which restarts at 0
+/// in every region: a re-armed team must clear the previous claims or
+/// every `single` after the first region goes silent.
+#[test]
+fn single_fires_once_per_region_across_team_reuse() {
+    let rt = OmpRuntime::for_tests(4);
+    let hits = Arc::new(AtomicUsize::new(0));
+    for _ in 0..10 {
+        let h = hits.clone();
+        fork_call(&rt, Some(4), move |ctx| {
+            ctx.single(|| {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+            ctx.barrier();
+        });
+    }
+    assert_eq!(hits.load(Ordering::SeqCst), 10, "single lost across re-arm");
+}
+
+/// 10,000 back-to-back dynamic worksharing loops in one region: the
+/// construct sequence wraps the fixed worksharing ring hundreds of times
+/// while members run ahead of each other (`nowait` semantics, no barrier
+/// between loops).  Every iteration of every loop must be claimed exactly
+/// once — and the whole run takes no lock on the dispatch path for
+/// constructs within ring-size of each other.
+#[test]
+fn ten_thousand_dynamic_loops_cycle_the_ring() {
+    let rt = OmpRuntime::for_tests(2);
+    let total = Arc::new(AtomicUsize::new(0));
+    let t = total.clone();
+    fork_call(&rt, Some(2), move |ctx| {
+        for _ in 0..10_000 {
+            ctx.for_dynamic(0..8, Schedule::new(SchedKind::Dynamic, Some(1)), |i| {
+                t.fetch_add(i as usize + 1, Ordering::Relaxed);
+            });
+        }
+    });
+    let per_loop: usize = (1..=8).sum();
+    assert_eq!(total.load(Ordering::SeqCst), 10_000 * per_loop);
+}
+
+/// Mixed worksharing after re-arm: dynamic + guided + static loops across
+/// reused teams all partition exactly.
+#[test]
+fn worksharing_partitions_exactly_across_reused_teams() {
+    let rt = OmpRuntime::for_tests(4);
+    for round in 0..20 {
+        let n = 256i64;
+        let seen: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        let s = seen.clone();
+        fork_call(&rt, Some(4), move |ctx| {
+            ctx.for_dynamic(0..n, Schedule::new(SchedKind::Dynamic, Some(7)), |i| {
+                s[i as usize].fetch_add(1, Ordering::Relaxed);
+            });
+            ctx.barrier();
+            ctx.for_dynamic(0..n, Schedule::new(SchedKind::Guided, Some(4)), |i| {
+                s[i as usize].fetch_add(1, Ordering::Relaxed);
+            });
+            ctx.barrier();
+            ctx.for_static(0..n, Some(3), |i| {
+                s[i as usize].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(
+            seen.iter().all(|c| c.load(Ordering::SeqCst) == 3),
+            "round {round}: some iteration missed or duplicated"
+        );
+    }
+}
