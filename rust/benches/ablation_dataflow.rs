@@ -1,0 +1,196 @@
+//! Dataflow ablation (ISSUE 2): fork-join vs the futurized dataflow
+//! engine, on the two workloads the issue names.
+//!
+//! * `mmult_<n>` — tiled `dmatdmatmult` at size `n`: the fork-join
+//!   `parallel_for` row-band path (`runtime: "fork-join"`) against the
+//!   `when_all`/`then` tiled task graph (`runtime: "dataflow"`); reported
+//!   as `us_per_op` = microseconds per whole product (lower is better).
+//! * `chain_<len>` — a Task-Bench-style dependency chain of `len`
+//!   sequentially dependent empty tasks: a raw future `then`-chain
+//!   (`runtime: "future-chain"`) against the same chain expressed as
+//!   OpenMP `task depend(inout)` on one address (`runtime: "omp-depend"`);
+//!   `us_per_op` = microseconds per chain link (task creation + dependence
+//!   resolution + scheduling).
+//!
+//! Emits `results/BENCH_dataflow.json` in the same `rows[]` format as
+//! `BENCH_fork_overhead.json`, plus `speedup_dataflow_vs_forkjoin`: the
+//! per-thread-count **best** `fork-join / dataflow` time ratio across the
+//! mmult sizes (>1 means the dataflow path beat fork/join somewhere).
+//! `BENCH_SMOKE=1` shrinks sizes and iteration counts for CI.
+
+use std::time::Instant;
+
+use hpxmp::amt::future::{Future, Promise};
+use hpxmp::amt::PolicyKind;
+use hpxmp::blaze::{dmatdmatmult, dmatdmatmult_dataflow, BlazeConfig, DynMatrix};
+use hpxmp::omp::{current_ctx, fork_call, Dep, DepKind, OmpRuntime};
+use hpxmp::par::HpxMpRuntime;
+
+mod common;
+
+struct Row {
+    construct: String,
+    runtime: &'static str,
+    threads: usize,
+    us_per_op: f64,
+}
+
+/// Mean seconds per call of `f` over `iters` calls.
+fn time_per(iters: usize, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench_mmult(hpx: &HpxMpRuntime, threads: usize, n: usize, iters: usize, rows: &mut Vec<Row>) {
+    let cfg = BlazeConfig::new(threads);
+    let a = DynMatrix::random(n, n, 17);
+    let b = DynMatrix::random(n, n, 18);
+    let mut c = DynMatrix::zeros(n, n);
+
+    // Warm both paths (populates the hot team / spins up workers).
+    dmatdmatmult(hpx, &cfg, &a, &b, &mut c);
+    dmatdmatmult_dataflow(hpx, &cfg, &a, &b, &mut c);
+
+    let fj = time_per(iters, || dmatdmatmult(hpx, &cfg, &a, &b, &mut c));
+    rows.push(Row {
+        construct: format!("mmult_{n}"),
+        runtime: "fork-join",
+        threads,
+        us_per_op: fj * 1e6,
+    });
+    let df = time_per(iters, || dmatdmatmult_dataflow(hpx, &cfg, &a, &b, &mut c));
+    rows.push(Row {
+        construct: format!("mmult_{n}"),
+        runtime: "dataflow",
+        threads,
+        us_per_op: df * 1e6,
+    });
+}
+
+fn bench_chains(hpx: &HpxMpRuntime, threads: usize, len: usize, rows: &mut Vec<Row>) {
+    // Raw future then-chain: creation + scheduling of `len` dependent
+    // continuations, timed end to end.
+    let sched = hpx.rt.sched.clone();
+    let t0 = Instant::now();
+    let head = Promise::new();
+    let mut tail: Future<()> = head.get_future();
+    for _ in 0..len {
+        tail = tail.then(&sched, |_| {});
+    }
+    head.set_value(());
+    tail.wait();
+    rows.push(Row {
+        construct: format!("chain_{len}"),
+        runtime: "future-chain",
+        threads,
+        us_per_op: t0.elapsed().as_secs_f64() / len as f64 * 1e6,
+    });
+
+    // The same chain through OpenMP `task depend(inout)` on one address —
+    // what the futurized tasking engine turns into exactly the structure
+    // above, plus task-object and sibling-map overhead.
+    let t0 = Instant::now();
+    fork_call(&hpx.rt, Some(1), move |_| {
+        let ctx = current_ctx().unwrap();
+        let token = 0xC0FFEEusize;
+        for _ in 0..len {
+            ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::InOut }], || {});
+        }
+        ctx.taskwait();
+    });
+    rows.push(Row {
+        construct: format!("chain_{len}"),
+        runtime: "omp-depend",
+        threads,
+        us_per_op: t0.elapsed().as_secs_f64() / len as f64 * 1e6,
+    });
+}
+
+fn main() {
+    let threads = common::heatmap_threads();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let sizes: Vec<usize> = if smoke {
+        vec![150, 230]
+    } else {
+        vec![150, 230, 300, 400]
+    };
+    let iters = if smoke { 5 } else { 20 };
+    let chain_len = if smoke { 512 } else { 4096 };
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &t in &threads {
+        eprintln!("[dataflow] {t} thread(s)");
+        let rt = OmpRuntime::new(t, PolicyKind::PriorityLocal);
+        rt.icv.set_nthreads(t);
+        let hpx = HpxMpRuntime::new(rt);
+        for &n in &sizes {
+            bench_mmult(&hpx, t, n, iters, &mut rows);
+        }
+        bench_chains(&hpx, t, chain_len, &mut rows);
+    }
+
+    println!(
+        "{:<12} {:<14} {:>8} {:>14}",
+        "construct", "runtime", "threads", "us/op"
+    );
+    for r in &rows {
+        println!(
+            "{:<12} {:<14} {:>8} {:>14.3}",
+            r.construct, r.runtime, r.threads, r.us_per_op
+        );
+    }
+
+    // Best fork-join/dataflow time ratio per thread count over the sizes.
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for &t in &threads {
+        let mut best: Option<f64> = None;
+        for &n in &sizes {
+            let find = |rt: &str| {
+                rows.iter()
+                    .find(|r| r.construct == format!("mmult_{n}") && r.runtime == rt && r.threads == t)
+                    .map(|r| r.us_per_op)
+            };
+            if let (Some(fj), Some(df)) = (find("fork-join"), find("dataflow")) {
+                if df > 0.0 {
+                    let s = fj / df;
+                    best = Some(best.map_or(s, |b: f64| b.max(s)));
+                }
+            }
+        }
+        if let Some(s) = best {
+            println!("best mmult speedup dataflow vs fork-join @{t} threads: {s:.2}x");
+            speedups.push((t, s));
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"dataflow\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"construct\": \"{}\", \"runtime\": \"{}\", \"threads\": {}, \"us_per_op\": {:.4}}}{}\n",
+            r.construct,
+            r.runtime,
+            r.threads,
+            r.us_per_op,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"speedup_dataflow_vs_forkjoin\": {");
+    for (i, (t, s)) in speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "{}\"{}\": {:.3}",
+            if i == 0 { "" } else { ", " },
+            t,
+            s
+        ));
+    }
+    json.push_str("}\n}\n");
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_dataflow.json");
+    std::fs::write(&path, json).expect("write BENCH_dataflow.json");
+    println!("{}", path.display());
+}

@@ -1,0 +1,389 @@
+//! Futures and continuations — the `hpx::future`/`hpx::promise` analog
+//! (ISSUE 2; DESIGN.md §7).
+//!
+//! The paper's closing argument is that an OpenMP-over-AMT runtime only
+//! pays off once applications can leave fork/join behind for a *task-based
+//! dataflow* model — exactly what HPX's `future`/`when_all`/`then` triple
+//! provides.  This module is that missing subsystem:
+//!
+//! * [`Promise<T>`] — the write end: fulfilled exactly once.
+//! * [`Future<T>`]  — the (shared, clonable) read end: `hpx::shared_future`
+//!   semantics — continuations observe the value by reference, any number
+//!   of continuations may attach, before or after fulfilment.
+//! * [`Future::then`] — attaches a continuation that is **scheduled as an
+//!   AMT task** on the fulfilling thread's `Scheduler` handle: no new OS
+//!   threads, no blocking, just a `Scheduler::spawn` at fulfilment (or
+//!   immediately if the value is already there).
+//! * [`when_all`] — joins N futures into one `Future<()>` with inline
+//!   countdown hooks (no task spawned per input; the combined future's own
+//!   continuations are where work hangs).
+//! * [`Future::wait`] — a **help-first** wait for the blocking edges of
+//!   the system: a worker that waits runs pending tasks via
+//!   [`worker::wait_tick`] instead of burning its core, exactly like the
+//!   OpenMP layer's barriers.
+//!
+//! The state machine of one future (§7 of DESIGN.md):
+//!
+//! ```text
+//! Pending{conts} --set_value--> Ready(v) ; conts drained:
+//!     Spawned  -> Scheduler::spawn(move || f(&v))   (runs on a worker)
+//!     Inline   -> f(&v) on the fulfilling thread    (cheap hooks only)
+//! attach after Ready -> dispatched immediately (same two flavors)
+//! ```
+//!
+//! Dropping a [`Promise`] without fulfilling it leaks its pending
+//! continuations (they never run) — a "broken promise".  The OpenMP
+//! tasking layer fulfils on every path (completion promises are set via
+//! an RAII retire guard, so even a panicking task body releases its
+//! dependents).  A raw [`Future::then`] continuation that panics, by
+//! contrast, leaves its *result* future forever pending — there is no
+//! value to fulfil it with and no error channel; the panic itself is
+//! still isolated and counted by the worker layer.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::OnceCell;
+
+use super::scheduler::Scheduler;
+use super::task::{Hint, Priority};
+use super::worker;
+
+/// One registered continuation.
+enum Cont<T> {
+    /// Scheduled as an AMT task at fulfilment — the `future::then` path.
+    Spawned {
+        sched: Arc<Scheduler>,
+        desc: &'static str,
+        f: Box<dyn FnOnce(&T) + Send>,
+    },
+    /// Run inline on the fulfilling thread.  Reserved for cheap,
+    /// non-blocking bookkeeping (the [`when_all`] countdown): user code
+    /// never runs inline, so fulfilment cannot block on it.
+    Inline(Box<dyn FnOnce(&T) + Send>),
+}
+
+/// Shared state of one promise/future pair.
+struct SharedState<T> {
+    /// Write-once value cell; `get().is_some()` is the ready flag (the
+    /// cell's internal ordering publishes the value to readers).
+    value: OnceCell<T>,
+    /// Continuations registered while pending; drained at fulfilment.
+    conts: Mutex<Vec<Cont<T>>>,
+}
+
+fn dispatch<T: Send + Sync + 'static>(state: Arc<SharedState<T>>, cont: Cont<T>) {
+    match cont {
+        Cont::Inline(f) => f(state.value.get().expect("dispatch before fulfilment")),
+        Cont::Spawned { sched, desc, f } => {
+            sched.spawn(Priority::Normal, Hint::Any, desc, move || {
+                f(state.value.get().expect("dispatch before fulfilment"));
+            });
+        }
+    }
+}
+
+/// The write end: fulfil with [`Promise::set_value`] exactly once.
+pub struct Promise<T> {
+    state: Arc<SharedState<T>>,
+}
+
+impl<T: Send + Sync + 'static> Promise<T> {
+    pub fn new() -> Self {
+        Self {
+            state: Arc::new(SharedState {
+                value: OnceCell::new(),
+                conts: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// The read end (`hpx::promise::get_future`); callable any number of
+    /// times — futures are shared handles.
+    pub fn get_future(&self) -> Future<T> {
+        Future {
+            state: self.state.clone(),
+        }
+    }
+
+    /// Fulfil the promise: publish the value, then dispatch every
+    /// registered continuation (inline hooks on this thread, `then`
+    /// continuations as AMT tasks).  Consumes the promise — a future is
+    /// fulfilled at most once.
+    pub fn set_value(self, value: T) {
+        if self.state.value.set(value).is_err() {
+            unreachable!("Promise::set_value consumes self; double-fulfil is unconstructible");
+        }
+        // Continuations registered from here on observe the value under the
+        // lock and dispatch themselves; we drain only what was pending.
+        let pending = std::mem::take(&mut *self.state.conts.lock().unwrap());
+        for cont in pending {
+            dispatch(self.state.clone(), cont);
+        }
+    }
+}
+
+impl<T: Send + Sync + 'static> Default for Promise<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The read end: a shared handle to an eventually-available value.
+pub struct Future<T> {
+    state: Arc<SharedState<T>>,
+}
+
+impl<T> Clone for Future<T> {
+    fn clone(&self) -> Self {
+        Self {
+            state: self.state.clone(),
+        }
+    }
+}
+
+impl<T: Send + Sync + 'static> Future<T> {
+    /// An already-fulfilled future (`hpx::make_ready_future`).
+    pub fn ready(value: T) -> Self {
+        let state = Arc::new(SharedState {
+            value: OnceCell::new(),
+            conts: Mutex::new(Vec::new()),
+        });
+        let _ = state.value.set(value);
+        Self { state }
+    }
+
+    /// Whether the value is available (never blocks).
+    pub fn is_ready(&self) -> bool {
+        self.state.value.get().is_some()
+    }
+
+    /// Whether two handles share one underlying promise/future state —
+    /// identity, not value, equality (what a dependence engine needs to
+    /// avoid registering a task as its own predecessor).
+    pub fn ptr_eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.state, &other.state)
+    }
+
+    /// Help-first wait: if the calling thread is an AMT worker it runs
+    /// pending tasks while the value is not ready (so the producer chain
+    /// can make progress *through* the waiter — no deadlock, no burnt
+    /// core); non-worker threads escalate spin → yield → sleep.
+    pub fn wait(&self) {
+        let mut spins = 0u32;
+        while !self.is_ready() {
+            worker::wait_tick(&mut spins);
+        }
+    }
+
+    /// Wait, then clone the value out.
+    pub fn get(&self) -> T
+    where
+        T: Clone,
+    {
+        self.wait();
+        self.state.value.get().expect("ready after wait").clone()
+    }
+
+    /// Attach a continuation scheduled as an AMT task on `sched` once the
+    /// value is ready (immediately if it already is).  Returns the future
+    /// of the continuation's own result — chains compose.
+    pub fn then<R: Send + Sync + 'static>(
+        &self,
+        sched: &Arc<Scheduler>,
+        f: impl FnOnce(&T) -> R + Send + 'static,
+    ) -> Future<R> {
+        self.then_named(sched, "future_continuation", f)
+    }
+
+    /// [`Future::then`] with an explicit task description (what the
+    /// metrics/tracing layer shows — the OpenMP layer passes
+    /// `"omp_explicit_task"` so dependent tasks are indistinguishable
+    /// from undeferred ones).
+    pub fn then_named<R: Send + Sync + 'static>(
+        &self,
+        sched: &Arc<Scheduler>,
+        desc: &'static str,
+        f: impl FnOnce(&T) -> R + Send + 'static,
+    ) -> Future<R> {
+        let promise = Promise::new();
+        let result = promise.get_future();
+        let body: Box<dyn FnOnce(&T) + Send> = Box::new(move |v: &T| {
+            promise.set_value(f(v));
+        });
+        self.attach(Cont::Spawned {
+            sched: sched.clone(),
+            desc,
+            f: body,
+        });
+        result
+    }
+
+    /// Inline hook run on the fulfilling thread (or right here if already
+    /// ready).  Crate-internal: hooks must be cheap and non-blocking —
+    /// they execute inside `set_value`.
+    pub(crate) fn on_ready(&self, f: impl FnOnce(&T) + Send + 'static) {
+        self.attach(Cont::Inline(Box::new(f)));
+    }
+
+    fn attach(&self, cont: Cont<T>) {
+        {
+            let mut pending = self.state.conts.lock().unwrap();
+            // Checked under the lock: `set_value` publishes the value
+            // *before* draining under this same lock, so either we see the
+            // value (dispatch ourselves, below) or our push is in the vec
+            // the drain takes.  No continuation is lost or run twice.
+            if self.state.value.get().is_none() {
+                pending.push(cont);
+                return;
+            }
+        }
+        dispatch(self.state.clone(), cont);
+    }
+}
+
+/// Join N futures into one `Future<()>` that becomes ready when every
+/// input has (`hpx::when_all` shape, completion-only: inputs are shared
+/// futures, so values stay retrievable from the inputs themselves).
+///
+/// The countdown runs as inline hooks on the fulfilling threads — no task
+/// is spawned per input; downstream work attaches to the returned future
+/// with [`Future::then`].  An empty set yields an already-ready future.
+pub fn when_all<T: Send + Sync + 'static>(futures: &[Future<T>]) -> Future<()> {
+    let promise = Promise::new();
+    let joined = promise.get_future();
+    if futures.is_empty() {
+        promise.set_value(());
+        return joined;
+    }
+    let remaining = Arc::new(AtomicUsize::new(futures.len()));
+    let promise = Arc::new(Mutex::new(Some(promise)));
+    for fut in futures {
+        let remaining = remaining.clone();
+        let promise = promise.clone();
+        fut.on_ready(move |_| {
+            if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let p = promise
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("when_all countdown reached zero twice");
+                p.set_value(());
+            }
+        });
+    }
+    joined
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::PolicyKind;
+    use std::sync::atomic::AtomicUsize as AU;
+
+    #[test]
+    fn ready_future_is_ready_and_gets() {
+        let f = Future::ready(41usize);
+        assert!(f.is_ready());
+        assert_eq!(f.get(), 41);
+    }
+
+    #[test]
+    fn set_value_fulfils_and_wait_returns() {
+        let p = Promise::new();
+        let f = p.get_future();
+        assert!(!f.is_ready());
+        p.set_value(7i64);
+        f.wait();
+        assert_eq!(f.get(), 7);
+    }
+
+    #[test]
+    fn then_runs_as_task_after_fulfilment() {
+        let s = Scheduler::new(2, PolicyKind::PriorityLocal);
+        let p = Promise::new();
+        let f = p.get_future();
+        let g = f.then(&s, |v: &usize| v * 2);
+        p.set_value(21);
+        assert_eq!(g.get(), 42);
+        s.shutdown();
+    }
+
+    #[test]
+    fn then_on_already_ready_future_still_runs() {
+        let s = Scheduler::new(1, PolicyKind::PriorityLocal);
+        let f = Future::ready(5usize);
+        let g = f.then(&s, |v: &usize| v + 1);
+        assert_eq!(g.get(), 6);
+        s.shutdown();
+    }
+
+    #[test]
+    fn multiple_continuations_all_observe_the_value() {
+        let s = Scheduler::new(2, PolicyKind::Abp);
+        let p = Promise::new();
+        let f = p.get_future();
+        let sum = Arc::new(AU::new(0));
+        let outs: Vec<Future<()>> = (0..8)
+            .map(|_| {
+                let sum = sum.clone();
+                f.then(&s, move |v: &usize| {
+                    sum.fetch_add(*v, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        p.set_value(3);
+        when_all(&outs).wait();
+        assert_eq!(sum.load(Ordering::SeqCst), 24);
+        s.shutdown();
+    }
+
+    #[test]
+    fn when_all_empty_set_is_immediately_ready() {
+        let futures: Vec<Future<usize>> = Vec::new();
+        let joined = when_all(&futures);
+        assert!(joined.is_ready());
+        joined.wait(); // must not block
+    }
+
+    #[test]
+    fn when_all_waits_for_every_input() {
+        let s = Scheduler::new(2, PolicyKind::PriorityLocal);
+        let promises: Vec<Promise<usize>> = (0..10).map(|_| Promise::new()).collect();
+        let futures: Vec<Future<usize>> = promises.iter().map(|p| p.get_future()).collect();
+        let joined = when_all(&futures);
+        assert!(!joined.is_ready());
+        for (i, p) in promises.into_iter().enumerate() {
+            assert!(!joined.is_ready(), "ready after only {i} inputs");
+            p.set_value(i);
+        }
+        joined.wait();
+        assert!(futures.iter().all(|f| f.is_ready()));
+        s.shutdown();
+    }
+
+    #[test]
+    fn continuation_chain_preserves_order_under_all_policies() {
+        for policy in PolicyKind::ALL {
+            let s = Scheduler::new(2, policy);
+            let trace = Arc::new(Mutex::new(Vec::new()));
+            let p = Promise::new();
+            let mut f: Future<()> = p.get_future();
+            for step in 0..16usize {
+                let trace = trace.clone();
+                f = f.then(&s, move |_| {
+                    trace.lock().unwrap().push(step);
+                });
+            }
+            p.set_value(());
+            f.wait();
+            assert_eq!(
+                *trace.lock().unwrap(),
+                (0..16).collect::<Vec<_>>(),
+                "policy {}",
+                policy.name()
+            );
+            s.shutdown();
+        }
+    }
+}

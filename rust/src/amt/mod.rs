@@ -12,15 +12,19 @@
 //! * [`worker`] / [`scheduler`] — OS worker threads, parking, spawning,
 //!   cooperative "help" execution (the task-scheduling-point mechanism the
 //!   OpenMP layer's barriers stand on).
+//! * [`future`] — `hpx::future`/`promise` continuations: `then` scheduled
+//!   as AMT tasks, `when_all` joins, help-first waits (DESIGN.md §7).
 //! * [`metrics`] — counters for spawned/executed/stolen/parked tasks.
 
 pub mod deque;
+pub mod future;
 pub mod metrics;
 pub mod policy;
 pub mod scheduler;
 pub mod task;
 pub mod worker;
 
+pub use future::{when_all, Future, Promise};
 pub use policy::PolicyKind;
 pub use scheduler::Scheduler;
 pub use task::{Priority, Task};

@@ -80,7 +80,11 @@ impl Scheduler {
         f: impl FnOnce() + Send + 'static,
     ) {
         let task = Task::new(priority, desc, f);
-        self.shared.live.fetch_add(1, Ordering::Acquire);
+        // AcqRel: the Release half pairs with `wait_quiescent`'s Acquire
+        // load (a quiescence observer must see the increment before any
+        // effect of the task), the Acquire half orders against prior
+        // retirements.  A plain Acquire RMW published nothing.
+        self.shared.live.fetch_add(1, Ordering::AcqRel);
         Metrics::inc(&self.shared.metrics.spawned);
         let submitter = worker::current().and_then(|(s, w)| {
             if Arc::ptr_eq(&s, &self.shared) {
@@ -109,7 +113,8 @@ impl Scheduler {
         if n == 0 {
             return;
         }
-        self.shared.live.fetch_add(n, Ordering::Acquire);
+        // AcqRel for the same `wait_quiescent` pairing as `spawn`.
+        self.shared.live.fetch_add(n, Ordering::AcqRel);
         Metrics::add(&self.shared.metrics.spawned, n as u64);
         let submitter = worker::current().and_then(|(s, w)| {
             if Arc::ptr_eq(&s, &self.shared) {

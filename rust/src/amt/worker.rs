@@ -123,3 +123,29 @@ pub fn help_one() -> bool {
     }
     false
 }
+
+/// One escalating help-first wait step: help-run a task, else spin, else
+/// yield, else sleep.  A help that merely requeued a guarded implicit task
+/// counts as a miss (see [`note_requeue`]) so the waiter backs off and the
+/// task's home worker gets the core.
+///
+/// This is the single wait primitive every blocking edge of the system
+/// shares: `Future::wait` ([`crate::amt::future`]), the OpenMP layer's
+/// barriers, `taskwait`/`taskgroup`, and the hot-team join all tick
+/// through here, so they are all task scheduling points with identical
+/// back-off behavior.
+#[inline]
+pub fn wait_tick(spins: &mut u32) {
+    if help_one() && !take_requeued() {
+        *spins = 0;
+        return;
+    }
+    *spins += 1;
+    if *spins < 32 {
+        std::hint::spin_loop();
+    } else if *spins < 256 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(Duration::from_micros(20));
+    }
+}

@@ -17,5 +17,8 @@ pub mod thresholds;
 pub mod vector;
 
 pub use matrix::DynMatrix;
-pub use ops::{daxpy, dmatdmatadd, dmatdmatmult, dvecdvecadd, BlazeConfig};
+pub use ops::{
+    daxpy, dmatdmatadd, dmatdmatmult, dmatdmatmult_dataflow, dmatdmatmult_dataflow_tiled,
+    dvecdvecadd, BlazeConfig, DATAFLOW_TILE,
+};
 pub use vector::DynVector;

@@ -12,7 +12,8 @@ use super::matrix::DynMatrix;
 use super::serial;
 use super::thresholds::*;
 use super::vector::DynVector;
-use crate::par::{LoopSched, ParallelRuntime};
+use crate::amt::future::{when_all, Future};
+use crate::par::{HpxMpRuntime, LoopSched, ParallelRuntime};
 
 /// Execution configuration for one operation invocation.
 #[derive(Clone, Copy, Debug)]
@@ -156,6 +157,111 @@ pub fn dmatdmatmult(
     rt.parallel_for(cfg.threads, 0..m as i64, cfg.sched, &row_body);
 }
 
+/// Covariant const-pointer smuggle for shared parallel reads from
+/// dataflow tasks (the read-side sibling of [`SendPtr`]).
+#[derive(Clone, Copy)]
+struct ConstPtr(*const f64);
+
+unsafe impl Send for ConstPtr {}
+unsafe impl Sync for ConstPtr {}
+
+/// Default tile edge of the dataflow dmatdmatmult decomposition: large
+/// enough that one tile amortizes task scheduling, small enough that a
+/// 150×150 product still yields a stealable graph.
+pub const DATAFLOW_TILE: usize = 64;
+
+/// dmatdmatmult as a dependence-driven tiled task graph (ISSUE 2) with
+/// the default tile size — see [`dmatdmatmult_dataflow_tiled`].
+pub fn dmatdmatmult_dataflow(
+    rt: &HpxMpRuntime,
+    cfg: &BlazeConfig,
+    a: &DynMatrix,
+    b: &DynMatrix,
+    c: &mut DynMatrix,
+) {
+    dmatdmatmult_dataflow_tiled(rt, cfg, a, b, c, DATAFLOW_TILE)
+}
+
+/// `C = A * B` as a **futurized dataflow graph** (ISSUE 2; DESIGN.md §7):
+/// C is blocked into `tile × tile` tiles; each tile task is a `then`
+/// continuation on `when_all` of its *input-band futures* (the A row band
+/// and B column band it consumes), and the product completes at one final
+/// `when_all` join — no fork/join barriers anywhere, the first
+/// non-fork-join workload of this repo.
+///
+/// The input bands here are materialized as already-ready futures (the
+/// operands exist), but the graph shape is exactly what lets an upstream
+/// producer chain products without joins: hang the band futures off
+/// producer tasks instead and nothing else changes.
+///
+/// Same threshold gating and summation order as the fork-join
+/// [`dmatdmatmult`] (tile tasks accumulate over the full depth in
+/// increasing k), so results agree with the serial oracle bit-for-bit.
+pub fn dmatdmatmult_dataflow_tiled(
+    rt: &HpxMpRuntime,
+    cfg: &BlazeConfig,
+    a: &DynMatrix,
+    b: &DynMatrix,
+    c: &mut DynMatrix,
+    tile: usize,
+) {
+    let (m, k_dim) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k_dim, k2);
+    assert_eq!((m, n), (c.rows(), c.cols()));
+    if !parallelize(m * n, DMATDMATMULT_THRESHOLD) || cfg.threads <= 1 {
+        for i in 0..m {
+            serial::matmul_row(a.row(i), b.as_slice(), n, c.row_mut(i));
+        }
+        return;
+    }
+
+    let tile = tile.max(8);
+    let row_tiles = m / tile + usize::from(m % tile != 0);
+    let col_tiles = n / tile + usize::from(n % tile != 0);
+
+    // The input tiles of the graph: A banded by tile rows, B by tile
+    // columns, one future each.
+    let a_bands: Vec<Future<()>> = (0..row_tiles).map(|_| Future::ready(())).collect();
+    let b_bands: Vec<Future<()>> = (0..col_tiles).map(|_| Future::ready(())).collect();
+
+    let ap = ConstPtr(a.as_slice().as_ptr());
+    let bp = ConstPtr(b.as_slice().as_ptr());
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let sched = &rt.rt.sched;
+
+    let mut tiles: Vec<Future<()>> = Vec::with_capacity(row_tiles * col_tiles);
+    for bi in 0..row_tiles {
+        let (i0, i1) = (bi * tile, ((bi + 1) * tile).min(m));
+        for bj in 0..col_tiles {
+            let (j0, j1) = (bj * tile, ((bj + 1) * tile).min(n));
+            let inputs = [a_bands[bi].clone(), b_bands[bj].clone()];
+            let tile_task = when_all(&inputs).then_named(sched, "blaze_tile_mult", move |_| {
+                // SAFETY: the final `when_all(..).wait()` below blocks this
+                // function until every tile task retired, so the operand
+                // borrows outlive all uses; tile (row × column) ranges
+                // partition C disjointly, so each segment has exactly one
+                // writer.
+                let a_all = unsafe { std::slice::from_raw_parts(ap.0, m * k_dim) };
+                let b_all = unsafe { std::slice::from_raw_parts(bp.0, k_dim * n) };
+                for i in i0..i1 {
+                    let flat = (i * n + j0) as i64..(i * n + j1) as i64;
+                    let c_seg = unsafe { cp.slice(&flat) };
+                    serial::matmul_row_seg(
+                        &a_all[i * k_dim..(i + 1) * k_dim],
+                        b_all,
+                        n,
+                        j0,
+                        c_seg,
+                    );
+                }
+            });
+            tiles.push(tile_task);
+        }
+    }
+    when_all(&tiles).wait();
+}
+
 /// Blazemark FLOP counts per operation (what MFLOP/s is computed from).
 pub mod flops {
     /// dvecdvecadd: one add per element.
@@ -273,6 +379,27 @@ mod tests {
             }
         }
         assert!(c.max_abs_diff(&c_ref) < 1e-12);
+    }
+
+    #[test]
+    fn dmatdmatmult_dataflow_matches_forkjoin_oracle_exactly() {
+        use crate::omp::OmpRuntime;
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        // 30: below threshold (serial path); 64: parallel, even tiles;
+        // 130: parallel, ragged edge tiles.
+        for n in [30usize, 64, 130] {
+            let a = DynMatrix::random(n, n, 31);
+            let b = DynMatrix::random(n, n, 32);
+            let mut c_df = DynMatrix::zeros(n, n);
+            dmatdmatmult_dataflow_tiled(&hpx, &BlazeConfig::new(4), &a, &b, &mut c_df, 16);
+            let mut c_ref = DynMatrix::zeros(n, n);
+            dmatdmatmult(&SerialRuntime, &BlazeConfig::new(1), &a, &b, &mut c_ref);
+            assert_eq!(
+                c_df.max_abs_diff(&c_ref),
+                0.0,
+                "dataflow diverged from serial oracle at n={n}"
+            );
+        }
     }
 
     #[test]

@@ -46,6 +46,25 @@ pub fn matmul_row(a_row: &[f64], b: &[f64], n: usize, c_row: &mut [f64]) {
     }
 }
 
+/// One row *segment* of `C = A * B` (the tiled dataflow decomposition's
+/// inner kernel): `c_seg = C[i, j0..j0+c_seg.len()]`, full-depth k
+/// accumulation in increasing k — the same summation order as
+/// [`matmul_row`], so tiled and row-wise products agree bit-for-bit.
+#[inline]
+pub fn matmul_row_seg(a_row: &[f64], b: &[f64], n: usize, j0: usize, c_seg: &mut [f64]) {
+    let k_dim = a_row.len();
+    let w = c_seg.len();
+    debug_assert_eq!(b.len(), k_dim * n);
+    debug_assert!(j0 + w <= n);
+    c_seg.fill(0.0);
+    for (k, &aik) in a_row.iter().enumerate().take(k_dim) {
+        let b_seg = &b[k * n + j0..k * n + j0 + w];
+        for (cj, bj) in c_seg.iter_mut().zip(b_seg.iter()) {
+            *cj += aik * *bj;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +104,18 @@ mod tests {
         let mut c_row = [0.0; 2];
         matmul_row(&a_row, &b, 2, &mut c_row);
         assert_eq!(c_row, [7.0, 10.0]);
+    }
+
+    #[test]
+    fn matmul_row_seg_matches_full_row() {
+        let b = [1., 2., 3., 4., 5., 6., 7., 8., 9.];
+        let a_row = [0.5, -1.0, 2.0];
+        let mut full = [0.0; 3];
+        matmul_row(&a_row, &b, 3, &mut full);
+        for (j0, w) in [(0usize, 3usize), (0, 2), (1, 2), (2, 1)] {
+            let mut seg = vec![0.0; w];
+            matmul_row_seg(&a_row, &b, 3, j0, &mut seg);
+            assert_eq!(&seg[..], &full[j0..j0 + w], "segment ({j0},{w})");
+        }
     }
 }

@@ -4,7 +4,7 @@
 //! repeated in a steady-state loop, per-iteration median → MFLOP/s.
 
 use crate::blaze::{self, BlazeConfig, DynMatrix, DynVector};
-use crate::par::ParallelRuntime;
+use crate::par::{HpxMpRuntime, ParallelRuntime};
 use crate::util::timing::{bench, mflops, BenchCfg};
 
 /// The four paper benchmarks.
@@ -120,6 +120,23 @@ pub fn measure(rt: &dyn ParallelRuntime, op: Op, threads: usize, n: usize, cfg: 
     mflops(&summary, op.flops(n))
 }
 
+/// Measure MFLOP/s of the **futurized dataflow** dmatdmatmult (ISSUE 2)
+/// — the task-graph counterpart of `measure(_, Op::DMatDMatMult, ..)`,
+/// selectable next to the fork-join path wherever the coordinator
+/// compares execution models.  Same operands, FLOP count and methodology
+/// as the fork-join cell.  The dataflow graph parallelizes over *every*
+/// scheduler worker (`threads` only gates the serial threshold), so for
+/// a fair execution-model comparison build `hpx` with exactly `threads`
+/// workers — as `hpxmp dataflow` and `ablation_dataflow` both do.
+pub fn measure_dataflow_mmult(hpx: &HpxMpRuntime, threads: usize, n: usize, cfg: &BenchCfg) -> f64 {
+    let bcfg = BlazeConfig::new(threads);
+    let a = DynMatrix::random(n, n, 17);
+    let b = DynMatrix::random(n, n, 18);
+    let mut c = DynMatrix::zeros(n, n);
+    let summary = bench(cfg, || blaze::dmatdmatmult_dataflow(hpx, &bcfg, &a, &b, &mut c));
+    mflops(&summary, Op::DMatDMatMult.flops(n))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +164,19 @@ mod tests {
             let m = measure(&SerialRuntime, op, 1, n, &cfg);
             assert!(m > 0.0, "{}: {m}", op.name());
         }
+    }
+
+    #[test]
+    fn measure_dataflow_returns_positive_mflops() {
+        let cfg = BenchCfg {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 2,
+            min_time: std::time::Duration::from_micros(1),
+        };
+        let hpx = HpxMpRuntime::new(crate::omp::OmpRuntime::for_tests(2));
+        let m = measure_dataflow_mmult(&hpx, 2, 64, &cfg);
+        assert!(m > 0.0, "dataflow mmult: {m}");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! hpxmp conformance                       Tables 1-3 live feature report
 //! hpxmp heatmap  --op <op|all> [...]      Figs 2-5 ratio heatmaps
 //! hpxmp scaling  --op <op|all> [...]      Figs 6-9 scaling series
+//! hpxmp dataflow [--sizes a,b,c]          fork-join vs futurized dataflow mmult
 //! hpxmp offload  [--size N]               three-layer PJRT smoke run
 //! hpxmp policies [--tasks N]              AMT policy ablation
 //! ```
@@ -18,7 +19,10 @@ use std::sync::Arc;
 
 use hpxmp::amt::PolicyKind;
 use hpxmp::baseline::BaselineRuntime;
-use hpxmp::coordinator::{blazemark::Op, conformance, report, sweep};
+use hpxmp::coordinator::{
+    blazemark::{self, Op},
+    conformance, report, sweep,
+};
 use hpxmp::omp::{icv, OmpRuntime};
 use hpxmp::par::HpxMpRuntime;
 use hpxmp::util::cli::Args;
@@ -36,6 +40,7 @@ fn main() {
         "conformance" => cmd_conformance(&args),
         "heatmap" => cmd_heatmap(&args),
         "scaling" => cmd_scaling(&args),
+        "dataflow" => cmd_dataflow(&args),
         "offload" => cmd_offload(&args),
         "policies" => cmd_policies(&args),
         _ => {
@@ -52,7 +57,7 @@ fn main() {
 fn print_help() {
     println!(
         "hpxmp — OpenMP-over-AMT runtime (hpxMP reproduction)\n\n\
-         usage: hpxmp <info|conformance|heatmap|scaling|offload|policies> [options]\n\n\
+         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|offload|policies> [options]\n\n\
          options:\n\
            --op <dvecdvecadd|daxpy|dmatdmatadd|dmatdmatmult|all>\n\
            --threads 1,2,4,8,16      thread counts (heatmap) / counts per figure (scaling)\n\
@@ -157,6 +162,33 @@ fn cmd_scaling(args: &Args) -> anyhow::Result<()> {
         for &t in &threads {
             let r = sweep::scaling_sweep(&hpx, &base, op, t, &sizes, &cfg, true);
             print!("{}", report::write_scaling(out, &r)?);
+        }
+    }
+    Ok(())
+}
+
+/// Fork-join vs futurized dataflow `dmatdmatmult` (ISSUE 2): the same
+/// product measured through `parallel_for` row bands and through the
+/// tiled `when_all`/`then` task graph, side by side.
+///
+/// The runtime is built with exactly `t` AMT workers per thread count —
+/// the dataflow graph parallelizes over every worker, so a wider pool
+/// would hand it cores the fork-join team was told not to use.
+fn cmd_dataflow(args: &Args) -> anyhow::Result<()> {
+    let threads = args.get_usize_list("threads", &[4]);
+    let sizes = args.get_usize_list("sizes", &[150, 230, 300]);
+    let cfg = bench_cfg(args);
+    for &t in &threads {
+        let rt = OmpRuntime::new(t, PolicyKind::PriorityLocal);
+        rt.icv.set_nthreads(t);
+        let hpx = HpxMpRuntime::new(rt);
+        for &n in &sizes {
+            let fj = blazemark::measure(&hpx, Op::DMatDMatMult, t, n, &cfg);
+            let df = blazemark::measure_dataflow_mmult(&hpx, t, n, &cfg);
+            println!(
+                "dmatdmatmult n={n:<4} threads={t:<2} fork-join {fj:>9.1} MFLOP/s | dataflow {df:>9.1} MFLOP/s | ratio {:.3}",
+                df / fj
+            );
         }
     }
     Ok(())

@@ -13,24 +13,14 @@ use crossbeam_utils::CachePadded;
 
 use crate::amt::worker;
 
-/// Escalating wait: help-run a task, else spin, else yield, else sleep.
-/// A help that merely requeued a guarded implicit task counts as a miss
-/// (see `worker::note_requeue`) so the waiter backs off and the task's
-/// home worker gets the core.
+/// Escalating help-first wait — delegates to the AMT layer's unified
+/// [`worker::wait_tick`] (ISSUE 2): barriers, `taskwait`, `taskgroup` and
+/// `Future::wait` all block through the same primitive, so every blocking
+/// OpenMP construct is a task scheduling point with the same requeue-guard
+/// back-off.
 #[inline]
 pub(crate) fn wait_tick(spins: &mut u32) {
-    if worker::help_one() && !worker::take_requeued() {
-        *spins = 0;
-        return;
-    }
-    *spins += 1;
-    if *spins < 32 {
-        std::hint::spin_loop();
-    } else if *spins < 256 {
-        std::thread::yield_now();
-    } else {
-        std::thread::sleep(std::time::Duration::from_micros(20));
-    }
+    worker::wait_tick(spins)
 }
 
 /// Yield-only wait (no task execution) for contexts where re-entrant task

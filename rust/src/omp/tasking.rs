@@ -4,19 +4,30 @@
 //!
 //! `#pragma omp task` becomes `__kmpc_omp_task_alloc` + `__kmpc_omp_task`
 //! (Listing 5): allocate a task object, then register a normal-priority
-//! AMT task.  `depend` clauses build a dependence graph over sibling tasks
-//! keyed by storage address (in/out/inout), resolved at creation time.
+//! AMT task.
+//!
+//! **Dependence execution is futurized** (ISSUE 2; DESIGN.md §7): every
+//! explicit task owns a completion [`Promise<()>`] fulfilled when it
+//! retires, and a `depend` task is simply a [`then`](Future::then)
+//! continuation on `when_all(predecessor futures)` — the sibling
+//! dependence map ([`DepMap`]) stores completion *futures* per storage
+//! address, not task nodes, and no hand-rolled successor/predecessor graph
+//! exists anymore.  `taskwait`/`taskgroup` block through the same
+//! help-first wait primitive as `Future::wait`
+//! ([`crate::amt::worker::wait_tick`]), so every join is a task scheduling
+//! point.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::AtomicUsize;
 use std::sync::{Arc, Mutex};
 
+use crate::amt::future::{when_all, Future, Promise};
 use crate::amt::task::Hint;
 use crate::amt::{worker, Priority};
 
 use super::barrier::WaitCounter;
 use super::ompt::TaskStatus;
-use super::team::{with_ctx, Ctx};
+use super::team::{with_ctx, Ctx, ParentFrame};
 
 /// Dependence kind of one `depend` clause item.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,14 +66,11 @@ pub fn dep_inout<T: ?Sized>(x: &T) -> Dep {
     }
 }
 
-/// A created-but-possibly-blocked explicit task.
+/// One explicit task's execution record: the payload, the context it runs
+/// under, the counters it releases, and the completion promise whose
+/// future everything downstream (dependent siblings, `DepMap` records)
+/// hangs continuations on.
 pub(super) struct TaskNode {
-    /// Unreleased predecessors + 1 creation hold.
-    preds: AtomicUsize,
-    done: AtomicBool,
-    /// Successor edges; guarded together with `done` (edges may only be
-    /// added while the task is provably not finished).
-    succs: Mutex<Vec<Arc<TaskNode>>>,
     payload: Mutex<Option<Box<dyn FnOnce() + Send>>>,
     /// Context the body runs under (the creating thread's team binding).
     ctx: Arc<Ctx>,
@@ -70,27 +78,46 @@ pub(super) struct TaskNode {
     parent_children: Arc<WaitCounter>,
     groups: Vec<Arc<WaitCounter>>,
     ompt_id: u64,
+    /// Fulfilled exactly once, right after the body ran (before the
+    /// counters drop — where the old engine drained successor edges), so
+    /// dependent continuations dispatch as early as possible.
+    promise: Mutex<Option<Promise<()>>>,
 }
 
 impl TaskNode {
-    fn enqueue(self: &Arc<Self>) {
-        let node = self.clone();
-        let sched = self.ctx.team.rt().sched.clone();
-        sched.spawn(Priority::Normal, Hint::Any, "omp_explicit_task", move || {
-            node.execute();
-        });
-    }
-
-    fn release_pred(self: &Arc<Self>) {
-        if self.preds.fetch_sub(1, Ordering::AcqRel) == 1 {
-            self.enqueue();
-        }
-    }
-
     fn execute(self: &Arc<Self>) {
         let rt = self.ctx.team.rt();
         rt.ompt
             .emit_task_schedule(0, TaskStatus::Switch, self.ompt_id);
+
+        // Retirement runs via a drop guard so a panicking body still
+        // fulfils the completion promise and releases every counter — a
+        // crashed task must not hang its dependents, `taskwait`ers, or
+        // taskgroups (the panic itself stays isolated and counted by the
+        // worker layer).
+        struct Retire<'a>(&'a Arc<TaskNode>, &'a Arc<super::OmpRuntime>);
+        impl Drop for Retire<'_> {
+            fn drop(&mut self) {
+                let node = self.0;
+                // Publish completion first (where the old engine drained
+                // successor edges): dependent continuations dispatch now,
+                // and anyone who later observes the counters dropped
+                // (`taskwait` returning) finds this future ready.
+                if let Some(p) = node.promise.lock().unwrap().take() {
+                    p.set_value(());
+                }
+                for g in &node.groups {
+                    g.decrement();
+                }
+                node.parent_children.decrement();
+                node.ctx.team.explicit.decrement();
+                self.1
+                    .ompt
+                    .emit_task_schedule(node.ompt_id, TaskStatus::Complete, 0);
+            }
+        }
+        let _retire = Retire(self, &rt);
+
         let payload = self.payload.lock().unwrap().take();
         if let Some(f) = payload {
             // Run under a task-private context: same team binding as the
@@ -102,42 +129,17 @@ impl TaskNode {
                 team: self.ctx.team.clone(),
                 tid: self.ctx.tid,
                 ws_seq: AtomicUsize::new(0),
-                parent: Arc::new(super::team::ParentFrame::default()),
+                parent: Arc::new(ParentFrame::default()),
                 task_id: self.ompt_id,
             });
             with_ctx(task_ctx, f);
         }
-        // Publish completion, then drain successor edges.  Edge insertion
-        // checks `done` under the same lock, so no successor can be added
-        // after this point.
-        let succs = {
-            let mut g = self.succs.lock().unwrap();
-            self.done.store(true, Ordering::Release);
-            std::mem::take(&mut *g)
-        };
-        for s in succs {
-            s.release_pred();
-        }
-        for g in &self.groups {
-            g.decrement();
-        }
-        self.parent_children.decrement();
-        self.ctx.team.explicit.decrement();
-        rt.ompt
-            .emit_task_schedule(self.ompt_id, TaskStatus::Complete, 0);
-    }
-
-    /// Try to add `self -> succ`; fails (no edge) if `self` already done.
-    fn add_successor(self: &Arc<Self>, succ: &Arc<TaskNode>) {
-        let mut g = self.succs.lock().unwrap();
-        if !self.done.load(Ordering::Acquire) {
-            succ.preds.fetch_add(1, Ordering::AcqRel);
-            g.push(succ.clone());
-        }
     }
 }
 
-/// Last-accessor records per storage address (the sibling dependence map).
+/// Last-accessor completion futures per storage address (the sibling
+/// dependence map).  Purely passive data: the actual ordering lives in
+/// the future layer's continuation edges.
 #[derive(Default)]
 pub struct DepMap {
     records: HashMap<usize, DepRecord>,
@@ -145,43 +147,68 @@ pub struct DepMap {
 
 #[derive(Default)]
 struct DepRecord {
-    last_out: Option<Arc<TaskNode>>,
-    readers: Vec<Arc<TaskNode>>,
+    last_out: Option<Future<()>>,
+    readers: Vec<Future<()>>,
 }
 
 impl DepMap {
     /// Drop all records — hot-team re-arm between regions (every task of
     /// the finished region is retired; stale records would only pin dead
-    /// `TaskNode`s and grow without bound across reused frames).
+    /// future states and grow without bound across reused frames).
     pub(super) fn clear(&mut self) {
         self.records.clear();
     }
 
-    /// Register `node`'s dependences and add the required edges:
-    /// * `in`    — after the last writer.
-    /// * `out`/`inout` — after the last writer AND all readers since.
-    fn register(&mut self, node: &Arc<TaskNode>, deps: &[Dep]) {
+    /// Record `done` (the registering task's completion future) under its
+    /// `deps` and return the futures the task must wait on:
+    /// * `in`    — the last writer.
+    /// * `out`/`inout` — the last writer AND all readers since.
+    ///
+    /// Already-ready predecessors are skipped (the task would not block on
+    /// them), and retired readers are compacted out on registration so a
+    /// long `in`-only run on one address cannot accumulate futures
+    /// unboundedly between writers.  A record that is `done` itself is
+    /// never a predecessor: one task naming the same address under
+    /// several clauses (`depend(in: x) depend(out: x)` — spec-legal, the
+    /// strictest mode wins) must not wait on its own completion.
+    fn register(&mut self, done: &Future<()>, deps: &[Dep]) -> Vec<Future<()>> {
+        let mut preds = Vec::new();
         for dep in deps {
             let rec = self.records.entry(dep.addr).or_default();
             match dep.kind {
                 DepKind::In => {
                     if let Some(w) = &rec.last_out {
-                        w.add_successor(node);
+                        if !w.is_ready() && !w.ptr_eq(done) {
+                            preds.push(w.clone());
+                        }
                     }
-                    rec.readers.push(node.clone());
+                    rec.readers.retain(|r| !r.is_ready());
+                    if !rec.readers.iter().any(|r| r.ptr_eq(done)) {
+                        rec.readers.push(done.clone());
+                    }
                 }
                 DepKind::Out | DepKind::InOut => {
                     if let Some(w) = &rec.last_out {
-                        w.add_successor(node);
+                        if !w.is_ready() && !w.ptr_eq(done) {
+                            preds.push(w.clone());
+                        }
                     }
-                    for r in &rec.readers {
-                        r.add_successor(node);
+                    for r in rec.readers.drain(..) {
+                        if !r.is_ready() && !r.ptr_eq(done) {
+                            preds.push(r);
+                        }
                     }
-                    rec.readers.clear();
-                    rec.last_out = Some(node.clone());
+                    rec.last_out = Some(done.clone());
                 }
             }
         }
+        preds
+    }
+
+    /// Live (unretired) reader records for `addr` — diagnostics/tests.
+    #[doc(hidden)]
+    pub fn reader_count(&self, addr: usize) -> usize {
+        self.records.get(&addr).map_or(0, |r| r.readers.len())
     }
 }
 
@@ -192,7 +219,9 @@ impl Ctx {
         self.task_with_deps(&[], body)
     }
 
-    /// `#pragma omp task depend(...)`.
+    /// `#pragma omp task depend(...)`: the task's body is deferred behind
+    /// `when_all` of its predecessors' completion futures and scheduled as
+    /// a continuation — the futurized dependence engine (DESIGN.md §7).
     pub fn task_with_deps(self: &Arc<Self>, deps: &[Dep], body: impl FnOnce() + Send + 'static) {
         let rt = self.team.rt();
         let ompt_id = rt.ompt.fresh_task_id();
@@ -205,38 +234,76 @@ impl Ctx {
             g.increment();
         }
 
+        let promise = Promise::new();
+        let done = promise.get_future();
         let node = Arc::new(TaskNode {
-            preds: AtomicUsize::new(1), // creation hold
-            done: AtomicBool::new(false),
-            succs: Mutex::new(Vec::new()),
             payload: Mutex::new(Some(Box::new(body))),
             ctx: self.clone(),
             parent_children: self.parent.children.clone(),
             groups,
             ompt_id,
+            promise: Mutex::new(Some(promise)),
         });
 
-        if !deps.is_empty() {
-            let mut map = self.parent.deps.lock().unwrap();
-            map.register(&node, deps);
+        // Registration and predecessor lookup are one atomic step under
+        // the sibling map lock, so a concurrently-retiring predecessor is
+        // either seen ready here (skipped) or its fulfilment dispatches
+        // our continuation later — never neither.
+        let preds: Vec<Future<()>> = if deps.is_empty() {
+            Vec::new()
+        } else {
+            self.parent.deps.lock().unwrap().register(&done, deps)
+        };
+
+        let sched = rt.sched.clone();
+        match preds.len() {
+            0 => {
+                sched.spawn(Priority::Normal, Hint::Any, "omp_explicit_task", move || {
+                    node.execute();
+                });
+            }
+            // Single predecessor — the dominant depend-chain shape: hang
+            // the continuation directly off it, skipping the `when_all`
+            // countdown state entirely.
+            1 => {
+                preds[0].then_named(&sched, "omp_explicit_task", move |_| {
+                    node.execute();
+                });
+            }
+            _ => {
+                when_all(&preds).then_named(&sched, "omp_explicit_task", move |_| {
+                    node.execute();
+                });
+            }
         }
-        // Drop the creation hold: if no predecessor held it back, enqueue.
-        node.release_pred();
     }
 
-    /// `#pragma omp taskwait`: wait for *direct* children (executes pending
-    /// tasks meanwhile — a task scheduling point).
+    /// `#pragma omp taskwait`: wait for *direct* children.  A help-first
+    /// future-style wait (the same [`crate::amt::worker::wait_tick`]
+    /// primitive as `Future::wait`): pending tasks execute on this thread
+    /// meanwhile — a task scheduling point.
     pub fn taskwait(&self) {
         self.parent.children.wait_zero();
     }
 
-    /// `#pragma omp taskgroup`: run `body`, then wait for all tasks created
-    /// inside (transitively, via group inheritance at creation).
+    /// `#pragma omp taskgroup`: run `body`, then help-first-wait for all
+    /// tasks created inside (transitively, via group inheritance at
+    /// creation).  The group is popped via an RAII guard so a panicking
+    /// `body` cannot leave it on the stack — later tasks in the region
+    /// would otherwise inherit a dead group and corrupt its accounting.
     pub fn taskgroup(&self, body: impl FnOnce()) {
         let group = Arc::new(WaitCounter::new());
         self.parent.groups.lock().unwrap().push(group.clone());
-        body();
-        self.parent.groups.lock().unwrap().pop();
+        struct PopGroup<'a>(&'a ParentFrame);
+        impl Drop for PopGroup<'_> {
+            fn drop(&mut self) {
+                self.0.groups.lock().unwrap().pop();
+            }
+        }
+        {
+            let _guard = PopGroup(&self.parent);
+            body();
+        }
         group.wait_zero();
     }
 
@@ -277,7 +344,7 @@ mod tests {
     use super::*;
     use crate::omp::team::{current_ctx, fork_call};
     use crate::omp::OmpRuntime;
-    use std::sync::atomic::AtomicUsize as AU;
+    use std::sync::atomic::{AtomicUsize as AU, Ordering};
 
     #[test]
     fn tasks_run_and_taskwait_joins() {
@@ -367,6 +434,79 @@ mod tests {
     }
 
     #[test]
+    fn same_address_in_and_out_on_one_task_does_not_self_deadlock() {
+        // depend(in: x) depend(out: x) on one task is spec-legal (the
+        // strictest mode wins); the engine must not register the task as
+        // its own predecessor.
+        let rt = OmpRuntime::for_tests(2);
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let t2 = trace.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let token = 0xAB1Eusize;
+            for step in 0..4 {
+                let t = t2.clone();
+                ctx.task_with_deps(
+                    &[
+                        Dep { addr: token, kind: DepKind::In },
+                        Dep { addr: token, kind: DepKind::Out },
+                    ],
+                    move || {
+                        t.lock().unwrap().push(step);
+                    },
+                );
+            }
+            ctx.taskwait();
+        });
+        assert_eq!(*trace.lock().unwrap(), (0..4).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_task_still_retires_counters_and_dependents() {
+        // A crashed task body must fulfil its completion promise and drop
+        // its counters (RAII retire guard): dependents run, taskwait
+        // returns, and the panic stays isolated in the worker layer.
+        let rt = OmpRuntime::for_tests(2);
+        let done = Arc::new(AU::new(0));
+        let d = done.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let token = 0xBAD_C0DEusize;
+            ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::InOut }], || {
+                panic!("task body panics");
+            });
+            let d = d.clone();
+            ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::InOut }], move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+            ctx.taskwait();
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 1, "dependent never ran");
+        assert_eq!(rt.sched.task_panics(), 1, "panic not isolated");
+    }
+
+    #[test]
+    fn in_only_runs_compact_retired_readers() {
+        // Satellite fix (ISSUE 2): a long run of `in` deps on one address
+        // must not accumulate a reader record per task until the next
+        // writer — retired readers are compacted at registration.
+        let rt = OmpRuntime::for_tests(2);
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let token = 0xF00Dusize;
+            for _ in 0..64 {
+                ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::In }], || {});
+                ctx.taskwait(); // every reader retires before the next registers
+            }
+            let live = ctx.parent.deps.lock().unwrap().reader_count(token);
+            assert!(
+                live <= 1,
+                "reader records accumulated without a writer: {live}"
+            );
+        });
+    }
+
+    #[test]
     fn taskgroup_waits_for_nested_tasks() {
         let rt = OmpRuntime::for_tests(4);
         let done = Arc::new(AU::new(0));
@@ -385,6 +525,33 @@ mod tests {
             });
             assert_eq!(d.load(Ordering::SeqCst), 8, "taskgroup returned early");
         });
+    }
+
+    #[test]
+    fn taskgroup_panic_pops_group_stack() {
+        // Satellite fix (ISSUE 2): a panicking taskgroup body must not
+        // leave the group pushed — later tasks would inherit a dead group.
+        let rt = OmpRuntime::for_tests(2);
+        let done = Arc::new(AU::new(0));
+        let d = done.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                ctx.taskgroup(|| panic!("taskgroup body panics"));
+            }));
+            assert!(unwound.is_err());
+            assert!(
+                ctx.parent.groups.lock().unwrap().is_empty(),
+                "stale group left on the stack after panic"
+            );
+            // Later tasks in the region must not inherit the dead group.
+            let d = d.clone();
+            ctx.task(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+            ctx.taskwait();
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 1);
     }
 
     #[test]

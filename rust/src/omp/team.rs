@@ -87,7 +87,9 @@ impl Team {
 }
 
 /// Parent frame for explicit-task tracking: children counter (taskwait),
-/// sibling dependence map (`depend` clauses), and the taskgroup stack.
+/// sibling dependence map (`depend` clauses — completion *futures* per
+/// storage address since the futurized engine of DESIGN.md §7), and the
+/// taskgroup stack.
 pub struct ParentFrame {
     pub children: Arc<WaitCounter>,
     pub deps: Mutex<DepMap>,
@@ -107,7 +109,7 @@ impl Default for ParentFrame {
 impl ParentFrame {
     /// Re-arm for hot-team reuse: drop the finished region's dependence
     /// records (their tasks are all retired — keeping them would only pin
-    /// dead `TaskNode`s in memory).
+    /// dead completion-future states in memory).
     fn reset(&self) {
         debug_assert_eq!(self.children.count(), 0, "reused frame with live children");
         self.deps.lock().unwrap().clear();

@@ -7,8 +7,12 @@
 //! benchmark/example takes `&dyn ParallelRuntime`.
 
 use std::ops::Range;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
+use crate::amt::future::{Future, Promise};
+use crate::amt::task::Hint;
+use crate::amt::Priority;
 use crate::omp::icv::Schedule;
 use crate::omp::{fork_call, OmpRuntime};
 
@@ -115,6 +119,82 @@ impl HpxMpRuntime {
             // implicit region-end barrier joins the loop
         });
     }
+
+    /// The async seam (ISSUE 2): run `body` over a static partition of
+    /// `range` as plain AMT tasks and return a [`Future<()>`] fulfilled
+    /// when every chunk has retired — **no blocking join**, so regions
+    /// compose into dataflow graphs (`then`/`when_all`) without
+    /// intermediate barriers.
+    ///
+    /// Unlike [`ParallelRuntime::parallel_for`] this path forks no OpenMP
+    /// team: chunks are raw dataflow tasks with no implicit-task context,
+    /// so the body must not use team constructs (barriers, worksharing,
+    /// `omp_get_thread_num`).  `body` is shared (`Arc`) because nothing
+    /// blocks for it — it must outlive the caller's stack frame.
+    pub fn parallel_for_async(
+        &self,
+        num_tasks: usize,
+        range: Range<i64>,
+        body: Arc<dyn Fn(Range<i64>) + Send + Sync>,
+    ) -> Future<()> {
+        let n = range.end - range.start;
+        if n <= 0 {
+            return Future::ready(());
+        }
+        let tasks = num_tasks.clamp(1, n as usize) as i64;
+        let per = n / tasks + i64::from(n % tasks != 0);
+        let chunks: Vec<Range<i64>> = (0..tasks)
+            .map(|t| {
+                let lo = (range.start + t * per).min(range.end);
+                let hi = (lo + per).min(range.end);
+                lo..hi
+            })
+            .filter(|r| r.start < r.end)
+            .collect();
+
+        let promise = Arc::new(Mutex::new(Some(Promise::new())));
+        let joined = promise.lock().unwrap().as_ref().unwrap().get_future();
+        let remaining = Arc::new(AtomicUsize::new(chunks.len()));
+
+        /// Chunk arrival as a drop guard: a panicking body must still
+        /// count down and (as last arriver) fulfil the joined promise —
+        /// otherwise one crashed chunk would hang every waiter forever
+        /// (the panic itself stays isolated in the worker layer).
+        struct Arrive {
+            remaining: Arc<AtomicUsize>,
+            promise: Arc<Mutex<Option<Promise<()>>>>,
+        }
+        impl Drop for Arrive {
+            fn drop(&mut self) {
+                if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    if let Some(p) = self.promise.lock().unwrap().take() {
+                        p.set_value(());
+                    }
+                }
+            }
+        }
+
+        let bodies: Vec<(Hint, Box<dyn FnOnce() + Send>)> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(t, r)| {
+                let body = body.clone();
+                let arrive = Arrive {
+                    remaining: remaining.clone(),
+                    promise: promise.clone(),
+                };
+                let chunk: Box<dyn FnOnce() + Send> = Box::new(move || {
+                    let _arrive = arrive;
+                    body(r);
+                });
+                (Hint::Worker(t), chunk)
+            })
+            .collect();
+        self.rt
+            .sched
+            .spawn_batch(Priority::Normal, "par_async_chunk", bodies);
+        joined
+    }
 }
 
 impl ParallelRuntime for HpxMpRuntime {
@@ -198,6 +278,87 @@ mod tests {
     #[test]
     fn serial_runtime_runs_whole_range_once() {
         check_covers(&SerialRuntime, 1, 100, LoopSched::default());
+    }
+
+    #[test]
+    fn parallel_for_async_covers_range_once() {
+        let rt = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        for (tasks, n) in [(1usize, 100i64), (4, 1000), (16, 37), (8, 0)] {
+            let seen: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+            let s = seen.clone();
+            let fut = rt.parallel_for_async(
+                tasks,
+                0..n,
+                Arc::new(move |r: std::ops::Range<i64>| {
+                    for i in r {
+                        s[i as usize].fetch_add(1, Ordering::SeqCst);
+                    }
+                }),
+            );
+            fut.wait();
+            assert!(
+                seen.iter().all(|c| c.load(Ordering::SeqCst) == 1),
+                "async chunks missed/duplicated iterations (tasks={tasks}, n={n})"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_for_async_panicking_chunk_still_fulfils_join() {
+        // One crashed chunk must not hang the joined future: arrival runs
+        // via a drop guard, the panic stays isolated in the worker layer.
+        let rt = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        let ran = Arc::new(AtomicU32::new(0));
+        let r2 = ran.clone();
+        let fut = rt.parallel_for_async(
+            4,
+            0..4,
+            Arc::new(move |r: std::ops::Range<i64>| {
+                if r.start == 0 {
+                    panic!("chunk body panics");
+                }
+                r2.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        fut.wait();
+        assert_eq!(ran.load(Ordering::SeqCst), 3, "surviving chunks ran");
+        assert_eq!(rt.rt.sched.task_panics(), 1, "panic not isolated");
+    }
+
+    #[test]
+    fn async_regions_compose_without_intermediate_joins() {
+        // Phase 2 hangs off phase 1's future via `then` — the caller only
+        // blocks once, at the very end.
+        let rt = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        let n = 512i64;
+        let data: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+        let d1 = data.clone();
+        let phase1 = rt.parallel_for_async(
+            4,
+            0..n,
+            Arc::new(move |r: std::ops::Range<i64>| {
+                for i in r {
+                    d1[i as usize].fetch_add(1, Ordering::SeqCst);
+                }
+            }),
+        );
+        let sched = rt.rt.sched.clone();
+        let d2 = data.clone();
+        let rt2 = HpxMpRuntime::new(rt.rt.clone());
+        let phase2 = phase1.then(&sched, move |_| {
+            let inner = rt2.parallel_for_async(
+                4,
+                0..n,
+                Arc::new(move |r: std::ops::Range<i64>| {
+                    for i in r {
+                        d2[i as usize].fetch_add(10, Ordering::SeqCst);
+                    }
+                }),
+            );
+            inner.wait();
+        });
+        phase2.wait();
+        assert!(data.iter().all(|c| c.load(Ordering::SeqCst) == 11));
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Integration tests for the futurized dataflow engine (ISSUE 2):
+//! the `amt::future` layer driving OpenMP `depend` semantics, the async
+//! `par` seam, and the tiled dataflow Blaze backend, end to end.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use hpxmp::amt::future::{when_all, Future, Promise};
+use hpxmp::amt::{PolicyKind, Scheduler};
+use hpxmp::blaze::{dmatdmatmult, dmatdmatmult_dataflow_tiled, BlazeConfig, DynMatrix};
+use hpxmp::omp::{current_ctx, fork_call, Dep, DepKind, OmpRuntime};
+use hpxmp::par::{HpxMpRuntime, SerialRuntime};
+
+#[test]
+fn when_all_empty_set_is_ready_without_a_scheduler() {
+    let futures: Vec<Future<i32>> = Vec::new();
+    let joined = when_all(&futures);
+    assert!(joined.is_ready());
+    joined.wait();
+}
+
+#[test]
+fn continuation_ordering_under_every_policy() {
+    // A then-chain must execute strictly in chain order no matter which
+    // scheduling policy dispatches the continuation tasks.
+    for policy in PolicyKind::ALL {
+        let sched = Scheduler::new(2, policy);
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let head = Promise::new();
+        let mut tail: Future<()> = head.get_future();
+        for step in 0..32usize {
+            let trace = trace.clone();
+            tail = tail.then(&sched, move |_| {
+                trace.lock().unwrap().push(step);
+            });
+        }
+        head.set_value(());
+        tail.wait();
+        assert_eq!(
+            *trace.lock().unwrap(),
+            (0..32).collect::<Vec<_>>(),
+            "policy {}",
+            policy.name()
+        );
+        sched.shutdown();
+    }
+}
+
+#[test]
+fn diamond_dependence_graph_via_task_with_deps() {
+    // A (out x) -> {B, C} (in x) -> D (inout x): the classic diamond,
+    // expressed through the futurized `depend` engine.
+    let rt = OmpRuntime::for_tests(4);
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let o = order.clone();
+    fork_call(&rt, Some(1), move |_| {
+        let ctx = current_ctx().unwrap();
+        let token = 0x5EEDusize;
+        let o2 = o.clone();
+        ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::Out }], move || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            o2.lock().unwrap().push("A");
+        });
+        for name in ["B", "C"] {
+            let o2 = o.clone();
+            ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::In }], move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                o2.lock().unwrap().push(name);
+            });
+        }
+        let o2 = o.clone();
+        ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::InOut }], move || {
+            o2.lock().unwrap().push("D");
+        });
+        ctx.taskwait();
+    });
+    let order = order.lock().unwrap();
+    assert_eq!(order.len(), 4, "tasks lost: {order:?}");
+    assert_eq!(order[0], "A", "writer must run first: {order:?}");
+    assert_eq!(order[3], "D", "joining writer must run last: {order:?}");
+    assert!(
+        order[1..3].contains(&"B") && order[1..3].contains(&"C"),
+        "readers must run between the writers: {order:?}"
+    );
+}
+
+#[test]
+fn taskwait_inside_dependent_continuations_cannot_self_deadlock() {
+    // Stress: every link of a 50-deep dependence chain is a continuation
+    // task that itself spawns children and taskwaits on them — the inner
+    // taskwait must help-run pending tasks, never block the chain.
+    let rt = OmpRuntime::for_tests(4);
+    let done = Arc::new(AtomicUsize::new(0));
+    let d = done.clone();
+    fork_call(&rt, Some(2), move |ctx| {
+        if ctx.tid != 0 {
+            return;
+        }
+        let ctx = current_ctx().unwrap();
+        let token = 0xBEEFusize;
+        for _ in 0..50 {
+            let d = d.clone();
+            ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::InOut }], move || {
+                let inner = current_ctx().unwrap();
+                for _ in 0..4 {
+                    let d = d.clone();
+                    inner.task(move || {
+                        d.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+                inner.taskwait(); // inside a continuation-scheduled task
+                d.fetch_add(10, Ordering::SeqCst);
+            });
+        }
+        ctx.taskwait();
+    });
+    assert_eq!(done.load(Ordering::SeqCst), 50 * 14);
+}
+
+#[test]
+fn depend_chains_survive_hot_team_reuse() {
+    // Back-to-back regions reusing the cached hot team must each see a
+    // pristine dependence scope (DepMap cleared at park) while the
+    // futurized chain still orders within every region.
+    let rt = OmpRuntime::for_tests(2);
+    for region in 0..20 {
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let t = trace.clone();
+        fork_call(&rt, Some(2), move |ctx| {
+            if ctx.tid != 0 {
+                return;
+            }
+            let ctx = current_ctx().unwrap();
+            let token = 0xABCDusize;
+            for step in 0..6 {
+                let t = t.clone();
+                ctx.task_with_deps(&[Dep { addr: token, kind: DepKind::InOut }], move || {
+                    t.lock().unwrap().push(step);
+                });
+            }
+            ctx.taskwait();
+        });
+        assert_eq!(
+            *trace.lock().unwrap(),
+            (0..6).collect::<Vec<_>>(),
+            "region {region}"
+        );
+    }
+}
+
+#[test]
+fn dataflow_mmult_matches_serial_oracle_across_shapes() {
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+    // (m, k, n) including non-square and tile-ragged shapes.
+    for (m, k, n) in [(64usize, 64usize, 64usize), (100, 60, 130), (57, 119, 83)] {
+        let a = DynMatrix::random(m, k, 41);
+        let b = DynMatrix::random(k, n, 42);
+        let mut c_df = DynMatrix::zeros(m, n);
+        dmatdmatmult_dataflow_tiled(&hpx, &BlazeConfig::new(4), &a, &b, &mut c_df, 32);
+        let mut c_ref = DynMatrix::zeros(m, n);
+        dmatdmatmult(&SerialRuntime, &BlazeConfig::new(1), &a, &b, &mut c_ref);
+        assert_eq!(
+            c_df.max_abs_diff(&c_ref),
+            0.0,
+            "dataflow mmult diverged at ({m},{k},{n})"
+        );
+    }
+}
+
+#[test]
+fn async_parallel_for_chains_into_dataflow_mmult() {
+    // The composition the paper says fork/join cannot express: an async
+    // element-wise pass whose future gates a dependent reduction, with the
+    // caller blocking exactly once.
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+    let n = 256i64;
+    let data: Arc<Vec<AtomicUsize>> = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+    let d = data.clone();
+    let phase1 = hpx.parallel_for_async(
+        4,
+        0..n,
+        Arc::new(move |r: std::ops::Range<i64>| {
+            for i in r {
+                d[i as usize].store(i as usize + 1, Ordering::SeqCst);
+            }
+        }),
+    );
+    let sched = hpx.rt.sched.clone();
+    let d = data.clone();
+    let total = phase1.then(&sched, move |_| {
+        d.iter().map(|v| v.load(Ordering::SeqCst)).sum::<usize>()
+    });
+    assert_eq!(total.get(), (1..=n as usize).sum::<usize>());
+}
