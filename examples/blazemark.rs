@@ -40,6 +40,8 @@ fn main() {
             vec![10_000, 38_000, 1_048_576]
         } else if op == Op::DMatDMatAdd {
             vec![100, 190, 700]
+        } else if op == Op::DMatDVecMult {
+            vec![128, 330, 1000]
         } else {
             vec![32, 55, 300]
         };

@@ -1,0 +1,142 @@
+//! Concurrent-regions serving ablation (ISSUE 3) — the regression guard
+//! for the multi-tenant team pool + admission path.
+//!
+//! Task-Bench-style methodology over the serving scenario: at each
+//! `{mix, clients, threads}` cell, M client threads issue back-to-back
+//! streams of Blaze kernel requests (each request = one top-level
+//! `parallel` region) through
+//!
+//! * `hpxmp-shared`        — ONE hpxMP runtime shared by every client
+//!                           (team pool + admission arbitrate), and
+//! * `baseline-per-client` — a private warm OS-thread pool per client
+//!                           (the "competing threading systems" regime:
+//!                           K clients × n pool threads on one machine).
+//!
+//! Emits `results/BENCH_concurrent.json`: `rows[]` with requests/sec and
+//! p50/p99 request latency per cell, plus the headline
+//! `throughput_shared_vs_percclient` map — per client count, the best
+//! shared/per-client throughput ratio over the (mix, threads) grid.
+//! Target: ≥ 1.0 at ≥ 4 concurrent clients on at least one mix.
+//!
+//! `BENCH_THREADS` / `BENCH_CLIENTS` override the grids; `BENCH_SMOKE=1`
+//! shrinks the request counts for CI.
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::coordinator::serve::{serve_per_client, serve_shared, KernelMix, ServeCfg, ServeStats};
+use hpxmp::omp::{icv, OmpRuntime};
+
+mod common;
+
+fn clients_grid() -> Vec<usize> {
+    std::env::var("BENCH_CLIENTS")
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .map(|t| t.trim().parse().expect("BENCH_CLIENTS"))
+                .collect()
+        })
+        .unwrap_or_else(|| vec![1, 2, 4, 8])
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let threads = common::heatmap_threads();
+    let clients = clients_grid();
+    let requests = if smoke { 25 } else { 150 };
+
+    let mut rows: Vec<ServeStats> = Vec::new();
+    for mix in KernelMix::ALL {
+        for &c in &clients {
+            for &t in &threads {
+                eprintln!("[concurrent] mix={} clients={c} threads={t}", mix.name());
+                let cfg = ServeCfg::new(c, t, requests, mix);
+                // The shared scheduler is sized to the machine, not to
+                // K·n: admission is exactly what the cell measures.
+                let workers = icv::num_procs().max(t);
+                let rt = OmpRuntime::new(workers, PolicyKind::PriorityLocal);
+                rt.icv.set_nthreads(t);
+                rows.push(serve_shared(&rt, &cfg));
+                rows.push(serve_per_client(&cfg));
+            }
+        }
+    }
+
+    // Table.
+    println!(
+        "{:<7} {:<20} {:>8} {:>8} {:>12} {:>10} {:>10}",
+        "mix", "runtime", "clients", "threads", "reqs/s", "p50 us", "p99 us"
+    );
+    for r in &rows {
+        println!(
+            "{:<7} {:<20} {:>8} {:>8} {:>12.1} {:>10.1} {:>10.1}",
+            r.mix.name(),
+            r.runtime,
+            r.clients,
+            r.threads,
+            r.reqs_per_sec,
+            r.p50_us,
+            r.p99_us
+        );
+    }
+
+    // Headline: per client count, the best shared/per-client throughput
+    // ratio across the (mix, threads) grid.
+    let mut ratios: Vec<(usize, f64)> = Vec::new();
+    for &c in &clients {
+        let mut best: Option<f64> = None;
+        for mix in KernelMix::ALL {
+            for &t in &threads {
+                let find = |name: &str| {
+                    rows.iter()
+                        .find(|r| {
+                            r.runtime == name && r.mix == mix && r.clients == c && r.threads == t
+                        })
+                        .map(|r| r.reqs_per_sec)
+                };
+                if let (Some(s), Some(p)) = (find("hpxmp-shared"), find("baseline-per-client")) {
+                    if p > 0.0 {
+                        let ratio = s / p;
+                        best = Some(best.map_or(ratio, |b: f64| b.max(ratio)));
+                    }
+                }
+            }
+        }
+        if let Some(b) = best {
+            println!("shared vs per-client throughput @{c} clients (best cell): {b:.3}x");
+            ratios.push((c, b));
+        }
+    }
+
+    // JSON report (same format family as BENCH_fork_overhead.json).
+    let mut json = String::from("{\n  \"bench\": \"concurrent\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mix\": \"{}\", \"runtime\": \"{}\", \"clients\": {}, \"threads\": {}, \
+             \"reqs_per_sec\": {:.2}, \"p50_us\": {:.2}, \"p99_us\": {:.2}}}{}\n",
+            r.mix.name(),
+            r.runtime,
+            r.clients,
+            r.threads,
+            r.reqs_per_sec,
+            r.p50_us,
+            r.p99_us,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"throughput_shared_vs_percclient\": {");
+    for (i, (c, ratio)) in ratios.iter().enumerate() {
+        json.push_str(&format!(
+            "{}\"{}\": {:.3}",
+            if i == 0 { "" } else { ", " },
+            c,
+            ratio
+        ));
+    }
+    json.push_str("}\n}\n");
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_concurrent.json");
+    std::fs::write(&path, json).expect("write BENCH_concurrent.json");
+    println!("{}", path.display());
+}

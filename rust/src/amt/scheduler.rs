@@ -24,6 +24,10 @@ pub struct Shared {
     pub(super) sleepers: AtomicUsize,
     pub(super) metrics: Metrics,
     pub(super) panics: AtomicU64,
+    /// Rotating cursor behind [`Scheduler::hint_base`]: spreads the
+    /// placement hints of concurrent submitters (e.g. many fork/join
+    /// clients on one scheduler) across distinct worker queues.
+    hint_cursor: AtomicUsize,
     policy: PolicyKind,
 }
 
@@ -46,6 +50,7 @@ impl Scheduler {
             sleepers: AtomicUsize::new(0),
             metrics: Metrics::default(),
             panics: AtomicU64::new(0),
+            hint_cursor: AtomicUsize::new(0),
             policy,
         });
         let handles = (0..workers)
@@ -69,6 +74,20 @@ impl Scheduler {
 
     pub fn workers(&self) -> usize {
         self.shared.queues.workers()
+    }
+
+    /// Claim a placement-hint base for a batch of `span` related tasks:
+    /// successive claims advance a rotating cursor, so K concurrent
+    /// submitters (fork/join clients, dataflow producers) get
+    /// *interleaved* worker-queue hints instead of all pinning their
+    /// batches onto workers `0..span` — the hint-distribution half of
+    /// multi-tenant fair-share (DESIGN.md §8).  The caller hints task `i`
+    /// of the batch to worker `(base + i) % workers`.
+    pub fn hint_base(&self, span: usize) -> usize {
+        if span == 0 {
+            return 0;
+        }
+        self.shared.hint_cursor.fetch_add(span, Ordering::Relaxed) % self.workers()
     }
 
     /// Register a task — `hpx::applier::register_thread_nullary` analog.
@@ -130,8 +149,13 @@ impl Scheduler {
         }
         // A submitting worker reaches its next scheduling point immediately
         // after this call (fork masters help-wait on the join), so it will
-        // run one of the batch itself: only the rest need wake-ups.
-        self.wake_n(if submitter.is_some() { n - 1 } else { n });
+        // run one of the batch itself: only the rest need wake-ups.  The
+        // wake request is clamped to the worker count: under concurrent
+        // spawn_batch callers each batch may only claim as many wake-ups
+        // as there are workers to wake, keeping the notify loop bounded
+        // and the idle-lock hold time fair across clients.
+        let wakes = if submitter.is_some() { n - 1 } else { n };
+        self.wake_n(wakes.min(self.workers()));
     }
 
     /// Notify up to `n` sleeping workers under one idle-lock acquisition;
@@ -313,6 +337,17 @@ mod tests {
         let s = Scheduler::new(2, PolicyKind::Global);
         s.spawn(Priority::Normal, Hint::Any, "t", || {});
         s.shutdown();
+        s.shutdown();
+    }
+
+    #[test]
+    fn hint_base_interleaves_consecutive_batches() {
+        let s = Scheduler::new(4, PolicyKind::PriorityLocal);
+        let a = s.hint_base(3);
+        let b = s.hint_base(3);
+        assert!(a < 4 && b < 4);
+        assert_ne!(a, b, "consecutive batches must start on different queues");
+        assert_eq!(s.hint_base(0), 0, "empty batch claims no cursor space");
         s.shutdown();
     }
 

@@ -19,6 +19,6 @@ pub mod vector;
 pub use matrix::DynMatrix;
 pub use ops::{
     daxpy, dmatdmatadd, dmatdmatmult, dmatdmatmult_dataflow, dmatdmatmult_dataflow_tiled,
-    dvecdvecadd, BlazeConfig, DATAFLOW_TILE,
+    dmatdvecmult, dvecdvecadd, BlazeConfig, DATAFLOW_TILE,
 };
 pub use vector::DynVector;

@@ -157,6 +157,33 @@ pub fn dmatdmatmult(
     rt.parallel_for(cfg.threads, 0..m as i64, cfg.sched, &row_body);
 }
 
+/// dmatdvecmult (ISSUE 3 — the suite's dense matrix-vector product, the
+/// missing fourth Blazemark kernel): `y = A * x`, rows of `y` distributed
+/// across the team; Blaze gates on the matrix's **row count** (threshold
+/// 330).  Supports non-square `A` (m × n times length-n).
+pub fn dmatdvecmult(
+    rt: &dyn ParallelRuntime,
+    cfg: &BlazeConfig,
+    a: &DynMatrix,
+    x: &DynVector,
+    y: &mut DynVector,
+) {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(n, x.len());
+    assert_eq!(m, y.len());
+    if !parallelize(m, DMATDVECMULT_THRESHOLD) || cfg.threads <= 1 {
+        serial::matvec_rows(a.as_slice(), x.as_slice(), y.as_mut_slice());
+        return;
+    }
+    let yp = SendPtr(y.as_mut_slice().as_mut_ptr());
+    rt.parallel_for(cfg.threads, 0..m as i64, cfg.sched, &|r| {
+        let (rs, re) = (r.start as usize, r.end as usize);
+        // SAFETY: row bands partition 0..m disjointly.
+        let y_sub = unsafe { yp.slice(&r) };
+        serial::matvec_rows(&a.as_slice()[rs * n..re * n], x.as_slice(), y_sub);
+    });
+}
+
 /// Covariant const-pointer smuggle for shared parallel reads from
 /// dataflow tasks (the read-side sibling of [`SendPtr`]).
 #[derive(Clone, Copy)]
@@ -283,6 +310,12 @@ pub mod flops {
     pub fn dmatdmatmult(n: usize) -> f64 {
         2.0 * (n as f64).powi(3)
     }
+
+    /// dmatdvecmult: 2·n² for a square n×n matrix (multiply-add per
+    /// matrix element).
+    pub fn dmatdvecmult(n: usize) -> f64 {
+        2.0 * (n as f64).powi(2)
+    }
 }
 
 #[cfg(test)]
@@ -381,6 +414,71 @@ mod tests {
         assert!(c.max_abs_diff(&c_ref) < 1e-12);
     }
 
+    /// Naive dot-product oracle for `y = A * x`.
+    fn matvec_oracle(a: &DynMatrix, x: &DynVector) -> DynVector {
+        let (m, n) = (a.rows(), a.cols());
+        let mut y = DynVector::zeros(m);
+        for i in 0..m {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += a.at(i, j) * x.as_slice()[j];
+            }
+            y.as_mut_slice()[i] = s;
+        }
+        y
+    }
+
+    #[test]
+    fn dmatdvecmult_small_uses_serial_path_and_is_correct() {
+        // 100 rows < 330 threshold: serial fallback must still be exact.
+        let rt = BaselineRuntime::new(4);
+        let a = DynMatrix::random(100, 100, 21);
+        let x = DynVector::random(100, 22);
+        let mut y = DynVector::zeros(100);
+        dmatdvecmult(&rt, &BlazeConfig::new(4), &a, &x, &mut y);
+        assert!(y.max_abs_diff(&matvec_oracle(&a, &x)) < 1e-12);
+    }
+
+    #[test]
+    fn dmatdvecmult_parallel_matches_serial_oracle() {
+        let rt = BaselineRuntime::new(4);
+        let n = 400; // above the 330-row threshold: parallel path
+        let a = DynMatrix::random(n, n, 23);
+        let x = DynVector::random(n, 24);
+        let mut y = DynVector::zeros(n);
+        dmatdvecmult(&rt, &BlazeConfig::new(4), &a, &x, &mut y);
+        assert_eq!(y.max_abs_diff(&matvec_oracle(&a, &x)), 0.0);
+    }
+
+    #[test]
+    fn dmatdvecmult_non_square_shapes() {
+        let rt = BaselineRuntime::new(4);
+        // (m, n) pairs straddling the row threshold, wide and tall.
+        for (m, n) in [(400usize, 37usize), (350, 700), (64, 512)] {
+            let a = DynMatrix::random(m, n, 25);
+            let x = DynVector::random(n, 26);
+            let mut y = DynVector::zeros(m);
+            dmatdvecmult(&rt, &BlazeConfig::new(4), &a, &x, &mut y);
+            assert_eq!(
+                y.max_abs_diff(&matvec_oracle(&a, &x)),
+                0.0,
+                "shape {m}x{n} diverged from the dot-product oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn dmatdvecmult_hpxmp_matches_baseline() {
+        use crate::omp::OmpRuntime;
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        let n = 512;
+        let a = DynMatrix::random(n, n, 27);
+        let x = DynVector::random(n, 28);
+        let mut y = DynVector::zeros(n);
+        dmatdvecmult(&hpx, &BlazeConfig::new(4), &a, &x, &mut y);
+        assert_eq!(y.max_abs_diff(&matvec_oracle(&a, &x)), 0.0);
+    }
+
     #[test]
     fn dmatdmatmult_dataflow_matches_forkjoin_oracle_exactly() {
         use crate::omp::OmpRuntime;
@@ -408,5 +506,6 @@ mod tests {
         assert_eq!(flops::daxpy(100), 200.0);
         assert_eq!(flops::dmatdmatadd(10), 100.0);
         assert_eq!(flops::dmatdmatmult(10), 2000.0);
+        assert_eq!(flops::dmatdvecmult(10), 200.0);
     }
 }

@@ -46,6 +46,25 @@ pub fn matmul_row(a_row: &[f64], b: &[f64], n: usize, c_row: &mut [f64]) {
     }
 }
 
+/// A row band of `y = A * x` (dmatdvecmult, the paper suite's dense
+/// matrix-vector product): `a` holds `y.len()` consecutive rows of A
+/// (row-major, `x.len()` columns each), and `y[i]` receives the dot
+/// product of row `i` with `x`.  Plain accumulate-in-register form so the
+/// inner loop vectorizes (slice-zip, no bounds checks).
+#[inline]
+pub fn matvec_rows(a: &[f64], x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    debug_assert_eq!(a.len(), y.len() * n);
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = 0.0;
+        for (aij, xj) in row.iter().zip(x.iter()) {
+            acc += *aij * *xj;
+        }
+        *yi = acc;
+    }
+}
+
 /// One row *segment* of `C = A * B` (the tiled dataflow decomposition's
 /// inner kernel): `c_seg = C[i, j0..j0+c_seg.len()]`, full-depth k
 /// accumulation in increasing k — the same summation order as
@@ -104,6 +123,32 @@ mod tests {
         let mut c_row = [0.0; 2];
         matmul_row(&a_row, &b, 2, &mut c_row);
         assert_eq!(c_row, [7.0, 10.0]);
+    }
+
+    #[test]
+    fn matvec_rows_identity_and_known_product() {
+        // A = I(3): y == x.
+        let a = [1., 0., 0., 0., 1., 0., 0., 0., 1.];
+        let x = [3.0, 4.0, 5.0];
+        let mut y = [0.0; 3];
+        matvec_rows(&a, &x, &mut y);
+        assert_eq!(y, x);
+        // A = [[1,2],[3,4]], x = [1,2] => y = [5, 11].
+        let a = [1., 2., 3., 4.];
+        let x = [1.0, 2.0];
+        let mut y = [0.0; 2];
+        matvec_rows(&a, &x, &mut y);
+        assert_eq!(y, [5.0, 11.0]);
+    }
+
+    #[test]
+    fn matvec_rows_non_square_band() {
+        // 3x2 matrix (non-square): each row dotted with a length-2 x.
+        let a = [1., 2., 3., 4., 5., 6.];
+        let x = [10.0, 100.0];
+        let mut y = [0.0; 3];
+        matvec_rows(&a, &x, &mut y);
+        assert_eq!(y, [210.0, 430.0, 650.0]);
     }
 
     #[test]

@@ -21,6 +21,11 @@ pub const DMATDMATADD_THRESHOLD: usize = 36_100;
 /// `BLAZE_DMATDMATMULT_THRESHOLD` (element count of the target matrix).
 pub const DMATDMATMULT_THRESHOLD: usize = 3_025;
 
+/// `BLAZE_DMATDVECMULT_THRESHOLD` — Blaze 3.4 gates the dense
+/// matrix/vector multiplication on the *row count* of the matrix (the
+/// target vector's length), default 330.
+pub const DMATDVECMULT_THRESHOLD: usize = 330;
+
 /// Would Blaze parallelize an operation on `elements` under `threshold`?
 #[inline]
 pub fn parallelize(elements: usize, threshold: usize) -> bool {
@@ -47,6 +52,13 @@ mod tests {
         // dmatdmatmult: 55x55 = 3025.
         assert!(parallelize(55 * 55, DMATDMATMULT_THRESHOLD));
         assert!(!parallelize(54 * 54, DMATDMATMULT_THRESHOLD));
+    }
+
+    #[test]
+    fn matvec_threshold_matches_blaze_default() {
+        assert_eq!(DMATDVECMULT_THRESHOLD, 330);
+        assert!(parallelize(330, DMATDVECMULT_THRESHOLD));
+        assert!(!parallelize(329, DMATDVECMULT_THRESHOLD));
     }
 
     #[test]

@@ -56,6 +56,11 @@ pub fn run_all(rt: &Arc<OmpRuntime>) -> Vec<Check> {
         r
     });
     add("T2", "omp_in_parallel", check_in_parallel(rt));
+    add(
+        "T2",
+        "omp_get_ancestor_thread_num/team_size",
+        check_ancestors(rt),
+    );
     add("T2", "omp_get_num_procs", ok_if(omp_get_num_procs() >= 1, "procs < 1"));
     add(
         "T2",
@@ -292,6 +297,23 @@ fn check_in_parallel(rt: &Arc<OmpRuntime>) -> Result<(), String> {
         }
     });
     ok_if(ok.load(Ordering::SeqCst) == 2, "false inside region")
+}
+
+fn check_ancestors(rt: &Arc<OmpRuntime>) -> Result<(), String> {
+    let bad = Arc::new(AtomicUsize::new(0));
+    let b = bad.clone();
+    fork_call(rt, Some(2), move |ctx| {
+        let ok = omp_get_ancestor_thread_num(0) == 0
+            && omp_get_team_size(0) == 1
+            && omp_get_ancestor_thread_num(1) == ctx.tid as isize
+            && omp_get_team_size(1) == 2
+            && omp_get_ancestor_thread_num(2) == -1
+            && omp_get_team_size(2) == -1;
+        if !ok {
+            b.fetch_add(1, Ordering::SeqCst);
+        }
+    });
+    ok_if(bad.load(Ordering::SeqCst) == 0, "ancestor introspection wrong")
 }
 
 fn check_ompt_parallel(rt: &Arc<OmpRuntime>) -> Result<(), String> {

@@ -6,11 +6,14 @@
 //! * [`sweep`] — threads×size ratio heatmaps (Figs 2–5) and per-thread
 //!   scaling series (Figs 6–9);
 //! * [`conformance`] — the Tables 1–3 feature inventory, verified live;
+//! * [`serve`] — the multi-tenant serving scenario (ISSUE 3): M client
+//!   threads × mixed kernels, shared runtime vs pool-per-client;
 //! * [`report`] — CSV + ASCII emission under `results/`.
 
 pub mod blazemark;
 pub mod conformance;
 pub mod report;
+pub mod serve;
 pub mod sweep;
 
 pub use blazemark::{measure, Op};

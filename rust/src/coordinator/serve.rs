@@ -1,0 +1,283 @@
+//! The serving scenario (ISSUE 3): M client threads issuing streams of
+//! mixed Blaze kernels against one runtime configuration.
+//!
+//! This is the paper's composition story made measurable: an application
+//! with many concurrently-requesting threads calls into an
+//! OpenMP-parallelized library.  With a **shared** hpxMP runtime every
+//! client's `parallel` regions land on one AMT scheduler (the multi-tenant
+//! team pool + admission of DESIGN.md §8 arbitrate); with the
+//! **pool-per-client** baseline each client owns a private warm OS-thread
+//! pool — the abstract's "competing threading systems", K·n OS threads
+//! fighting over the same cores.
+//!
+//! [`serve_shared`] and [`serve_per_client`] drive the identical request
+//! stream through both shapes and report requests/sec plus p50/p99
+//! request latency; `hpxmp serve` and `benches/ablation_concurrent.rs`
+//! are thin front-ends over this module.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use crate::baseline::BaselineRuntime;
+use crate::blaze::{self, BlazeConfig, DynMatrix, DynVector};
+use crate::omp::OmpRuntime;
+use crate::par::{HpxMpRuntime, ParallelRuntime};
+use crate::util::stats::percentile;
+
+/// Which kernels a client's request stream cycles through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMix {
+    /// daxpy + dvecdvecadd: short memory-bound requests.
+    Vector,
+    /// All four: daxpy, dvecdvecadd, dmatdvecmult, dmatdmatmult.
+    Mixed,
+}
+
+#[derive(Clone, Copy)]
+enum Kernel {
+    Daxpy,
+    VAdd,
+    MatVec,
+    MMult,
+}
+
+impl KernelMix {
+    pub const ALL: [KernelMix; 2] = [KernelMix::Vector, KernelMix::Mixed];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "vec" | "vector" => KernelMix::Vector,
+            "mixed" | "all" => KernelMix::Mixed,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelMix::Vector => "vec",
+            KernelMix::Mixed => "mixed",
+        }
+    }
+
+    fn kernels(&self) -> &'static [Kernel] {
+        match self {
+            KernelMix::Vector => &[Kernel::Daxpy, Kernel::VAdd],
+            KernelMix::Mixed => &[Kernel::Daxpy, Kernel::VAdd, Kernel::MatVec, Kernel::MMult],
+        }
+    }
+}
+
+/// One serving-run configuration.  Operand sizes default to just above
+/// each kernel's Blaze parallelization threshold, so every request
+/// actually exercises the fork/join path instead of the serial fallback.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCfg {
+    /// Concurrent client (application) threads.
+    pub clients: usize,
+    /// Requested team size per `parallel` region.
+    pub threads: usize,
+    /// Requests each client issues back-to-back.
+    pub requests_per_client: usize,
+    pub mix: KernelMix,
+    /// daxpy / dvecdvecadd operand length (threshold 38 000).
+    pub vec_len: usize,
+    /// dmatdvecmult square dimension (row threshold 330).
+    pub matvec_dim: usize,
+    /// dmatdmatmult square dimension (element threshold 3 025 ≈ 55×55).
+    pub mmult_dim: usize,
+}
+
+impl ServeCfg {
+    pub fn new(clients: usize, threads: usize, requests_per_client: usize, mix: KernelMix) -> Self {
+        Self {
+            clients: clients.max(1),
+            threads: threads.max(1),
+            requests_per_client: requests_per_client.max(1),
+            mix,
+            vec_len: 50_000,
+            matvec_dim: 400,
+            mmult_dim: 64,
+        }
+    }
+}
+
+/// Aggregate result of one serving run.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeStats {
+    pub runtime: &'static str,
+    pub mix: KernelMix,
+    pub clients: usize,
+    pub threads: usize,
+    pub total_requests: usize,
+    pub reqs_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// Serve the stream on **one shared hpxMP runtime**: every client's
+/// regions contend for (and share) the same scheduler, team pool and
+/// admission budget.
+pub fn serve_shared(rt: &Arc<OmpRuntime>, cfg: &ServeCfg) -> ServeStats {
+    let rts: Vec<Arc<dyn ParallelRuntime>> = (0..cfg.clients)
+        .map(|_| Arc::new(HpxMpRuntime::new(rt.clone())) as Arc<dyn ParallelRuntime>)
+        .collect();
+    drive(cfg, "hpxmp-shared", rts)
+}
+
+/// Serve the stream with a **private warm OS-thread pool per client** —
+/// the libomp-style configuration where K clients × n pool threads
+/// oversubscribe the machine (the paper's competing-runtimes regime).
+pub fn serve_per_client(cfg: &ServeCfg) -> ServeStats {
+    let rts: Vec<Arc<dyn ParallelRuntime>> = (0..cfg.clients)
+        .map(|_| Arc::new(BaselineRuntime::new(cfg.threads)) as Arc<dyn ParallelRuntime>)
+        .collect();
+    drive(cfg, "baseline-per-client", rts)
+}
+
+fn drive(cfg: &ServeCfg, runtime: &'static str, rts: Vec<Arc<dyn ParallelRuntime>>) -> ServeStats {
+    assert_eq!(rts.len(), cfg.clients);
+    // clients + 1: the coordinator passes the barrier with the clients so
+    // the wall clock starts when every client is warmed up and ready.
+    let start = Arc::new(Barrier::new(cfg.clients + 1));
+    let cfg = *cfg;
+    let handles: Vec<_> = rts
+        .into_iter()
+        .enumerate()
+        .map(|(ci, rt)| {
+            let start = start.clone();
+            std::thread::Builder::new()
+                .name(format!("serve-client-{ci}"))
+                .spawn(move || client_loop(ci, rt, &cfg, &start))
+                .expect("spawn serve client")
+        })
+        .collect();
+    start.wait();
+    // Wall time spans the clients' own clocks (earliest start to latest
+    // stop), not the coordinator's post-barrier wakeup — a descheduled
+    // coordinator must not inflate reqs/sec.
+    let mut latencies = Vec::with_capacity(cfg.clients * cfg.requests_per_client);
+    let mut first_start: Option<Instant> = None;
+    let mut last_stop: Option<Instant> = None;
+    for h in handles {
+        let (t_start, t_stop, lat) = h.join().expect("serve client panicked");
+        first_start = Some(first_start.map_or(t_start, |f| f.min(t_start)));
+        last_stop = Some(last_stop.map_or(t_stop, |l| l.max(t_stop)));
+        latencies.extend(lat);
+    }
+    let wall = last_stop
+        .unwrap()
+        .duration_since(first_start.unwrap())
+        .as_secs_f64()
+        .max(1e-9);
+    ServeStats {
+        runtime,
+        mix: cfg.mix,
+        clients: cfg.clients,
+        threads: cfg.threads,
+        total_requests: latencies.len(),
+        reqs_per_sec: latencies.len() as f64 / wall,
+        p50_us: percentile(&latencies, 50.0) * 1e6,
+        p99_us: percentile(&latencies, 99.0) * 1e6,
+    }
+}
+
+/// One client: allocate operands once (outside the clock), then issue the
+/// request stream, timing each request individually.  Returns this
+/// client's (stream start, stream stop, per-request latencies).
+fn client_loop(
+    ci: usize,
+    rt: Arc<dyn ParallelRuntime>,
+    cfg: &ServeCfg,
+    start: &Barrier,
+) -> (Instant, Instant, Vec<f64>) {
+    let bcfg = BlazeConfig::new(cfg.threads);
+    let kernels = cfg.mix.kernels();
+    let seed = ci as u64;
+    let a = DynVector::random(cfg.vec_len, 100 + seed);
+    let mut b = DynVector::random(cfg.vec_len, 200 + seed);
+    let mut c = DynVector::zeros(cfg.vec_len);
+    let mv_a = DynMatrix::random(cfg.matvec_dim, cfg.matvec_dim, 300 + seed);
+    let mv_x = DynVector::random(cfg.matvec_dim, 400 + seed);
+    let mut mv_y = DynVector::zeros(cfg.matvec_dim);
+    let mm_a = DynMatrix::random(cfg.mmult_dim, cfg.mmult_dim, 500 + seed);
+    let mm_b = DynMatrix::random(cfg.mmult_dim, cfg.mmult_dim, 600 + seed);
+    let mut mm_c = DynMatrix::zeros(cfg.mmult_dim, cfg.mmult_dim);
+
+    start.wait();
+    let stream_start = Instant::now();
+    let mut latencies = Vec::with_capacity(cfg.requests_per_client);
+    for r in 0..cfg.requests_per_client {
+        let kernel = kernels[(ci + r) % kernels.len()];
+        let t0 = Instant::now();
+        match kernel {
+            Kernel::Daxpy => blaze::daxpy(rt.as_ref(), &bcfg, 3.0, &a, &mut b),
+            Kernel::VAdd => blaze::dvecdvecadd(rt.as_ref(), &bcfg, &a, &b, &mut c),
+            Kernel::MatVec => blaze::dmatdvecmult(rt.as_ref(), &bcfg, &mv_a, &mv_x, &mut mv_y),
+            Kernel::MMult => blaze::dmatdmatmult(rt.as_ref(), &bcfg, &mm_a, &mm_b, &mut mm_c),
+        }
+        latencies.push(t0.elapsed().as_secs_f64());
+    }
+    (stream_start, Instant::now(), latencies)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(mix: KernelMix) -> ServeCfg {
+        // Shrunken operands (below every threshold — serial bodies) keep
+        // the functional test fast; the real benches use over-threshold
+        // sizes.
+        let mut cfg = ServeCfg::new(2, 2, 4, mix);
+        cfg.vec_len = 1_000;
+        cfg.matvec_dim = 32;
+        cfg.mmult_dim = 16;
+        cfg
+    }
+
+    #[test]
+    fn shared_serving_counts_every_request() {
+        let rt = OmpRuntime::for_tests(2);
+        for mix in KernelMix::ALL {
+            let stats = serve_shared(&rt, &tiny(mix));
+            assert_eq!(stats.total_requests, 2 * 4, "mix {}", mix.name());
+            assert!(stats.reqs_per_sec > 0.0);
+            assert!(stats.p50_us > 0.0 && stats.p50_us <= stats.p99_us);
+        }
+        assert_eq!(rt.reserved_workers(), 0, "admission budget leaked");
+    }
+
+    #[test]
+    fn shared_serving_exercises_the_team_pool() {
+        // Over-threshold vectors: every request forks a real region on the
+        // shared runtime, so the team pool must see checkouts — and the
+        // admission budget must read zero once all clients drained.
+        let rt = OmpRuntime::for_tests(2);
+        let mut cfg = tiny(KernelMix::Vector);
+        cfg.vec_len = 50_000;
+        let stats = serve_shared(&rt, &cfg);
+        assert_eq!(stats.total_requests, 2 * 4);
+        assert!(
+            rt.pool_hits() + rt.pool_misses() > 0,
+            "no request reached the team pool"
+        );
+        assert_eq!(rt.reserved_workers(), 0, "admission budget leaked");
+    }
+
+    #[test]
+    fn per_client_serving_counts_every_request() {
+        let stats = serve_per_client(&tiny(KernelMix::Mixed));
+        assert_eq!(stats.total_requests, 2 * 4);
+        assert!(stats.reqs_per_sec > 0.0);
+        assert_eq!(stats.runtime, "baseline-per-client");
+    }
+
+    #[test]
+    fn mix_parse_roundtrip() {
+        for mix in KernelMix::ALL {
+            assert_eq!(KernelMix::parse(mix.name()), Some(mix));
+        }
+        assert_eq!(KernelMix::parse("all"), Some(KernelMix::Mixed));
+        assert_eq!(KernelMix::parse("nope"), None);
+    }
+}

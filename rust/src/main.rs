@@ -8,6 +8,7 @@
 //! hpxmp heatmap  --op <op|all> [...]      Figs 2-5 ratio heatmaps
 //! hpxmp scaling  --op <op|all> [...]      Figs 6-9 scaling series
 //! hpxmp dataflow [--sizes a,b,c]          fork-join vs futurized dataflow mmult
+//! hpxmp serve    [--clients M --mix m]    multi-tenant serving: shared vs per-client
 //! hpxmp offload  [--size N]               three-layer PJRT smoke run
 //! hpxmp policies [--tasks N]              AMT policy ablation
 //! ```
@@ -29,7 +30,8 @@ use hpxmp::util::cli::Args;
 use hpxmp::util::timing::BenchCfg;
 
 const VALUE_OPTS: &[&str] = &[
-    "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks",
+    "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks", "clients", "requests",
+    "mix",
 ];
 
 fn main() {
@@ -41,6 +43,7 @@ fn main() {
         "heatmap" => cmd_heatmap(&args),
         "scaling" => cmd_scaling(&args),
         "dataflow" => cmd_dataflow(&args),
+        "serve" => cmd_serve(&args),
         "offload" => cmd_offload(&args),
         "policies" => cmd_policies(&args),
         _ => {
@@ -57,13 +60,16 @@ fn main() {
 fn print_help() {
     println!(
         "hpxmp — OpenMP-over-AMT runtime (hpxMP reproduction)\n\n\
-         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|offload|policies> [options]\n\n\
+         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|serve|offload|policies> [options]\n\n\
          options:\n\
-           --op <dvecdvecadd|daxpy|dmatdmatadd|dmatdmatmult|all>\n\
+           --op <dvecdvecadd|daxpy|dmatdmatadd|dmatdmatmult|dmatdvecmult|all>\n\
            --threads 1,2,4,8,16      thread counts (heatmap) / counts per figure (scaling)\n\
            --workers N               AMT worker threads (default: max(threads))\n\
            --policy <name>           priority-local|static|local|global|abp|hierarchical|periodic\n\
            --sizes a,b,c             override the size grid\n\
+           --clients M               concurrent serving clients (serve; default 4)\n\
+           --requests N              requests per client (serve; default 200)\n\
+           --mix <vec|mixed>         serving kernel mix (serve; default mixed)\n\
            --quick                   fast measurement profile\n\
            --out DIR                 report directory (default results/)\n"
     );
@@ -191,6 +197,54 @@ fn cmd_dataflow(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// Multi-tenant serving (ISSUE 3): M concurrent client threads issue
+/// streams of mixed Blaze kernels through the OpenMP layer, once on one
+/// **shared** hpxMP runtime (the team pool + admission arbitrating) and
+/// once with a private warm OS-thread **pool per client** (the competing-
+/// threading-systems regime the paper's composition pitch argues against).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use hpxmp::coordinator::serve::{serve_per_client, serve_shared, KernelMix, ServeCfg};
+    let clients = args.get_usize("clients", 4);
+    let threads = args.get_usize("threads", 2);
+    let requests = args.get_usize("requests", if args.flag("quick") { 50 } else { 200 });
+    let mix_arg = args.get_or("mix", "mixed");
+    let mix = KernelMix::parse(mix_arg).unwrap_or_else(|| panic!("unknown mix '{mix_arg}'"));
+    let workers = args.get_usize("workers", icv::num_procs().max(threads));
+    let policy = args
+        .get("policy")
+        .map(|p| PolicyKind::parse(p).unwrap_or_else(|| panic!("unknown policy '{p}'")))
+        .unwrap_or(PolicyKind::PriorityLocal);
+
+    let rt = OmpRuntime::new(workers, policy);
+    rt.icv.set_nthreads(threads);
+    let cfg = ServeCfg::new(clients, threads, requests, mix);
+    println!(
+        "serve: {clients} clients x {requests} requests, {threads}-thread regions, \
+         mix={}, shared runtime has {workers} workers",
+        mix.name()
+    );
+    let shared = serve_shared(&rt, &cfg);
+    let per = serve_per_client(&cfg);
+    println!(
+        "{:<20} {:>12} {:>12} {:>12}",
+        "runtime", "reqs/s", "p50 us", "p99 us"
+    );
+    for s in [&shared, &per] {
+        println!(
+            "{:<20} {:>12.1} {:>12.1} {:>12.1}",
+            s.runtime, s.reqs_per_sec, s.p50_us, s.p99_us
+        );
+    }
+    println!(
+        "shared vs per-client throughput: {:.3}x  (team pool: {} hits / {} misses, {} parked)",
+        shared.reqs_per_sec / per.reqs_per_sec,
+        rt.pool_hits(),
+        rt.pool_misses(),
+        rt.pool_parked()
+    );
     Ok(())
 }
 

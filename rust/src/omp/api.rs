@@ -49,6 +49,45 @@ pub fn omp_get_level() -> usize {
     current_ctx().map(|c| c.team.level).unwrap_or(0)
 }
 
+/// `omp_get_active_level`: nesting depth counting only *active*
+/// (size > 1) parallel regions.
+pub fn omp_get_active_level() -> usize {
+    current_ctx().map(|c| c.team.active_level).unwrap_or(0)
+}
+
+/// `omp_get_ancestor_thread_num`: thread number of this thread's ancestor
+/// (or this thread itself) at nesting `level`; `-1` when `level` is
+/// negative-equivalent (not expressible here) or exceeds the current
+/// nesting depth, matching the C API's sentinel.
+pub fn omp_get_ancestor_thread_num(level: usize) -> isize {
+    let anc = match current_ctx() {
+        Some(c) => c.ancestor_thread_num(level),
+        None => (level == 0).then_some(0),
+    };
+    anc.map(|t| t as isize).unwrap_or(-1)
+}
+
+/// `omp_get_team_size`: size of the team this thread belonged to at
+/// nesting `level`; `-1` when `level` exceeds the current nesting depth.
+pub fn omp_get_team_size(level: usize) -> isize {
+    let size = match current_ctx() {
+        Some(c) => c.team_size_at(level),
+        None => (level == 0).then_some(1),
+    };
+    size.map(|s| s as isize).unwrap_or(-1)
+}
+
+/// `omp_set_max_active_levels`: cap the nesting depth at which parallel
+/// regions may still be active.
+pub fn omp_set_max_active_levels(n: usize) {
+    runtime().icv.set_max_active_levels(n);
+}
+
+/// `omp_get_max_active_levels`.
+pub fn omp_get_max_active_levels() -> usize {
+    runtime().icv.max_active_levels()
+}
+
 // --- dynamic/nested ---------------------------------------------------------
 
 /// `omp_get_dynamic`.
@@ -135,6 +174,44 @@ mod tests {
         assert_eq!(omp_get_num_threads(), 1);
         assert!(!omp_in_parallel());
         assert_eq!(omp_get_level(), 0);
+        assert_eq!(omp_get_active_level(), 0);
+    }
+
+    #[test]
+    fn ancestor_queries_outside_parallel() {
+        // Level 0 is the initial thread; anything deeper is invalid.
+        assert_eq!(omp_get_ancestor_thread_num(0), 0);
+        assert_eq!(omp_get_team_size(0), 1);
+        assert_eq!(omp_get_ancestor_thread_num(1), -1);
+        assert_eq!(omp_get_team_size(1), -1);
+    }
+
+    #[test]
+    fn ancestor_queries_inside_parallel() {
+        use crate::omp::{fork_call, OmpRuntime};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let rt = OmpRuntime::for_tests(2);
+        let checked = Arc::new(AtomicUsize::new(0));
+        let c = checked.clone();
+        fork_call(&rt, Some(2), move |ctx| {
+            assert_eq!(omp_get_ancestor_thread_num(0), 0);
+            assert_eq!(omp_get_team_size(0), 1);
+            assert_eq!(omp_get_ancestor_thread_num(1), ctx.tid as isize);
+            assert_eq!(omp_get_team_size(1), 2);
+            assert_eq!(omp_get_ancestor_thread_num(2), -1);
+            assert_eq!(omp_get_team_size(2), -1);
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(checked.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn max_active_levels_roundtrip_on_global_runtime() {
+        let before = omp_get_max_active_levels();
+        omp_set_max_active_levels(3);
+        assert_eq!(omp_get_max_active_levels(), 3);
+        omp_set_max_active_levels(before);
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //!
 //! OpenMP's ICVs govern default team sizes, loop schedules and nesting.
 //! hpxMP reads the same environment variables a compiler-supplied runtime
-//! would (`OMP_NUM_THREADS`, `OMP_SCHEDULE`, `OMP_DYNAMIC`, `OMP_NESTED`),
-//! plus the HPX-side knobs (`HPXMP_POLICY`, `HPXMP_NUM_WORKERS`).
+//! would (`OMP_NUM_THREADS`, `OMP_SCHEDULE`, `OMP_DYNAMIC`, `OMP_NESTED`,
+//! `OMP_MAX_ACTIVE_LEVELS`), plus the HPX-side knobs (`HPXMP_POLICY`,
+//! `HPXMP_NUM_WORKERS`).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -82,12 +83,16 @@ impl Icvs {
             .ok()
             .and_then(|v| Schedule::parse(&v))
             .unwrap_or(Schedule::new(SchedKind::Static, None));
+        let max_active_levels = std::env::var("OMP_MAX_ACTIVE_LEVELS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(usize::MAX);
         Self {
             nthreads: AtomicUsize::new(nthreads),
             dynamic: AtomicBool::new(dynamic),
             nested: AtomicBool::new(nested),
             run_sched: Mutex::new(run_sched),
-            max_active_levels: AtomicUsize::new(usize::MAX),
+            max_active_levels: AtomicUsize::new(max_active_levels),
         }
     }
 
@@ -103,6 +108,16 @@ impl Icvs {
 
     pub fn run_sched(&self) -> Schedule {
         *self.run_sched.lock().unwrap()
+    }
+
+    /// `max-active-levels-var`: deepest nesting depth at which parallel
+    /// regions may still be active (team size > 1).
+    pub fn max_active_levels(&self) -> usize {
+        self.max_active_levels.load(Ordering::Relaxed)
+    }
+
+    pub fn set_max_active_levels(&self, n: usize) {
+        self.max_active_levels.store(n, Ordering::Relaxed);
     }
 }
 

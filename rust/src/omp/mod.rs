@@ -17,13 +17,14 @@ pub mod kmpc;
 pub mod lock;
 pub mod loops;
 pub mod ompt;
+pub mod pool;
 pub mod reduction;
 pub mod sync;
 pub mod tasking;
 pub mod team;
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use once_cell::sync::OnceCell;
@@ -31,8 +32,9 @@ use once_cell::sync::OnceCell;
 use crate::amt::{PolicyKind, Scheduler};
 
 pub use icv::{SchedKind, Schedule};
+pub use pool::TeamPool;
 pub use tasking::{dep_in, dep_inout, dep_out, Dep, DepKind};
-pub use team::{current_ctx, fork_call, Ctx, HotTeam};
+pub use team::{current_ctx, fork_call, last_fork_was_pool_hit, Ctx, HotTeam};
 
 /// One hpxMP runtime instance: the AMT scheduler ("HPX backend") plus ICVs
 /// and the OMPT registry.
@@ -41,13 +43,17 @@ pub struct OmpRuntime {
     pub icv: icv::Icvs,
     pub ompt: ompt::OmptRegistry,
     start: Instant,
-    /// Cached idle top-level team (libomp "hot team" style; DESIGN.md §5).
-    /// Teams hold only a `Weak` back-reference, so this cache creates no
-    /// runtime self-cycle.
-    pub(crate) hot_team: Mutex<Option<HotTeam>>,
+    /// Parked idle top-level teams, keyed by size (libomp "hot team"
+    /// style, multi-tenant since DESIGN.md §8).  Teams hold only a `Weak`
+    /// back-reference, so the pool creates no runtime self-cycle.
+    pub(crate) team_pool: TeamPool,
     /// Hot-team caching toggle (`HPXMP_HOT_TEAM=0` disables — the
     /// cold-path baseline the fork-overhead ablation measures against).
     hot_team_on: AtomicBool,
+    /// Worker slots currently reserved by in-flight top-level regions —
+    /// the admission budget that keeps K concurrent fork/join clients
+    /// from oversubscribing the W scheduler workers (DESIGN.md §8).
+    pub(crate) reserved_workers: AtomicUsize,
 }
 
 /// `HPXMP_HOT_TEAM` — defaults to on; `0|false|off|no` disables.
@@ -70,8 +76,9 @@ impl OmpRuntime {
             icv: icv::Icvs::from_env(),
             ompt: ompt::OmptRegistry::new(),
             start: Instant::now(),
-            hot_team: Mutex::new(None),
+            team_pool: TeamPool::default(),
             hot_team_on: AtomicBool::new(hot_team_from_env()),
+            reserved_workers: AtomicUsize::new(0),
         })
     }
 
@@ -85,8 +92,9 @@ impl OmpRuntime {
             icv,
             ompt: ompt::OmptRegistry::new(),
             start: Instant::now(),
-            hot_team: Mutex::new(None),
+            team_pool: TeamPool::default(),
             hot_team_on: AtomicBool::new(hot_team_from_env()),
+            reserved_workers: AtomicUsize::new(0),
         })
     }
 
@@ -96,19 +104,48 @@ impl OmpRuntime {
     }
 
     /// Toggle hot-team caching (ablation benches compare both paths).
-    /// Disabling also drops any currently cached team.
+    /// Disabling also drops every currently parked team.
     pub fn set_hot_team_enabled(&self, on: bool) {
         self.hot_team_on.store(on, Ordering::Relaxed);
         if !on {
-            self.hot_team.lock().unwrap().take();
+            drop(self.team_pool.drain());
         }
     }
 
-    /// Remove and return the cached hot team (test/diagnostic hook — lets
+    /// Team-pool checkouts that re-armed a parked team (the multi-tenant
+    /// fast-path counter the concurrency stress tests assert against).
+    pub fn pool_hits(&self) -> u64 {
+        self.team_pool.hits()
+    }
+
+    /// Team-pool checkouts that found no matching parked team.
+    pub fn pool_misses(&self) -> u64 {
+        self.team_pool.misses()
+    }
+
+    /// Teams currently parked idle in the pool.
+    pub fn pool_parked(&self) -> usize {
+        self.team_pool.parked_len()
+    }
+
+    /// Worker slots currently reserved by in-flight top-level regions
+    /// (admission budget gauge; 0 when the runtime is quiescent).
+    pub fn reserved_workers(&self) -> usize {
+        self.reserved_workers.load(Ordering::Relaxed)
+    }
+
+    /// Remove and return one parked team (test/diagnostic hook — lets
     /// leak checks count `Arc` references on the parked `Ctx`s).
     #[doc(hidden)]
     pub fn debug_take_hot_team(&self) -> Option<HotTeam> {
-        self.hot_team.lock().unwrap().take()
+        self.team_pool.take_any()
+    }
+
+    /// Park a team back into the pool (test hook, pairs with
+    /// [`OmpRuntime::debug_take_hot_team`]).
+    #[doc(hidden)]
+    pub fn debug_park_hot_team(&self, team: HotTeam) {
+        self.team_pool.park(team);
     }
 
     /// Small fixed-size runtime for unit tests (default policy).

@@ -1,0 +1,132 @@
+//! The multi-tenant team pool (ISSUE 3; DESIGN.md §8).
+//!
+//! PR 1's hot-team cache was a single `Mutex<Option<HotTeam>>` slot: one
+//! parked team, keyed to nothing, discarded on any size mismatch.  That
+//! shape serves exactly one application thread issuing same-size regions —
+//! but the paper's composition story (OpenMP-parallelized BLAS called from
+//! an AMT application, many clients on one scheduler) needs **many**
+//! concurrent top-level regions, each getting the re-arm fast path.
+//!
+//! [`TeamPool`] is the replacement: a sharded-lock pool of parked idle
+//! teams **keyed by team size**.  Checkout scans only the shard the size
+//! hashes to (sizes are small integers, so distinct sizes almost always
+//! hit distinct shards and concurrent clients contend only when they ask
+//! for the *same* size); park returns the team to that shard, capped so a
+//! burst of clients cannot pin unbounded idle teams.  Alternating-size
+//! region streams (2, 4, 2, 4, …) keep one parked team per size and
+//! re-arm every region — the single-slot design re-allocated every time.
+//!
+//! Hit/miss counters are the observability surface the concurrent-region
+//! stress test and the serving benches assert against.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::team::HotTeam;
+
+/// Shard count: sizes are small integers, so `size % SHARDS` spreads
+/// distinct team sizes across distinct locks.
+const SHARDS: usize = 8;
+
+/// Per-shard cap on parked teams.  Beyond it, joined teams are dropped
+/// (allocated again on demand) rather than pinned idle — a burst of K
+/// clients must not hold K teams per size forever.
+const MAX_PARKED_PER_SHARD: usize = 16;
+
+/// A keyed, sharded pool of parked idle teams.
+pub struct TeamPool {
+    shards: Vec<Mutex<Vec<HotTeam>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Total parked teams across shards (approximate gauge, exact under
+    /// the shard locks that mutate it).
+    parked: AtomicUsize,
+}
+
+impl Default for TeamPool {
+    fn default() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            parked: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl TeamPool {
+    #[inline]
+    fn shard(&self, size: usize) -> &Mutex<Vec<HotTeam>> {
+        &self.shards[size % SHARDS]
+    }
+
+    /// Check out a parked team of exactly `size`, if one is available.
+    /// Counts a hit or a miss either way — the pool's hit rate *is* the
+    /// fast-path rate of top-level fork/join.
+    pub fn checkout(&self, size: usize) -> Option<HotTeam> {
+        let mut shard = self.shard(size).lock().unwrap();
+        if let Some(pos) = shard.iter().position(|h| h.team.size == size) {
+            let h = shard.swap_remove(pos);
+            // Gauge updated under the shard lock so it can never transiently
+            // underflow against a concurrent park/drain of the same shard.
+            self.parked.fetch_sub(1, Ordering::Relaxed);
+            drop(shard);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(h)
+        } else {
+            drop(shard);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Park an idle (joined, pristine) team for the next same-size region.
+    /// Returns `false` (dropping the team) when the shard is at capacity.
+    pub fn park(&self, team: HotTeam) -> bool {
+        let mut shard = self.shard(team.team.size).lock().unwrap();
+        if shard.len() >= MAX_PARKED_PER_SHARD {
+            return false;
+        }
+        shard.push(team);
+        self.parked.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Remove every parked team (hot-team caching disabled, shutdown).
+    pub fn drain(&self) -> Vec<HotTeam> {
+        let mut all = Vec::new();
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            self.parked.fetch_sub(s.len(), Ordering::Relaxed);
+            all.append(&mut *s);
+        }
+        all
+    }
+
+    /// Pop one parked team of any size (diagnostics/leak checks).
+    pub fn take_any(&self) -> Option<HotTeam> {
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            if let Some(h) = s.pop() {
+                self.parked.fetch_sub(1, Ordering::Relaxed);
+                return Some(h);
+            }
+        }
+        None
+    }
+
+    /// Number of parked teams (approximate between lock acquisitions).
+    pub fn parked_len(&self) -> usize {
+        self.parked.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts that found a matching parked team.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts that found no matching parked team (cold allocations).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}

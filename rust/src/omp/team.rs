@@ -8,19 +8,30 @@
 //!
 //! The paper's central negative result is that this path trails a warm
 //! libomp pool in the fork-dominated regime, so it is built as a **hot
-//! fast path** (DESIGN.md §5):
+//! fast path** (DESIGN.md §5), and — since the multi-tenant refactor
+//! (DESIGN.md §8) — that fast path serves **many concurrent top-level
+//! regions** on one shared scheduler:
 //!
 //! * serialized regions (`n == 1`) run inline on the caller's stack — no
 //!   scheduler round-trip at all;
-//! * top-level teams are cached on the runtime after join (libomp "hot
-//!   team" style) and re-armed for the next same-size region instead of
-//!   reallocating `Team` + `Ctx`s + `Join`;
+//! * joined top-level teams are parked in the runtime's keyed
+//!   [`TeamPool`](super::pool::TeamPool) (libomp "hot team" style, but one
+//!   pool of many sizes instead of a single slot) and re-armed by the next
+//!   same-size region from *any* application thread;
 //! * on that same hot path the master participates inline as tid 0
 //!   (libomp style): only `n - 1` tasks are registered and the master
 //!   never sleeps on the join condvar for its own share;
+//! * **admission control**: each top-level region reserves its spawned
+//!   member count from a budget of `W` scheduler workers; when K
+//!   concurrent regions would oversubscribe the budget, late arrivals get
+//!   smaller teams (down to serialized-inline) instead of deadlocking or
+//!   flooding wake-ups — the fair-share degradation the serving scenario
+//!   measures;
 //! * the spawned implicit tasks are submitted through one
 //!   [`Scheduler::spawn_batch`](crate::amt::Scheduler::spawn_batch) call
-//!   (one `live` update, one wake pass).
+//!   (one `live` update, one wake pass), with hints interleaved across
+//!   worker queues via [`Scheduler::hint_base`](crate::amt::Scheduler::hint_base)
+//!   so concurrent clients' teams land on disjoint queues.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -39,7 +50,7 @@ use super::OmpRuntime;
 /// descriptors and an explicit-task pool.
 pub struct Team {
     /// Owning runtime, held weakly to break the
-    /// runtime → hot-team → team → runtime cycle (DESIGN.md §5).
+    /// runtime → team-pool → team → runtime cycle (DESIGN.md §5).
     rt: Weak<OmpRuntime>,
     pub size: usize,
     /// OMPT parallel region id — atomic so a cached team can be re-armed
@@ -47,6 +58,13 @@ pub struct Team {
     parallel_id: AtomicU64,
     /// Nesting level (outermost parallel region = 1).
     pub level: usize,
+    /// Number of *active* (size > 1) regions enclosing-and-including this
+    /// one — the `active-levels-var` the `max_active_levels` ICV caps.
+    pub active_level: usize,
+    /// `(thread num, team size)` of each enclosing level `1..level`, for
+    /// `omp_get_ancestor_thread_num` / `omp_get_team_size`.  Always empty
+    /// for top-level teams, so pooled teams need no re-arm step for it.
+    pub(super) ancestry: Vec<(usize, usize)>,
     pub barrier: TeamBarrier,
     /// Explicit tasks bound to this region; drained at barriers/join.
     pub explicit: WaitCounter,
@@ -58,12 +76,21 @@ pub struct Team {
 }
 
 impl Team {
-    fn new(rt: &Arc<OmpRuntime>, size: usize, parallel_id: u64, level: usize) -> Arc<Self> {
+    fn new(
+        rt: &Arc<OmpRuntime>,
+        size: usize,
+        parallel_id: u64,
+        level: usize,
+        active_level: usize,
+        ancestry: Vec<(usize, usize)>,
+    ) -> Arc<Self> {
         Arc::new(Self {
             rt: Arc::downgrade(rt),
             size,
             parallel_id: AtomicU64::new(parallel_id),
             level,
+            active_level,
+            ancestry,
             barrier: TeamBarrier::new(size),
             explicit: WaitCounter::new(),
             ws: WsRing::new(),
@@ -72,8 +99,8 @@ impl Team {
     }
 
     /// The owning runtime.  Alive whenever a team member can run: the
-    /// forker holds a strong ref for the whole region, and a cached idle
-    /// team is owned *by* its runtime.
+    /// forker holds a strong ref for the whole region, and a parked idle
+    /// team is owned *by* its runtime's pool.
     pub fn rt(&self) -> Arc<OmpRuntime> {
         self.rt
             .upgrade()
@@ -139,6 +166,29 @@ impl Ctx {
         self.team.size
     }
 
+    /// `omp_get_ancestor_thread_num` against this context: the thread
+    /// number of the ancestor (or this thread) at `level`; `None` when
+    /// `level` exceeds the current nesting depth.
+    pub fn ancestor_thread_num(&self, level: usize) -> Option<usize> {
+        match level {
+            0 => Some(0),
+            l if l == self.team.level => Some(self.tid),
+            l if l < self.team.level => self.team.ancestry.get(l - 1).map(|&(tid, _)| tid),
+            _ => None,
+        }
+    }
+
+    /// `omp_get_team_size` against this context: the team size at nesting
+    /// `level`; `None` when `level` exceeds the current nesting depth.
+    pub fn team_size_at(&self, level: usize) -> Option<usize> {
+        match level {
+            0 => Some(1),
+            l if l == self.team.level => Some(self.team.size),
+            l if l < self.team.level => self.team.ancestry.get(l - 1).map(|&(_, size)| size),
+            _ => None,
+        }
+    }
+
     /// Team barrier including the explicit-task drain the spec requires.
     pub fn barrier(&self) {
         // Execute pending explicit tasks before blocking: barrier is a task
@@ -166,11 +216,23 @@ impl Ctx {
 thread_local! {
     static CTX_STACK: std::cell::RefCell<Vec<Arc<Ctx>>> =
         const { std::cell::RefCell::new(Vec::new()) };
+    /// Whether this thread's most recent `fork_call` re-armed a pooled
+    /// team — per-thread attribution for the concurrency stress tests
+    /// (a global hit counter cannot tell *which* client hit).
+    static LAST_FORK_POOL_HIT: std::cell::Cell<bool> =
+        const { std::cell::Cell::new(false) };
 }
 
 /// The innermost OpenMP thread context of the calling OS thread, if any.
 pub fn current_ctx() -> Option<Arc<Ctx>> {
     CTX_STACK.with(|s| s.borrow().last().cloned())
+}
+
+/// Did the calling thread's most recent [`fork_call`] check a team out of
+/// the pool (the re-arm fast path) rather than allocating or serializing?
+#[doc(hidden)]
+pub fn last_fork_was_pool_hit() -> bool {
+    LAST_FORK_POOL_HIT.with(|c| c.get())
 }
 
 pub(super) fn push_ctx(ctx: Arc<Ctx>) {
@@ -254,9 +316,10 @@ impl Join {
     }
 }
 
-/// A cached idle team — the libomp "hot team" analog (DESIGN.md §5).
+/// A parked idle team — the libomp "hot team" analog (DESIGN.md §5, §8).
 /// After a top-level region joins, its `Team`, member `Ctx`s and `Join`
-/// latch are parked on the runtime; the next same-size `fork_call` re-arms
+/// latch are parked in the runtime's keyed [`TeamPool`](super::pool::TeamPool);
+/// the next same-size `fork_call` — from any application thread — re-arms
 /// them instead of reallocating, so the steady-state fork cost is just the
 /// batch task registration.
 pub struct HotTeam {
@@ -286,10 +349,52 @@ impl HotTeam {
     }
 }
 
+/// Try to reserve up to `want` of the scheduler's `cap` worker slots for a
+/// region's spawned members (the admission budget — DESIGN.md §8).
+/// Returns the number actually granted, possibly 0.
+fn reserve_workers(rt: &OmpRuntime, want: usize, cap: usize) -> usize {
+    if want == 0 {
+        return 0;
+    }
+    let mut cur = rt.reserved_workers.load(Ordering::Relaxed);
+    loop {
+        let avail = cap.saturating_sub(cur);
+        let grant = want.min(avail);
+        if grant == 0 {
+            return 0;
+        }
+        match rt.reserved_workers.compare_exchange_weak(
+            cur,
+            cur + grant,
+            Ordering::AcqRel,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return grant,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Releases a region's worker-slot reservation on drop, so an unwinding
+/// master (panicking microtask on the inline path) cannot leak budget and
+/// starve every later region down to serialized execution.
+struct Reservation<'a> {
+    rt: &'a OmpRuntime,
+    amount: usize,
+}
+
+impl Drop for Reservation<'_> {
+    fn drop(&mut self) {
+        if self.amount > 0 {
+            self.rt.reserved_workers.fetch_sub(self.amount, Ordering::AcqRel);
+        }
+    }
+}
+
 /// The `hpx_runtime::fork` analog (paper Listing 3): create (or re-arm)
 /// the team, register one low-priority AMT task per OpenMP thread (hinted
-/// to distinct worker queues, as hpxMP passes the os-thread index), and
-/// block the caller until the region joins.
+/// to interleaved worker queues), and block the caller until the region
+/// joins.
 ///
 /// The microtask runs once per team member with that member's [`Ctx`].
 pub fn fork_call(
@@ -305,24 +410,70 @@ fn fork_call_dyn(
     num_threads: Option<usize>,
     micro: Arc<dyn Fn(&Ctx) + Send + Sync>,
 ) {
+    LAST_FORK_POOL_HIT.with(|c| c.set(false));
     let nested_in = current_ctx();
     let level = nested_in.as_ref().map(|c| c.team.level).unwrap_or(0) + 1;
+    let active_enclosing = nested_in.as_ref().map(|c| c.team.active_level).unwrap_or(0);
 
     let mut n = num_threads.unwrap_or_else(|| rt.icv.nthreads());
     if nested_in.is_some() && !rt.icv.nested.load(Ordering::Relaxed) {
         n = 1; // inactive nested region
     }
+    // `max-active-levels-var`: a region that would push the active nesting
+    // depth past the cap is serialized (made inactive), per the spec.
+    if n > 1 && active_enclosing >= rt.icv.max_active_levels.load(Ordering::Relaxed) {
+        n = 1;
+    }
     // Closure-based tasks need one OS worker per blocked team member for
     // liveness (DESIGN.md §4): clamp like hpxMP clamps to its thread pool.
     n = n.clamp(1, rt.sched.workers());
+
+    // Multi-tenant admission (DESIGN.md §8): a top-level region reserves
+    // its spawned member count from the shared budget of W workers.  When
+    // concurrent regions would oversubscribe the budget, late arrivals are
+    // granted smaller teams — down to serialized-inline — instead of
+    // parking unrunnable implicit tasks (top-level members cannot help-run
+    // each other across teams: the nesting guard requeues same-level
+    // tasks, so oversubscription would deadlock, not just slow down).
+    let top = level == 1;
+    let cache = top && rt.hot_team_enabled();
+    let participate = cache;
+    let mut reservation = Reservation {
+        rt: rt.as_ref(),
+        amount: 0,
+    };
+    if top && n > 1 {
+        let want = if participate { n - 1 } else { n };
+        let granted = reserve_workers(rt.as_ref(), want, rt.sched.workers());
+        reservation.amount = granted;
+        n = if participate { granted + 1 } else { granted.max(1) };
+        if n == 1 && granted > 0 {
+            // Cold-path corner (granted == 1 → still serialized): the grant
+            // backs no spawned task, so return it now instead of pinning a
+            // worker slot for the whole inline region body.
+            reservation.amount = 0;
+            rt.reserved_workers.fetch_sub(granted, Ordering::AcqRel);
+        }
+    }
+
+    let ancestry = match &nested_in {
+        Some(c) => {
+            let mut a = c.team.ancestry.clone();
+            a.push((c.tid, c.team.size));
+            a
+        }
+        None => Vec::new(),
+    };
+    let active_level = active_enclosing + usize::from(n > 1);
 
     let parallel_id = rt.ompt.fresh_parallel_id();
     rt.ompt.emit_parallel_begin(parallel_id, n);
 
     if n == 1 {
         // Serialized region fast path: run inline on the caller's stack —
-        // no team task, no scheduler round-trip, no join latch.
-        let team = Team::new(rt, 1, parallel_id, level);
+        // no team task, no scheduler round-trip, no join latch.  (The
+        // `reservation` guard releases any admission grant on return.)
+        let team = Team::new(rt, 1, parallel_id, level, active_level, ancestry);
         let ctx = Arc::new(Ctx {
             team,
             tid: 0,
@@ -342,24 +493,17 @@ fn fork_call_dyn(
         return;
     }
 
-    // Hot path: only top-level teams are cached (nested teams are rare and
-    // their lifetime nests inside a member's stack anyway).  The hot-team
+    // Hot path: only top-level teams are pooled (nested teams are rare and
+    // their lifetime nests inside a member's stack anyway).  The pooled
     // fast path bundles master participation: the forking thread runs
     // tid 0 inline (libomp style), so only n-1 tasks are registered and
     // the master never blocks on the join condvar for its own share.
     // With caching off (`HPXMP_HOT_TEAM=0` — the ablation's cold path)
     // the master spawns all n members and blocks, the pre-change shape.
-    let cache = level == 1 && rt.hot_team_enabled();
-    let participate = cache;
-    let hot = if cache {
-        rt.hot_team
-            .lock()
-            .unwrap()
-            .take()
-            .filter(|h| h.team.size == n)
-    } else {
-        None
-    };
+    let hot = if cache { rt.team_pool.checkout(n) } else { None };
+    if hot.is_some() {
+        LAST_FORK_POOL_HIT.with(|c| c.set(true));
+    }
 
     let (team, ctxs, join) = match hot {
         Some(h) => {
@@ -368,7 +512,7 @@ fn fork_call_dyn(
             (team, ctxs, join)
         }
         None => {
-            let team = Team::new(rt, n, parallel_id, level);
+            let team = Team::new(rt, n, parallel_id, level, active_level, ancestry);
             let ctxs: Vec<Arc<Ctx>> = (0..n)
                 .map(|i| {
                     Arc::new(Ctx {
@@ -386,13 +530,18 @@ fn fork_call_dyn(
     };
 
     // One batch submission for the whole team: one `live` update, one
-    // queue pass, one wake covering min(batch, sleepers) workers.
+    // queue pass, one wake covering min(batch, sleepers) workers.  Hints
+    // are interleaved from a rotating base so K concurrent clients' teams
+    // land on disjoint worker queues instead of all piling onto workers
+    // 0..n-1 (the fair-share half of admission — DESIGN.md §8).
+    let workers = rt.sched.workers();
     let spawn_ctxs = if participate { &ctxs[1..] } else { &ctxs[..] };
+    let base = rt.sched.hint_base(spawn_ctxs.len());
     let bodies: Vec<(Hint, Box<dyn FnOnce() + Send>)> = spawn_ctxs
         .iter()
         .map(|ctx| {
             (
-                Hint::Worker(ctx.tid),
+                Hint::Worker((base + ctx.tid) % workers),
                 implicit_body(rt.clone(), join.clone(), micro.clone(), ctx.clone()),
             )
         })
@@ -419,15 +568,15 @@ fn fork_call_dyn(
     rt.ompt.emit_parallel_end(parallel_id);
 
     // Re-check the toggle: a concurrent `set_hot_team_enabled(false)`
-    // since region entry already dropped the cache, and parking now would
-    // resurrect it against the caller's request.
+    // since region entry already drained the pool, and parking now would
+    // resurrect a team against the caller's request.
     if cache && rt.hot_team_enabled() {
         // Park pristine: drop the finished region's dependence records now
-        // so an idle cached team never pins retired task graphs in memory.
+        // so an idle parked team never pins retired task graphs in memory.
         for ctx in &ctxs {
             ctx.parent.reset();
         }
-        *rt.hot_team.lock().unwrap() = Some(HotTeam { team, ctxs, join });
+        rt.team_pool.park(HotTeam { team, ctxs, join });
     }
 }
 
@@ -570,6 +719,67 @@ mod tests {
     }
 
     #[test]
+    fn max_active_levels_serializes_deeper_regions() {
+        let rt = OmpRuntime::for_tests(4);
+        rt.icv.nested.store(true, Ordering::Relaxed);
+        rt.icv.max_active_levels.store(1, Ordering::Relaxed);
+        let inner_sizes = Arc::new(Mutex::new(Vec::new()));
+        let s = inner_sizes.clone();
+        let rt2 = rt.clone();
+        fork_call(&rt, Some(2), move |_| {
+            let s = s.clone();
+            fork_call(&rt2, Some(2), move |ctx| {
+                s.lock().unwrap().push((ctx.num_threads(), ctx.team.active_level));
+            });
+        });
+        let sizes = inner_sizes.lock().unwrap();
+        assert_eq!(sizes.len(), 2, "outer region still active");
+        assert!(
+            sizes.iter().all(|&(n, al)| n == 1 && al == 1),
+            "inner regions must serialize at max_active_levels=1: {sizes:?}"
+        );
+    }
+
+    #[test]
+    fn max_active_levels_zero_serializes_top_level() {
+        let rt = OmpRuntime::for_tests(4);
+        rt.icv.max_active_levels.store(0, Ordering::Relaxed);
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let s = sizes.clone();
+        fork_call(&rt, Some(4), move |ctx| {
+            s.lock().unwrap().push(ctx.num_threads());
+        });
+        assert_eq!(*sizes.lock().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn ancestry_reports_enclosing_teams() {
+        let rt = OmpRuntime::for_tests(4);
+        rt.icv.nested.store(true, Ordering::Relaxed);
+        let rt2 = rt.clone();
+        let checked = Arc::new(AtomicUsize::new(0));
+        let c = checked.clone();
+        fork_call(&rt, Some(2), move |outer| {
+            let outer_tid = outer.tid;
+            let rt2 = rt2.clone();
+            let c = c.clone();
+            fork_call(&rt2, Some(2), move |inner| {
+                assert_eq!(inner.team.level, 2);
+                assert_eq!(inner.ancestor_thread_num(0), Some(0));
+                assert_eq!(inner.team_size_at(0), Some(1));
+                assert_eq!(inner.ancestor_thread_num(1), Some(outer_tid));
+                assert_eq!(inner.team_size_at(1), Some(2));
+                assert_eq!(inner.ancestor_thread_num(2), Some(inner.tid));
+                assert_eq!(inner.team_size_at(2), Some(2));
+                assert_eq!(inner.ancestor_thread_num(3), None);
+                assert_eq!(inner.team_size_at(3), None);
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(checked.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
     fn barrier_synchronizes_team_members() {
         let rt = OmpRuntime::for_tests(4);
         let before = Arc::new(AtomicUsize::new(0));
@@ -603,30 +813,36 @@ mod tests {
     }
 
     #[test]
-    fn hot_team_is_cached_and_reused() {
+    fn hot_team_is_pooled_and_reused() {
         let rt = OmpRuntime::for_tests(2);
         fork_call(&rt, Some(2), |_| {});
         let first = rt
             .debug_take_hot_team()
-            .expect("top-level team cached after join");
+            .expect("top-level team parked after join");
         let team_ptr = Arc::as_ptr(&first.team);
-        *rt.hot_team.lock().unwrap() = Some(first);
+        rt.debug_park_hot_team(first);
         fork_call(&rt, Some(2), |_| {});
-        let second = rt.debug_take_hot_team().expect("still cached");
+        let second = rt.debug_take_hot_team().expect("still parked");
         assert_eq!(
             Arc::as_ptr(&second.team),
             team_ptr,
-            "same-size consecutive regions must reuse the cached team"
+            "same-size consecutive regions must reuse the pooled team"
         );
     }
 
     #[test]
-    fn hot_team_cache_replaced_on_size_change() {
+    fn pool_keeps_teams_of_multiple_sizes() {
+        // The single-slot cache discarded a parked team on any size
+        // mismatch; the keyed pool must keep one team per size so
+        // alternating-size streams re-arm both.
         let rt = OmpRuntime::for_tests(4);
         fork_call(&rt, Some(4), |_| {});
         fork_call(&rt, Some(2), |_| {});
-        let cached = rt.debug_take_hot_team().expect("cached");
-        assert_eq!(cached.team.size, 2, "cache follows the latest team size");
+        assert_eq!(rt.pool_parked(), 2, "both sizes parked");
+        let a = rt.team_pool.checkout(4).expect("size-4 team parked");
+        let b = rt.team_pool.checkout(2).expect("size-2 team parked");
+        assert_eq!(a.team.size, 4);
+        assert_eq!(b.team.size, 2);
     }
 
     #[test]
@@ -635,5 +851,14 @@ mod tests {
         rt.set_hot_team_enabled(false);
         fork_call(&rt, Some(2), |_| {});
         assert!(rt.debug_take_hot_team().is_none());
+    }
+
+    #[test]
+    fn reservation_budget_is_released_after_each_region() {
+        let rt = OmpRuntime::for_tests(4);
+        for _ in 0..10 {
+            fork_call(&rt, Some(4), |_| {});
+            assert_eq!(rt.reserved_workers(), 0, "reservation leaked");
+        }
     }
 }

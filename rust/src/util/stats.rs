@@ -49,6 +49,21 @@ impl Summary {
     }
 }
 
+/// Nearest-rank percentile of `samples` (`q` in 0..=100): the smallest
+/// sample such that at least `q`% of the sample set is ≤ it.  Used by the
+/// serving benches for p50/p99 request latencies.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&q), "percentile q out of range: {q}");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if q == 0.0 {
+        return sorted[0];
+    }
+    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +93,17 @@ mod tests {
     fn median_odd() {
         let s = Summary::of(&[9.0, 1.0, 5.0]);
         assert_eq!(s.median, 5.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        // Unsorted input and tiny samples.
+        assert_eq!(percentile(&[5.0, 1.0, 9.0], 50.0), 5.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
     }
 }

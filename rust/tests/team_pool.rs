@@ -1,0 +1,184 @@
+//! Multi-tenant team-pool integration tests (ISSUE 3): alternating-size
+//! re-arm regression, the 8-client × 200-region concurrency stress (pool
+//! fast-path attribution, `Ctx` leak check, metrics conservation), and
+//! deterministic admission degradation under budget exhaustion.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hpxmp::omp::{fork_call, last_fork_was_pool_hit, OmpRuntime};
+
+/// Regression for the PR-1 size-mismatch discard: the single-slot cache
+/// `take()`n-and-dropped a parked team whose size didn't match, so a
+/// 2,4,2,4,… stream re-allocated every region.  The keyed pool must park
+/// one team per size and re-arm **every** region after the first two.
+#[test]
+fn alternating_size_stream_rearms_instead_of_reallocating() {
+    let rt = OmpRuntime::for_tests(4);
+    // Warm one team per size (two cold misses).
+    fork_call(&rt, Some(2), |_| {});
+    fork_call(&rt, Some(4), |_| {});
+    let (hits0, misses0) = (rt.pool_hits(), rt.pool_misses());
+    for i in 0..100 {
+        let size = if i % 2 == 0 { 2 } else { 4 };
+        fork_call(&rt, Some(size), |_| {});
+        assert!(
+            last_fork_was_pool_hit(),
+            "region {i} (size {size}) fell off the re-arm fast path"
+        );
+    }
+    assert_eq!(rt.pool_hits() - hits0, 100, "every region must re-arm");
+    assert_eq!(rt.pool_misses(), misses0, "no region may re-allocate");
+}
+
+/// The ISSUE 3 acceptance stress: 8 external OS threads each run 200
+/// fork/join regions of varying requested sizes concurrently on ONE
+/// shared runtime.  Checks: no deadlock (the test completes), every
+/// member of every region runs exactly once, at least 2 client threads
+/// hit the team-pool re-arm fast path, parked `Ctx`s hold no leaked
+/// references once quiescent, and scheduler metrics add up.
+#[test]
+fn eight_clients_two_hundred_regions_stress() {
+    const CLIENTS: usize = 8;
+    const REGIONS: usize = 200;
+    let rt = OmpRuntime::for_tests(8);
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|ci| {
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                let mut my_pool_hits = 0usize;
+                for i in 0..REGIONS {
+                    // Varying *requested* sizes; admission may grant less
+                    // under concurrency, so assert against the granted
+                    // team size observed inside the region.
+                    let req = [1usize, 2, 4, 3][(ci + i) % 4];
+                    let arrived = Arc::new(AtomicUsize::new(0));
+                    let a = arrived.clone();
+                    let granted = Arc::new(AtomicUsize::new(0));
+                    let g = granted.clone();
+                    fork_call(&rt, Some(req), move |ctx| {
+                        g.store(ctx.num_threads(), Ordering::SeqCst);
+                        assert!(ctx.tid < ctx.num_threads());
+                        a.fetch_add(1, Ordering::SeqCst);
+                        ctx.barrier();
+                        assert_eq!(
+                            a.load(Ordering::SeqCst),
+                            ctx.num_threads(),
+                            "barrier released before every member arrived"
+                        );
+                    });
+                    let n = granted.load(Ordering::SeqCst);
+                    assert!(n >= 1 && n <= req, "granted {n} outside 1..={req}");
+                    assert_eq!(
+                        arrived.load(Ordering::SeqCst),
+                        n,
+                        "client {ci} region {i}: member lost or duplicated"
+                    );
+                    if last_fork_was_pool_hit() {
+                        my_pool_hits += 1;
+                    }
+                }
+                my_pool_hits
+            })
+        })
+        .collect();
+
+    let per_client_hits: Vec<usize> = handles
+        .into_iter()
+        .map(|h| h.join().expect("client thread panicked (or deadlocked)"))
+        .collect();
+
+    // ≥ 2 distinct clients must have ridden the re-arm fast path.
+    let clients_with_hits = per_client_hits.iter().filter(|&&h| h > 0).count();
+    assert!(
+        clients_with_hits >= 2,
+        "only {clients_with_hits} clients hit the team pool (per-client: {per_client_hits:?})"
+    );
+    assert!(rt.pool_hits() > 0, "global pool hit counter stayed zero");
+
+    // Quiesce, then audit: no reservation leaked, no live tasks, metrics
+    // conserved (every spawned task executed), parked Ctxs unreferenced.
+    rt.sched.wait_quiescent();
+    assert_eq!(rt.reserved_workers(), 0, "admission budget leaked");
+    assert_eq!(rt.sched.live_tasks(), 0);
+    assert_eq!(rt.sched.task_panics(), 0, "a region body panicked");
+    let m = rt.sched.metrics();
+    assert_eq!(m.spawned, m.executed, "spawned/executed diverged: {m}");
+
+    let mut parked = 0usize;
+    while let Some(hot) = rt.debug_take_hot_team() {
+        parked += 1;
+        for (i, ctx) in hot.ctxs.iter().enumerate() {
+            assert_eq!(
+                Arc::strong_count(ctx),
+                1,
+                "parked ctx {i} of a size-{} team holds leaked references",
+                hot.team.size
+            );
+        }
+        assert_eq!(Arc::strong_count(&hot.team), hot.ctxs.len() + 1);
+    }
+    assert!(parked >= 1, "no team left parked after the stress");
+}
+
+/// Deterministic admission degradation: on a 2-worker runtime, two live
+/// size-2 regions reserve one worker slot each (masters run inline), so a
+/// third concurrent top-level region finds the whole budget gone and must
+/// serialize inline.  Pre-admission, its spawned member could never run —
+/// the nesting guard forbids cross-team helping at the same level — so
+/// this exact shape deadlocked.
+#[test]
+fn admission_serializes_when_budget_is_exhausted() {
+    let rt = OmpRuntime::for_tests(2);
+    let release = Arc::new(AtomicBool::new(false));
+    let holders: Vec<_> = (0..2)
+        .map(|_| {
+            let rt = rt.clone();
+            let release = release.clone();
+            std::thread::spawn(move || {
+                fork_call(&rt, Some(2), move |_| {
+                    while !release.load(Ordering::SeqCst) {
+                        std::thread::yield_now();
+                    }
+                });
+            })
+        })
+        .collect();
+    // Each holder reserves 1 of the 2 worker slots at fork entry and
+    // keeps it until `release`: once the gauge reads 2, the budget is
+    // provably exhausted for the whole window the third fork runs in.
+    while rt.reserved_workers() < 2 {
+        std::thread::yield_now();
+    }
+    let third_size = Arc::new(AtomicUsize::new(0));
+    let s = third_size.clone();
+    fork_call(&rt, Some(2), move |ctx| {
+        s.store(ctx.num_threads(), Ordering::SeqCst);
+    });
+    let n = third_size.load(Ordering::SeqCst);
+    assert_eq!(
+        n, 1,
+        "third concurrent region must degrade to serialized-inline while \
+         the budget is held (got team size {n})"
+    );
+    release.store(true, Ordering::SeqCst);
+    for h in holders {
+        h.join().unwrap();
+    }
+    rt.sched.wait_quiescent();
+    assert_eq!(rt.reserved_workers(), 0);
+}
+
+/// Disabling hot teams drains every parked team, from every shard.
+#[test]
+fn disabling_hot_teams_drains_the_pool() {
+    let rt = OmpRuntime::for_tests(4);
+    fork_call(&rt, Some(2), |_| {});
+    fork_call(&rt, Some(3), |_| {});
+    fork_call(&rt, Some(4), |_| {});
+    assert!(rt.pool_parked() >= 3);
+    rt.set_hot_team_enabled(false);
+    assert_eq!(rt.pool_parked(), 0, "drain left teams parked");
+    assert!(rt.debug_take_hot_team().is_none());
+}
