@@ -27,21 +27,10 @@ use hpxmp::omp::{icv, OmpRuntime};
 
 mod common;
 
-fn clients_grid() -> Vec<usize> {
-    std::env::var("BENCH_CLIENTS")
-        .ok()
-        .map(|v| {
-            v.split(',')
-                .map(|t| t.trim().parse().expect("BENCH_CLIENTS"))
-                .collect()
-        })
-        .unwrap_or_else(|| vec![1, 2, 4, 8])
-}
-
 fn main() {
-    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let smoke = common::smoke();
     let threads = common::heatmap_threads();
-    let clients = clients_grid();
+    let clients = common::clients_grid();
     let requests = if smoke { 25 } else { 150 };
 
     let mut rows: Vec<ServeStats> = Vec::new();

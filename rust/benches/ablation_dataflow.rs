@@ -111,7 +111,7 @@ fn bench_chains(hpx: &HpxMpRuntime, threads: usize, len: usize, rows: &mut Vec<R
 
 fn main() {
     let threads = common::heatmap_threads();
-    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let smoke = common::smoke();
     let sizes: Vec<usize> = if smoke {
         vec![150, 230]
     } else {

@@ -146,7 +146,7 @@ fn bench_baseline(threads: usize, iters_region: usize, rows: &mut Vec<Row>) {
 
 fn main() {
     let threads = common::heatmap_threads();
-    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let smoke = common::smoke();
     let iters_region = if smoke { 50 } else { 500 };
     let iters_barrier = if smoke { 100 } else { 1000 };
 

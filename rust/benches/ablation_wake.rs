@@ -1,0 +1,279 @@
+//! Sleep/wake substrate ablation (ISSUE 4) — the regression guard for the
+//! per-worker parking + targeted-wake refactor.
+//!
+//! At each submitter count `k` in `BENCH_CLIENTS`, under both idle
+//! substrates —
+//!
+//! * `hpxmp-targeted` — per-worker parkers + lock-free idle set, spawns
+//!   wake the worker whose queue got the task (the default), and
+//! * `hpxmp-global`   — the legacy one-mutex/one-condvar idle system
+//!   (`HPXMP_GLOBAL_IDLE=1`), every wake through one lock —
+//!
+//! it measures:
+//!
+//! * `spawn_latency` — spawn-to-task-start latency (µs) with `k`
+//!   concurrent submitter threads spawning hinted tasks onto a mostly-idle
+//!   pool (each spawn must *wake* a parked worker — the herd-vs-targeted
+//!   path in isolation);
+//! * `empty_region` — empty `parallel` region round-trip (µs) with `k`
+//!   concurrent fork/join clients on one runtime (the full stack: batch
+//!   spawn, targeted wakes, barrier, join).
+//!
+//! Plus one `hpxmp serve` smoke per substrate (p50/p99 request latency,
+//! best of two runs to damp scheduler noise).
+//!
+//! Emits `results/BENCH_wake.json`: `rows[]` of
+//! `{construct, runtime, submitters, us_per_op}`, a `serve` block, and the
+//! headline `wake_targeted_vs_global` — per submitter count, the best
+//! global/targeted time ratio across constructs (≥ 1.0 means the targeted
+//! substrate is no slower; the gap should grow with submitter count).
+//! `BENCH_CLIENTS` overrides the submitter grid, `BENCH_SMOKE=1` shrinks
+//! iteration counts for CI.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use hpxmp::amt::task::Hint;
+use hpxmp::amt::{PolicyKind, Priority, Scheduler};
+use hpxmp::coordinator::serve::{serve_shared, KernelMix, ServeCfg};
+use hpxmp::omp::{fork_call, icv, OmpRuntime};
+
+mod common;
+
+struct Row {
+    construct: &'static str,
+    runtime: &'static str,
+    submitters: usize,
+    us_per_op: f64,
+}
+
+/// Select the idle substrate for every runtime built afterwards.
+fn set_idle_mode(global: bool) {
+    if global {
+        std::env::set_var("HPXMP_GLOBAL_IDLE", "1");
+    } else {
+        std::env::remove_var("HPXMP_GLOBAL_IDLE");
+    }
+}
+
+use hpxmp::util::timing::spin_wait as busy_wait;
+
+/// Spawn-to-start latency: `k` submitters spawn one hinted task at a time
+/// onto a pool that is parked between spawns (a ~150µs gap lets the
+/// workers run dry and park), so every spawn exercises the wake path.
+fn bench_spawn_latency(runtime: &'static str, k: usize, iters: usize, rows: &mut Vec<Row>) {
+    let workers = icv::num_procs().max(2);
+    let sched = Scheduler::new(workers, PolicyKind::PriorityLocal);
+    let total_ns = Arc::new(AtomicU64::new(0));
+    let count = Arc::new(AtomicU64::new(0));
+    let start = Arc::new(Barrier::new(k + 1));
+    let handles: Vec<_> = (0..k)
+        .map(|ci| {
+            let sched = sched.clone();
+            let total_ns = total_ns.clone();
+            let count = count.clone();
+            let start = start.clone();
+            std::thread::spawn(move || {
+                start.wait();
+                for i in 0..iters {
+                    let total_ns = total_ns.clone();
+                    let count = count.clone();
+                    let t0 = Instant::now();
+                    sched.spawn(
+                        Priority::Normal,
+                        Hint::Worker((ci * 7 + i) % workers),
+                        "wake_probe",
+                        move || {
+                            total_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            count.fetch_add(1, Ordering::Relaxed);
+                        },
+                    );
+                    // Let the pool drain and park before the next probe.
+                    busy_wait(Duration::from_micros(150));
+                }
+            })
+        })
+        .collect();
+    start.wait();
+    for h in handles {
+        h.join().expect("submitter panicked");
+    }
+    sched.wait_quiescent();
+    let n = count.load(Ordering::Relaxed).max(1);
+    let us = total_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e3;
+    let m = sched.metrics();
+    eprintln!(
+        "[wake] spawn_latency {runtime} k={k}: {us:.3} us/op  ({m})"
+    );
+    sched.shutdown();
+    rows.push(Row {
+        construct: "spawn_latency",
+        runtime,
+        submitters: k,
+        us_per_op: us,
+    });
+}
+
+/// Empty fork/join region round-trip with `k` concurrent clients on one
+/// runtime — the serving-shaped wake workload (batch spawn + targeted
+/// wakes + barrier + join per request).
+fn bench_empty_region(runtime: &'static str, k: usize, iters: usize, rows: &mut Vec<Row>) {
+    let workers = icv::num_procs().max(2);
+    let rt = OmpRuntime::new(workers, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(2);
+    // Warm the workers and the team pool.
+    for _ in 0..5 {
+        fork_call(&rt, Some(2), |_| {});
+    }
+    let start = Arc::new(Barrier::new(k + 1));
+    let handles: Vec<_> = (0..k)
+        .map(|_| {
+            let rt = rt.clone();
+            let start = start.clone();
+            std::thread::spawn(move || {
+                start.wait();
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    fork_call(&rt, Some(2), |_| {});
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            })
+        })
+        .collect();
+    start.wait();
+    let mut per_client: Vec<f64> = Vec::with_capacity(k);
+    for h in handles {
+        per_client.push(h.join().expect("client panicked"));
+    }
+    // Join the worker pool before the next cell: a lingering pool's parked
+    // workers would charge their idle churn to whichever substrate runs
+    // later.
+    rt.sched.shutdown();
+    let us = per_client.iter().sum::<f64>() / per_client.len() as f64 * 1e6;
+    eprintln!("[wake] empty_region {runtime} k={k}: {us:.3} us/op");
+    rows.push(Row {
+        construct: "empty_region",
+        runtime,
+        submitters: k,
+        us_per_op: us,
+    });
+}
+
+/// One `hpxmp serve` smoke under the active substrate; best of two runs
+/// (by p99) to damp scheduler noise.
+fn bench_serve(requests: usize) -> (f64, f64) {
+    let mut best: Option<(f64, f64)> = None;
+    for _ in 0..2 {
+        let workers = icv::num_procs().max(2);
+        let rt = OmpRuntime::new(workers, PolicyKind::PriorityLocal);
+        rt.icv.set_nthreads(2);
+        let cfg = ServeCfg::new(2, 2, requests, KernelMix::Vector);
+        let stats = serve_shared(&rt, &cfg);
+        rt.sched.shutdown(); // no pool bleed-over into the next run/cell
+        let cell = (stats.p50_us, stats.p99_us);
+        best = Some(match best {
+            Some(b) if b.1 <= cell.1 => b,
+            _ => cell,
+        });
+    }
+    best.unwrap()
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let submitters = common::clients_grid();
+    let spawn_iters = if smoke { 200 } else { 2000 };
+    let region_iters = if smoke { 200 } else { 2000 };
+    let serve_requests = if smoke { 25 } else { 100 };
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut serve: Vec<(&'static str, f64, f64)> = Vec::new();
+    for (runtime, global) in [("hpxmp-targeted", false), ("hpxmp-global", true)] {
+        set_idle_mode(global);
+        for &k in &submitters {
+            eprintln!("[wake] {runtime} submitters={k}");
+            bench_spawn_latency(runtime, k, spawn_iters, &mut rows);
+            bench_empty_region(runtime, k, region_iters, &mut rows);
+        }
+        let (p50, p99) = bench_serve(serve_requests);
+        eprintln!("[wake] serve {runtime}: p50={p50:.1}us p99={p99:.1}us");
+        serve.push((runtime, p50, p99));
+    }
+    set_idle_mode(false);
+
+    // Table.
+    println!(
+        "{:<14} {:<16} {:>10} {:>12}",
+        "construct", "runtime", "submitters", "us/op"
+    );
+    for r in &rows {
+        println!(
+            "{:<14} {:<16} {:>10} {:>12.3}",
+            r.construct, r.runtime, r.submitters, r.us_per_op
+        );
+    }
+
+    // Headline: per submitter count, best global/targeted time ratio over
+    // the two constructs (>1 = targeted wins that cell).
+    let mut ratios: Vec<(usize, f64)> = Vec::new();
+    for &k in &submitters {
+        let mut best: Option<f64> = None;
+        for construct in ["spawn_latency", "empty_region"] {
+            let find = |rt: &str| {
+                rows.iter()
+                    .find(|r| r.construct == construct && r.runtime == rt && r.submitters == k)
+                    .map(|r| r.us_per_op)
+            };
+            if let (Some(t), Some(g)) = (find("hpxmp-targeted"), find("hpxmp-global")) {
+                if t > 0.0 {
+                    let ratio = g / t;
+                    best = Some(best.map_or(ratio, |b: f64| b.max(ratio)));
+                }
+            }
+        }
+        if let Some(b) = best {
+            println!("targeted vs global @{k} submitters (best cell): {b:.3}x");
+            ratios.push((k, b));
+        }
+    }
+
+    // JSON report (same format family as the other ablation benches).
+    let mut json = String::from("{\n  \"bench\": \"wake\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"construct\": \"{}\", \"runtime\": \"{}\", \"submitters\": {}, \"us_per_op\": {:.4}}}{}\n",
+            r.construct,
+            r.runtime,
+            r.submitters,
+            r.us_per_op,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"serve\": {\n");
+    for (i, (runtime, p50, p99)) in serve.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{}\": {{\"p50_us\": {:.2}, \"p99_us\": {:.2}}}{}\n",
+            runtime,
+            p50,
+            p99,
+            if i + 1 == serve.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  },\n  \"wake_targeted_vs_global\": {");
+    for (i, (k, ratio)) in ratios.iter().enumerate() {
+        json.push_str(&format!(
+            "{}\"{}\": {:.3}",
+            if i == 0 { "" } else { ", " },
+            k,
+            ratio
+        ));
+    }
+    json.push_str("}\n}\n");
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_wake.json");
+    std::fs::write(&path, json).expect("write BENCH_wake.json");
+    println!("{}", path.display());
+}

@@ -1,6 +1,11 @@
 //! Shared bench scaffolding: build runtimes, run one figure, emit CSV +
-//! ASCII under `results/` (offline build: criterion unavailable; these are
-//! harness-less `cargo bench` binaries).
+//! ASCII under `results/`, and the env-grid parsing every ablation bench
+//! shares (offline build: criterion unavailable; these are harness-less
+//! `cargo bench` binaries).
+//!
+//! Each bench binary compiles this module privately and uses a different
+//! subset of it, so the whole module opts out of dead-code warnings.
+#![allow(dead_code)]
 
 use hpxmp::amt::PolicyKind;
 use hpxmp::baseline::BaselineRuntime;
@@ -16,30 +21,41 @@ pub fn results_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../results")
 }
 
+/// Parse a comma-separated usize grid from env var `name`, falling back to
+/// `default` — the one implementation behind every `BENCH_*` grid
+/// override (previously copy-pasted per bench).
+pub fn env_grid(name: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(name)
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("{name}: bad entry {t:?}")))
+                .collect()
+        })
+        .unwrap_or_else(|| default.to_vec())
+}
+
+/// `BENCH_SMOKE=1` — the CI profile: shrink iteration counts and grids.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok()
+}
+
 /// Thread grid for heatmaps.  The paper sweeps 1–16 on a 16-core node; we
 /// keep the sweep but note (EXPERIMENTS.md) that >num_procs rows are
 /// oversubscribed on this testbed.  `BENCH_THREADS=1,2,4` overrides.
 pub fn heatmap_threads() -> Vec<usize> {
-    std::env::var("BENCH_THREADS")
-        .ok()
-        .map(|v| {
-            v.split(',')
-                .map(|t| t.trim().parse().expect("BENCH_THREADS"))
-                .collect()
-        })
-        .unwrap_or_else(|| vec![1, 2, 4, 8, 12, 16])
+    env_grid("BENCH_THREADS", &[1, 2, 4, 8, 12, 16])
 }
 
 /// The paper's scaling figures use 4, 8, 16 threads.
 pub fn scaling_threads() -> Vec<usize> {
-    std::env::var("BENCH_SCALING_THREADS")
-        .ok()
-        .map(|v| {
-            v.split(',')
-                .map(|t| t.trim().parse().expect("BENCH_SCALING_THREADS"))
-                .collect()
-        })
-        .unwrap_or_else(|| vec![4, 8, 16])
+    env_grid("BENCH_SCALING_THREADS", &[4, 8, 16])
+}
+
+/// Concurrent-client grid for the serving/wake ablations.
+/// `BENCH_CLIENTS=1,2,4` overrides.
+pub fn clients_grid() -> Vec<usize> {
+    env_grid("BENCH_CLIENTS", &[1, 2, 4, 8])
 }
 
 pub fn build(max_threads: usize) -> (HpxMpRuntime, BaselineRuntime) {

@@ -18,9 +18,10 @@
 //!   countdown hooks (no task spawned per input; the combined future's own
 //!   continuations are where work hangs).
 //! * [`Future::wait`] — a **help-first** wait for the blocking edges of
-//!   the system: a worker that waits runs pending tasks via
-//!   [`worker::wait_tick`] instead of burning its core, exactly like the
-//!   OpenMP layer's barriers.
+//!   the system: a worker that waits runs pending tasks via the unified
+//!   [`worker::wait_until`] engine instead of burning its core, exactly
+//!   like the OpenMP layer's barriers, and fulfilment wakes parked
+//!   waiters explicitly.
 //!
 //! The state machine of one future (§7 of DESIGN.md):
 //!
@@ -45,6 +46,7 @@ use std::sync::{Arc, Mutex};
 
 use once_cell::sync::OnceCell;
 
+use super::park::WakeList;
 use super::scheduler::Scheduler;
 use super::task::{Hint, Priority};
 use super::worker;
@@ -70,6 +72,9 @@ struct SharedState<T> {
     value: OnceCell<T>,
     /// Continuations registered while pending; drained at fulfilment.
     conts: Mutex<Vec<Cont<T>>>,
+    /// Parked [`Future::wait`]ers; notified right after the value lands
+    /// (the unified wait engine's explicit wake channel — DESIGN.md §9).
+    wakers: WakeList,
 }
 
 fn dispatch<T: Send + Sync + 'static>(state: Arc<SharedState<T>>, cont: Cont<T>) {
@@ -94,6 +99,7 @@ impl<T: Send + Sync + 'static> Promise<T> {
             state: Arc::new(SharedState {
                 value: OnceCell::new(),
                 conts: Mutex::new(Vec::new()),
+                wakers: WakeList::new(),
             }),
         }
     }
@@ -114,6 +120,9 @@ impl<T: Send + Sync + 'static> Promise<T> {
         if self.state.value.set(value).is_err() {
             unreachable!("Promise::set_value consumes self; double-fulfil is unconstructible");
         }
+        // Wake parked `wait`ers first — they only need the ready flag,
+        // which is already published — then dispatch continuations.
+        self.state.wakers.notify_all();
         // Continuations registered from here on observe the value under the
         // lock and dispatch themselves; we drain only what was pending.
         let pending = std::mem::take(&mut *self.state.conts.lock().unwrap());
@@ -148,6 +157,7 @@ impl<T: Send + Sync + 'static> Future<T> {
         let state = Arc::new(SharedState {
             value: OnceCell::new(),
             conts: Mutex::new(Vec::new()),
+            wakers: WakeList::new(),
         });
         let _ = state.value.set(value);
         Self { state }
@@ -165,15 +175,14 @@ impl<T: Send + Sync + 'static> Future<T> {
         Arc::ptr_eq(&self.state, &other.state)
     }
 
-    /// Help-first wait: if the calling thread is an AMT worker it runs
+    /// Help-first wait through the unified engine ([`worker::wait_until`],
+    /// DESIGN.md §9): if the calling thread is an AMT worker it runs
     /// pending tasks while the value is not ready (so the producer chain
     /// can make progress *through* the waiter — no deadlock, no burnt
-    /// core); non-worker threads escalate spin → yield → sleep.
+    /// core); otherwise it escalates spin → yield → timed-park, and
+    /// fulfilment delivers an explicit wake to parked waiters.
     pub fn wait(&self) {
-        let mut spins = 0u32;
-        while !self.is_ready() {
-            worker::wait_tick(&mut spins);
-        }
+        worker::wait_until(Some(&self.state.wakers), || self.is_ready());
     }
 
     /// Wait, then clone the value out.

@@ -9,8 +9,29 @@ pub struct Metrics {
     pub executed: AtomicU64,
     pub stolen: AtomicU64,
     pub overflowed: AtomicU64,
+    /// Worker main-loop park *descents* (idle, nothing runnable): counted
+    /// at the idle-set announce, i.e. including descents cancelled by the
+    /// post-announce queue re-check.  Deliberate: every claimable idle bit
+    /// is covered by exactly one increment, which is what makes the
+    /// conservation check `wakes_targeted + wakes_any <= parked +
+    /// wait_parks` exact (a counter of only-completed sleeps would
+    /// undercount the claim windows).
     pub parked: AtomicU64,
     pub helped: AtomicU64,
+    /// Parks taken *inside* blocking constructs (the `WaitState` engine:
+    /// barriers, joins, taskwaits, future waits).
+    pub wait_parks: AtomicU64,
+    /// Parks taken by `wait_quiescent`/`shutdown` waiters — the counter
+    /// that proves the old 50µs sleep-poll loop is gone (ISSUE 4): a
+    /// quiescence waiter now parks and is notified on retire, it never
+    /// busy-sleeps.
+    pub quiesce_parks: AtomicU64,
+    /// Wake-ups delivered to the worker the placement hint targeted
+    /// (its queue holds the task) — the targeted-wake fast path.
+    pub wakes_targeted: AtomicU64,
+    /// Wake-ups delivered to an arbitrary idle worker (hint target was
+    /// awake or the task had no placement hint).
+    pub wakes_any: AtomicU64,
 }
 
 impl Metrics {
@@ -33,6 +54,10 @@ impl Metrics {
             overflowed: self.overflowed.load(Ordering::Relaxed),
             parked: self.parked.load(Ordering::Relaxed),
             helped: self.helped.load(Ordering::Relaxed),
+            wait_parks: self.wait_parks.load(Ordering::Relaxed),
+            quiesce_parks: self.quiesce_parks.load(Ordering::Relaxed),
+            wakes_targeted: self.wakes_targeted.load(Ordering::Relaxed),
+            wakes_any: self.wakes_any.load(Ordering::Relaxed),
         }
     }
 }
@@ -46,14 +71,28 @@ pub struct MetricsSnapshot {
     pub overflowed: u64,
     pub parked: u64,
     pub helped: u64,
+    pub wait_parks: u64,
+    pub quiesce_parks: u64,
+    pub wakes_targeted: u64,
+    pub wakes_any: u64,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "spawned={} executed={} stolen={} overflowed={} parked={} helped={}",
-            self.spawned, self.executed, self.stolen, self.overflowed, self.parked, self.helped
+            "spawned={} executed={} stolen={} overflowed={} parked={} helped={} \
+             wait_parks={} quiesce_parks={} wakes_targeted={} wakes_any={}",
+            self.spawned,
+            self.executed,
+            self.stolen,
+            self.overflowed,
+            self.parked,
+            self.helped,
+            self.wait_parks,
+            self.quiesce_parks,
+            self.wakes_targeted,
+            self.wakes_any
         )
     }
 }
@@ -78,7 +117,18 @@ mod tests {
     fn display_contains_all_fields() {
         let m = Metrics::default().snapshot();
         let s = format!("{m}");
-        for key in ["spawned", "executed", "stolen", "overflowed", "parked", "helped"] {
+        for key in [
+            "spawned",
+            "executed",
+            "stolen",
+            "overflowed",
+            "parked",
+            "helped",
+            "wait_parks",
+            "quiesce_parks",
+            "wakes_targeted",
+            "wakes_any",
+        ] {
             assert!(s.contains(key), "{key} missing from {s}");
         }
     }

@@ -9,22 +9,30 @@
 //! * [`deque`] — a hand-built Chase–Lev work-stealing deque (the lock-free
 //!   structure behind HPX's ABP/local policies).
 //! * [`policy`] — the seven §3.2 scheduling policies behind one trait.
+//! * [`park`] — the sleep/wake substrate (DESIGN.md §9): per-worker
+//!   eventcount parkers, the lock-free idle-worker set behind targeted
+//!   wakes, wake lists for event-driven waits, and the global-condvar
+//!   ablation fallback (`HPXMP_GLOBAL_IDLE=1`).
 //! * [`worker`] / [`scheduler`] — OS worker threads, parking, spawning,
-//!   cooperative "help" execution (the task-scheduling-point mechanism the
-//!   OpenMP layer's barriers stand on).
+//!   cooperative "help" execution, and the unified
+//!   [`WaitState`](worker::WaitState) engine every blocking construct
+//!   (barrier, join, taskwait, future wait, quiescence) ticks through.
 //! * [`future`] — `hpx::future`/`promise` continuations: `then` scheduled
 //!   as AMT tasks, `when_all` joins, help-first waits (DESIGN.md §7).
-//! * [`metrics`] — counters for spawned/executed/stolen/parked tasks.
+//! * [`metrics`] — counters for spawned/executed/stolen/parked tasks and
+//!   the targeted-wake observability surface.
 
 pub mod deque;
 pub mod future;
 pub mod metrics;
+pub mod park;
 pub mod policy;
 pub mod scheduler;
 pub mod task;
 pub mod worker;
 
 pub use future::{when_all, Future, Promise};
+pub use park::IdleMode;
 pub use policy::PolicyKind;
 pub use scheduler::Scheduler;
 pub use task::{Priority, Task};

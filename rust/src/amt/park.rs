@@ -1,0 +1,515 @@
+//! The sleep/wake substrate (ISSUE 4): per-worker parkers, a lock-free
+//! idle-worker set for O(1) "find a sleeper", explicit wake lists for
+//! event-driven waits, and the legacy single-condvar fallback kept for
+//! the `HPXMP_GLOBAL_IDLE=1` ablation.
+//!
+//! Before this module, every spawn, barrier, join and future-wait funneled
+//! through ONE `Mutex<()>` + `Condvar` with SeqCst sleeper accounting — a
+//! thundering-herd design: M concurrent submitters serialized on one lock
+//! to wake workers that then all collided on the same wait queue.  The
+//! replacement is eventcount-style:
+//!
+//! * [`Parker`] — one per worker (plus a thread-local one for application
+//!   threads): a 3-state atomic (`EMPTY`/`NOTIFIED`/`PARKED`) in front of
+//!   a *private* mutex/condvar.  `unpark` on a non-parked parker is one
+//!   uncontended atomic swap; a notification arriving before `park` is
+//!   latched and consumed without ever touching the lock.
+//! * [`IdleSet`] — an atomic bitset of idle workers.  Wakers claim a
+//!   sleeper by clearing its bit (`take`/`pop_any`), so "wake the worker
+//!   whose queue just got the task, else any sleeper" is two RMWs with no
+//!   shared lock, and the old `sleepers` counter is *folded into the set*
+//!   (occupancy = the bits themselves — nothing to keep in sync).
+//! * [`WakeList`] — registered waiter parkers for constructs with an
+//!   explicit completion event (join latch, task counters, futures,
+//!   scheduler quiescence): the event side pays one relaxed-ish load when
+//!   nobody waits, one unpark per waiter when somebody does.
+//! * [`GlobalIdle`] — the pre-refactor global-condvar idle system, kept
+//!   behind `HPXMP_GLOBAL_IDLE=1` so `benches/ablation_wake.rs` can
+//!   measure exactly what the targeted substrate buys.
+//!
+//! **The one invariant every user of this module leans on:** a parker may
+//! be woken spuriously or late, but never *lost* — `unpark` latches, and
+//! every park is timed.  Protocol races (a task pushed while a worker is
+//! between "announce idle" and "sleep", an event fired while a waiter is
+//! between "register" and "park") therefore cost at most one park timeout,
+//! never liveness.  See DESIGN.md §9.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Parker
+// ---------------------------------------------------------------------------
+
+const EMPTY: u32 = 0;
+const NOTIFIED: u32 = 1;
+const PARKED: u32 = 2;
+
+/// Eventcount-style one-thread parker: `unpark` is cheap when the target
+/// is awake, latched when it has not parked yet, and a condvar signal only
+/// when the target is actually asleep.  Exactly one thread may park on a
+/// given parker at a time (each worker owns its own; application threads
+/// use [`thread_parker`]); any number may unpark.
+pub struct Parker {
+    state: AtomicU32,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Default for Parker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Parker {
+    pub fn new() -> Self {
+        Self {
+            state: AtomicU32::new(EMPTY),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block for at most `timeout`, or until [`Parker::unpark`].  Returns
+    /// `true` when a notification was consumed (including one latched
+    /// before the call — that fast path never touches the lock).
+    pub fn park_timeout(&self, timeout: Duration) -> bool {
+        // Consume a latched notification without blocking.  Acquire pairs
+        // with the Release swap in `unpark`: everything the waker wrote
+        // before unparking is visible to us now.
+        if self
+            .state
+            .compare_exchange(NOTIFIED, EMPTY, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            return true;
+        }
+        let guard = self.lock.lock().unwrap();
+        // Publish PARKED under the lock.  An unpark racing us either ran
+        // before this CAS (we observe NOTIFIED and leave) or sees PARKED
+        // and then blocks on our lock until we are inside `wait_timeout` —
+        // its signal cannot fall between our publication and our wait.
+        if self
+            .state
+            .compare_exchange(EMPTY, PARKED, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            // NOTIFIED slipped in between the fast path and the lock.
+            self.state.swap(EMPTY, Ordering::Acquire);
+            return true;
+        }
+        let (guard, _timed_out) = self.cv.wait_timeout(guard, timeout).unwrap();
+        drop(guard);
+        // Collapse whatever happened (notify, timeout, spurious wake) back
+        // to EMPTY and report whether a notification was pending.
+        self.state.swap(EMPTY, Ordering::Acquire) == NOTIFIED
+    }
+
+    /// Wake (or pre-notify) the parker's owner.  The notification latches:
+    /// if the owner is not parked, its next `park_timeout` returns
+    /// immediately instead of sleeping — this is what closes every
+    /// "event fired just before the sleeper slept" race in the system.
+    pub fn unpark(&self) {
+        // Release pairs with the Acquire swaps in `park_timeout`.
+        if self.state.swap(NOTIFIED, Ordering::Release) == PARKED {
+            // The owner is on (or irrevocably headed into) the condvar
+            // wait: take the lock so our notify cannot land in the gap
+            // between its state publication and its wait, then signal.
+            drop(self.lock.lock().unwrap());
+            self.cv.notify_one();
+        }
+    }
+}
+
+thread_local! {
+    static THREAD_PARKER: Arc<Parker> = Arc::new(Parker::new());
+}
+
+/// The calling thread's own parker (application threads blocking in joins,
+/// quiescence waits, future waits...).  Worker threads use the parker the
+/// scheduler allocated for their slot instead, so targeted wakes and wait
+/// parks share one latch per worker.
+pub fn thread_parker() -> Arc<Parker> {
+    THREAD_PARKER.with(|p| p.clone())
+}
+
+// ---------------------------------------------------------------------------
+// IdleSet
+// ---------------------------------------------------------------------------
+
+/// Lock-free bitset of idle workers — the "find a sleeper in O(1)" half of
+/// the substrate.  The old SeqCst `sleepers` counter is folded in here:
+/// set bits *are* the sleeper accounting, and claiming a bit *is* the wake
+/// admission, one `fetch_and` instead of counter + lock + condvar.
+///
+/// Memory-ordering invariant (the lost-wake argument, DESIGN.md §9): a
+/// worker **announces** (sets its bit, AcqRel) and only then re-checks the
+/// queues; a submitter **pushes** (through a queue mutex — every external
+/// push is mutex-protected) and only then scans the set (AcqRel RMW on
+/// `take`/`pop_any`).  If the submitter's scan misses the bit, the
+/// worker's announce had not happened yet, so the worker's *subsequent*
+/// queue re-check is ordered after the push's mutex release and sees the
+/// task.  Either the bit is seen or the task is — never neither.  The
+/// Acquire/Release pairs on the word are sufficient because the queue
+/// mutex supplies the cross-location ordering; the worker's timed park is
+/// the formal backstop regardless.
+pub struct IdleSet {
+    words: Vec<AtomicU64>,
+    workers: usize,
+}
+
+impl IdleSet {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            words: (0..workers.div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
+            workers,
+        }
+    }
+
+    #[inline]
+    fn split(w: usize) -> (usize, u64) {
+        (w / 64, 1u64 << (w % 64))
+    }
+
+    /// Mark worker `w` idle (it is about to park and can be claimed).
+    pub fn announce(&self, w: usize) {
+        debug_assert!(w < self.workers);
+        let (i, mask) = Self::split(w);
+        self.words[i].fetch_or(mask, Ordering::AcqRel);
+    }
+
+    /// Remove worker `w`'s idle mark (it is awake again); harmless if a
+    /// waker already claimed the bit.
+    pub fn retract(&self, w: usize) {
+        let (i, mask) = Self::split(w);
+        self.words[i].fetch_and(!mask, Ordering::AcqRel);
+    }
+
+    /// Claim worker `w`'s idle credit: `true` exactly once per announce —
+    /// the targeted-wake fast path ("the task went on `w`'s queue; is `w`
+    /// asleep?").
+    pub fn take(&self, w: usize) -> bool {
+        let (i, mask) = Self::split(w);
+        self.words[i].fetch_and(!mask, Ordering::AcqRel) & mask != 0
+    }
+
+    /// Claim *any* idle worker (fallback when the targeted worker is
+    /// awake/busy).  Scans whole words, so it is O(words) ≈ O(1) for
+    /// machine-sized pools; each claim is one CAS.
+    pub fn pop_any(&self) -> Option<usize> {
+        for (i, word) in self.words.iter().enumerate() {
+            let mut cur = word.load(Ordering::Acquire);
+            while cur != 0 {
+                let bit = cur.trailing_zeros();
+                let mask = 1u64 << bit;
+                match word.compare_exchange_weak(
+                    cur,
+                    cur & !mask,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => return Some(i * 64 + bit as usize),
+                    Err(now) => cur = now,
+                }
+            }
+        }
+        None
+    }
+
+    /// Racy idle-worker estimate (diagnostics only).
+    pub fn len_estimate(&self) -> usize {
+        self.words
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed).count_ones() as usize)
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WakeList
+// ---------------------------------------------------------------------------
+
+/// Registered waiter parkers for one waitable event (join latch reaching
+/// zero, a counter draining, a future fulfilling, scheduler quiescence).
+///
+/// The event side calls [`WakeList::notify_all`] *after* publishing the
+/// state change; the cost is a single load when nobody waits.  The waiter
+/// side registers lazily — only once it escalates far enough to park (see
+/// `worker::wait_until`) — re-checks its condition, then parks.  A notify
+/// that races the registration is caught by that re-check or by the
+/// latched unpark; one that is missed entirely (the counter load below is
+/// deliberately not a full Dekker fence) costs one park *timeout*, never
+/// liveness — timed parks are the substrate-wide backstop.
+#[derive(Default)]
+pub struct WakeList {
+    /// Registered-waiter count, maintained under `list`'s lock; SeqCst so
+    /// the notify fast path and the register side agree on a single total
+    /// order in the common case (pairing documented above — the timed
+    /// park, not this counter, is what correctness rests on).
+    waiting: AtomicUsize,
+    list: Mutex<Vec<Arc<Parker>>>,
+}
+
+impl WakeList {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `p` to be unparked at the next notify.  Call before the
+    /// final condition re-check that precedes parking.
+    pub fn register(&self, p: &Arc<Parker>) {
+        let mut list = self.list.lock().unwrap();
+        list.push(p.clone());
+        self.waiting.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Remove `p` (waiter done).  Idempotent: removing an absent parker
+    /// is a no-op.
+    pub fn deregister(&self, p: &Arc<Parker>) {
+        let mut list = self.list.lock().unwrap();
+        if let Some(i) = list.iter().position(|q| Arc::ptr_eq(q, p)) {
+            list.swap_remove(i);
+            self.waiting.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Unpark every registered waiter.  One load and done when nobody
+    /// waits — cheap enough to call on every event (every task retire,
+    /// every counter decrement to zero).
+    pub fn notify_all(&self) {
+        if self.waiting.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        for p in self.list.lock().unwrap().iter() {
+            p.unpark();
+        }
+    }
+
+    /// Registered waiters right now (diagnostics/tests).
+    pub fn waiting(&self) -> usize {
+        self.waiting.load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GlobalIdle — the pre-refactor design, kept for the ablation
+// ---------------------------------------------------------------------------
+
+/// The old global idle system: ONE lock + condvar all workers sleep on,
+/// with a sleeper counter guarding the wake fast path.  Selected by
+/// `HPXMP_GLOBAL_IDLE=1` so `ablation_wake` can measure targeted-vs-global
+/// head to head; not used otherwise.
+pub struct GlobalIdle {
+    lock: Mutex<()>,
+    cv: Condvar,
+    /// Workers inside (or committed to) the condvar wait.  The increment
+    /// is a Release under the lock and the wake fast path reads Acquire:
+    /// a waker that loads 0 may only skip the lock because any
+    /// concurrently-parking worker re-checks the queues *under the lock*
+    /// after the waker's push, and the 500µs wait timeout self-heals the
+    /// residual window.  (This replaces the old undocumented SeqCst
+    /// accounting — the pairing is the documented invariant now.)
+    sleepers: AtomicUsize,
+}
+
+impl Default for GlobalIdle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GlobalIdle {
+    pub fn new() -> Self {
+        Self {
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
+        }
+    }
+
+    /// Park the calling worker for up to `timeout` if `should_sleep` still
+    /// holds under the idle lock (the re-check that closes the sleep/wake
+    /// race in this design).
+    pub fn park(&self, should_sleep: impl FnOnce() -> bool, timeout: Duration) {
+        let guard = self.lock.lock().unwrap();
+        self.sleepers.fetch_add(1, Ordering::Release);
+        if should_sleep() {
+            let (guard, _) = self.cv.wait_timeout(guard, timeout).unwrap();
+            drop(guard);
+        } else {
+            drop(guard);
+        }
+        self.sleepers.fetch_sub(1, Ordering::Release);
+    }
+
+    /// Notify up to `n` sleepers under one lock acquisition; skips the
+    /// lock when nobody sleeps.
+    pub fn wake(&self, n: usize) {
+        if n == 0 || self.sleepers.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let _g = self.lock.lock().unwrap();
+        let sleeping = self.sleepers.load(Ordering::Acquire);
+        if n >= sleeping {
+            self.cv.notify_all();
+        } else {
+            for _ in 0..n {
+                self.cv.notify_one();
+            }
+        }
+    }
+
+    /// Wake every sleeper (shutdown).
+    pub fn wake_all(&self) {
+        let _g = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IdleMode
+// ---------------------------------------------------------------------------
+
+/// Which idle substrate a scheduler instance runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IdleMode {
+    /// Per-worker parkers + idle set, targeted wakes (the default).
+    Targeted,
+    /// The legacy single global condvar (`HPXMP_GLOBAL_IDLE=1`) — the
+    /// ablation baseline.
+    Global,
+}
+
+impl IdleMode {
+    /// `HPXMP_GLOBAL_IDLE` — defaults to [`IdleMode::Targeted`];
+    /// `1|true|on|yes` selects the global fallback.
+    pub fn from_env() -> Self {
+        match std::env::var("HPXMP_GLOBAL_IDLE") {
+            Ok(v) if matches!(
+                v.trim().to_ascii_lowercase().as_str(),
+                "1" | "true" | "on" | "yes"
+            ) =>
+            {
+                IdleMode::Global
+            }
+            _ => IdleMode::Targeted,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IdleMode::Targeted => "targeted",
+            IdleMode::Global => "global",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn unpark_before_park_is_latched() {
+        let p = Parker::new();
+        p.unpark();
+        let t0 = Instant::now();
+        assert!(p.park_timeout(Duration::from_secs(5)), "latched notify lost");
+        assert!(t0.elapsed() < Duration::from_secs(1), "latched notify slept");
+        // Consumed: the next park must actually wait.
+        assert!(!p.park_timeout(Duration::from_micros(50)));
+    }
+
+    #[test]
+    fn park_times_out_without_notify() {
+        let p = Parker::new();
+        assert!(!p.park_timeout(Duration::from_micros(200)));
+    }
+
+    #[test]
+    fn unpark_wakes_a_parked_thread() {
+        let p = Arc::new(Parker::new());
+        let p2 = p.clone();
+        let t = std::thread::spawn(move || p2.park_timeout(Duration::from_secs(10)));
+        // Give the thread a moment to actually park, then wake it.
+        crate::util::timing::spin_wait(Duration::from_millis(5));
+        p.unpark();
+        assert!(t.join().unwrap(), "parked thread saw a timeout, not the notify");
+    }
+
+    #[test]
+    fn repeated_unparks_coalesce_to_one_notification() {
+        let p = Parker::new();
+        p.unpark();
+        p.unpark();
+        p.unpark();
+        assert!(p.park_timeout(Duration::from_secs(1)));
+        assert!(!p.park_timeout(Duration::from_micros(50)), "notify duplicated");
+    }
+
+    #[test]
+    fn idle_set_take_claims_exactly_once() {
+        let s = IdleSet::new(70); // spans two words
+        s.announce(3);
+        s.announce(69);
+        assert_eq!(s.len_estimate(), 2);
+        assert!(s.take(3));
+        assert!(!s.take(3), "one announce claimed twice");
+        assert!(s.take(69));
+        assert_eq!(s.len_estimate(), 0);
+    }
+
+    #[test]
+    fn idle_set_pop_any_drains_all_workers() {
+        let s = IdleSet::new(10);
+        for w in 0..10 {
+            s.announce(w);
+        }
+        let mut got: Vec<usize> = std::iter::from_fn(|| s.pop_any()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        assert!(s.pop_any().is_none());
+    }
+
+    #[test]
+    fn idle_set_retract_clears_unclaimed_bit() {
+        let s = IdleSet::new(4);
+        s.announce(2);
+        s.retract(2);
+        assert!(!s.take(2));
+        assert!(s.pop_any().is_none());
+    }
+
+    #[test]
+    fn wake_list_notifies_registered_parkers() {
+        let wl = WakeList::new();
+        let p = Arc::new(Parker::new());
+        wl.register(&p);
+        assert_eq!(wl.waiting(), 1);
+        wl.notify_all();
+        assert!(p.park_timeout(Duration::from_secs(1)), "notify not delivered");
+        wl.deregister(&p);
+        assert_eq!(wl.waiting(), 0);
+        wl.notify_all(); // no waiters: must not panic or block
+    }
+
+    #[test]
+    fn wake_list_deregister_is_idempotent() {
+        let wl = WakeList::new();
+        let p = Arc::new(Parker::new());
+        wl.register(&p);
+        wl.deregister(&p);
+        wl.deregister(&p);
+        assert_eq!(wl.waiting(), 0);
+    }
+
+    #[test]
+    fn idle_mode_parses_env_values() {
+        // Not exercising the env var itself (process-global, racy across
+        // parallel tests) — just the name mapping.
+        assert_eq!(IdleMode::Targeted.name(), "targeted");
+        assert_eq!(IdleMode::Global.name(), "global");
+    }
+}

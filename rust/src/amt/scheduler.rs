@@ -3,15 +3,41 @@
 //! This is the "HPX runtime" of the reproduction: `Scheduler::spawn` is our
 //! `hpx::applier::register_thread_nullary` (paper Listing 3), taking a
 //! priority, a placement hint and a description.
+//!
+//! Since ISSUE 4 the idle system is the per-worker parking substrate of
+//! [`super::park`]: spawns issue **targeted wakes** — first the worker
+//! whose queue the placement hint put the task on, else any sleeper popped
+//! from the lock-free [`IdleSet`] — instead of funneling every wake-up
+//! through one global mutex/condvar.  `HPXMP_GLOBAL_IDLE=1` selects the
+//! old global-condvar design ([`GlobalIdle`]) so `benches/ablation_wake.rs`
+//! can measure the difference.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::park::{GlobalIdle, IdleMode, IdleSet, Parker, WakeList};
 use super::policy::{PolicyKind, Queues};
 use super::task::{Hint, Priority, Task};
 use super::worker;
+use super::worker::Tick;
+
+/// How long an idle worker sleeps per park before re-scanning the queues.
+/// Wakes are explicit (targeted unpark / condvar notify); this timeout is
+/// only the self-heal bound for protocol races, so it can be generous
+/// without costing wake latency.
+const WORKER_PARK_TIMEOUT: Duration = Duration::from_micros(500);
+
+/// The idle substrate of one scheduler instance (DESIGN.md §9).
+pub(super) enum IdleBackend {
+    /// Per-worker parkers + lock-free idle set: targeted wakes.
+    PerWorker { parkers: Vec<Arc<Parker>>, idle: IdleSet },
+    /// One global mutex/condvar all workers share — the pre-ISSUE-4
+    /// design, kept for the `HPXMP_GLOBAL_IDLE=1` ablation.
+    Global(GlobalIdle),
+}
 
 /// State shared by all workers of one scheduler instance.
 pub struct Shared {
@@ -19,9 +45,11 @@ pub struct Shared {
     /// Tasks spawned but not yet retired (queued + running).
     pub(super) live: AtomicUsize,
     pub(super) shutdown: AtomicBool,
-    pub(super) idle_lock: Mutex<()>,
-    pub(super) idle_cv: Condvar,
-    pub(super) sleepers: AtomicUsize,
+    pub(super) idle: IdleBackend,
+    /// Parked waiters to notify when `live` drains to zero
+    /// (`wait_quiescent`/`shutdown` — the replacement for their old
+    /// 50µs sleep-poll loop).
+    pub(super) quiesce: WakeList,
     pub(super) metrics: Metrics,
     pub(super) panics: AtomicU64,
     /// Rotating cursor behind [`Scheduler::hint_base`]: spreads the
@@ -29,6 +57,136 @@ pub struct Shared {
     /// clients on one scheduler) across distinct worker queues.
     hint_cursor: AtomicUsize,
     policy: PolicyKind,
+}
+
+impl Shared {
+    /// Worker `w`'s parker, when the targeted substrate is active.
+    pub(super) fn worker_parker(&self, w: usize) -> Option<Arc<Parker>> {
+        match &self.idle {
+            IdleBackend::PerWorker { parkers, .. } => Some(parkers[w].clone()),
+            IdleBackend::Global(_) => None,
+        }
+    }
+
+    /// Park idle worker `me` from its main loop: announce in the idle set,
+    /// re-check the queues (the lost-wake dichotomy — see `IdleSet` docs:
+    /// either a submitter sees our bit or we see its task), then sleep.
+    pub(super) fn worker_park(&self, me: usize) {
+        match &self.idle {
+            IdleBackend::PerWorker { parkers, idle } => {
+                idle.announce(me);
+                if self.queues.approx_len() != 0 || self.shutdown.load(Ordering::Acquire) {
+                    idle.retract(me);
+                    return;
+                }
+                parkers[me].park_timeout(WORKER_PARK_TIMEOUT);
+                // Harmless if a waker already claimed (cleared) our bit.
+                idle.retract(me);
+            }
+            IdleBackend::Global(g) => {
+                g.park(
+                    || self.queues.approx_len() == 0 && !self.shutdown.load(Ordering::Acquire),
+                    WORKER_PARK_TIMEOUT,
+                );
+            }
+        }
+    }
+
+    /// Park worker `me` from *inside a blocking construct* (`WaitState`
+    /// escalation).  With `announce`, the waiter advertises itself in the
+    /// idle set so targeted wakes treat it as a schedulable core — it will
+    /// help-run whatever it is woken for.  A requeue-backoff waiter (the
+    /// §4 nesting guard fired) must pass `announce = false`: it cannot run
+    /// the task it just requeued, and claiming wake credits for it would
+    /// starve the workers that can.
+    pub(super) fn waiter_park(&self, me: usize, timeout: Duration, announce: bool) {
+        match &self.idle {
+            IdleBackend::PerWorker { parkers, idle } => {
+                if announce {
+                    idle.announce(me);
+                    if self.shutdown.load(Ordering::Acquire) {
+                        idle.retract(me);
+                        return;
+                    }
+                    // Queue re-check after announcing (the lost-wake
+                    // dichotomy).  Occupied queues don't cancel the park —
+                    // the pending work is either freshly pushed to *our*
+                    // queue (its targeted wake cuts the nap short; we are
+                    // announced) or unstealable under the active policy
+                    // (nothing we can do but get out of the way) — they
+                    // only shorten it, so the wait loop cannot spin hot on
+                    // this re-check (it has no yield rung left).
+                    let t = if self.queues.approx_len() != 0 {
+                        timeout.min(Duration::from_micros(20))
+                    } else {
+                        timeout
+                    };
+                    parkers[me].park_timeout(t);
+                    idle.retract(me);
+                } else {
+                    parkers[me].park_timeout(timeout);
+                }
+            }
+            // Global fallback: blind timed nap, like the old 20µs
+            // sleep-wait rung but latched-wake capable.
+            IdleBackend::Global(_) => {
+                super::park::thread_parker().park_timeout(timeout);
+            }
+        }
+    }
+
+    /// Wake up to `want` workers for freshly pushed tasks.  `preferred`
+    /// lists the workers whose queues received the tasks (in push order):
+    /// each is claimed from the idle set if asleep — the targeted-wake
+    /// fast path — and the remainder of the budget falls back to popping
+    /// arbitrary sleepers.  No global lock anywhere; concurrent wakers
+    /// contend only on CAS-claiming individual idle bits.
+    pub(super) fn wake_workers<I>(&self, preferred: I, want: usize)
+    where
+        I: IntoIterator<Item = usize>,
+    {
+        if want == 0 {
+            return;
+        }
+        match &self.idle {
+            IdleBackend::PerWorker { parkers, idle } => {
+                let mut woken = 0usize;
+                for w in preferred {
+                    if woken == want {
+                        return;
+                    }
+                    if idle.take(w) {
+                        parkers[w].unpark();
+                        Metrics::inc(&self.metrics.wakes_targeted);
+                        woken += 1;
+                    }
+                }
+                while woken < want {
+                    match idle.pop_any() {
+                        Some(v) => {
+                            parkers[v].unpark();
+                            Metrics::inc(&self.metrics.wakes_any);
+                            woken += 1;
+                        }
+                        None => return,
+                    }
+                }
+            }
+            IdleBackend::Global(g) => g.wake(want),
+        }
+    }
+
+    /// Wake every worker unconditionally (shutdown).
+    pub(super) fn wake_all_workers(&self) {
+        match &self.idle {
+            IdleBackend::PerWorker { parkers, .. } => {
+                for p in parkers {
+                    p.unpark();
+                }
+            }
+            IdleBackend::Global(g) => g.wake_all(),
+        }
+    }
 }
 
 /// An AMT scheduler instance: `n` OS workers multiplexing tasks under a
@@ -40,14 +198,26 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(workers: usize, policy: PolicyKind) -> Arc<Self> {
+        Self::with_idle_mode(workers, policy, IdleMode::from_env())
+    }
+
+    /// Build with an explicit idle substrate (tests/benches; [`Self::new`]
+    /// reads `HPXMP_GLOBAL_IDLE`).
+    pub fn with_idle_mode(workers: usize, policy: PolicyKind, mode: IdleMode) -> Arc<Self> {
         let workers = workers.max(1);
+        let idle = match mode {
+            IdleMode::Targeted => IdleBackend::PerWorker {
+                parkers: (0..workers).map(|_| Arc::new(Parker::new())).collect(),
+                idle: IdleSet::new(workers),
+            },
+            IdleMode::Global => IdleBackend::Global(GlobalIdle::new()),
+        };
         let shared = Arc::new(Shared {
             queues: policy.build(workers),
             live: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
-            idle_lock: Mutex::new(()),
-            idle_cv: Condvar::new(),
-            sleepers: AtomicUsize::new(0),
+            idle,
+            quiesce: WakeList::new(),
             metrics: Metrics::default(),
             panics: AtomicU64::new(0),
             hint_cursor: AtomicUsize::new(0),
@@ -70,6 +240,14 @@ impl Scheduler {
 
     pub fn policy(&self) -> PolicyKind {
         self.shared.policy
+    }
+
+    /// Which idle substrate this instance runs on.
+    pub fn idle_mode(&self) -> IdleMode {
+        match self.shared.idle {
+            IdleBackend::PerWorker { .. } => IdleMode::Targeted,
+            IdleBackend::Global(_) => IdleMode::Global,
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -112,16 +290,22 @@ impl Scheduler {
                 None
             }
         });
+        // Targeted wake: the hinted worker's queue holds the task, so it
+        // is the one to rouse; unhinted tasks wake any sleeper.
+        let target = match hint {
+            Hint::Worker(w) => Some(w % self.workers()),
+            Hint::Any => None,
+        };
         self.shared.queues.push(task, hint, submitter);
-        self.wake_n(1);
+        self.shared.wake_workers(target, 1);
     }
 
     /// Register a whole team of tasks in one pass — the fork fast path
     /// (paper §5.1: one `register_thread_nullary` per OpenMP thread, but a
     /// naive loop over [`Scheduler::spawn`] pays one `live` update and one
-    /// idle-lock acquisition *per task*).  Here: one `live` update, one
-    /// queue pass, and one wake covering `min(batch, sleepers)` workers
-    /// under a single lock acquisition.
+    /// wake negotiation *per task*).  Here: one `live` update, one queue
+    /// pass, and one wake sweep that unparks the hinted workers first
+    /// (their queues hold the tasks) and tops up from the idle set.
     pub fn spawn_batch(
         &self,
         priority: Priority,
@@ -142,7 +326,12 @@ impl Scheduler {
                 None
             }
         });
+        let workers = self.workers();
+        let mut targets: Vec<usize> = Vec::with_capacity(n);
         for (hint, f) in bodies {
+            if let Hint::Worker(w) = hint {
+                targets.push(w % workers);
+            }
             self.shared
                 .queues
                 .push(Task::from_boxed(priority, desc, f), hint, submitter);
@@ -152,47 +341,29 @@ impl Scheduler {
         // run one of the batch itself: only the rest need wake-ups.  The
         // wake request is clamped to the worker count: under concurrent
         // spawn_batch callers each batch may only claim as many wake-ups
-        // as there are workers to wake, keeping the notify loop bounded
-        // and the idle-lock hold time fair across clients.
+        // as there are workers to wake, keeping the sweep bounded and the
+        // wake path fair across clients.
         let wakes = if submitter.is_some() { n - 1 } else { n };
-        self.wake_n(wakes.min(self.workers()));
+        self.shared.wake_workers(targets, wakes.min(workers));
     }
 
-    /// Notify up to `n` sleeping workers under one idle-lock acquisition;
-    /// skips the lock entirely when nobody sleeps (the hot-path case for
-    /// back-to-back fork/join regions that keep workers spinning).
-    fn wake_n(&self, n: usize) {
-        if n == 0 || self.shared.sleepers.load(Ordering::SeqCst) == 0 {
-            return;
-        }
-        let _g = self.shared.idle_lock.lock().unwrap();
-        let sleeping = self.shared.sleepers.load(Ordering::SeqCst);
-        if n >= sleeping {
-            self.shared.idle_cv.notify_all();
-        } else {
-            for _ in 0..n {
-                self.shared.idle_cv.notify_one();
-            }
-        }
-    }
-
-    /// Block the *calling* (non-worker) thread until all spawned tasks have
-    /// retired.  Worker threads must use `worker::help_one` loops instead.
+    /// Block the calling thread until all spawned tasks have retired,
+    /// through the unified wait engine: a worker of this scheduler helps
+    /// run tasks; any other thread escalates spin → yield → park and is
+    /// *notified on retire* (the `quiesce` wake list) instead of the old
+    /// 50µs sleep-poll loop.  `quiesce_parks` counts the parks — the
+    /// regression guard that no busy-wait crept back in.
     pub fn wait_quiescent(&self) {
-        let mut spins = 0u32;
-        while self.shared.live.load(Ordering::Acquire) != 0 {
-            // If we're a worker of this scheduler, help instead of idling.
-            if !worker::help_one() {
-                spins += 1;
-                if spins < 100 {
-                    std::thread::yield_now();
-                } else {
-                    std::thread::sleep(std::time::Duration::from_micros(50));
+        let shared = &self.shared;
+        worker::wait_until_observed(
+            Some(&shared.quiesce),
+            || shared.live.load(Ordering::Acquire) == 0,
+            |tick| {
+                if tick == Tick::Parked {
+                    Metrics::inc(&shared.metrics.quiesce_parks);
                 }
-            } else {
-                spins = 0;
-            }
-        }
+            },
+        );
     }
 
     /// Number of tasks not yet retired.
@@ -210,14 +381,12 @@ impl Scheduler {
     }
 
     /// Stop accepting progress and join all workers.  Pending tasks are
-    /// drained before shutdown completes (quiesce-then-stop).
+    /// drained before shutdown completes (quiesce-then-stop); the drain
+    /// itself is a parked, retire-notified wait — no polling.
     pub fn shutdown(&self) {
         self.wait_quiescent();
         self.shared.shutdown.store(true, Ordering::Release);
-        {
-            let _g = self.shared.idle_lock.lock().unwrap();
-            self.shared.idle_cv.notify_all();
-        }
+        self.shared.wake_all_workers();
         let handles = std::mem::take(&mut *self.handles.lock().unwrap());
         for h in handles {
             let _ = h.join();
@@ -364,5 +533,52 @@ mod tests {
         }
         s.wait_quiescent();
         assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn global_idle_mode_still_runs_everything() {
+        // The `HPXMP_GLOBAL_IDLE=1` ablation fallback stays functional:
+        // same conservation guarantees on the legacy condvar substrate.
+        let s = Scheduler::with_idle_mode(2, PolicyKind::PriorityLocal, IdleMode::Global);
+        assert_eq!(s.idle_mode(), IdleMode::Global);
+        let c = Arc::new(AU::new(0));
+        for i in 0..100 {
+            let c = c.clone();
+            s.spawn(Priority::Normal, Hint::Worker(i % 2), "t", move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        s.wait_quiescent();
+        assert_eq!(c.load(Ordering::SeqCst), 100);
+        let m = s.metrics();
+        assert_eq!(m.wakes_targeted + m.wakes_any, 0, "global mode counts no targeted wakes");
+        s.shutdown();
+    }
+
+    #[test]
+    fn default_mode_is_targeted_and_wakes_are_counted() {
+        let s = Scheduler::with_idle_mode(2, PolicyKind::PriorityLocal, IdleMode::Targeted);
+        assert_eq!(s.idle_mode(), IdleMode::Targeted);
+        // Give the workers time to park, then spawn onto both queues.
+        for round in 0..50 {
+            let c = Arc::new(AU::new(0));
+            crate::util::timing::spin_wait(Duration::from_micros(300));
+            for i in 0..2 {
+                let c = c.clone();
+                s.spawn(Priority::Normal, Hint::Worker(i), "t", move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            s.wait_quiescent();
+            assert_eq!(c.load(Ordering::SeqCst), 2, "round {round}");
+        }
+        let m = s.metrics();
+        // Wake credits are only minted against announced parks: delivered
+        // wakes can never exceed parks taken.
+        assert!(
+            m.wakes_targeted + m.wakes_any <= m.parked + m.wait_parks,
+            "wake/park accounting violated: {m}"
+        );
+        s.shutdown();
     }
 }

@@ -1,4 +1,5 @@
-//! Worker threads and the thread-local scheduling context.
+//! Worker threads, the thread-local scheduling context, and the unified
+//! wait engine ([`WaitState`]).
 //!
 //! Each worker is an OS thread bound to one queue slot of the active
 //! policy.  The thread-local [`current`] context is what lets code *inside*
@@ -6,6 +7,13 @@
 //! scheduling points (`help_one`), which the OpenMP layer's barriers,
 //! `taskwait`, and `taskyield` are built on (an HPX thread yielding to the
 //! scheduler in real hpxMP).
+//!
+//! Since ISSUE 4 a worker with nothing runnable parks on **its own**
+//! [`Parker`](super::park::Parker) (after announcing itself in the
+//! scheduler's idle set), and every blocking construct in the system —
+//! barrier, hot-team join, `taskwait`/`taskgroup`, `Future::wait`,
+//! `wait_quiescent`, shutdown — blocks through the one escalation state
+//! machine here: **help → spin → yield → timed-park** (DESIGN.md §9).
 
 use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -14,6 +22,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::metrics::Metrics;
+use super::park::{self, Parker, WakeList};
 use super::scheduler::Shared;
 use super::task::Task;
 
@@ -54,8 +63,12 @@ pub(super) fn execute(shared: &Shared, task: Task) {
     if result.is_err() {
         shared.panics.fetch_add(1, Ordering::SeqCst);
     }
-    // live was incremented at spawn; the task is now fully retired.
-    shared.live.fetch_sub(1, Ordering::Release);
+    // live was incremented at spawn; the task is now fully retired.  The
+    // last retirement notifies parked quiescence waiters
+    // (`wait_quiescent`/`shutdown`) — one cheap load when nobody waits.
+    if shared.live.fetch_sub(1, Ordering::Release) == 1 {
+        shared.quiesce.notify_all();
+    }
 }
 
 /// The main loop of one worker thread.
@@ -79,24 +92,16 @@ pub(super) fn worker_loop(shared: Arc<Shared>, me: usize) {
             break;
         }
         // Nothing runnable: brief spin first (new work often arrives
-        // immediately in fork/join phases), then park with a timeout so a
-        // missed notify self-heals.
+        // immediately in fork/join phases), then park on our own parker.
+        // Spawns targeting our queue unpark us directly; the timeout is
+        // the self-heal bound, not the wake mechanism.
         if spin < 64 {
             std::hint::spin_loop();
             std::thread::yield_now();
             continue;
         }
         Metrics::inc(&shared.metrics.parked);
-        let guard = shared.idle_lock.lock().unwrap();
-        shared.sleepers.fetch_add(1, Ordering::SeqCst);
-        // Re-check under the lock to close the sleep/wake race.
-        if shared.queues.approx_len() == 0 && !shared.shutdown.load(Ordering::Acquire) {
-            let _ = shared
-                .idle_cv
-                .wait_timeout(guard, Duration::from_micros(500))
-                .unwrap();
-        }
-        shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+        shared.worker_park(me);
         spin = 0;
     }
     set_current(None);
@@ -124,28 +129,211 @@ pub fn help_one() -> bool {
     false
 }
 
-/// One escalating help-first wait step: help-run a task, else spin, else
-/// yield, else sleep.  A help that merely requeued a guarded implicit task
-/// counts as a miss (see [`note_requeue`]) so the waiter backs off and the
-/// task's home worker gets the core.
+// ---------------------------------------------------------------------------
+// The unified wait engine
+// ---------------------------------------------------------------------------
+
+/// Escalation thresholds: busy spin below `WAIT_SPIN` ticks, OS yield
+/// below `WAIT_YIELD`, timed parks beyond.
+const WAIT_SPIN: u32 = 32;
+const WAIT_YIELD: u32 = 256;
+/// First park timeout; doubles per consecutive park up to the cap.
+const PARK_BASE_US: u64 = 20;
+/// Timeout cap for waits with no explicit wake channel (the condition
+/// flips without a notify — e.g. a barrier generation): short, so the
+/// re-check cadence matches the old 20µs nap.
+const PARK_CAP_US: u64 = 200;
+/// Timeout cap once the waiter is registered on a [`WakeList`]: the event
+/// will unpark us explicitly, so the timeout is only the backstop for the
+/// deliberately-unfenced `notify_all` fast path.  Long enough that a
+/// master joined on a long region self-wakes ~100×/s (µs-scale each —
+/// noise), short enough that the ~never missed-notify race stalls a
+/// waiter by at most one cap.
+const PARK_CAP_NOTIFIED_US: u64 = 10_000;
+
+/// What one [`WaitState::tick`] did — the escalation rung taken.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tick {
+    /// Ran a pending task (help-first execution).
+    Helped,
+    Spun,
+    Yielded,
+    /// Timed-parked on the thread's parker.
+    Parked,
+}
+
+/// The escalation state machine every blocking construct shares
+/// (DESIGN.md §9): **help → spin → yield → timed-park**.
 ///
-/// This is the single wait primitive every blocking edge of the system
-/// shares: `Future::wait` ([`crate::amt::future`]), the OpenMP layer's
-/// barriers, `taskwait`/`taskgroup`, and the hot-team join all tick
-/// through here, so they are all task scheduling points with identical
-/// back-off behavior.
-#[inline]
-pub fn wait_tick(spins: &mut u32) {
-    if help_one() && !take_requeued() {
-        *spins = 0;
+/// * *help* — a worker thread runs pending tasks instead of idling (task
+///   scheduling point); a help that merely requeued a §4-guarded implicit
+///   task counts as a miss *and* arms requeue-backoff (see below).
+/// * *spin/yield* — the short-wait rungs, unchanged from the old
+///   `wait_tick`.
+/// * *timed-park* — the thread parks on its parker (a worker's own slot
+///   parker, or the thread-local one for application threads) with an
+///   escalating timeout.  A parking worker announces itself in the idle
+///   set so targeted wakes can recruit it to help — **except** under
+///   requeue-backoff, where it cannot run the task it just bounced and
+///   must leave the wake credit to a worker that can.
+///
+/// Constructs with an explicit completion event additionally register the
+/// parker on the event's [`WakeList`] (see [`wait_until`]) so the park is
+/// cut short by a real notification instead of a timeout.
+pub struct WaitState {
+    spins: u32,
+    /// Consecutive parks — drives the timeout escalation.
+    parks: u32,
+    /// Last help attempt hit the §4 nesting guard (popped a task that
+    /// requeued itself): back off without claiming wake credits.
+    requeue_backoff: bool,
+    /// Registered on a `WakeList`: a real notification will arrive, so
+    /// parks may stretch toward `PARK_CAP_NOTIFIED_US`.
+    wake_channel: bool,
+    /// Lazily resolved park target (worker slot parker or TLS parker).
+    parker: Option<Arc<Parker>>,
+}
+
+impl Default for WaitState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WaitState {
+    pub fn new() -> Self {
+        Self {
+            spins: 0,
+            parks: 0,
+            requeue_backoff: false,
+            wake_channel: false,
+            parker: None,
+        }
+    }
+
+    /// Whether the *next* [`WaitState::tick`] would reach the park rung —
+    /// the moment for a waiter to register on its wake list (then re-check
+    /// its condition, then tick).
+    fn about_to_park(&self) -> bool {
+        self.spins + 1 >= WAIT_YIELD
+    }
+
+    /// Mark that the waiter is registered on a [`WakeList`]; parks may use
+    /// the longer backstop timeout from here on.
+    fn note_wake_channel(&mut self) {
+        self.wake_channel = true;
+    }
+
+    /// The parker this wait parks on: the worker's own slot parker when
+    /// called from a worker thread (so targeted wakes and wait parks share
+    /// one latch), else the calling thread's TLS parker.
+    fn parker(&mut self) -> Arc<Parker> {
+        if self.parker.is_none() {
+            self.parker = Some(match current() {
+                Some((shared, me)) => shared
+                    .worker_parker(me)
+                    .unwrap_or_else(park::thread_parker),
+                None => park::thread_parker(),
+            });
+        }
+        self.parker.as_ref().unwrap().clone()
+    }
+
+    /// One escalation step.  Call in a loop around the wait condition.
+    pub fn tick(&mut self) -> Tick {
+        if help_one() {
+            if !take_requeued() {
+                self.spins = 0;
+                self.parks = 0;
+                self.requeue_backoff = false;
+                return Tick::Helped;
+            }
+            // Helped task bounced off the §4 nesting guard: escalate like
+            // a miss, and remember not to advertise ourselves as a
+            // schedulable core while it sits requeued in the queues.
+            self.requeue_backoff = true;
+        } else {
+            self.requeue_backoff = false;
+        }
+        self.spins += 1;
+        if self.spins < WAIT_SPIN {
+            std::hint::spin_loop();
+            Tick::Spun
+        } else if self.spins < WAIT_YIELD {
+            std::thread::yield_now();
+            Tick::Yielded
+        } else {
+            self.park();
+            Tick::Parked
+        }
+    }
+
+    fn park(&mut self) {
+        let cap = if self.wake_channel {
+            PARK_CAP_NOTIFIED_US
+        } else {
+            PARK_CAP_US
+        };
+        let us = (PARK_BASE_US << self.parks.min(8)).min(cap);
+        self.parks = self.parks.saturating_add(1);
+        let timeout = Duration::from_micros(us);
+        match current() {
+            Some((shared, me)) => {
+                Metrics::inc(&shared.metrics.wait_parks);
+                shared.waiter_park(me, timeout, !self.requeue_backoff);
+            }
+            None => {
+                self.parker().park_timeout(timeout);
+            }
+        }
+    }
+}
+
+/// Block until `cond` holds, through the unified [`WaitState`] engine.
+///
+/// `wakers`, when given, is the construct's explicit wake channel (the
+/// event side calls `notify_all` after publishing the state change): the
+/// waiter registers **lazily** — only once escalation reaches the park
+/// rung — so short waits stay entirely lock-free, then re-checks `cond`
+/// before the first park so an event that raced the registration is never
+/// waited out.  Every blocking edge of the system (team barrier, hot-team
+/// join, `taskwait`/`taskgroup` counters, `Future::wait`, scheduler
+/// quiescence) is a thin wrapper over this function.
+pub fn wait_until(wakers: Option<&WakeList>, cond: impl FnMut() -> bool) {
+    wait_until_observed(wakers, cond, |_| {});
+}
+
+/// [`wait_until`] with a per-tick observer — the ONE implementation of the
+/// lazy-register / re-check / park / deregister protocol (callers that
+/// need instrumentation, like `Scheduler::wait_quiescent`'s
+/// `quiesce_parks` counter, observe the rungs instead of reimplementing
+/// the race-sensitive registration dance).
+pub fn wait_until_observed(
+    wakers: Option<&WakeList>,
+    mut cond: impl FnMut() -> bool,
+    mut observe: impl FnMut(Tick),
+) {
+    if cond() {
         return;
     }
-    *spins += 1;
-    if *spins < 32 {
-        std::hint::spin_loop();
-    } else if *spins < 256 {
-        std::thread::yield_now();
-    } else {
-        std::thread::sleep(Duration::from_micros(20));
+    let mut ws = WaitState::new();
+    let mut registered: Option<Arc<Parker>> = None;
+    loop {
+        if cond() {
+            break;
+        }
+        if registered.is_none() && ws.about_to_park() {
+            if let Some(list) = wakers {
+                let p = ws.parker();
+                list.register(&p);
+                registered = Some(p);
+                ws.note_wake_channel();
+                continue; // re-check cond before the first park
+            }
+        }
+        observe(ws.tick());
+    }
+    if let (Some(list), Some(p)) = (wakers, registered.as_ref()) {
+        list.deregister(p);
     }
 }

@@ -2,14 +2,19 @@
 //!
 //! Workers are created once and kept hot; each `fork` publishes a job and
 //! bumps a generation counter that workers spin on (then yield, then
-//! nap — the `KMP_BLOCKTIME` active-wait pattern).  This is the structural
-//! design of libomp's fork/join engine, and the reason the baseline wins
-//! on small regions: waking a warm pool is cheaper than registering and
-//! scheduling fresh tasks per region.
+//! timed-park on a per-worker [`Parker`] — the `KMP_BLOCKTIME`
+//! active-then-passive wait pattern, with `fork` unparking the helpers
+//! like libomp's futex wake).  This is the structural design of libomp's
+//! fork/join engine, and the reason the baseline wins on small regions:
+//! waking a warm pool is cheaper than registering and scheduling fresh
+//! tasks per region.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::amt::park::Parker;
 
 /// Type-erased job pointer: `(body, team_size)` published per region.
 /// The raw pointer is valid for the whole region because `fork` joins
@@ -27,6 +32,11 @@ struct PoolShared {
     job: Mutex<Option<Job>>,
     arrived: AtomicUsize,
     shutdown: AtomicBool,
+    /// One parker per helper thread (index `tid - 1`); `fork` unparks all
+    /// after bumping the generation, so a deeply-idle pool wakes without
+    /// waiting out a nap.  Latched notifications make the
+    /// bump-then-unpark / check-then-park race lose at most one timeout.
+    parkers: Vec<Parker>,
 }
 
 /// A warm fork/join pool of `size - 1` helper threads (the master — the
@@ -46,6 +56,7 @@ impl BaselinePool {
             job: Mutex::new(None),
             arrived: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
+            parkers: (1..size).map(|_| Parker::new()).collect(),
         });
         let handles = (1..size)
             .map(|tid| {
@@ -92,6 +103,12 @@ impl BaselinePool {
         }
         self.shared.arrived.store(0, Ordering::Release);
         self.shared.generation.fetch_add(1, Ordering::Release);
+        // Wake napping helpers (libomp futex-wake analog).  Spinning
+        // helpers see the generation bump directly; the unpark is latched
+        // for any helper racing into its park.
+        for p in &self.shared.parkers {
+            p.unpark();
+        }
 
         body(0, team); // master participates
 
@@ -122,14 +139,16 @@ fn worker(shared: Arc<PoolShared>, tid: usize) {
                 return;
             }
             // KMP_BLOCKTIME-style escalation: short hot spin, then yield,
-            // then nap (passive-wait tuning for oversubscribed hosts).
+            // then timed-park (passive-wait tuning for oversubscribed
+            // hosts).  `fork` unparks us on the next region; the timeout
+            // only bounds the shutdown/bump races.
             spins += 1;
             if spins < 128 {
                 std::hint::spin_loop();
             } else if spins < 4096 {
                 std::thread::yield_now();
             } else {
-                std::thread::sleep(std::time::Duration::from_micros(50));
+                shared.parkers[tid - 1].park_timeout(Duration::from_micros(50));
             }
             continue;
         }
@@ -148,6 +167,9 @@ fn worker(shared: Arc<PoolShared>, tid: usize) {
 impl Drop for BaselinePool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
+        for p in &self.shared.parkers {
+            p.unpark();
+        }
         for h in std::mem::take(&mut *self.handles.lock().unwrap()) {
             let _ = h.join();
         }

@@ -6,25 +6,26 @@
 //! This is both what the OpenMP spec demands (pending explicit tasks must
 //! complete at barriers) and what makes closure-based AMT tasks compose
 //! with blocking OpenMP semantics (DESIGN.md §4).
+//!
+//! Both waitable types here sit on the unified wait engine
+//! ([`worker::wait_until`], DESIGN.md §9): waiters escalate
+//! help → spin → yield → timed-park, and the completing side (last
+//! barrier arrival, counter reaching zero) delivers an explicit wake
+//! through a [`WakeList`] instead of leaving parked waiters to their
+//! timeout.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crossbeam_utils::CachePadded;
 
+use crate::amt::park::{self, WakeList};
 use crate::amt::worker;
 
-/// Escalating help-first wait — delegates to the AMT layer's unified
-/// [`worker::wait_tick`] (ISSUE 2): barriers, `taskwait`, `taskgroup` and
-/// `Future::wait` all block through the same primitive, so every blocking
-/// OpenMP construct is a task scheduling point with the same requeue-guard
-/// back-off.
-#[inline]
-pub(crate) fn wait_tick(spins: &mut u32) {
-    worker::wait_tick(spins)
-}
-
-/// Yield-only wait (no task execution) for contexts where re-entrant task
-/// execution could self-deadlock (e.g. `ordered` region turnstiles).
+/// Yield-only wait tick (no task execution) for contexts where re-entrant
+/// task execution could self-deadlock (`ordered` turnstiles, OMP locks,
+/// worksharing-ring claims).  Ends in a short timed park on the thread's
+/// parker — nobody notifies a turnstile, so the timeout *is* the progress
+/// guarantee (like the old 20µs nap, minus the blind syscall sleep).
 #[inline]
 pub(crate) fn wait_tick_no_help(spins: &mut u32) {
     *spins += 1;
@@ -33,7 +34,7 @@ pub(crate) fn wait_tick_no_help(spins: &mut u32) {
     } else if *spins < 256 {
         std::thread::yield_now();
     } else {
-        std::thread::sleep(std::time::Duration::from_micros(20));
+        park::thread_parker().park_timeout(std::time::Duration::from_micros(20));
     }
 }
 
@@ -42,6 +43,9 @@ pub struct TeamBarrier {
     size: usize,
     count: CachePadded<AtomicUsize>,
     generation: CachePadded<AtomicUsize>,
+    /// Parked waiters of the current generation; the last arriver
+    /// notifies after bumping the generation.
+    wakers: WakeList,
 }
 
 impl TeamBarrier {
@@ -50,6 +54,7 @@ impl TeamBarrier {
             size,
             count: CachePadded::new(AtomicUsize::new(0)),
             generation: CachePadded::new(AtomicUsize::new(0)),
+            wakers: WakeList::new(),
         }
     }
 
@@ -62,15 +67,16 @@ impl TeamBarrier {
         }
         let gen = self.generation.load(Ordering::Acquire);
         if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.size {
-            // Last arriver: reset for reuse, then release this generation.
+            // Last arriver: reset for reuse, release this generation, and
+            // wake anyone who escalated to a park while waiting for us.
             self.count.store(0, Ordering::Relaxed);
             self.generation.fetch_add(1, Ordering::Release);
+            self.wakers.notify_all();
             true
         } else {
-            let mut spins = 0u32;
-            while self.generation.load(Ordering::Acquire) == gen {
-                wait_tick(&mut spins);
-            }
+            worker::wait_until(Some(&self.wakers), || {
+                self.generation.load(Ordering::Acquire) != gen
+            });
             false
         }
     }
@@ -82,6 +88,9 @@ impl TeamBarrier {
 #[derive(Default)]
 pub struct WaitCounter {
     n: AtomicUsize,
+    /// Parked `wait_zero` callers; notified by the decrement that reaches
+    /// zero.
+    wakers: WakeList,
 }
 
 impl WaitCounter {
@@ -96,25 +105,31 @@ impl WaitCounter {
     pub fn decrement(&self) {
         let prev = self.n.fetch_sub(1, Ordering::AcqRel);
         debug_assert!(prev > 0, "WaitCounter underflow");
+        if prev == 1 {
+            self.wakers.notify_all();
+        }
     }
 
     pub fn count(&self) -> usize {
         self.n.load(Ordering::Acquire)
     }
 
-    /// Wait until zero, executing pending tasks meanwhile.
+    /// Wait until zero, executing pending tasks meanwhile; parked waiters
+    /// are woken by the final decrement.
     pub fn wait_zero(&self) {
-        let mut spins = 0u32;
-        while self.count() != 0 {
-            wait_tick(&mut spins);
-        }
+        worker::wait_until(Some(&self.wakers), || self.count() == 0);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::timing::spin_wait;
     use std::sync::Arc;
+
+    fn busy_wait_us(us: u64) {
+        spin_wait(std::time::Duration::from_micros(us));
+    }
 
     #[test]
     fn barrier_of_one_is_trivial() {
@@ -126,7 +141,7 @@ mod tests {
     #[test]
     fn barrier_synchronizes_os_threads() {
         // Pure OS threads (no scheduler): help_one is a no-op, so this
-        // exercises the spin/yield path.
+        // exercises the spin/yield/park path.
         let b = Arc::new(TeamBarrier::new(4));
         let phase = Arc::new(AtomicUsize::new(0));
         let handles: Vec<_> = (0..4)
@@ -171,6 +186,28 @@ mod tests {
     }
 
     #[test]
+    fn barrier_wakes_parked_waiters() {
+        // One straggler arrives ~2 ms late: the early arrivers have long
+        // escalated to parks by then and must be woken by the last
+        // arrival's notify, not strand until some timeout.
+        let b = Arc::new(TeamBarrier::new(3));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    b.wait();
+                })
+            })
+            .collect();
+        busy_wait_us(2_000);
+        assert!(b.wait(), "late arriver is the last arriver");
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(b.wakers.waiting(), 0, "waiter registration leaked");
+    }
+
+    #[test]
     fn wait_counter_reaches_zero() {
         let c = Arc::new(WaitCounter::new());
         for _ in 0..16 {
@@ -181,7 +218,7 @@ mod tests {
                 let c = c.clone();
                 std::thread::spawn(move || {
                     for _ in 0..4 {
-                        std::thread::sleep(std::time::Duration::from_micros(100));
+                        busy_wait_us(100);
                         c.decrement();
                     }
                 })
@@ -192,5 +229,21 @@ mod tests {
         for w in workers {
             w.join().unwrap();
         }
+        assert_eq!(c.wakers.waiting(), 0, "waiter registration leaked");
+    }
+
+    #[test]
+    fn wait_counter_wakes_parked_waiter_on_final_decrement() {
+        let c = Arc::new(WaitCounter::new());
+        c.increment();
+        let c2 = c.clone();
+        let t = std::thread::spawn(move || {
+            // Let the waiter escalate deep into the park rung first.
+            busy_wait_us(3_000);
+            c2.decrement();
+        });
+        c.wait_zero();
+        assert_eq!(c.count(), 0);
+        t.join().unwrap();
     }
 }

@@ -186,7 +186,7 @@ mod tests {
     fn runtime_wtime_advances() {
         let rt = OmpRuntime::for_tests(1);
         let a = rt.wtime();
-        std::thread::sleep(std::time::Duration::from_millis(2));
+        crate::util::timing::spin_wait(std::time::Duration::from_millis(2));
         assert!(rt.wtime() > a);
     }
 

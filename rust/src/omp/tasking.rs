@@ -12,10 +12,12 @@
 //! continuation on `when_all(predecessor futures)` — the sibling
 //! dependence map ([`DepMap`]) stores completion *futures* per storage
 //! address, not task nodes, and no hand-rolled successor/predecessor graph
-//! exists anymore.  `taskwait`/`taskgroup` block through the same
-//! help-first wait primitive as `Future::wait`
-//! ([`crate::amt::worker::wait_tick`]), so every join is a task scheduling
-//! point.
+//! exists anymore.  `taskwait`/`taskgroup` block through the same unified
+//! wait engine as `Future::wait`
+//! ([`crate::amt::worker::wait_until`] over the
+//! [`WaitState`](crate::amt::worker::WaitState) escalation ladder), so
+//! every join is a task scheduling point with an explicit wake on the
+//! final child retirement.
 
 use std::collections::HashMap;
 use std::sync::atomic::AtomicUsize;
@@ -279,9 +281,10 @@ impl Ctx {
     }
 
     /// `#pragma omp taskwait`: wait for *direct* children.  A help-first
-    /// future-style wait (the same [`crate::amt::worker::wait_tick`]
-    /// primitive as `Future::wait`): pending tasks execute on this thread
-    /// meanwhile — a task scheduling point.
+    /// wait on the unified engine (the same
+    /// [`crate::amt::worker::wait_until`] primitive as `Future::wait`):
+    /// pending tasks execute on this thread meanwhile — a task scheduling
+    /// point — and the final child's retirement wakes a parked waiter.
     pub fn taskwait(&self) {
         self.parent.children.wait_zero();
     }
@@ -344,7 +347,12 @@ mod tests {
     use super::*;
     use crate::omp::team::{current_ctx, fork_call};
     use crate::omp::OmpRuntime;
+    use crate::util::timing::spin_wait;
     use std::sync::atomic::{AtomicUsize as AU, Ordering};
+
+    fn busy_wait_us(us: u64) {
+        spin_wait(std::time::Duration::from_micros(us));
+    }
 
     #[test]
     fn tasks_run_and_taskwait_joins() {
@@ -394,7 +402,7 @@ mod tests {
             let target = 7usize; // address token for depend matching
             let w = slot.clone();
             ctx.task_with_deps(&[Dep { addr: target, kind: DepKind::Out }], move || {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                busy_wait_us(5_000);
                 w.store(42, Ordering::SeqCst);
             });
             for _ in 0..4 {
@@ -518,7 +526,7 @@ mod tests {
                 for _ in 0..8 {
                     let d = d_in.clone();
                     ctx.task(move || {
-                        std::thread::sleep(std::time::Duration::from_micros(200));
+                        busy_wait_us(200);
                         d.fetch_add(1, Ordering::SeqCst);
                     });
                 }

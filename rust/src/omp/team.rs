@@ -35,12 +35,13 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Mutex, Weak};
 
+use crate::amt::park::WakeList;
 use crate::amt::task::Hint;
-use crate::amt::Priority;
+use crate::amt::{worker, Priority};
 
-use super::barrier::{wait_tick, TeamBarrier, WaitCounter};
+use super::barrier::{TeamBarrier, WaitCounter};
 use super::loops::WsRing;
 use super::ompt::Endpoint;
 use super::tasking::DepMap;
@@ -192,11 +193,9 @@ impl Ctx {
     /// Team barrier including the explicit-task drain the spec requires.
     pub fn barrier(&self) {
         // Execute pending explicit tasks before blocking: barrier is a task
-        // scheduling point.
-        let mut spins = 0u32;
-        while self.team.explicit.count() > 0 {
-            wait_tick(&mut spins);
-        }
+        // scheduling point.  `wait_zero` goes through the unified wait
+        // engine (help-first, parked waiters woken by the last retire).
+        self.team.explicit.wait_zero();
         self.team.barrier.wait();
     }
 
@@ -269,50 +268,42 @@ pub(super) fn with_ctx<R>(ctx: Arc<Ctx>, f: impl FnOnce() -> R) -> R {
 
 /// Join latch: master blocks here until every implicit task has retired.
 /// Resettable so a hot team reuses one latch across regions.
+///
+/// Built on the unified wait engine (DESIGN.md §9): the waiting master —
+/// worker or application thread alike — escalates help → spin → yield →
+/// timed-park through `worker::wait_until`, and the last arriving member
+/// delivers an explicit wake through the latch's [`WakeList`].  (A
+/// worker-master helps run tasks while it waits, exactly as before; an
+/// application-thread master parks instead of holding a dedicated
+/// condvar.)
 struct Join {
     remaining: AtomicUsize,
-    lock: Mutex<bool>,
-    cv: Condvar,
+    wakers: WakeList,
 }
 
 impl Join {
     fn new(n: usize) -> Self {
         Self {
             remaining: AtomicUsize::new(n),
-            lock: Mutex::new(false),
-            cv: Condvar::new(),
+            wakers: WakeList::new(),
         }
     }
 
     /// Re-arm for the next region (no member may be in flight).
     fn reset(&self, n: usize) {
-        let mut done = self.lock.lock().unwrap();
-        *done = false;
         self.remaining.store(n, Ordering::Release);
     }
 
     fn arrive(&self) {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let mut done = self.lock.lock().unwrap();
-            *done = true;
-            self.cv.notify_all();
+            self.wakers.notify_all();
         }
     }
 
     fn wait(&self) {
-        if crate::amt::worker::current().is_some() {
-            // Master is itself an AMT worker (nested parallelism): help run
-            // tasks instead of blocking the worker.
-            let mut spins = 0u32;
-            while self.remaining.load(Ordering::Acquire) != 0 {
-                wait_tick(&mut spins);
-            }
-        } else {
-            let mut done = self.lock.lock().unwrap();
-            while !*done {
-                done = self.cv.wait(done).unwrap();
-            }
-        }
+        worker::wait_until(Some(&self.wakers), || {
+            self.remaining.load(Ordering::Acquire) == 0
+        });
     }
 }
 
@@ -530,7 +521,7 @@ fn fork_call_dyn(
     };
 
     // One batch submission for the whole team: one `live` update, one
-    // queue pass, one wake covering min(batch, sleepers) workers.  Hints
+    // queue pass, one targeted wake sweep (hinted workers first).  Hints
     // are interleaved from a rotating base so K concurrent clients' teams
     // land on disjoint worker queues instead of all piling onto workers
     // 0..n-1 (the fair-share half of admission — DESIGN.md §8).

@@ -7,6 +7,16 @@ use std::time::{Duration, Instant};
 
 use super::stats::Summary;
 
+/// Busy-spin for `d` — the sleep stand-in for tests/benches that need a
+/// wall-clock delay without an OS sleep (`src/` carries no sleep-based
+/// waits — ISSUE 4; one shared helper instead of per-test copies).
+pub fn spin_wait(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
 /// Measurement configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchCfg {
