@@ -1,37 +1,50 @@
-//! Blazemark-lite: the paper's §6 evaluation in one command.
+//! Blazemark-lite: the paper's §6 evaluation in one command — now through
+//! the unified execution-policy API (PR 5).
 //!
-//! Runs all four benchmarks (dvecdvecadd, daxpy, dmatdmatadd,
-//! dmatdmatmult) on both runtimes at a few sizes around each op's
-//! parallelization threshold and prints the MFLOP/s ratio table — a quick
-//! textual version of Figures 2–9 (the full sweeps live in
-//! `cargo bench` / `hpxmp heatmap`).
+//! Runs all five benchmarks (dvecdvecadd, daxpy, dmatdmatadd,
+//! dmatdmatmult, dmatdvecmult) at a few sizes around each op's
+//! parallelization threshold under **three policies on the same call
+//! site** — `par().on(&hpx)`, `par().on(&base)`, `task().on(&hpx)` — and
+//! prints the MFLOP/s table: a quick textual version of Figures 2–9 plus
+//! the dataflow column (the full sweeps live in `cargo bench` /
+//! `hpxmp heatmap` / `cargo bench --bench ablation_exec`).
 //!
-//! Run: `cargo run --release --example blazemark -- [--threads N] [--policy P]`
+//! Run: `cargo run --release --example blazemark -- [--threads N] [--policy P] [--exec seq|par|task]`
+//! (`--exec` narrows the hpxMP column to one policy; default prints both.)
 
 use hpxmp::amt::PolicyKind;
 use hpxmp::baseline::BaselineRuntime;
 use hpxmp::coordinator::blazemark::{measure, Op};
 use hpxmp::omp::OmpRuntime;
-use hpxmp::par::HpxMpRuntime;
+use hpxmp::par::{exec, HpxMpRuntime};
 use hpxmp::util::cli::Args;
 use hpxmp::util::timing::BenchCfg;
 
 fn main() {
-    let args = Args::from_env(&["threads", "policy"]);
+    let args = Args::from_env(&["threads", "policy", "exec"]);
     let threads = args.get_usize("threads", 4);
-    let policy = args
-        .get("policy")
-        .and_then(PolicyKind::parse)
-        .unwrap_or(PolicyKind::PriorityLocal);
+    let policy = match args.get("policy") {
+        Some(p) => PolicyKind::parse_or_list(p).unwrap_or_else(|e| panic!("{e}")),
+        None => PolicyKind::PriorityLocal,
+    };
+    let only_mode = args
+        .get("exec")
+        .map(|s| exec::ExecMode::parse_or_list(s).unwrap_or_else(|e| panic!("{e}")));
 
     let hpx = HpxMpRuntime::new(OmpRuntime::new(threads, policy));
     let base = BaselineRuntime::new(threads);
     let cfg = BenchCfg::quick();
 
+    // The one-line policy swap: same kernel, same operands, three
+    // execution models.
+    let hpx_par = exec::par().on(&hpx).threads(threads);
+    let hpx_task = exec::task().on(&hpx).threads(threads);
+    let base_par = exec::par().on(&base).threads(threads);
+
     println!("blazemark-lite: {threads} threads, policy {}", policy.name());
     println!(
-        "{:<14} {:>10} {:>14} {:>14} {:>8}",
-        "benchmark", "size", "hpxMP MFLOP/s", "OpenMP MFLOP/s", "ratio"
+        "{:<14} {:>10} {:>14} {:>14} {:>14} {:>8}",
+        "benchmark", "size", "hpxMP par|seq", "hpxMP task", "OpenMP par", "ratio"
     );
     for op in Op::ALL {
         // Sizes straddling the threshold: below (serial on both), at, and
@@ -46,17 +59,38 @@ fn main() {
             vec![32, 55, 300]
         };
         for n in sizes {
-            let h = measure(&hpx, op, threads, n, &cfg);
-            let b = measure(&base, op, threads, n, &cfg);
+            // --exec narrows the hpxMP side to one policy: the skipped
+            // column prints "-" and the ratio follows whichever hpxMP
+            // column was actually measured.
+            let h_par = match only_mode {
+                Some(m) if m != exec::ExecMode::Par => None,
+                _ => Some(measure(&hpx_par, op, n, &cfg)),
+            };
+            let h_task = match only_mode {
+                Some(exec::ExecMode::Task) | None => Some(measure(&hpx_task, op, n, &cfg)),
+                Some(_) => None,
+            };
+            let h_seq = match only_mode {
+                Some(exec::ExecMode::Seq) => Some(measure(&exec::seq(), op, n, &cfg)),
+                _ => None,
+            };
+            let b = measure(&base_par, op, n, &cfg);
+            let selected = h_par.or(h_task).or(h_seq).unwrap_or(f64::NAN);
+            let fmt = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.1}"),
+                None => "-".to_string(),
+            };
             println!(
-                "{:<14} {:>10} {:>14.1} {:>14.1} {:>8.3}",
+                "{:<14} {:>10} {:>14} {:>14} {:>14.1} {:>8.3}",
                 op.name(),
                 n,
-                h,
+                fmt(h_par.or(h_seq)),
+                fmt(h_task),
                 b,
-                h / b
+                selected / b
             );
         }
     }
-    println!("\n(ratio < 1: hpxMP slower — expected near thresholds, paper §6)");
+    println!("\n(ratio < 1: hpxMP slower — expected near thresholds, paper §6;");
+    println!(" the task column is the same kernel under the dataflow policy)");
 }

@@ -13,6 +13,7 @@ use hpxmp::omp::api::*;
 use hpxmp::omp::sync::{critical, AtomicF64};
 use hpxmp::omp::team::{current_ctx, fork_call};
 use hpxmp::omp::{OmpRuntime, SchedKind, Schedule};
+use hpxmp::par::{exec, HpxMpRuntime};
 
 fn main() {
     // "Start HPX back end" (paper §5.6): 4 workers, default policy.
@@ -93,6 +94,25 @@ fn main() {
         });
     }
     println!("  8 tasks summed to {}", done.load(Ordering::SeqCst));
+
+    // ---- execution policies (PR 5) --------------------------------------------
+    // One algorithm, three execution models: the hpx::execution-style
+    // policy value selects serial, fork-join team, or futurized task
+    // graph — the call site never changes.
+    println!("== execution policies ==");
+    let hpx = HpxMpRuntime::new(rt.clone());
+    for pol in [
+        exec::seq(),
+        exec::par().on(&hpx).threads(4),
+        exec::task().on(&hpx).threads(4),
+    ] {
+        let hits = AtomicUsize::new(0);
+        exec::for_each(&pol, 0..10_000, |r| {
+            hits.fetch_add((r.end - r.start) as usize, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 10_000);
+        println!("  for_each under {:<14} covered 10000 iterations", pol.label());
+    }
 
     // ---- runtime library (Table 2) --------------------------------------------
     println!("== omp_* API ==");

@@ -8,7 +8,13 @@
 //! the dependence graph is a DAG the scheduler executes with maximal
 //! parallelism along anti-diagonals.  Verified against a serial sweep.
 //!
-//! Run: `cargo run --release --example task_graph -- [--blocks N] [--block-size B]`
+//! PR 5: the same recurrence is then re-run **per anti-diagonal through
+//! the unified `exec::Policy` API** — each diagonal is an independent
+//! set, so one `for_each(policy, ..)` per diagonal expresses the
+//! wavefront, and `--exec seq|par|task` swaps serial / fork-join /
+//! futurized execution of the identical loop with one flag.
+//!
+//! Run: `cargo run --release --example task_graph -- [--blocks N] [--block-size B] [--exec seq|par|task]`
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -16,6 +22,7 @@ use std::time::Instant;
 use hpxmp::amt::PolicyKind;
 use hpxmp::omp::team::{current_ctx, fork_call};
 use hpxmp::omp::{Dep, DepKind, OmpRuntime};
+use hpxmp::par::{exec, HpxMpRuntime};
 use hpxmp::util::cli::Args;
 
 /// One block-cell update: a small stencil-ish mixing kernel.
@@ -40,10 +47,14 @@ fn run_serial(nb: usize, bs: usize) -> Vec<Vec<f64>> {
 }
 
 fn main() {
-    let args = Args::from_env(&["blocks", "block-size", "threads"]);
+    let args = Args::from_env(&["blocks", "block-size", "threads", "exec"]);
     let nb = args.get_usize("blocks", 16);
     let bs = args.get_usize("block-size", 1024);
     let threads = args.get_usize("threads", 4);
+    let mode = match args.get("exec") {
+        Some(s) => exec::ExecMode::parse_or_list(s).unwrap_or_else(|e| panic!("{e}")),
+        None => exec::ExecMode::from_env(exec::ExecMode::Task),
+    };
 
     println!("task_graph: {nb}x{nb} blocks of {bs} elements, {threads} workers");
     let expected = run_serial(nb, bs);
@@ -124,5 +135,53 @@ fn main() {
     );
     println!("  scheduler: {m}");
     assert!(max_err < 1e-12, "wavefront result mismatch");
+
+    // ---- the same wavefront through the policy API (PR 5) -----------------
+    // One for_each per anti-diagonal (blocks on a diagonal are
+    // independent); the policy is the only thing --exec changes.
+    let hpx = HpxMpRuntime::new(rt.clone());
+    let pol = exec::Policy::with_mode(mode).on(&hpx).threads(threads);
+    let grid2: Arc<Vec<std::sync::Mutex<Vec<f64>>>> = Arc::new(
+        (0..nb * nb)
+            .map(|c| std::sync::Mutex::new(vec![c as f64 * 1e-3; bs]))
+            .collect(),
+    );
+    let t0 = Instant::now();
+    for d in 0..(2 * nb - 1) {
+        let i_lo = d.saturating_sub(nb - 1);
+        let i_hi = d.min(nb - 1);
+        let g = grid2.clone();
+        exec::for_each(&pol, i_lo as i64..(i_hi + 1) as i64, move |r| {
+            for i in r.start as usize..r.end as usize {
+                let j = d - i;
+                let left = if j > 0 {
+                    g[i * nb + j - 1].lock().unwrap().clone()
+                } else {
+                    vec![1.0; bs]
+                };
+                let up = if i > 0 {
+                    g[(i - 1) * nb + j].lock().unwrap().clone()
+                } else {
+                    vec![1.0; bs]
+                };
+                let mut cur = g[i * nb + j].lock().unwrap();
+                update(&mut cur, &left, &up);
+            }
+        });
+    }
+    let dt2 = t0.elapsed();
+    let mut max_err2 = 0.0f64;
+    for c in 0..nb * nb {
+        let got = grid2[c].lock().unwrap();
+        for (a, b) in got.iter().zip(&expected[c]) {
+            max_err2 = max_err2.max((a - b).abs());
+        }
+    }
+    println!(
+        "  policy wavefront under {:<14} {:.1} ms  max_err={max_err2:e}",
+        pol.label(),
+        dt2.as_secs_f64() * 1e3
+    );
+    assert!(max_err2 < 1e-12, "policy wavefront result mismatch");
     println!("task_graph OK");
 }

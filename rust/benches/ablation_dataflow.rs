@@ -1,10 +1,12 @@
 //! Dataflow ablation (ISSUE 2): fork-join vs the futurized dataflow
-//! engine, on the two workloads the issue names.
+//! engine, on the two workloads the issue names.  Since ISSUE 5 the two
+//! mmult paths are the same kernel under two execution policies
+//! (`par().on(&hpx)` vs `task().on(&hpx)` — the generic tiled graph).
 //!
-//! * `mmult_<n>` — tiled `dmatdmatmult` at size `n`: the fork-join
-//!   `parallel_for` row-band path (`runtime: "fork-join"`) against the
-//!   `when_all`/`then` tiled task graph (`runtime: "dataflow"`); reported
-//!   as `us_per_op` = microseconds per whole product (lower is better).
+//! * `mmult_<n>` — `dmatdmatmult` at size `n`: the fork-join row-band
+//!   policy (`runtime: "fork-join"`) against the `when_all`/`then` tiled
+//!   task graph policy (`runtime: "dataflow"`); reported as `us_per_op`
+//!   = microseconds per whole product (lower is better).
 //! * `chain_<len>` — a Task-Bench-style dependency chain of `len`
 //!   sequentially dependent empty tasks: a raw future `then`-chain
 //!   (`runtime: "future-chain"`) against the same chain expressed as
@@ -22,8 +24,9 @@ use std::time::Instant;
 
 use hpxmp::amt::future::{Future, Promise};
 use hpxmp::amt::PolicyKind;
-use hpxmp::blaze::{dmatdmatmult, dmatdmatmult_dataflow, BlazeConfig, DynMatrix};
+use hpxmp::blaze::{dmatdmatmult, DynMatrix};
 use hpxmp::omp::{current_ctx, fork_call, Dep, DepKind, OmpRuntime};
+use hpxmp::par::exec::{par, task};
 use hpxmp::par::HpxMpRuntime;
 
 mod common;
@@ -45,23 +48,24 @@ fn time_per(iters: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn bench_mmult(hpx: &HpxMpRuntime, threads: usize, n: usize, iters: usize, rows: &mut Vec<Row>) {
-    let cfg = BlazeConfig::new(threads);
+    let fj_pol = par().on(hpx).threads(threads);
+    let df_pol = task().on(hpx).threads(threads);
     let a = DynMatrix::random(n, n, 17);
     let b = DynMatrix::random(n, n, 18);
     let mut c = DynMatrix::zeros(n, n);
 
     // Warm both paths (populates the hot team / spins up workers).
-    dmatdmatmult(hpx, &cfg, &a, &b, &mut c);
-    dmatdmatmult_dataflow(hpx, &cfg, &a, &b, &mut c);
+    dmatdmatmult(&fj_pol, &a, &b, &mut c);
+    dmatdmatmult(&df_pol, &a, &b, &mut c);
 
-    let fj = time_per(iters, || dmatdmatmult(hpx, &cfg, &a, &b, &mut c));
+    let fj = time_per(iters, || dmatdmatmult(&fj_pol, &a, &b, &mut c));
     rows.push(Row {
         construct: format!("mmult_{n}"),
         runtime: "fork-join",
         threads,
         us_per_op: fj * 1e6,
     });
-    let df = time_per(iters, || dmatdmatmult_dataflow(hpx, &cfg, &a, &b, &mut c));
+    let df = time_per(iters, || dmatdmatmult(&df_pol, &a, &b, &mut c));
     rows.push(Row {
         construct: format!("mmult_{n}"),
         runtime: "dataflow",

@@ -1,0 +1,196 @@
+//! Exec-policy ablation (ISSUE 5): every Blaze kernel under every
+//! execution policy — the regression guard for the unified
+//! `exec::Policy` API.
+//!
+//! Sweeps kernel × policy × threads:
+//!
+//! * kernels — all five Blazemark ops at one over-threshold size each
+//!   (`BENCH_SMOKE=1` shrinks sizes and iteration counts for CI);
+//! * policies — `seq` (measured once, at the `threads=1` row: serial
+//!   execution is thread-count-independent), `par` (fork-join team on
+//!   hpxMP), `task` (the futurized chunk/tile graph on the same
+//!   runtime, built with exactly `t` workers so the graph cannot borrow
+//!   cores the team was denied);
+//! * threads — `BENCH_THREADS` (default 1,2,4,8).
+//!
+//! Emits `results/BENCH_exec.json`:
+//!
+//! * `rows[]`: `{kernel, policy, threads, us_per_op}` per cell (lower is
+//!   better);
+//! * `speedup_task_vs_par`: per kernel, the **best** `par / task` time
+//!   ratio over the thread grid — the headline for "every kernel gained
+//!   a dataflow execution" (>1 means the task graph beat fork-join
+//!   somewhere on the grid).
+
+use std::time::Instant;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::coordinator::blazemark::{measure, Op};
+use hpxmp::omp::OmpRuntime;
+use hpxmp::par::exec::{ExecMode, Policy};
+use hpxmp::par::HpxMpRuntime;
+use hpxmp::util::timing::BenchCfg;
+
+mod common;
+
+struct Row {
+    kernel: &'static str,
+    policy: &'static str,
+    threads: usize,
+    us_per_op: f64,
+}
+
+/// One over-threshold size per kernel (full / smoke profile).
+fn size_for(op: Op, smoke: bool) -> usize {
+    match op {
+        Op::DVecDVecAdd | Op::Daxpy => {
+            if smoke {
+                65_536
+            } else {
+                262_144
+            }
+        }
+        Op::DMatDMatAdd => {
+            if smoke {
+                230
+            } else {
+                300
+            }
+        }
+        Op::DMatDMatMult => {
+            if smoke {
+                150
+            } else {
+                230
+            }
+        }
+        Op::DMatDVecMult => {
+            if smoke {
+                455
+            } else {
+                700
+            }
+        }
+    }
+}
+
+/// µs per op via the shared MFLOP/s cell: `measure` already medians over
+/// the BenchCfg steady-state loop, so invert back through the FLOP count.
+fn us_per_op(pol: &Policy<'_>, op: Op, n: usize, cfg: &BenchCfg) -> f64 {
+    let mflops = measure(pol, op, n, cfg);
+    op.flops(n) / (mflops * 1e6) * 1e6
+}
+
+fn main() {
+    let threads = common::env_grid("BENCH_THREADS", &[1, 2, 4, 8]);
+    let smoke = common::smoke();
+    let cfg = if smoke {
+        BenchCfg {
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 5,
+            min_time: std::time::Duration::from_millis(2),
+        }
+    } else {
+        BenchCfg::quick()
+    };
+
+    let t0 = Instant::now();
+    let mut rows: Vec<Row> = Vec::new();
+    for op in Op::ALL {
+        let n = size_for(op, smoke);
+        // seq once per kernel: the serial baseline row.
+        let us = us_per_op(&Policy::with_mode(ExecMode::Seq), op, n, &cfg);
+        rows.push(Row {
+            kernel: op.name(),
+            policy: "seq",
+            threads: 1,
+            us_per_op: us,
+        });
+        for &t in &threads {
+            // Exactly t workers per cell: a fair par-vs-task comparison
+            // (the task graph parallelizes over every scheduler worker).
+            let rt = OmpRuntime::new(t, PolicyKind::PriorityLocal);
+            rt.icv.set_nthreads(t);
+            let hpx = HpxMpRuntime::new(rt);
+            for mode in [ExecMode::Par, ExecMode::Task] {
+                let pol = Policy::with_mode(mode).on(&hpx).threads(t);
+                let us = us_per_op(&pol, op, n, &cfg);
+                rows.push(Row {
+                    kernel: op.name(),
+                    policy: mode.name(),
+                    threads: t,
+                    us_per_op: us,
+                });
+                eprintln!(
+                    "[exec] {:<12} {:<4} threads={t:<2} n={n:<7} {us:>12.2} us/op",
+                    op.name(),
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    println!(
+        "{:<14} {:<6} {:>8} {:>14}",
+        "kernel", "policy", "threads", "us/op"
+    );
+    for r in &rows {
+        println!(
+            "{:<14} {:<6} {:>8} {:>14.3}",
+            r.kernel, r.policy, r.threads, r.us_per_op
+        );
+    }
+
+    // Headline: per kernel, best par/task time ratio over the thread grid.
+    let mut speedups: Vec<(&'static str, f64)> = Vec::new();
+    for op in Op::ALL {
+        let mut best: Option<f64> = None;
+        for &t in &threads {
+            let find = |policy: &str| {
+                rows.iter()
+                    .find(|r| r.kernel == op.name() && r.policy == policy && r.threads == t)
+                    .map(|r| r.us_per_op)
+            };
+            if let (Some(par_us), Some(task_us)) = (find("par"), find("task")) {
+                if task_us > 0.0 {
+                    let s = par_us / task_us;
+                    best = Some(best.map_or(s, |b: f64| b.max(s)));
+                }
+            }
+        }
+        if let Some(s) = best {
+            println!("best speedup task vs par [{}]: {s:.3}x", op.name());
+            speedups.push((op.name(), s));
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"exec\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"policy\": \"{}\", \"threads\": {}, \"us_per_op\": {:.4}}}{}\n",
+            r.kernel,
+            r.policy,
+            r.threads,
+            r.us_per_op,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"speedup_task_vs_par\": {");
+    for (i, (k, s)) in speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "{}\"{}\": {:.3}",
+            if i == 0 { "" } else { ", " },
+            k,
+            s
+        ));
+    }
+    json.push_str("}\n}\n");
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_exec.json");
+    std::fs::write(&path, json).expect("write BENCH_exec.json");
+    println!("{}", path.display());
+    eprintln!("[exec] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

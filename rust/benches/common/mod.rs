@@ -12,7 +12,7 @@ use hpxmp::baseline::BaselineRuntime;
 use hpxmp::coordinator::blazemark::Op;
 use hpxmp::coordinator::{heatmap_sweep, report, scaling_sweep};
 use hpxmp::omp::OmpRuntime;
-use hpxmp::par::HpxMpRuntime;
+use hpxmp::par::{ExecMode, HpxMpRuntime, Policy};
 use hpxmp::util::timing::BenchCfg;
 
 /// Benches run with CWD = the package dir (`rust/`); reports belong in the
@@ -64,18 +64,55 @@ pub fn build(max_threads: usize) -> (HpxMpRuntime, BaselineRuntime) {
     (HpxMpRuntime::new(rt), BaselineRuntime::new(max_threads))
 }
 
+/// Execution policy for the figure sweeps: `par` unless `HPXMP_EXEC`
+/// overrides (the same env binding the CLI honors), so the whole figure
+/// suite re-runs under `task` dataflow with one env var.
+pub fn exec_mode() -> ExecMode {
+    ExecMode::from_env(ExecMode::Par)
+}
+
 /// Regenerate one heatmap figure (Figs 2–5).
+///
+/// Under `par` (the default) one shared max-width runtime serves every
+/// thread row — team size is what the row varies, and the pool stays
+/// warm across rows.  Under `HPXMP_EXEC=task` each row gets its own
+/// exactly-t-worker runtime: a task graph parallelizes over *every* AMT
+/// worker, so a shared wide pool would make all rows identical (same
+/// rule as `hpxmp heatmap --exec task` and `ablation_exec`).
 pub fn run_heatmap(op: Op) {
+    let mode = exec_mode();
     let threads = heatmap_threads();
     let max = threads.iter().copied().max().unwrap();
-    let (hpx, base) = build(max);
+    let shared = build(max);
     let cfg = BenchCfg::quick();
     let sizes = op.heatmap_sizes();
     eprintln!(
         "[{}] heatmap: threads {threads:?} x sizes {sizes:?}",
         op.name()
     );
-    let r = heatmap_sweep(&hpx, &base, op, &threads, &sizes, &cfg, true);
+    let mut acc: Option<hpxmp::coordinator::HeatmapResult> = None;
+    for &t in &threads {
+        let row_rt;
+        let (hpx, base) = if mode == ExecMode::Task {
+            row_rt = build(t);
+            (&row_rt.0, &row_rt.1)
+        } else {
+            (&shared.0, &shared.1)
+        };
+        let hpol = Policy::with_mode(mode).on(hpx);
+        let bpol = Policy::with_mode(mode).on(base);
+        let row = heatmap_sweep(&hpol, &bpol, op, &[t], &sizes, &cfg, true);
+        match &mut acc {
+            None => acc = Some(row),
+            Some(a) => {
+                a.threads.push(t);
+                a.ratio.extend(row.ratio);
+                a.hpx_mflops.extend(row.hpx_mflops);
+                a.base_mflops.extend(row.base_mflops);
+            }
+        }
+    }
+    let r = acc.expect("non-empty thread grid");
     let out = report::write_heatmap(results_dir(), &r).expect("write heatmap");
     println!("{out}");
     report::append_summary(
@@ -91,15 +128,26 @@ pub fn run_heatmap(op: Op) {
 }
 
 /// Regenerate one scaling figure (Figs 6–9): series at 4/8/16 threads.
+/// Same per-row runtime-sizing rule for task mode as [`run_heatmap`].
 pub fn run_scaling(op: Op) {
+    let mode = exec_mode();
     let threads = scaling_threads();
     let max = threads.iter().copied().max().unwrap();
-    let (hpx, base) = build(max);
+    let shared = build(max);
     let cfg = BenchCfg::quick();
     let sizes = op.scaling_sizes();
     for &t in &threads {
         eprintln!("[{}] scaling @{t} threads", op.name());
-        let r = scaling_sweep(&hpx, &base, op, t, &sizes, &cfg, true);
+        let row_rt;
+        let (hpx, base) = if mode == ExecMode::Task {
+            row_rt = build(t);
+            (&row_rt.0, &row_rt.1)
+        } else {
+            (&shared.0, &shared.1)
+        };
+        let hpol = Policy::with_mode(mode).on(hpx);
+        let bpol = Policy::with_mode(mode).on(base);
+        let r = scaling_sweep(&hpol, &bpol, op, t, &sizes, &cfg, true);
         let out = report::write_scaling(results_dir(), &r).expect("write scaling");
         println!("{out}");
     }

@@ -35,4 +35,4 @@ pub use future::{when_all, Future, Promise};
 pub use park::IdleMode;
 pub use policy::PolicyKind;
 pub use scheduler::Scheduler;
-pub use task::{Priority, Task};
+pub use task::{Hint, Priority, Task};

@@ -44,17 +44,33 @@ impl PolicyKind {
         PolicyKind::PeriodicPriority,
     ];
 
+    /// Accepted spellings (canonical names first, aliases after) — the
+    /// table both [`PolicyKind::parse`] and [`PolicyKind::parse_or_list`]
+    /// resolve through via [`crate::util::cli::lookup_choice`], the same
+    /// helper behind the CLI's `--exec` selector.
+    pub const CHOICES: &[(&str, PolicyKind)] = &[
+        ("priority-local", PolicyKind::PriorityLocal),
+        ("static-priority", PolicyKind::StaticPriority),
+        ("local", PolicyKind::Local),
+        ("global", PolicyKind::Global),
+        ("abp", PolicyKind::Abp),
+        ("hierarchical", PolicyKind::Hierarchical),
+        ("periodic-priority", PolicyKind::PeriodicPriority),
+        ("priority_local", PolicyKind::PriorityLocal),
+        ("default", PolicyKind::PriorityLocal),
+        ("static", PolicyKind::StaticPriority),
+        ("hierarchy", PolicyKind::Hierarchical),
+        ("periodic", PolicyKind::PeriodicPriority),
+    ];
+
     pub fn parse(s: &str) -> Option<Self> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "priority-local" | "priority_local" | "default" => PolicyKind::PriorityLocal,
-            "static-priority" | "static" => PolicyKind::StaticPriority,
-            "local" => PolicyKind::Local,
-            "global" => PolicyKind::Global,
-            "abp" => PolicyKind::Abp,
-            "hierarchical" | "hierarchy" => PolicyKind::Hierarchical,
-            "periodic-priority" | "periodic" => PolicyKind::PeriodicPriority,
-            _ => return None,
-        })
+        crate::util::cli::lookup_choice(s, Self::CHOICES)
+    }
+
+    /// Strict parse for CLI flags / env vars: an unknown value reports
+    /// the full valid set instead of silently defaulting.
+    pub fn parse_or_list(s: &str) -> Result<Self, String> {
+        crate::util::cli::parse_choice("policy", s, Self::CHOICES)
     }
 
     pub fn name(&self) -> &'static str {
@@ -775,5 +791,15 @@ mod tests {
         }
         assert_eq!(PolicyKind::parse("default"), Some(PolicyKind::PriorityLocal));
         assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn strict_parse_lists_valid_set() {
+        let err = PolicyKind::parse_or_list("nope").unwrap_err();
+        assert!(err.contains("unknown policy 'nope'"), "{err}");
+        for kind in PolicyKind::ALL {
+            assert!(err.contains(kind.name()), "{err} missing {}", kind.name());
+            assert_eq!(PolicyKind::parse_or_list(kind.name()), Ok(kind));
+        }
     }
 }

@@ -18,9 +18,76 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicI64, Ordering};
 
 use crate::omp::loops::static_chunks;
-use crate::par::{LoopSched, ParallelRuntime};
+use crate::par::{Executor, LoopSched};
 
-/// libomp-analog `ParallelRuntime` over the persistent pool.
+/// The fork-join loop engine behind the pool's [`Executor`] impl:
+/// partition `range` per `sched` over a `num_threads` team and join.
+fn bulk_on_pool(
+    pool: &BaselinePool,
+    num_threads: usize,
+    range: Range<i64>,
+    sched: LoopSched,
+    body: &(dyn Fn(Range<i64>) + Sync),
+) {
+    let n = range.end - range.start;
+    if n <= 0 {
+        return;
+    }
+    let nthreads = num_threads.clamp(1, pool.size());
+    match sched {
+        LoopSched::Static { chunk } => {
+            pool.fork(nthreads, &|tid, team| {
+                for sub in static_chunks(tid, team, n, chunk) {
+                    body(range.start + sub.start..range.start + sub.end);
+                }
+            });
+        }
+        LoopSched::Dynamic { chunk } | LoopSched::Guided { chunk } => {
+            // libomp-style shared-counter dispatch (guided collapses to
+            // dynamic here; the baseline only needs the paper's default
+            // static path plus a dynamic fallback).
+            let next = AtomicI64::new(0);
+            let chunk = chunk.max(1) as i64;
+            pool.fork(nthreads, &|_tid, _team| loop {
+                let cur = next.fetch_add(chunk, Ordering::AcqRel);
+                if cur >= n {
+                    break;
+                }
+                let hi = (cur + chunk).min(n);
+                body(range.start + cur..range.start + hi);
+            });
+        }
+    }
+}
+
+/// The warm OS-thread pool as an [`Executor`]: fork-join `bulk_sync` over
+/// the persistent helpers.  It has no AMT substrate (`scheduler()` is
+/// `None`), so `task()` policies placed on it degrade to eager inline
+/// execution with a ready join — the documented "where applicable" edge
+/// of the policy matrix.
+impl Executor for BaselinePool {
+    fn name(&self) -> &'static str {
+        "OpenMP(baseline)"
+    }
+
+    fn max_concurrency(&self) -> usize {
+        self.size()
+    }
+
+    fn bulk_sync(
+        &self,
+        threads: usize,
+        range: Range<i64>,
+        sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    ) {
+        bulk_on_pool(self, threads, range, sched, body);
+    }
+}
+
+/// Named wrapper over [`BaselinePool`] — the "compiler-supplied OpenMP"
+/// comparator side of every figure; delegates its [`Executor`] impl to
+/// the pool.
 pub struct BaselineRuntime {
     pool: BaselinePool,
 }
@@ -31,53 +98,29 @@ impl BaselineRuntime {
             pool: BaselinePool::new(max_threads),
         }
     }
+
+    pub fn pool(&self) -> &BaselinePool {
+        &self.pool
+    }
 }
 
-impl ParallelRuntime for BaselineRuntime {
+impl Executor for BaselineRuntime {
     fn name(&self) -> &'static str {
-        "OpenMP(baseline)"
+        self.pool.name()
     }
 
-    fn max_threads(&self) -> usize {
+    fn max_concurrency(&self) -> usize {
         self.pool.size()
     }
 
-    fn parallel_for(
+    fn bulk_sync(
         &self,
-        num_threads: usize,
+        threads: usize,
         range: Range<i64>,
         sched: LoopSched,
         body: &(dyn Fn(Range<i64>) + Sync),
     ) {
-        let n = range.end - range.start;
-        if n <= 0 {
-            return;
-        }
-        let nthreads = num_threads.clamp(1, self.pool.size());
-        match sched {
-            LoopSched::Static { chunk } => {
-                self.pool.fork(nthreads, &|tid, team| {
-                    for sub in static_chunks(tid, team, n, chunk) {
-                        body(range.start + sub.start..range.start + sub.end);
-                    }
-                });
-            }
-            LoopSched::Dynamic { chunk } | LoopSched::Guided { chunk } => {
-                // libomp-style shared-counter dispatch (guided collapses to
-                // dynamic here; the baseline only needs the paper's default
-                // static path plus a dynamic fallback).
-                let next = AtomicI64::new(0);
-                let chunk = chunk.max(1) as i64;
-                self.pool.fork(nthreads, &|_tid, _team| loop {
-                    let cur = next.fetch_add(chunk, Ordering::AcqRel);
-                    if cur >= n {
-                        break;
-                    }
-                    let hi = (cur + chunk).min(n);
-                    body(range.start + cur..range.start + hi);
-                });
-            }
-        }
+        bulk_on_pool(&self.pool, threads, range, sched, body);
     }
 }
 
@@ -96,7 +139,7 @@ mod tests {
         ] {
             let n = 997i64;
             let seen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-            rt.parallel_for(4, 0..n, sched, &|r| {
+            rt.bulk_sync(4, 0..n, sched, &|r| {
                 for i in r {
                     seen[i as usize].fetch_add(1, Ordering::SeqCst);
                 }
@@ -113,12 +156,27 @@ mod tests {
         let rt = BaselineRuntime::new(3);
         for _ in 0..50 {
             let seen: Vec<AtomicU32> = (0..64).map(|_| AtomicU32::new(0)).collect();
-            rt.parallel_for(3, 0..64, LoopSched::default(), &|r| {
+            rt.bulk_sync(3, 0..64, LoopSched::default(), &|r| {
                 for i in r {
                     seen[i as usize].fetch_add(1, Ordering::SeqCst);
                 }
             });
             assert!(seen.iter().all(|c| c.load(Ordering::SeqCst) == 1));
         }
+    }
+
+    #[test]
+    fn pool_itself_is_an_executor() {
+        // ISSUE 5: the raw pool implements the Executor seam directly.
+        let pool = BaselinePool::new(3);
+        let seen: Vec<AtomicU32> = (0..100).map(|_| AtomicU32::new(0)).collect();
+        pool.bulk_sync(3, 0..100, LoopSched::default(), &|r| {
+            for i in r {
+                seen[i as usize].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(seen.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+        assert_eq!(pool.name(), "OpenMP(baseline)");
+        assert!(pool.scheduler().is_none(), "pool has no AMT substrate");
     }
 }

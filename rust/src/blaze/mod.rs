@@ -3,8 +3,8 @@
 //! The paper runs Blazemark (Blaze 3.4's benchmark suite) on top of either
 //! OpenMP runtime.  This module rebuilds the relevant slice of Blaze:
 //! dynamic vectors/matrices ([`vector`], [`matrix`]), serial kernels
-//! ([`serial`]), the four benchmark operations parallelized over the
-//! [`crate::par::ParallelRuntime`] seam ([`ops`]), and — crucially for the
+//! ([`serial`]), the five benchmark operations generic over the
+//! [`crate::par::exec::Policy`] seam ([`ops`]), and — crucially for the
 //! figures — Blaze's **parallelization thresholds** ([`thresholds`]):
 //! below the per-op element-count threshold the operation is executed
 //! single-threaded, which is why every paper plot is flat until the
@@ -17,8 +17,5 @@ pub mod thresholds;
 pub mod vector;
 
 pub use matrix::DynMatrix;
-pub use ops::{
-    daxpy, dmatdmatadd, dmatdmatmult, dmatdmatmult_dataflow, dmatdmatmult_dataflow_tiled,
-    dmatdvecmult, dvecdvecadd, BlazeConfig, DATAFLOW_TILE,
-};
+pub use ops::{daxpy, dmatdmatadd, dmatdmatmult, dmatdvecmult, dvecdvecadd};
 pub use vector::DynVector;

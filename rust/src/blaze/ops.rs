@@ -1,10 +1,17 @@
-//! The four Blazemark operations, parallelized over `ParallelRuntime`
-//! with Blaze's threshold gating (paper §6.1–§6.4).
+//! The five Blazemark operations, generic over [`exec::Policy`]
+//! (paper §6.1–§6.4 plus the dmatdvecmult extension), with Blaze's
+//! threshold gating.
 //!
-//! Each op partitions its index space into OpenMP loop chunks; each chunk
-//! runs the serial kernel on a disjoint slice of the output.  Below the
-//! per-op threshold the whole op runs single-threaded — exactly Blaze's
-//! behaviour, and the cause of the flat region in every paper figure.
+//! Since PR 5 every kernel takes one execution policy instead of a
+//! `(runtime, config)` pair: `seq()` runs the serial kernel, `par()`
+//! partitions the index space into OpenMP loop chunks, and `task()`
+//! executes the same decomposition as a futurized task graph — so all
+//! five kernels gained a dataflow execution for free (the bespoke
+//! `dmatdmatmult_dataflow_tiled` entry point is gone; its tiled graph
+//! lives in [`exec::for_each_tile_async`]).  Below the per-op threshold
+//! the whole op runs single-threaded regardless of policy — exactly
+//! Blaze's behaviour, and the cause of the flat region in every paper
+//! figure.
 
 use std::ops::Range;
 
@@ -12,24 +19,8 @@ use super::matrix::DynMatrix;
 use super::serial;
 use super::thresholds::*;
 use super::vector::DynVector;
-use crate::amt::future::{when_all, Future};
-use crate::par::{HpxMpRuntime, LoopSched, ParallelRuntime};
-
-/// Execution configuration for one operation invocation.
-#[derive(Clone, Copy, Debug)]
-pub struct BlazeConfig {
-    pub threads: usize,
-    pub sched: LoopSched,
-}
-
-impl BlazeConfig {
-    pub fn new(threads: usize) -> Self {
-        Self {
-            threads,
-            sched: LoopSched::default(),
-        }
-    }
-}
+use crate::par::exec::{self, ExecMode, Policy};
+use std::sync::Arc;
 
 /// Covariant raw-pointer smuggle for disjoint parallel writes.  Soundness
 /// rests on the loop-partition invariant (each index claimed exactly once)
@@ -49,22 +40,16 @@ impl SendPtr {
 }
 
 /// dvecdvecadd (paper §6.1): `c = a + b`; threshold 38 000 elements.
-pub fn dvecdvecadd(
-    rt: &dyn ParallelRuntime,
-    cfg: &BlazeConfig,
-    a: &DynVector,
-    b: &DynVector,
-    c: &mut DynVector,
-) {
+pub fn dvecdvecadd(pol: &Policy<'_>, a: &DynVector, b: &DynVector, c: &mut DynVector) {
     let n = a.len();
     assert_eq!(n, b.len());
     assert_eq!(n, c.len());
-    if !parallelize(n, DVECDVECADD_THRESHOLD) || cfg.threads <= 1 {
+    if !parallelize(n, DVECDVECADD_THRESHOLD) || pol.is_serial() {
         serial::vadd_slice(a.as_slice(), b.as_slice(), c.as_mut_slice());
         return;
     }
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
-    rt.parallel_for(cfg.threads, 0..n as i64, cfg.sched, &|r| {
+    exec::for_each(pol, 0..n as i64, |r| {
         let (s, e) = (r.start as usize, r.end as usize);
         // SAFETY: chunks partition 0..n disjointly.
         let c_sub = unsafe { cp.slice(&r) };
@@ -74,21 +59,15 @@ pub fn dvecdvecadd(
 
 /// daxpy (paper §6.2): `b += beta * a`; threshold 38 000 elements.
 /// Blazemark uses `beta = 3.0`.
-pub fn daxpy(
-    rt: &dyn ParallelRuntime,
-    cfg: &BlazeConfig,
-    beta: f64,
-    a: &DynVector,
-    b: &mut DynVector,
-) {
+pub fn daxpy(pol: &Policy<'_>, beta: f64, a: &DynVector, b: &mut DynVector) {
     let n = a.len();
     assert_eq!(n, b.len());
-    if !parallelize(n, DAXPY_THRESHOLD) || cfg.threads <= 1 {
+    if !parallelize(n, DAXPY_THRESHOLD) || pol.is_serial() {
         serial::daxpy_slice(beta, a.as_slice(), b.as_mut_slice());
         return;
     }
     let bp = SendPtr(b.as_mut_slice().as_mut_ptr());
-    rt.parallel_for(cfg.threads, 0..n as i64, cfg.sched, &|r| {
+    exec::for_each(pol, 0..n as i64, |r| {
         let (s, e) = (r.start as usize, r.end as usize);
         // SAFETY: chunks partition 0..n disjointly.
         let b_sub = unsafe { bp.slice(&r) };
@@ -98,22 +77,16 @@ pub fn daxpy(
 
 /// dmatdmatadd (paper §6.3): `C = A + B`, parallel over rows; threshold
 /// 36 100 elements of the target (≈190×190).
-pub fn dmatdmatadd(
-    rt: &dyn ParallelRuntime,
-    cfg: &BlazeConfig,
-    a: &DynMatrix,
-    b: &DynMatrix,
-    c: &mut DynMatrix,
-) {
+pub fn dmatdmatadd(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynMatrix) {
     let (m, n) = (a.rows(), a.cols());
     assert_eq!((m, n), (b.rows(), b.cols()));
     assert_eq!((m, n), (c.rows(), c.cols()));
-    if !parallelize(m * n, DMATDMATADD_THRESHOLD) || cfg.threads <= 1 {
+    if !parallelize(m * n, DMATDMATADD_THRESHOLD) || pol.is_serial() {
         serial::madd_rows(a.as_slice(), b.as_slice(), c.as_mut_slice());
         return;
     }
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
-    rt.parallel_for(cfg.threads, 0..m as i64, cfg.sched, &|r| {
+    exec::for_each(pol, 0..m as i64, |r| {
         let (rs, re) = (r.start as usize, r.end as usize);
         let flat = (rs * n) as i64..(re * n) as i64;
         // SAFETY: row bands are disjoint.
@@ -126,21 +99,23 @@ pub fn dmatdmatadd(
     });
 }
 
-/// dmatdmatmult (paper §6.4): `C = A * B`, rows of C distributed across
-/// the team (Blaze's row-wise decomposition); threshold 3 025 elements of
+/// dmatdmatmult (paper §6.4): `C = A * B`; threshold 3 025 elements of
 /// the target (≈55×55).
-pub fn dmatdmatmult(
-    rt: &dyn ParallelRuntime,
-    cfg: &BlazeConfig,
-    a: &DynMatrix,
-    b: &DynMatrix,
-    c: &mut DynMatrix,
-) {
-    let (m, k) = (a.rows(), a.cols());
+///
+/// Under `seq()`/`par()` the rows of C are distributed across the team
+/// (Blaze's row-wise decomposition).  Under `task()` the product runs as
+/// a **futurized dataflow graph** (ISSUE 2 → generalized in ISSUE 5;
+/// DESIGN.md §7/§10): C is blocked into [`Policy::tile`]-edged tiles,
+/// each tile a continuation on `when_all` of its input-band futures,
+/// joined once at the end — no fork/join barriers anywhere.  Same
+/// summation order on every path (tile tasks accumulate over the full
+/// depth in increasing k), so all policies agree with the serial oracle
+/// bit-for-bit.
+pub fn dmatdmatmult(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynMatrix) {
+    let (m, k_dim) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
-    assert_eq!(k, k2);
+    assert_eq!(k_dim, k2);
     assert_eq!((m, n), (c.rows(), c.cols()));
-    let run_serial = !parallelize(m * n, DMATDMATMULT_THRESHOLD) || cfg.threads <= 1;
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let row_body = |r: Range<i64>| {
         for i in r.start as usize..r.end as usize {
@@ -150,33 +125,48 @@ pub fn dmatdmatmult(
             serial::matmul_row(a.row(i), b.as_slice(), n, c_row);
         }
     };
-    if run_serial {
+    if !parallelize(m * n, DMATDMATMULT_THRESHOLD) || pol.is_serial() {
         row_body(0..m as i64);
         return;
     }
-    rt.parallel_for(cfg.threads, 0..m as i64, cfg.sched, &row_body);
+    if pol.mode() == ExecMode::Task {
+        let ap = ConstPtr(a.as_slice().as_ptr());
+        let bp = ConstPtr(b.as_slice().as_ptr());
+        let tile_body: Arc<dyn Fn(Range<usize>, Range<usize>) + Send + Sync> =
+            Arc::new(move |ri, rj| {
+                // SAFETY: the `wait()` below blocks this function until
+                // every tile task retired, so the operand borrows outlive
+                // all uses; tile (row × column) ranges partition C
+                // disjointly, so each segment has exactly one writer.
+                let a_all = unsafe { std::slice::from_raw_parts(ap.0, m * k_dim) };
+                let b_all = unsafe { std::slice::from_raw_parts(bp.0, k_dim * n) };
+                let (j0, j1) = (rj.start, rj.end);
+                for i in ri {
+                    let flat = (i * n + j0) as i64..(i * n + j1) as i64;
+                    let c_seg = unsafe { cp.slice(&flat) };
+                    serial::matmul_row_seg(&a_all[i * k_dim..(i + 1) * k_dim], b_all, n, j0, c_seg);
+                }
+            });
+        exec::for_each_tile_async(pol, m, n, tile_body).wait();
+        return;
+    }
+    exec::for_each(pol, 0..m as i64, row_body);
 }
 
 /// dmatdvecmult (ISSUE 3 — the suite's dense matrix-vector product, the
 /// missing fourth Blazemark kernel): `y = A * x`, rows of `y` distributed
 /// across the team; Blaze gates on the matrix's **row count** (threshold
 /// 330).  Supports non-square `A` (m × n times length-n).
-pub fn dmatdvecmult(
-    rt: &dyn ParallelRuntime,
-    cfg: &BlazeConfig,
-    a: &DynMatrix,
-    x: &DynVector,
-    y: &mut DynVector,
-) {
+pub fn dmatdvecmult(pol: &Policy<'_>, a: &DynMatrix, x: &DynVector, y: &mut DynVector) {
     let (m, n) = (a.rows(), a.cols());
     assert_eq!(n, x.len());
     assert_eq!(m, y.len());
-    if !parallelize(m, DMATDVECMULT_THRESHOLD) || cfg.threads <= 1 {
+    if !parallelize(m, DMATDVECMULT_THRESHOLD) || pol.is_serial() {
         serial::matvec_rows(a.as_slice(), x.as_slice(), y.as_mut_slice());
         return;
     }
     let yp = SendPtr(y.as_mut_slice().as_mut_ptr());
-    rt.parallel_for(cfg.threads, 0..m as i64, cfg.sched, &|r| {
+    exec::for_each(pol, 0..m as i64, |r| {
         let (rs, re) = (r.start as usize, r.end as usize);
         // SAFETY: row bands partition 0..m disjointly.
         let y_sub = unsafe { yp.slice(&r) };
@@ -191,103 +181,6 @@ struct ConstPtr(*const f64);
 
 unsafe impl Send for ConstPtr {}
 unsafe impl Sync for ConstPtr {}
-
-/// Default tile edge of the dataflow dmatdmatmult decomposition: large
-/// enough that one tile amortizes task scheduling, small enough that a
-/// 150×150 product still yields a stealable graph.
-pub const DATAFLOW_TILE: usize = 64;
-
-/// dmatdmatmult as a dependence-driven tiled task graph (ISSUE 2) with
-/// the default tile size — see [`dmatdmatmult_dataflow_tiled`].
-pub fn dmatdmatmult_dataflow(
-    rt: &HpxMpRuntime,
-    cfg: &BlazeConfig,
-    a: &DynMatrix,
-    b: &DynMatrix,
-    c: &mut DynMatrix,
-) {
-    dmatdmatmult_dataflow_tiled(rt, cfg, a, b, c, DATAFLOW_TILE)
-}
-
-/// `C = A * B` as a **futurized dataflow graph** (ISSUE 2; DESIGN.md §7):
-/// C is blocked into `tile × tile` tiles; each tile task is a `then`
-/// continuation on `when_all` of its *input-band futures* (the A row band
-/// and B column band it consumes), and the product completes at one final
-/// `when_all` join — no fork/join barriers anywhere, the first
-/// non-fork-join workload of this repo.
-///
-/// The input bands here are materialized as already-ready futures (the
-/// operands exist), but the graph shape is exactly what lets an upstream
-/// producer chain products without joins: hang the band futures off
-/// producer tasks instead and nothing else changes.
-///
-/// Same threshold gating and summation order as the fork-join
-/// [`dmatdmatmult`] (tile tasks accumulate over the full depth in
-/// increasing k), so results agree with the serial oracle bit-for-bit.
-pub fn dmatdmatmult_dataflow_tiled(
-    rt: &HpxMpRuntime,
-    cfg: &BlazeConfig,
-    a: &DynMatrix,
-    b: &DynMatrix,
-    c: &mut DynMatrix,
-    tile: usize,
-) {
-    let (m, k_dim) = (a.rows(), a.cols());
-    let (k2, n) = (b.rows(), b.cols());
-    assert_eq!(k_dim, k2);
-    assert_eq!((m, n), (c.rows(), c.cols()));
-    if !parallelize(m * n, DMATDMATMULT_THRESHOLD) || cfg.threads <= 1 {
-        for i in 0..m {
-            serial::matmul_row(a.row(i), b.as_slice(), n, c.row_mut(i));
-        }
-        return;
-    }
-
-    let tile = tile.max(8);
-    let row_tiles = m / tile + usize::from(m % tile != 0);
-    let col_tiles = n / tile + usize::from(n % tile != 0);
-
-    // The input tiles of the graph: A banded by tile rows, B by tile
-    // columns, one future each.
-    let a_bands: Vec<Future<()>> = (0..row_tiles).map(|_| Future::ready(())).collect();
-    let b_bands: Vec<Future<()>> = (0..col_tiles).map(|_| Future::ready(())).collect();
-
-    let ap = ConstPtr(a.as_slice().as_ptr());
-    let bp = ConstPtr(b.as_slice().as_ptr());
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
-    let sched = &rt.rt.sched;
-
-    let mut tiles: Vec<Future<()>> = Vec::with_capacity(row_tiles * col_tiles);
-    for bi in 0..row_tiles {
-        let (i0, i1) = (bi * tile, ((bi + 1) * tile).min(m));
-        for bj in 0..col_tiles {
-            let (j0, j1) = (bj * tile, ((bj + 1) * tile).min(n));
-            let inputs = [a_bands[bi].clone(), b_bands[bj].clone()];
-            let tile_task = when_all(&inputs).then_named(sched, "blaze_tile_mult", move |_| {
-                // SAFETY: the final `when_all(..).wait()` below blocks this
-                // function until every tile task retired, so the operand
-                // borrows outlive all uses; tile (row × column) ranges
-                // partition C disjointly, so each segment has exactly one
-                // writer.
-                let a_all = unsafe { std::slice::from_raw_parts(ap.0, m * k_dim) };
-                let b_all = unsafe { std::slice::from_raw_parts(bp.0, k_dim * n) };
-                for i in i0..i1 {
-                    let flat = (i * n + j0) as i64..(i * n + j1) as i64;
-                    let c_seg = unsafe { cp.slice(&flat) };
-                    serial::matmul_row_seg(
-                        &a_all[i * k_dim..(i + 1) * k_dim],
-                        b_all,
-                        n,
-                        j0,
-                        c_seg,
-                    );
-                }
-            });
-            tiles.push(tile_task);
-        }
-    }
-    when_all(&tiles).wait();
-}
 
 /// Blazemark FLOP counts per operation (what MFLOP/s is computed from).
 pub mod flops {
@@ -322,7 +215,9 @@ pub mod flops {
 mod tests {
     use super::*;
     use crate::baseline::BaselineRuntime;
-    use crate::par::SerialRuntime;
+    use crate::omp::OmpRuntime;
+    use crate::par::exec::{par, seq, task};
+    use crate::par::HpxMpRuntime;
 
     fn vec_ref_add(a: &DynVector, b: &DynVector) -> DynVector {
         DynVector::from_vec(
@@ -336,11 +231,10 @@ mod tests {
 
     #[test]
     fn dvecdvecadd_below_threshold_is_serial_and_correct() {
-        let rt = SerialRuntime;
         let a = DynVector::random(1000, 1);
         let b = DynVector::random(1000, 2);
         let mut c = DynVector::zeros(1000);
-        dvecdvecadd(&rt, &BlazeConfig::new(4), &a, &b, &mut c);
+        dvecdvecadd(&seq(), &a, &b, &mut c);
         assert_eq!(c, vec_ref_add(&a, &b));
     }
 
@@ -351,7 +245,7 @@ mod tests {
         let a = DynVector::random(n, 3);
         let b = DynVector::random(n, 4);
         let mut c = DynVector::zeros(n);
-        dvecdvecadd(&rt, &BlazeConfig::new(4), &a, &b, &mut c);
+        dvecdvecadd(&par().on(&rt).threads(4), &a, &b, &mut c);
         assert_eq!(c.max_abs_diff(&vec_ref_add(&a, &b)), 0.0);
     }
 
@@ -362,7 +256,7 @@ mod tests {
         let a = DynVector::random(n, 5);
         let b0 = DynVector::random(n, 6);
         let mut b_par = b0.clone();
-        daxpy(&rt, &BlazeConfig::new(4), 3.0, &a, &mut b_par);
+        daxpy(&par().on(&rt).threads(4), 3.0, &a, &mut b_par);
         let mut b_ser = b0.clone();
         serial::daxpy_slice(3.0, a.as_slice(), b_ser.as_mut_slice());
         assert_eq!(b_par.max_abs_diff(&b_ser), 0.0);
@@ -375,7 +269,7 @@ mod tests {
         let a = DynMatrix::random(n, n, 7);
         let b = DynMatrix::random(n, n, 8);
         let mut c = DynMatrix::zeros(n, n);
-        dmatdmatadd(&rt, &BlazeConfig::new(4), &a, &b, &mut c);
+        dmatdmatadd(&par().on(&rt).threads(4), &a, &b, &mut c);
         let mut c_ref = DynMatrix::zeros(n, n);
         serial::madd_rows(a.as_slice(), b.as_slice(), c_ref.as_mut_slice());
         assert_eq!(c.max_abs_diff(&c_ref), 0.0);
@@ -388,18 +282,18 @@ mod tests {
         let a = DynMatrix::random(n, n, 9);
         let eye = DynMatrix::identity(n);
         let mut c = DynMatrix::zeros(n, n);
-        dmatdmatmult(&rt, &BlazeConfig::new(4), &a, &eye, &mut c);
+        dmatdmatmult(&par().on(&rt).threads(4), &a, &eye, &mut c);
         assert!(c.max_abs_diff(&a) < 1e-12);
     }
 
     #[test]
     fn dmatdmatmult_small_uses_serial_path() {
-        // 10x10 < 3025 threshold: must still be correct.
+        // 10x10 < 3025 threshold: must still be correct under any policy.
         let rt = BaselineRuntime::new(4);
         let a = DynMatrix::random(10, 10, 10);
         let b = DynMatrix::random(10, 10, 11);
         let mut c = DynMatrix::zeros(10, 10);
-        dmatdmatmult(&rt, &BlazeConfig::new(4), &a, &b, &mut c);
+        dmatdmatmult(&par().on(&rt).threads(4), &a, &b, &mut c);
         // Oracle: naive triple loop.
         let mut c_ref = DynMatrix::zeros(10, 10);
         for i in 0..10 {
@@ -435,7 +329,7 @@ mod tests {
         let a = DynMatrix::random(100, 100, 21);
         let x = DynVector::random(100, 22);
         let mut y = DynVector::zeros(100);
-        dmatdvecmult(&rt, &BlazeConfig::new(4), &a, &x, &mut y);
+        dmatdvecmult(&par().on(&rt).threads(4), &a, &x, &mut y);
         assert!(y.max_abs_diff(&matvec_oracle(&a, &x)) < 1e-12);
     }
 
@@ -446,7 +340,7 @@ mod tests {
         let a = DynMatrix::random(n, n, 23);
         let x = DynVector::random(n, 24);
         let mut y = DynVector::zeros(n);
-        dmatdvecmult(&rt, &BlazeConfig::new(4), &a, &x, &mut y);
+        dmatdvecmult(&par().on(&rt).threads(4), &a, &x, &mut y);
         assert_eq!(y.max_abs_diff(&matvec_oracle(&a, &x)), 0.0);
     }
 
@@ -458,7 +352,7 @@ mod tests {
             let a = DynMatrix::random(m, n, 25);
             let x = DynVector::random(n, 26);
             let mut y = DynVector::zeros(m);
-            dmatdvecmult(&rt, &BlazeConfig::new(4), &a, &x, &mut y);
+            dmatdvecmult(&par().on(&rt).threads(4), &a, &x, &mut y);
             assert_eq!(
                 y.max_abs_diff(&matvec_oracle(&a, &x)),
                 0.0,
@@ -469,19 +363,17 @@ mod tests {
 
     #[test]
     fn dmatdvecmult_hpxmp_matches_baseline() {
-        use crate::omp::OmpRuntime;
         let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
         let n = 512;
         let a = DynMatrix::random(n, n, 27);
         let x = DynVector::random(n, 28);
         let mut y = DynVector::zeros(n);
-        dmatdvecmult(&hpx, &BlazeConfig::new(4), &a, &x, &mut y);
+        dmatdvecmult(&par().on(&hpx).threads(4), &a, &x, &mut y);
         assert_eq!(y.max_abs_diff(&matvec_oracle(&a, &x)), 0.0);
     }
 
     #[test]
-    fn dmatdmatmult_dataflow_matches_forkjoin_oracle_exactly() {
-        use crate::omp::OmpRuntime;
+    fn dmatdmatmult_task_policy_matches_serial_oracle_exactly() {
         let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
         // 30: below threshold (serial path); 64: parallel, even tiles;
         // 130: parallel, ragged edge tiles.
@@ -489,13 +381,13 @@ mod tests {
             let a = DynMatrix::random(n, n, 31);
             let b = DynMatrix::random(n, n, 32);
             let mut c_df = DynMatrix::zeros(n, n);
-            dmatdmatmult_dataflow_tiled(&hpx, &BlazeConfig::new(4), &a, &b, &mut c_df, 16);
+            dmatdmatmult(&task().on(&hpx).threads(4).tile(16), &a, &b, &mut c_df);
             let mut c_ref = DynMatrix::zeros(n, n);
-            dmatdmatmult(&SerialRuntime, &BlazeConfig::new(1), &a, &b, &mut c_ref);
+            dmatdmatmult(&seq(), &a, &b, &mut c_ref);
             assert_eq!(
                 c_df.max_abs_diff(&c_ref),
                 0.0,
-                "dataflow diverged from serial oracle at n={n}"
+                "task-policy dataflow diverged from serial oracle at n={n}"
             );
         }
     }

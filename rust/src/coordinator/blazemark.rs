@@ -3,8 +3,9 @@
 //! Methodology mirrors Blazemark: operands initialized once, the operation
 //! repeated in a steady-state loop, per-iteration median → MFLOP/s.
 
-use crate::blaze::{self, BlazeConfig, DynMatrix, DynVector};
-use crate::par::{HpxMpRuntime, ParallelRuntime};
+use crate::blaze::{self, DynMatrix, DynVector};
+use crate::par::Policy;
+use crate::util::cli;
 use crate::util::timing::{bench, mflops, BenchCfg};
 
 /// The Blazemark kernels: the paper's four figures plus the dense
@@ -27,15 +28,29 @@ impl Op {
         Op::DMatDVecMult,
     ];
 
+    /// Accepted spellings (canonical names first), resolved through the
+    /// shared [`cli::lookup_choice`] selector helper.
+    pub const CHOICES: &[(&str, Op)] = &[
+        ("dvecdvecadd", Op::DVecDVecAdd),
+        ("daxpy", Op::Daxpy),
+        ("dmatdmatadd", Op::DMatDMatAdd),
+        ("dmatdmatmult", Op::DMatDMatMult),
+        ("dmatdvecmult", Op::DMatDVecMult),
+        ("vadd", Op::DVecDVecAdd),
+        ("madd", Op::DMatDMatAdd),
+        ("matmul", Op::DMatDMatMult),
+        ("mmult", Op::DMatDMatMult),
+        ("matvec", Op::DMatDVecMult),
+        ("mvmult", Op::DMatDVecMult),
+    ];
+
     pub fn parse(s: &str) -> Option<Self> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "dvecdvecadd" | "vadd" => Op::DVecDVecAdd,
-            "daxpy" => Op::Daxpy,
-            "dmatdmatadd" | "madd" => Op::DMatDMatAdd,
-            "dmatdmatmult" | "matmul" | "mmult" => Op::DMatDMatMult,
-            "dmatdvecmult" | "matvec" | "mvmult" => Op::DMatDVecMult,
-            _ => return None,
-        })
+        cli::lookup_choice(s, Self::CHOICES)
+    }
+
+    /// Strict parse for `--op`: unknown values report the valid set.
+    pub fn parse_or_list(s: &str) -> Result<Self, String> {
+        cli::parse_choice("op", s, Self::CHOICES)
     }
 
     pub fn name(&self) -> &'static str {
@@ -105,73 +120,66 @@ impl Op {
     }
 }
 
-/// Measure MFLOP/s of `op` at size `n` under `rt` with `threads` threads.
-pub fn measure(rt: &dyn ParallelRuntime, op: Op, threads: usize, n: usize, cfg: &BenchCfg) -> f64 {
-    let bcfg = BlazeConfig::new(threads);
+/// Measure MFLOP/s of `op` at size `n` under execution policy `pol` —
+/// the one measurement cell behind every figure.  The policy selects the
+/// runtime *and* the execution model: `par().on(&hpx)` is the paper's
+/// fork-join hpxMP cell, `par().on(&base)` its libomp comparator, and
+/// `task().on(&hpx)` the futurized dataflow path (for a fair
+/// execution-model comparison build the runtime with exactly
+/// `pol.num_threads()` workers — the task graph parallelizes over every
+/// scheduler worker, as `hpxmp dataflow` and `ablation_exec` both do).
+pub fn measure(pol: &Policy<'_>, op: Op, n: usize, cfg: &BenchCfg) -> f64 {
     let summary = match op {
         Op::DVecDVecAdd => {
             let a = DynVector::random(n, 11);
             let b = DynVector::random(n, 12);
             let mut c = DynVector::zeros(n);
-            bench(cfg, || blaze::dvecdvecadd(rt, &bcfg, &a, &b, &mut c))
+            bench(cfg, || blaze::dvecdvecadd(pol, &a, &b, &mut c))
         }
         Op::Daxpy => {
             let a = DynVector::random(n, 13);
             let mut b = DynVector::random(n, 14);
-            bench(cfg, || blaze::daxpy(rt, &bcfg, 3.0, &a, &mut b))
+            bench(cfg, || blaze::daxpy(pol, 3.0, &a, &mut b))
         }
         Op::DMatDMatAdd => {
             let a = DynMatrix::random(n, n, 15);
             let b = DynMatrix::random(n, n, 16);
             let mut c = DynMatrix::zeros(n, n);
-            bench(cfg, || blaze::dmatdmatadd(rt, &bcfg, &a, &b, &mut c))
+            bench(cfg, || blaze::dmatdmatadd(pol, &a, &b, &mut c))
         }
         Op::DMatDMatMult => {
             let a = DynMatrix::random(n, n, 17);
             let b = DynMatrix::random(n, n, 18);
             let mut c = DynMatrix::zeros(n, n);
-            bench(cfg, || blaze::dmatdmatmult(rt, &bcfg, &a, &b, &mut c))
+            bench(cfg, || blaze::dmatdmatmult(pol, &a, &b, &mut c))
         }
         Op::DMatDVecMult => {
             let a = DynMatrix::random(n, n, 19);
             let x = DynVector::random(n, 20);
             let mut y = DynVector::zeros(n);
-            bench(cfg, || blaze::dmatdvecmult(rt, &bcfg, &a, &x, &mut y))
+            bench(cfg, || blaze::dmatdvecmult(pol, &a, &x, &mut y))
         }
     };
     mflops(&summary, op.flops(n))
 }
 
-/// Measure MFLOP/s of the **futurized dataflow** dmatdmatmult (ISSUE 2)
-/// — the task-graph counterpart of `measure(_, Op::DMatDMatMult, ..)`,
-/// selectable next to the fork-join path wherever the coordinator
-/// compares execution models.  Same operands, FLOP count and methodology
-/// as the fork-join cell.  The dataflow graph parallelizes over *every*
-/// scheduler worker (`threads` only gates the serial threshold), so for
-/// a fair execution-model comparison build `hpx` with exactly `threads`
-/// workers — as `hpxmp dataflow` and `ablation_dataflow` both do.
-pub fn measure_dataflow_mmult(hpx: &HpxMpRuntime, threads: usize, n: usize, cfg: &BenchCfg) -> f64 {
-    let bcfg = BlazeConfig::new(threads);
-    let a = DynMatrix::random(n, n, 17);
-    let b = DynMatrix::random(n, n, 18);
-    let mut c = DynMatrix::zeros(n, n);
-    let summary = bench(cfg, || blaze::dmatdmatmult_dataflow(hpx, &bcfg, &a, &b, &mut c));
-    mflops(&summary, Op::DMatDMatMult.flops(n))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::par::SerialRuntime;
+    use crate::par::exec::{seq, task};
+    use crate::par::HpxMpRuntime;
 
     #[test]
     fn op_parse_roundtrip() {
         for op in Op::ALL {
             assert_eq!(Op::parse(op.name()), Some(op));
+            assert_eq!(Op::parse_or_list(op.name()), Ok(op));
         }
         assert_eq!(Op::parse("matmul"), Some(Op::DMatDMatMult));
         assert_eq!(Op::parse("matvec"), Some(Op::DMatDVecMult));
         assert_eq!(Op::parse("nope"), None);
+        let err = Op::parse_or_list("nope").unwrap_err();
+        assert!(err.contains("dvecdvecadd"), "{err}");
     }
 
     #[test]
@@ -184,13 +192,13 @@ mod tests {
         };
         for op in Op::ALL {
             let n = if op.is_vector() { 1024 } else { 32 };
-            let m = measure(&SerialRuntime, op, 1, n, &cfg);
+            let m = measure(&seq(), op, n, &cfg);
             assert!(m > 0.0, "{}: {m}", op.name());
         }
     }
 
     #[test]
-    fn measure_dataflow_returns_positive_mflops() {
+    fn measure_task_policy_returns_positive_mflops() {
         let cfg = BenchCfg {
             warmup_iters: 0,
             min_iters: 1,
@@ -198,8 +206,12 @@ mod tests {
             min_time: std::time::Duration::from_micros(1),
         };
         let hpx = HpxMpRuntime::new(crate::omp::OmpRuntime::for_tests(2));
-        let m = measure_dataflow_mmult(&hpx, 2, 64, &cfg);
-        assert!(m > 0.0, "dataflow mmult: {m}");
+        let pol = task().on(&hpx).threads(2);
+        for op in Op::ALL {
+            let n = if op.is_vector() { 65_536 } else { 64 };
+            let m = measure(&pol, op, n, &cfg);
+            assert!(m > 0.0, "{} under task(): {m}", op.name());
+        }
     }
 
     #[test]

@@ -19,9 +19,9 @@ use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
 use crate::baseline::BaselineRuntime;
-use crate::blaze::{self, BlazeConfig, DynMatrix, DynVector};
+use crate::blaze::{self, DynMatrix, DynVector};
 use crate::omp::OmpRuntime;
-use crate::par::{HpxMpRuntime, ParallelRuntime};
+use crate::par::{ExecMode, Executor, HpxMpRuntime, Policy};
 use crate::util::stats::percentile;
 
 /// Which kernels a client's request stream cycles through.
@@ -44,12 +44,22 @@ enum Kernel {
 impl KernelMix {
     pub const ALL: [KernelMix; 2] = [KernelMix::Vector, KernelMix::Mixed];
 
+    /// Accepted spellings, resolved through the shared
+    /// [`crate::util::cli::lookup_choice`] selector helper.
+    pub const CHOICES: &[(&str, KernelMix)] = &[
+        ("vec", KernelMix::Vector),
+        ("mixed", KernelMix::Mixed),
+        ("vector", KernelMix::Vector),
+        ("all", KernelMix::Mixed),
+    ];
+
     pub fn parse(s: &str) -> Option<Self> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "vec" | "vector" => KernelMix::Vector,
-            "mixed" | "all" => KernelMix::Mixed,
-            _ => return None,
-        })
+        crate::util::cli::lookup_choice(s, Self::CHOICES)
+    }
+
+    /// Strict parse for `--mix`: unknown values report the valid set.
+    pub fn parse_or_list(s: &str) -> Result<Self, String> {
+        crate::util::cli::parse_choice("mix", s, Self::CHOICES)
     }
 
     pub fn name(&self) -> &'static str {
@@ -79,6 +89,11 @@ pub struct ServeCfg {
     /// Requests each client issues back-to-back.
     pub requests_per_client: usize,
     pub mix: KernelMix,
+    /// Execution model every request runs under (the `--exec` selector):
+    /// `Par` forks a team per request, `Task` runs each request as a
+    /// futurized chunk/tile graph, `Seq` serializes (the degenerate
+    /// floor).  Defaults to `Par` — the paper's serving regime.
+    pub mode: ExecMode,
     /// daxpy / dvecdvecadd operand length (threshold 38 000).
     pub vec_len: usize,
     /// dmatdvecmult square dimension (row threshold 330).
@@ -94,6 +109,7 @@ impl ServeCfg {
             threads: threads.max(1),
             requests_per_client: requests_per_client.max(1),
             mix,
+            mode: ExecMode::Par,
             vec_len: 50_000,
             matvec_dim: 400,
             mmult_dim: 64,
@@ -118,8 +134,8 @@ pub struct ServeStats {
 /// regions contend for (and share) the same scheduler, team pool and
 /// admission budget.
 pub fn serve_shared(rt: &Arc<OmpRuntime>, cfg: &ServeCfg) -> ServeStats {
-    let rts: Vec<Arc<dyn ParallelRuntime>> = (0..cfg.clients)
-        .map(|_| Arc::new(HpxMpRuntime::new(rt.clone())) as Arc<dyn ParallelRuntime>)
+    let rts: Vec<Arc<dyn Executor>> = (0..cfg.clients)
+        .map(|_| Arc::new(HpxMpRuntime::new(rt.clone())) as Arc<dyn Executor>)
         .collect();
     drive(cfg, "hpxmp-shared", rts)
 }
@@ -127,14 +143,16 @@ pub fn serve_shared(rt: &Arc<OmpRuntime>, cfg: &ServeCfg) -> ServeStats {
 /// Serve the stream with a **private warm OS-thread pool per client** —
 /// the libomp-style configuration where K clients × n pool threads
 /// oversubscribe the machine (the paper's competing-runtimes regime).
+/// (`ExecMode::Task` degrades to eager execution here: the pool exposes
+/// no AMT substrate.)
 pub fn serve_per_client(cfg: &ServeCfg) -> ServeStats {
-    let rts: Vec<Arc<dyn ParallelRuntime>> = (0..cfg.clients)
-        .map(|_| Arc::new(BaselineRuntime::new(cfg.threads)) as Arc<dyn ParallelRuntime>)
+    let rts: Vec<Arc<dyn Executor>> = (0..cfg.clients)
+        .map(|_| Arc::new(BaselineRuntime::new(cfg.threads)) as Arc<dyn Executor>)
         .collect();
     drive(cfg, "baseline-per-client", rts)
 }
 
-fn drive(cfg: &ServeCfg, runtime: &'static str, rts: Vec<Arc<dyn ParallelRuntime>>) -> ServeStats {
+fn drive(cfg: &ServeCfg, runtime: &'static str, rts: Vec<Arc<dyn Executor>>) -> ServeStats {
     assert_eq!(rts.len(), cfg.clients);
     // clients + 1: the coordinator passes the barrier with the clients so
     // the wall clock starts when every client is warmed up and ready.
@@ -186,11 +204,13 @@ fn drive(cfg: &ServeCfg, runtime: &'static str, rts: Vec<Arc<dyn ParallelRuntime
 /// client's (stream start, stream stop, per-request latencies).
 fn client_loop(
     ci: usize,
-    rt: Arc<dyn ParallelRuntime>,
+    rt: Arc<dyn Executor>,
     cfg: &ServeCfg,
     start: &Barrier,
 ) -> (Instant, Instant, Vec<f64>) {
-    let bcfg = BlazeConfig::new(cfg.threads);
+    let pol = Policy::with_mode(cfg.mode)
+        .on(rt.as_ref())
+        .threads(cfg.threads);
     let kernels = cfg.mix.kernels();
     let seed = ci as u64;
     let a = DynVector::random(cfg.vec_len, 100 + seed);
@@ -210,10 +230,10 @@ fn client_loop(
         let kernel = kernels[(ci + r) % kernels.len()];
         let t0 = Instant::now();
         match kernel {
-            Kernel::Daxpy => blaze::daxpy(rt.as_ref(), &bcfg, 3.0, &a, &mut b),
-            Kernel::VAdd => blaze::dvecdvecadd(rt.as_ref(), &bcfg, &a, &b, &mut c),
-            Kernel::MatVec => blaze::dmatdvecmult(rt.as_ref(), &bcfg, &mv_a, &mv_x, &mut mv_y),
-            Kernel::MMult => blaze::dmatdmatmult(rt.as_ref(), &bcfg, &mm_a, &mm_b, &mut mm_c),
+            Kernel::Daxpy => blaze::daxpy(&pol, 3.0, &a, &mut b),
+            Kernel::VAdd => blaze::dvecdvecadd(&pol, &a, &b, &mut c),
+            Kernel::MatVec => blaze::dmatdvecmult(&pol, &mv_a, &mv_x, &mut mv_y),
+            Kernel::MMult => blaze::dmatdmatmult(&pol, &mm_a, &mm_b, &mut mm_c),
         }
         latencies.push(t0.elapsed().as_secs_f64());
     }
@@ -270,6 +290,22 @@ mod tests {
         assert_eq!(stats.total_requests, 2 * 4);
         assert!(stats.reqs_per_sec > 0.0);
         assert_eq!(stats.runtime, "baseline-per-client");
+    }
+
+    #[test]
+    fn task_mode_serving_works_on_both_shapes() {
+        // The --exec selector threaded into serving: every request runs
+        // as a futurized chunk graph on the shared runtime, and degrades
+        // to eager execution on the AMT-less per-client pools.
+        let rt = OmpRuntime::for_tests(2);
+        let mut cfg = tiny(KernelMix::Mixed);
+        cfg.mode = ExecMode::Task;
+        cfg.vec_len = 50_000; // over-threshold: the task path actually runs
+        let shared = serve_shared(&rt, &cfg);
+        assert_eq!(shared.total_requests, 2 * 4);
+        assert_eq!(rt.reserved_workers(), 0, "admission budget leaked");
+        let per = serve_per_client(&cfg);
+        assert_eq!(per.total_requests, 2 * 4);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! * [`scaling_sweep`] — Figs 6–9: MFLOP/s vs size for both runtimes at a
 //!   fixed thread count.
 
-use crate::par::ParallelRuntime;
+use crate::par::Policy;
 use crate::util::heatmap::Heatmap;
 use crate::util::timing::BenchCfg;
 
@@ -44,10 +44,13 @@ impl HeatmapResult {
     }
 }
 
-/// Run the (threads × sizes) ratio grid for `op`.
+/// Run the (threads × sizes) ratio grid for `op`.  `hpx`/`base` are the
+/// two execution policies being compared (per-cell the thread count is
+/// overridden with [`Policy::threads`] — policies are `Copy`, so a grid
+/// is just stamped-out copies of the same policy value).
 pub fn heatmap_sweep(
-    hpx: &dyn ParallelRuntime,
-    base: &dyn ParallelRuntime,
+    hpx: &Policy<'_>,
+    base: &Policy<'_>,
     op: Op,
     threads: &[usize],
     sizes: &[usize],
@@ -59,8 +62,8 @@ pub fn heatmap_sweep(
     let mut base_m = vec![vec![f64::NAN; sizes.len()]; threads.len()];
     for (ti, &t) in threads.iter().enumerate() {
         for (si, &n) in sizes.iter().enumerate() {
-            let h = measure(hpx, op, t, n, cfg);
-            let b = measure(base, op, t, n, cfg);
+            let h = measure(&hpx.threads(t), op, n, cfg);
+            let b = measure(&base.threads(t), op, n, cfg);
             hpx_m[ti][si] = h;
             base_m[ti][si] = b;
             ratio[ti][si] = h / b;
@@ -93,8 +96,8 @@ pub struct ScalingResult {
 }
 
 pub fn scaling_sweep(
-    hpx: &dyn ParallelRuntime,
-    base: &dyn ParallelRuntime,
+    hpx: &Policy<'_>,
+    base: &Policy<'_>,
     op: Op,
     threads: usize,
     sizes: &[usize],
@@ -104,8 +107,8 @@ pub fn scaling_sweep(
     let mut hpx_m = Vec::with_capacity(sizes.len());
     let mut base_m = Vec::with_capacity(sizes.len());
     for &n in sizes {
-        let h = measure(hpx, op, threads, n, cfg);
-        let b = measure(base, op, threads, n, cfg);
+        let h = measure(&hpx.threads(threads), op, n, cfg);
+        let b = measure(&base.threads(threads), op, n, cfg);
         if progress {
             eprintln!(
                 "  {} threads={threads} n={n:<9} hpxMP={h:>10.1} base={b:>10.1}",
@@ -127,7 +130,7 @@ pub fn scaling_sweep(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::par::SerialRuntime;
+    use crate::par::seq;
 
     fn tiny_cfg() -> BenchCfg {
         BenchCfg {
@@ -141,8 +144,8 @@ mod tests {
     #[test]
     fn heatmap_sweep_fills_grid() {
         let r = heatmap_sweep(
-            &SerialRuntime,
-            &SerialRuntime,
+            &seq(),
+            &seq(),
             Op::DVecDVecAdd,
             &[1, 2],
             &[512, 1024],
@@ -158,8 +161,8 @@ mod tests {
     #[test]
     fn scaling_sweep_lengths_match() {
         let r = scaling_sweep(
-            &SerialRuntime,
-            &SerialRuntime,
+            &seq(),
+            &seq(),
             Op::Daxpy,
             1,
             &[256, 512, 1024],

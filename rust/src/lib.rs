@@ -12,8 +12,11 @@
 //!   threads are AMT tasks; `__kmpc_*` facade, `GOMP_*` shims, OMPT.
 //! * [`baseline`] — a libomp-style OS-thread OpenMP runtime, the
 //!   "compiler-supplied" comparator from the paper's evaluation.
-//! * [`par`] — the `ParallelRuntime` trait both runtimes implement, so the
-//!   same application code (Blaze-lite) runs on either, unchanged.
+//! * [`par`] — the HPX-style execution-policy API ([`par::exec`]): an
+//!   `Executor` trait both runtimes (plus a serial executor) implement
+//!   and composable `seq()`/`par()`/`task()` policies, so the same
+//!   application code (Blaze-lite) runs serial, fork-join, or as a
+//!   futurized task graph on either runtime with a one-line policy swap.
 //! * [`blaze`] — "Blaze-lite": dense vectors/matrices and the four
 //!   Blazemark operations with Blaze's parallelization thresholds.
 //! * [`runtime`] — PJRT bridge: loads AOT-compiled JAX/Pallas HLO

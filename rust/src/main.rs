@@ -25,35 +25,45 @@ use hpxmp::coordinator::{
     conformance, report, sweep,
 };
 use hpxmp::omp::{icv, OmpRuntime};
-use hpxmp::par::HpxMpRuntime;
+use hpxmp::par::{exec, ExecMode, HpxMpRuntime, Policy};
 use hpxmp::util::cli::Args;
 use hpxmp::util::timing::BenchCfg;
 
 const VALUE_OPTS: &[&str] = &[
     "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks", "clients", "requests",
-    "mix",
+    "mix", "exec", "tile",
 ];
 
 fn main() {
     let args = Args::from_env(VALUE_OPTS);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
-    let result = match cmd {
-        "info" => cmd_info(&args),
+    let result = exec_mode(&args).and_then(|mode| match cmd {
+        "info" => cmd_info(&args, mode),
         "conformance" => cmd_conformance(&args),
-        "heatmap" => cmd_heatmap(&args),
-        "scaling" => cmd_scaling(&args),
+        "heatmap" => cmd_heatmap(&args, mode),
+        "scaling" => cmd_scaling(&args, mode),
         "dataflow" => cmd_dataflow(&args),
-        "serve" => cmd_serve(&args),
+        "serve" => cmd_serve(&args, mode),
         "offload" => cmd_offload(&args),
         "policies" => cmd_policies(&args),
         _ => {
             print_help();
             Ok(())
         }
-    };
+    });
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// The `--exec` selector, threaded through every subcommand (`HPXMP_EXEC`
+/// is the env fallback): which execution model kernels run under.
+/// Unknown values list the valid set instead of silently defaulting.
+fn exec_mode(args: &Args) -> anyhow::Result<ExecMode> {
+    match args.get("exec") {
+        Some(s) => ExecMode::parse_or_list(s).map_err(|e| anyhow::anyhow!(e)),
+        None => Ok(ExecMode::from_env(ExecMode::Par)),
     }
 }
 
@@ -63,6 +73,9 @@ fn print_help() {
          usage: hpxmp <info|conformance|heatmap|scaling|dataflow|serve|offload|policies> [options]\n\n\
          options:\n\
            --op <dvecdvecadd|daxpy|dmatdmatadd|dmatdmatmult|dmatdvecmult|all>\n\
+           --exec <seq|par|task>     execution policy for every kernel (env: HPXMP_EXEC;\n\
+                                     default par; task = futurized dataflow)\n\
+           --tile N                  task-mode tile edge for dmatdmatmult (default 64)\n\
            --threads 1,2,4,8,16      thread counts (heatmap) / counts per figure (scaling)\n\
            --workers N               AMT worker threads (default: max(threads))\n\
            --policy <name>           priority-local|static|local|global|abp|hierarchical|periodic\n\
@@ -75,14 +88,34 @@ fn print_help() {
     );
 }
 
-fn build_runtimes(args: &Args, max_threads: usize) -> (HpxMpRuntime, BaselineRuntime) {
-    let workers = args.get_usize("workers", max_threads.max(icv::num_procs()));
-    let policy = args
-        .get("policy")
-        .map(|p| PolicyKind::parse(p).unwrap_or_else(|| panic!("unknown policy '{p}'")))
-        .unwrap_or(PolicyKind::PriorityLocal);
+fn build_runtimes(args: &Args, max_threads: usize) -> anyhow::Result<(HpxMpRuntime, BaselineRuntime)> {
+    build_runtimes_with_workers(args, args.get_usize("workers", max_threads.max(icv::num_procs())), max_threads)
+}
+
+/// Like [`build_runtimes`] but with the AMT worker count pinned — the
+/// `--exec task` sweeps build one runtime per thread count with exactly
+/// `t` workers, because a task graph parallelizes over *every* worker
+/// (a wider pool would hand it cores the `t`-thread row never claimed,
+/// flattening the thread axis of the figure).
+fn build_runtimes_with_workers(
+    args: &Args,
+    workers: usize,
+    max_threads: usize,
+) -> anyhow::Result<(HpxMpRuntime, BaselineRuntime)> {
+    let policy = match args.get("policy") {
+        Some(p) => PolicyKind::parse_or_list(p).map_err(|e| anyhow::anyhow!(e))?,
+        None => PolicyKind::PriorityLocal,
+    };
     let rt = OmpRuntime::new(workers, policy);
-    (HpxMpRuntime::new(rt), BaselineRuntime::new(max_threads))
+    Ok((HpxMpRuntime::new(rt), BaselineRuntime::new(max_threads)))
+}
+
+/// Stamp the subcommand's execution policy onto a runtime: the one-line
+/// seq/par/task swap, applied uniformly across subcommands.
+fn policy_on<'e>(mode: ExecMode, ex: &'e dyn exec::Executor, args: &Args) -> Policy<'e> {
+    Policy::with_mode(mode)
+        .on(ex)
+        .tile(args.get_usize("tile", exec::DEFAULT_TILE))
 }
 
 fn bench_cfg(args: &Args) -> BenchCfg {
@@ -93,18 +126,19 @@ fn bench_cfg(args: &Args) -> BenchCfg {
     }
 }
 
-fn ops_from(args: &Args) -> Vec<Op> {
+fn ops_from(args: &Args) -> anyhow::Result<Vec<Op>> {
     match args.get_or("op", "all") {
-        "all" => Op::ALL.to_vec(),
-        s => vec![Op::parse(s).unwrap_or_else(|| panic!("unknown op '{s}'"))],
+        "all" => Ok(Op::ALL.to_vec()),
+        s => Ok(vec![Op::parse_or_list(s).map_err(|e| anyhow::anyhow!(e))?]),
     }
 }
 
-fn cmd_info(_args: &Args) -> anyhow::Result<()> {
+fn cmd_info(_args: &Args, mode: ExecMode) -> anyhow::Result<()> {
     println!("hpxmp-rs — hpxMP reproduction (Zhang et al. 2019)");
     println!("  num_procs        : {}", icv::num_procs());
     println!("  OMP_NUM_THREADS  : {:?}", std::env::var("OMP_NUM_THREADS").ok());
     println!("  HPXMP_POLICY     : {}", icv::policy_from_env().name());
+    println!("  exec policy      : {} (of seq|par|task)", mode.name());
     println!(
         "  policies         : {}",
         PolicyKind::ALL
@@ -137,45 +171,81 @@ fn cmd_conformance(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_heatmap(args: &Args) -> anyhow::Result<()> {
+fn cmd_heatmap(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
     let threads = args.get_usize_list("threads", &[1, 2, 4, 8, 12, 16]);
     let max_t = threads.iter().copied().max().unwrap_or(1);
-    let (hpx, base) = build_runtimes(args, max_t);
+    let (hpx, base) = build_runtimes(args, max_t)?;
     let cfg = bench_cfg(args);
     let out = args.get_or("out", "results");
-    for op in ops_from(args) {
+    for op in ops_from(args)? {
         let sizes = args
             .get("sizes")
             .map(|_| args.get_usize_list("sizes", &[]))
             .unwrap_or_else(|| op.heatmap_sizes());
-        let r = sweep::heatmap_sweep(&hpx, &base, op, &threads, &sizes, &cfg, true);
+        let r = if mode == ExecMode::Task {
+            // Task graphs parallelize over every AMT worker, so each
+            // thread row needs its own exactly-t-worker runtime — one
+            // shared max-width pool would make every row identical.
+            let mut acc: Option<sweep::HeatmapResult> = None;
+            for &t in &threads {
+                let (hpx_t, base_t) = build_runtimes_with_workers(args, t, t)?;
+                let hpol = policy_on(mode, &hpx_t, args);
+                let bpol = policy_on(mode, &base_t, args);
+                let row = sweep::heatmap_sweep(&hpol, &bpol, op, &[t], &sizes, &cfg, true);
+                match &mut acc {
+                    None => acc = Some(row),
+                    Some(a) => {
+                        a.threads.push(t);
+                        a.ratio.extend(row.ratio);
+                        a.hpx_mflops.extend(row.hpx_mflops);
+                        a.base_mflops.extend(row.base_mflops);
+                    }
+                }
+            }
+            acc.expect("non-empty thread grid")
+        } else {
+            let hpol = policy_on(mode, &hpx, args);
+            let bpol = policy_on(mode, &base, args);
+            sweep::heatmap_sweep(&hpol, &bpol, op, &threads, &sizes, &cfg, true)
+        };
         print!("{}", report::write_heatmap(out, &r)?);
     }
     Ok(())
 }
 
-fn cmd_scaling(args: &Args) -> anyhow::Result<()> {
+fn cmd_scaling(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
     let threads = args.get_usize_list("threads", &[4, 8, 16]);
     let max_t = threads.iter().copied().max().unwrap_or(1);
-    let (hpx, base) = build_runtimes(args, max_t);
+    let (hpx, base) = build_runtimes(args, max_t)?;
     let cfg = bench_cfg(args);
     let out = args.get_or("out", "results");
-    for op in ops_from(args) {
+    for op in ops_from(args)? {
         let sizes = args
             .get("sizes")
             .map(|_| args.get_usize_list("sizes", &[]))
             .unwrap_or_else(|| op.scaling_sizes());
         for &t in &threads {
-            let r = sweep::scaling_sweep(&hpx, &base, op, t, &sizes, &cfg, true);
+            // Same per-row sizing rule as cmd_heatmap for task mode.
+            let r = if mode == ExecMode::Task {
+                let (hpx_t, base_t) = build_runtimes_with_workers(args, t, t)?;
+                let hpol = policy_on(mode, &hpx_t, args);
+                let bpol = policy_on(mode, &base_t, args);
+                sweep::scaling_sweep(&hpol, &bpol, op, t, &sizes, &cfg, true)
+            } else {
+                let hpol = policy_on(mode, &hpx, args);
+                let bpol = policy_on(mode, &base, args);
+                sweep::scaling_sweep(&hpol, &bpol, op, t, &sizes, &cfg, true)
+            };
             print!("{}", report::write_scaling(out, &r)?);
         }
     }
     Ok(())
 }
 
-/// Fork-join vs futurized dataflow `dmatdmatmult` (ISSUE 2): the same
-/// product measured through `parallel_for` row bands and through the
-/// tiled `when_all`/`then` task graph, side by side.
+/// Fork-join vs futurized dataflow `dmatdmatmult` (ISSUE 2, now one
+/// policy swap — ISSUE 5): the same product measured under
+/// `par().on(&hpx)` (row bands) and `task().on(&hpx)` (the generic tiled
+/// `when_all`/`then` graph), side by side.
 ///
 /// The runtime is built with exactly `t` AMT workers per thread count —
 /// the dataflow graph parallelizes over every worker, so a wider pool
@@ -183,14 +253,17 @@ fn cmd_scaling(args: &Args) -> anyhow::Result<()> {
 fn cmd_dataflow(args: &Args) -> anyhow::Result<()> {
     let threads = args.get_usize_list("threads", &[4]);
     let sizes = args.get_usize_list("sizes", &[150, 230, 300]);
+    let tile = args.get_usize("tile", exec::DEFAULT_TILE);
     let cfg = bench_cfg(args);
     for &t in &threads {
         let rt = OmpRuntime::new(t, PolicyKind::PriorityLocal);
         rt.icv.set_nthreads(t);
         let hpx = HpxMpRuntime::new(rt);
+        let fj_pol = exec::par().on(&hpx).threads(t);
+        let df_pol = exec::task().on(&hpx).threads(t).tile(tile);
         for &n in &sizes {
-            let fj = blazemark::measure(&hpx, Op::DMatDMatMult, t, n, &cfg);
-            let df = blazemark::measure_dataflow_mmult(&hpx, t, n, &cfg);
+            let fj = blazemark::measure(&fj_pol, Op::DMatDMatMult, n, &cfg);
+            let df = blazemark::measure(&df_pol, Op::DMatDMatMult, n, &cfg);
             println!(
                 "dmatdmatmult n={n:<4} threads={t:<2} fork-join {fj:>9.1} MFLOP/s | dataflow {df:>9.1} MFLOP/s | ratio {:.3}",
                 df / fj
@@ -205,26 +278,28 @@ fn cmd_dataflow(args: &Args) -> anyhow::Result<()> {
 /// **shared** hpxMP runtime (the team pool + admission arbitrating) and
 /// once with a private warm OS-thread **pool per client** (the competing-
 /// threading-systems regime the paper's composition pitch argues against).
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
     use hpxmp::coordinator::serve::{serve_per_client, serve_shared, KernelMix, ServeCfg};
     let clients = args.get_usize("clients", 4);
     let threads = args.get_usize("threads", 2);
     let requests = args.get_usize("requests", if args.flag("quick") { 50 } else { 200 });
-    let mix_arg = args.get_or("mix", "mixed");
-    let mix = KernelMix::parse(mix_arg).unwrap_or_else(|| panic!("unknown mix '{mix_arg}'"));
+    let mix = KernelMix::parse_or_list(args.get_or("mix", "mixed"))
+        .map_err(|e| anyhow::anyhow!(e))?;
     let workers = args.get_usize("workers", icv::num_procs().max(threads));
-    let policy = args
-        .get("policy")
-        .map(|p| PolicyKind::parse(p).unwrap_or_else(|| panic!("unknown policy '{p}'")))
-        .unwrap_or(PolicyKind::PriorityLocal);
+    let policy = match args.get("policy") {
+        Some(p) => PolicyKind::parse_or_list(p).map_err(|e| anyhow::anyhow!(e))?,
+        None => PolicyKind::PriorityLocal,
+    };
 
     let rt = OmpRuntime::new(workers, policy);
     rt.icv.set_nthreads(threads);
-    let cfg = ServeCfg::new(clients, threads, requests, mix);
+    let mut cfg = ServeCfg::new(clients, threads, requests, mix);
+    cfg.mode = mode;
     println!(
         "serve: {clients} clients x {requests} requests, {threads}-thread regions, \
-         mix={}, shared runtime has {workers} workers",
-        mix.name()
+         mix={}, exec={}, shared runtime has {workers} workers",
+        mix.name(),
+        mode.name()
     );
     let shared = serve_shared(&rt, &cfg);
     let per = serve_per_client(&cfg);

@@ -144,10 +144,12 @@ pub fn num_procs() -> usize {
 
 /// Scheduling policy for the AMT backend (`HPXMP_POLICY`).
 pub fn policy_from_env() -> PolicyKind {
-    std::env::var("HPXMP_POLICY")
-        .ok()
-        .and_then(|v| PolicyKind::parse(&v))
-        .unwrap_or(PolicyKind::PriorityLocal)
+    match std::env::var("HPXMP_POLICY") {
+        Err(_) => PolicyKind::PriorityLocal,
+        // A set-but-bad value is a misconfiguration: fail loudly with the
+        // valid set instead of silently running the default policy.
+        Ok(v) => PolicyKind::parse_or_list(&v).unwrap_or_else(|e| panic!("HPXMP_POLICY: {e}")),
+    }
 }
 
 /// Worker count for the AMT backend (`HPXMP_NUM_WORKERS`).

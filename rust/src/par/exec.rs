@@ -1,0 +1,660 @@
+//! One execution-policy API (ISSUE 5): HPX-style composable policies.
+//!
+//! HPX exposes *how* an algorithm executes as a first-class value —
+//! `hpx::execution::seq`, `par`, `par.on(executor)` — so the same
+//! algorithm runs serial, fork-join, or as a futurized task graph with a
+//! one-line policy swap (Diehl et al. 2023, Heller et al. 2024).  This
+//! module ports that shape onto the hpxMP stack:
+//!
+//! * [`Executor`] — the execution-resource trait.  Implemented by
+//!   [`crate::par::HpxMpRuntime`] (OpenMP regions over the AMT
+//!   scheduler), [`crate::baseline::BaselinePool`] /
+//!   [`crate::baseline::BaselineRuntime`] (the warm libomp-style
+//!   OS-thread pool), and the inline [`Serial`] executor.
+//! * [`Policy`] — a `Copy` value bundling an execution mode
+//!   ([`ExecMode`]) with an executor and tuning knobs, built from
+//!   [`seq()`], [`par()`], [`task()`] and refined with the combinators
+//!   [`Policy::on`], [`Policy::threads`], [`Policy::chunk`],
+//!   [`Policy::tile`], [`Policy::hint`].
+//! * Generic algorithms — [`for_each`] (blocking), [`for_each_async`]
+//!   (returns a [`Future`] that composes with `then`/`when_all`), and
+//!   [`for_each_tile_async`] (2-D tiled dependence graph, the engine
+//!   behind `task()`-mode `dmatdmatmult`).
+//!
+//! Every Blaze kernel is generic over `&Policy`, so each of the paper's
+//! workloads is one call expressed three ways:
+//!
+//! ```ignore
+//! blaze::daxpy(&exec::seq(), 3.0, &a, &mut b);                  // serial
+//! blaze::daxpy(&exec::par().on(&hpx).threads(4), 3.0, &a, &mut b); // fork-join
+//! blaze::daxpy(&exec::task().on(&hpx).threads(4), 3.0, &a, &mut b); // dataflow
+//! ```
+//!
+//! This replaced the three disjoint pre-PR-5 entry points
+//! (`ParallelRuntime::parallel_for`, `parallel_for_mono`,
+//! `parallel_for_async`) and the bespoke `dmatdmatmult_dataflow_tiled`
+//! kernel — see `DESIGN.md` §10 for the migration map.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::amt::future::{when_all, Future};
+use crate::amt::task::Hint;
+use crate::amt::Scheduler;
+use crate::par::LoopSched;
+use crate::util::cli;
+
+/// Default tile edge of [`for_each_tile_async`]'s decomposition: large
+/// enough that one tile amortizes task scheduling, small enough that a
+/// 150×150 product still yields a stealable graph.
+pub const DEFAULT_TILE: usize = 64;
+
+/// An execution resource a [`Policy`] can be placed `.on(..)`: something
+/// that can run a chunked loop as a blocking fork-join region and — when
+/// it owns an AMT substrate — as a graph of futurized tasks.
+pub trait Executor: Send + Sync {
+    /// Short human-readable name ("hpxMP", "OpenMP(baseline)", "serial")
+    /// used in reports and bench rows.
+    fn name(&self) -> &'static str;
+
+    /// Largest useful team size / concurrency width.
+    fn max_concurrency(&self) -> usize;
+
+    /// Blocking fork-join bulk dispatch: partition `range` per `sched`
+    /// across a team of `threads`, run `body` on each claimed sub-range,
+    /// and return only after every iteration completed (implicit
+    /// end-of-region barrier).
+    fn bulk_sync(
+        &self,
+        threads: usize,
+        range: Range<i64>,
+        sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    );
+
+    /// The AMT scheduler behind this executor, when it has one.  `task()`
+    /// algorithms build their future graphs on it; executors returning
+    /// `None` (the warm OS-thread pool, [`Serial`]) degrade task-mode
+    /// dispatch to eager inline execution with an already-ready join.
+    fn scheduler(&self) -> Option<&Arc<Scheduler>> {
+        None
+    }
+
+    /// Non-blocking bulk dispatch: run `body` over a static partition of
+    /// `range` into `tasks` chunks and return a future fulfilled when
+    /// every chunk retired.  `hint` seeds chunk placement
+    /// ([`Hint::Any`] lets the scheduler interleave, `Hint::Worker(w)`
+    /// pins the batch's first chunk to worker `w`).
+    ///
+    /// The default (for executors with no AMT substrate) executes
+    /// eagerly through [`Executor::bulk_sync`] and returns
+    /// [`Future::ready`] — same results, no asynchrony.
+    fn bulk_async(
+        &self,
+        tasks: usize,
+        hint: Hint,
+        range: Range<i64>,
+        body: Arc<dyn Fn(Range<i64>) + Send + Sync>,
+    ) -> Future<()> {
+        let _ = hint;
+        let body_ref: &(dyn Fn(Range<i64>) + Sync) = &*body;
+        self.bulk_sync(tasks, range, LoopSched::Static { chunk: None }, body_ref);
+        Future::ready(())
+    }
+}
+
+/// Inline serial execution — the executor every mode can run on, and the
+/// oracle the policy-equivalence tests compare against.  Below Blaze's
+/// parallelization thresholds every policy collapses to this behaviour.
+pub struct Serial;
+
+impl Executor for Serial {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn max_concurrency(&self) -> usize {
+        1
+    }
+
+    fn bulk_sync(
+        &self,
+        _threads: usize,
+        range: Range<i64>,
+        _sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    ) {
+        body(range);
+    }
+}
+
+/// The three execution models a [`Policy`] can select — the axis the
+/// `--exec` CLI flag, `HPXMP_EXEC`, and `benches/ablation_exec.rs` sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Serial: the whole range on the calling thread.
+    Seq,
+    /// Fork-join: an OpenMP-style team with an implicit end barrier.
+    Par,
+    /// Futurized task graph: chunks/tiles as dataflow tasks, joined
+    /// through futures — no barriers.
+    Task,
+}
+
+impl ExecMode {
+    pub const ALL: [ExecMode; 3] = [ExecMode::Seq, ExecMode::Par, ExecMode::Task];
+
+    /// Accepted spellings, resolved through the same
+    /// [`cli::lookup_choice`] helper as [`crate::amt::PolicyKind`].
+    pub const CHOICES: &[(&str, ExecMode)] = &[
+        ("seq", ExecMode::Seq),
+        ("par", ExecMode::Par),
+        ("task", ExecMode::Task),
+        ("serial", ExecMode::Seq),
+        ("parallel", ExecMode::Par),
+        ("dataflow", ExecMode::Task),
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        cli::lookup_choice(s, Self::CHOICES)
+    }
+
+    /// Strict parse for `--exec` / `HPXMP_EXEC`: unknown values report
+    /// the valid set instead of silently defaulting.
+    pub fn parse_or_list(s: &str) -> Result<Self, String> {
+        cli::parse_choice("exec mode", s, Self::CHOICES)
+    }
+
+    /// Resolve the `HPXMP_EXEC` env binding, falling back to `default`
+    /// when unset; a set-but-bad value fails loudly with the valid set.
+    pub fn from_env(default: ExecMode) -> ExecMode {
+        match std::env::var("HPXMP_EXEC") {
+            Err(_) => default,
+            Ok(v) => Self::parse_or_list(&v).unwrap_or_else(|e| panic!("HPXMP_EXEC: {e}")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Seq => "seq",
+            ExecMode::Par => "par",
+            ExecMode::Task => "task",
+        }
+    }
+}
+
+/// A composable execution policy: *how* a generic algorithm or Blaze
+/// kernel executes, as a value.
+///
+/// Built from [`seq()`] / [`par()`] / [`task()`] (or
+/// [`Policy::with_mode`] when the mode is CLI-selected), then refined:
+///
+/// ```ignore
+/// let pol = exec::task().on(&hpx).threads(8).tile(32).hint(Hint::Worker(2));
+/// exec::for_each(&pol, 0..n, |r| ...);
+/// ```
+///
+/// `Policy` is `Copy`; the executor is held by reference, so policies
+/// are free to clone per benchmark cell (`pol.threads(t)`).  A policy
+/// whose executor was never set runs on [`Serial`] — `seq()` is the only
+/// constructor for which that is the natural resource, so attach `.on`
+/// before running `par()`/`task()` policies on real hardware.
+#[derive(Clone, Copy)]
+pub struct Policy<'e> {
+    mode: ExecMode,
+    exec: &'e dyn Executor,
+    threads: Option<usize>,
+    sched: LoopSched,
+    tile: usize,
+    hint: Hint,
+}
+
+/// Serial execution policy (`hpx::execution::seq` analog).
+pub fn seq() -> Policy<'static> {
+    Policy::with_mode(ExecMode::Seq)
+}
+
+/// Fork-join team execution policy (`hpx::execution::par` analog).
+pub fn par() -> Policy<'static> {
+    Policy::with_mode(ExecMode::Par)
+}
+
+/// Futurized task-graph execution policy (the `hpx::execution::task`
+/// composition the paper's conclusion points OpenMP toward).
+pub fn task() -> Policy<'static> {
+    Policy::with_mode(ExecMode::Task)
+}
+
+impl Policy<'static> {
+    /// Constructor from a runtime-selected mode (the `--exec` /
+    /// `HPXMP_EXEC` path); `seq()`/`par()`/`task()` are the literal
+    /// spellings.
+    pub fn with_mode(mode: ExecMode) -> Policy<'static> {
+        Policy {
+            mode,
+            exec: &Serial,
+            threads: None,
+            sched: LoopSched::Static { chunk: None },
+            tile: DEFAULT_TILE,
+            hint: Hint::Any,
+        }
+    }
+}
+
+impl<'e> Policy<'e> {
+    /// Place the policy on an executor (`hpx`'s `.on(executor)`).
+    pub fn on<'n>(self, exec: &'n dyn Executor) -> Policy<'n> {
+        Policy {
+            mode: self.mode,
+            exec,
+            threads: self.threads,
+            sched: self.sched,
+            tile: self.tile,
+            hint: self.hint,
+        }
+    }
+
+    /// Team size (fork-join) / chunk-task count (task mode).  Defaults
+    /// to the executor's [`Executor::max_concurrency`].
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Loop schedule for fork-join dispatch (`schedule(static|dynamic|guided)`).
+    pub fn chunk(mut self, sched: LoopSched) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Tile edge for 2-D task-graph decomposition
+    /// ([`for_each_tile_async`]); default [`DEFAULT_TILE`].
+    pub fn tile(mut self, tile: usize) -> Self {
+        self.tile = tile.max(1);
+        self
+    }
+
+    /// Placement hint seeding task-mode chunk distribution.
+    pub fn hint(mut self, hint: Hint) -> Self {
+        self.hint = hint;
+        self
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn executor(&self) -> &'e dyn Executor {
+        self.exec
+    }
+
+    /// Resolved team size: the explicit `.threads(..)` override or the
+    /// executor's maximum.
+    pub fn num_threads(&self) -> usize {
+        self.threads
+            .unwrap_or_else(|| self.exec.max_concurrency())
+            .max(1)
+    }
+
+    pub fn sched(&self) -> LoopSched {
+        self.sched
+    }
+
+    pub fn tile_size(&self) -> usize {
+        self.tile
+    }
+
+    pub fn placement(&self) -> Hint {
+        self.hint
+    }
+
+    /// Does this policy execute serially?  True for `seq()` and for any
+    /// policy resolved to a single thread — the predicate Blaze kernels
+    /// combine with their size thresholds to pick the serial kernel.
+    pub fn is_serial(&self) -> bool {
+        self.mode == ExecMode::Seq || self.num_threads() <= 1
+    }
+
+    /// Report label: `"par(hpxMP)"`, `"task(serial)"`, ...
+    pub fn label(&self) -> String {
+        format!("{}({})", self.mode.name(), self.exec.name())
+    }
+}
+
+impl std::fmt::Debug for Policy<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Policy")
+            .field("mode", &self.mode)
+            .field("exec", &self.exec.name())
+            .field("threads", &self.threads)
+            .field("sched", &self.sched)
+            .field("tile", &self.tile)
+            .field("hint", &self.hint)
+            .finish()
+    }
+}
+
+/// Run `body` over a partition of `range` under `pol` and return when
+/// every iteration completed — the one generic loop algorithm behind
+/// every Blaze kernel and the legacy `parallel_for*` wrappers.
+///
+/// * `seq()` (or one resolved thread): `body(range)` on the caller.
+/// * `par()`: a fork-join region via [`Executor::bulk_sync`].
+/// * `task()`: chunk tasks via [`Executor::bulk_async`], helping /
+///   parking until the join future fulfils.
+pub fn for_each<F>(pol: &Policy<'_>, range: Range<i64>, body: F)
+where
+    F: Fn(Range<i64>) + Sync,
+{
+    if range.start >= range.end {
+        return;
+    }
+    if pol.is_serial() {
+        // The one serial spelling: covers seq() and single-thread policies.
+        body(range);
+        return;
+    }
+    if pol.mode() == ExecMode::Task {
+        // The join below blocks until every chunk retired, so
+        // re-borrowing the non-'static `body` for the dispatch is
+        // sound: smuggle the thin pointer as an address and
+        // re-materialize inside each chunk task (`F: Sync` makes the
+        // shared re-borrow across workers sound).
+        let body_addr = &body as *const F as usize;
+        let chunk: Arc<dyn Fn(Range<i64>) + Send + Sync> = Arc::new(move |r| {
+            // SAFETY: see above — `wait()` keeps `body` alive past
+            // every use, and `F: Sync` permits the shared re-borrow.
+            let body: &F = unsafe { &*(body_addr as *const F) };
+            body(r);
+        });
+        pol.executor()
+            .bulk_async(pol.num_threads(), pol.placement(), range, chunk)
+            .wait();
+        return;
+    }
+    // Par (Seq never reaches here: seq() is always serial).
+    pol.executor()
+        .bulk_sync(pol.num_threads(), range, pol.sched(), &body);
+}
+
+/// Non-blocking [`for_each`]: returns a [`Future`] fulfilled when every
+/// iteration completed, composing with `then`/`when_all` into dataflow
+/// graphs without intermediate barriers.
+///
+/// Only `task()` policies are genuinely asynchronous; `seq()`/`par()`
+/// (and executors without an AMT substrate) execute eagerly and return
+/// an already-ready future — identical results, no overlap.  `body` is
+/// shared (`Arc`) because task mode outlives the caller's stack frame;
+/// chunk panics are isolated in the worker layer and the join future
+/// still fulfils (arrival is a drop guard).
+pub fn for_each_async(
+    pol: &Policy<'_>,
+    range: Range<i64>,
+    body: Arc<dyn Fn(Range<i64>) + Send + Sync>,
+) -> Future<()> {
+    if range.start >= range.end {
+        return Future::ready(());
+    }
+    match pol.mode() {
+        ExecMode::Seq => {
+            body(range);
+            Future::ready(())
+        }
+        ExecMode::Par => {
+            let body_ref: &(dyn Fn(Range<i64>) + Sync) = &*body;
+            pol.executor()
+                .bulk_sync(pol.num_threads(), range, pol.sched(), body_ref);
+            Future::ready(())
+        }
+        // Even a single-chunk task() stays asynchronous: the caller may
+        // rely on the future, not on inline completion.
+        ExecMode::Task => pol
+            .executor()
+            .bulk_async(pol.num_threads(), pol.placement(), range, body),
+    }
+}
+
+/// 2-D tiled task-graph execution: partition `rows × cols` into
+/// [`Policy::tile`]-edged tiles, run `body(row_range, col_range)` per
+/// tile as a continuation hung off `when_all` of the tile's *input-band
+/// futures* (its row band and column band), and return the single
+/// `when_all` join of all tiles — the generic engine that replaced the
+/// bespoke `dmatdmatmult_dataflow_tiled` kernel.
+///
+/// The band futures are materialized ready here (the operands exist),
+/// but the graph shape is exactly what lets an upstream producer chain
+/// results without joins: hang the band futures off producer tasks
+/// instead and nothing else changes.
+///
+/// On an executor without an AMT scheduler (or a serial policy) the
+/// tile sweep degrades like [`Executor::bulk_async`]'s default — eager,
+/// but still parallel: row-tile bands are partitioned through
+/// [`Executor::bulk_sync`] (each band's tiles run left-to-right by one
+/// claimant, bands are disjoint in the output), returning a ready join.
+/// Same per-tile bodies either way, so the algorithm stays
+/// policy-generic *and* the comparator keeps its parallelism.
+pub fn for_each_tile_async(
+    pol: &Policy<'_>,
+    rows: usize,
+    cols: usize,
+    body: Arc<dyn Fn(Range<usize>, Range<usize>) + Send + Sync>,
+) -> Future<()> {
+    if rows == 0 || cols == 0 {
+        return Future::ready(());
+    }
+    let tile = pol.tile_size().max(8);
+    let row_tiles = rows.div_ceil(tile);
+    let col_tiles = cols.div_ceil(tile);
+    let sched = match pol.executor().scheduler() {
+        Some(s) if pol.mode() == ExecMode::Task && !pol.is_serial() => s.clone(),
+        _ => {
+            let band = |r: Range<i64>| {
+                for bi in r.start as usize..r.end as usize {
+                    let (i0, i1) = (bi * tile, ((bi + 1) * tile).min(rows));
+                    for j0 in (0..cols).step_by(tile) {
+                        let j1 = (j0 + tile).min(cols);
+                        body(i0..i1, j0..j1);
+                    }
+                }
+            };
+            if pol.is_serial() {
+                band(0..row_tiles as i64);
+            } else {
+                pol.executor().bulk_sync(
+                    pol.num_threads(),
+                    0..row_tiles as i64,
+                    LoopSched::Static { chunk: None },
+                    &band,
+                );
+            }
+            return Future::ready(());
+        }
+    };
+
+    // The input tiles of the graph: rows banded by tile, columns by
+    // tile, one future each.
+    let row_bands: Vec<Future<()>> = (0..row_tiles).map(|_| Future::ready(())).collect();
+    let col_bands: Vec<Future<()>> = (0..col_tiles).map(|_| Future::ready(())).collect();
+
+    let mut tiles: Vec<Future<()>> = Vec::with_capacity(row_tiles * col_tiles);
+    for bi in 0..row_tiles {
+        let (i0, i1) = (bi * tile, ((bi + 1) * tile).min(rows));
+        for bj in 0..col_tiles {
+            let (j0, j1) = (bj * tile, ((bj + 1) * tile).min(cols));
+            let inputs = [row_bands[bi].clone(), col_bands[bj].clone()];
+            let body = body.clone();
+            let tile_task = when_all(&inputs)
+                .then_named(&sched, "exec_tile", move |_| body(i0..i1, j0..j1));
+            tiles.push(tile_task);
+        }
+    }
+    when_all(&tiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::OmpRuntime;
+    use crate::par::HpxMpRuntime;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn coverage(pol: &Policy<'_>, n: i64) {
+        let seen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        for_each(pol, 0..n, |r| {
+            for i in r {
+                seen[i as usize].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(
+            seen.iter().all(|c| c.load(Ordering::SeqCst) == 1),
+            "{} missed/duplicated iterations (n={n})",
+            pol.label()
+        );
+    }
+
+    #[test]
+    fn seq_policy_covers_inline() {
+        coverage(&seq(), 1000);
+    }
+
+    #[test]
+    fn policies_cover_on_hpxmp() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        for mode in ExecMode::ALL {
+            for threads in [1, 2, 4] {
+                let pol = Policy::with_mode(mode).on(&hpx).threads(threads);
+                coverage(&pol, 777);
+            }
+        }
+    }
+
+    #[test]
+    fn combinators_compose_and_accessors_resolve() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        let pol = task()
+            .on(&hpx)
+            .threads(3)
+            .chunk(LoopSched::Dynamic { chunk: 8 })
+            .tile(32)
+            .hint(Hint::Worker(1));
+        assert_eq!(pol.mode(), ExecMode::Task);
+        assert_eq!(pol.num_threads(), 3);
+        assert_eq!(pol.sched(), LoopSched::Dynamic { chunk: 8 });
+        assert_eq!(pol.tile_size(), 32);
+        assert_eq!(pol.placement(), Hint::Worker(1));
+        assert_eq!(pol.label(), "task(hpxMP)");
+        // Defaults resolve from the executor.
+        assert_eq!(par().on(&hpx).num_threads(), 2);
+        assert!(seq().is_serial());
+        assert!(par().on(&hpx).threads(1).is_serial());
+    }
+
+    #[test]
+    fn exec_mode_parse_roundtrip_and_listing() {
+        for mode in ExecMode::ALL {
+            assert_eq!(ExecMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(ExecMode::parse("dataflow"), Some(ExecMode::Task));
+        let err = ExecMode::parse_or_list("bogus").unwrap_err();
+        assert!(err.contains("seq|par|task"), "{err}");
+    }
+
+    #[test]
+    fn for_each_async_task_composes_with_then() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        let n = 512i64;
+        let data: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+        let d = data.clone();
+        let pol = task().on(&hpx).threads(4);
+        let phase1 = for_each_async(
+            &pol,
+            0..n,
+            Arc::new(move |r: Range<i64>| {
+                for i in r {
+                    d[i as usize].fetch_add(1, Ordering::SeqCst);
+                }
+            }),
+        );
+        let sched = hpx.rt.sched.clone();
+        let d = data.clone();
+        let total = phase1.then(&sched, move |_| {
+            d.iter().map(|v| v.load(Ordering::SeqCst)).sum::<u32>()
+        });
+        assert_eq!(total.get(), n as u32);
+    }
+
+    #[test]
+    fn tiled_graph_covers_every_cell_exactly_once() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        for (rows, cols, tile) in [(64usize, 64usize, 16usize), (57, 83, 16), (10, 200, 32)] {
+            let cells: Arc<Vec<AtomicU32>> =
+                Arc::new((0..rows * cols).map(|_| AtomicU32::new(0)).collect());
+            let c = cells.clone();
+            let pol = task().on(&hpx).threads(4).tile(tile);
+            for_each_tile_async(
+                &pol,
+                rows,
+                cols,
+                Arc::new(move |ri: Range<usize>, rj: Range<usize>| {
+                    for i in ri.clone() {
+                        for j in rj.clone() {
+                            c[i * cols + j].fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }),
+            )
+            .wait();
+            assert!(
+                cells.iter().all(|v| v.load(Ordering::SeqCst) == 1),
+                "tiles missed/overlapped cells ({rows}x{cols}, tile {tile})"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_fallback_without_scheduler_is_eager_and_complete() {
+        // task() on the AMT-less baseline pool: the tile sweep degrades
+        // through bulk_sync (row-tile bands forked across the team) and
+        // returns an already-ready join — every cell exactly once.
+        let base = crate::baseline::BaselineRuntime::new(3);
+        let (rows, cols) = (40usize, 24usize);
+        let cells: Arc<Vec<AtomicU32>> =
+            Arc::new((0..rows * cols).map(|_| AtomicU32::new(0)).collect());
+        let c = cells.clone();
+        let fut = for_each_tile_async(
+            &task().on(&base).threads(3).tile(8),
+            rows,
+            cols,
+            Arc::new(move |ri: Range<usize>, rj: Range<usize>| {
+                for i in ri.clone() {
+                    for j in rj.clone() {
+                        c[i * cols + j].fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }),
+        );
+        assert!(fut.is_ready(), "schedulerless tile dispatch must be eager");
+        assert!(cells.iter().all(|v| v.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn tiled_graph_serial_fallback_matches() {
+        // No scheduler behind Serial: tiles run inline, join is ready.
+        let cells: Arc<Vec<AtomicU32>> = Arc::new((0..30 * 20).map(|_| AtomicU32::new(0)).collect());
+        let c = cells.clone();
+        let fut = for_each_tile_async(
+            &seq().tile(8),
+            30,
+            20,
+            Arc::new(move |ri: Range<usize>, rj: Range<usize>| {
+                for i in ri.clone() {
+                    for j in rj.clone() {
+                        c[i * 20 + j].fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }),
+        );
+        assert!(fut.is_ready());
+        assert!(cells.iter().all(|v| v.load(Ordering::SeqCst) == 1));
+    }
+}

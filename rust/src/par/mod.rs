@@ -1,10 +1,26 @@
-//! The `ParallelRuntime` abstraction: what Blaze-lite parallelizes over.
+//! The execution seam Blaze-lite parallelizes over.
 //!
 //! The paper's experiment is "same application (Blaze), two OpenMP
-//! runtimes (hpxMP vs. the compiler-supplied one)".  This trait is the
-//! seam that makes that swap possible here: [`crate::omp`] (hpxMP) and
-//! [`crate::baseline`] (libomp-style) both implement it, and every
-//! benchmark/example takes `&dyn ParallelRuntime`.
+//! runtimes (hpxMP vs. the compiler-supplied one)".  Since PR 5 that
+//! seam is the HPX-style [`exec`] policy API: [`HpxMpRuntime`] (hpxMP),
+//! [`crate::baseline::BaselineRuntime`] (libomp-style) and
+//! [`exec::Serial`] all implement [`exec::Executor`], and every kernel /
+//! benchmark takes an [`exec::Policy`] — so serial, fork-join and
+//! futurized-dataflow execution are a one-line policy swap
+//! (`seq()` / `par().on(&rt)` / `task().on(&rt)`).
+//!
+//! The legacy entry points (`parallel_for`, `parallel_for_mono`,
+//! `parallel_for_async`) survive as thin wrappers over
+//! [`exec::for_each`] / [`exec::for_each_async`]; the old
+//! `ParallelRuntime` trait and `SerialRuntime` struct are gone
+//! (DESIGN.md §10 has the migration map).
+
+pub mod exec;
+
+pub use exec::{
+    for_each, for_each_async, for_each_tile_async, par, seq, task, ExecMode, Executor, Policy,
+    Serial,
+};
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -12,7 +28,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::amt::future::{Future, Promise};
 use crate::amt::task::Hint;
-use crate::amt::Priority;
+use crate::amt::{Priority, Scheduler};
 use crate::omp::icv::Schedule;
 use crate::omp::{fork_call, OmpRuntime};
 
@@ -34,29 +50,7 @@ impl Default for LoopSched {
     }
 }
 
-/// A fork-join parallel runtime executing chunked loops.
-///
-/// `parallel_for` runs `body(sub_range)` over a partition of `range` using
-/// `num_threads` OpenMP threads; it must not return before every
-/// iteration completed (implicit end-of-region barrier).
-pub trait ParallelRuntime: Send + Sync {
-    fn name(&self) -> &'static str;
-
-    /// Largest usable team size.
-    fn max_threads(&self) -> usize;
-
-    /// Fork a team of `num_threads`, partition `range` per `sched`, and
-    /// run `body` on each claimed sub-range.
-    fn parallel_for(
-        &self,
-        num_threads: usize,
-        range: Range<i64>,
-        sched: LoopSched,
-        body: &(dyn Fn(Range<i64>) + Sync),
-    );
-}
-
-/// hpxMP as a `ParallelRuntime` — the paper's system under test.
+/// hpxMP as an [`Executor`] — the paper's system under test.
 pub struct HpxMpRuntime {
     pub rt: Arc<OmpRuntime>,
 }
@@ -66,20 +60,13 @@ impl HpxMpRuntime {
         Self { rt }
     }
 
-    /// Monomorphized `parallel_for`: the per-chunk inner loop is compiled
-    /// against the concrete `F`, so chunk dispatch is a static call (and
-    /// inlinable) instead of a `dyn Fn` indirect call per chunk.  The
-    /// trait object path ([`ParallelRuntime::parallel_for`]) delegates
-    /// here with `F = &dyn Fn` — identical behavior, one indirection —
-    /// while concrete callers (kernels, the fork-overhead ablation) get
-    /// the fully static loop.
-    pub fn parallel_for_mono<F>(
-        &self,
-        num_threads: usize,
-        range: Range<i64>,
-        sched: LoopSched,
-        body: &F,
-    ) where
+    /// The monomorphized fork-join engine behind
+    /// [`Executor::bulk_sync`]: the per-chunk inner loop is compiled
+    /// against the concrete `F`, so chunk dispatch is a static call
+    /// (and inlinable); the trait path passes `F = &dyn Fn` — identical
+    /// behavior, one indirection.
+    fn bulk_sync_mono<F>(&self, num_threads: usize, range: Range<i64>, sched: LoopSched, body: &F)
+    where
         F: Fn(Range<i64>) + Sync,
     {
         // fork_call requires 'static, but it joins before returning, so
@@ -120,20 +107,90 @@ impl HpxMpRuntime {
         });
     }
 
-    /// The async seam (ISSUE 2): run `body` over a static partition of
-    /// `range` as plain AMT tasks and return a [`Future<()>`] fulfilled
-    /// when every chunk has retired — **no blocking join**, so regions
-    /// compose into dataflow graphs (`then`/`when_all`) without
-    /// intermediate barriers.
-    ///
-    /// Unlike [`ParallelRuntime::parallel_for`] this path forks no OpenMP
-    /// team: chunks are raw dataflow tasks with no implicit-task context,
-    /// so the body must not use team constructs (barriers, worksharing,
-    /// `omp_get_thread_num`).  `body` is shared (`Arc`) because nothing
-    /// blocks for it — it must outlive the caller's stack frame.
+    /// Legacy fork-join entry point — a thin wrapper over
+    /// [`exec::for_each`] with a `par().on(self)` policy.
+    pub fn parallel_for(
+        &self,
+        num_threads: usize,
+        range: Range<i64>,
+        sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    ) {
+        for_each(
+            &par().on(self).threads(num_threads).chunk(sched),
+            range,
+            body,
+        );
+    }
+
+    /// Legacy monomorphized fork-join entry point: delegates straight to
+    /// the concrete engine (one static call per chunk).
+    pub fn parallel_for_mono<F>(
+        &self,
+        num_threads: usize,
+        range: Range<i64>,
+        sched: LoopSched,
+        body: &F,
+    ) where
+        F: Fn(Range<i64>) + Sync,
+    {
+        self.bulk_sync_mono(num_threads, range, sched, body);
+    }
+
+    /// Legacy async seam (ISSUE 2) — a thin wrapper over
+    /// [`exec::for_each_async`] with a `task().on(self)` policy: chunks
+    /// run as plain AMT tasks, the returned future fulfils when every
+    /// chunk retired, and nothing blocks (regions compose through
+    /// `then`/`when_all` without intermediate barriers).
     pub fn parallel_for_async(
         &self,
         num_tasks: usize,
+        range: Range<i64>,
+        body: Arc<dyn Fn(Range<i64>) + Send + Sync>,
+    ) -> Future<()> {
+        for_each_async(&task().on(self).threads(num_tasks), range, body)
+    }
+}
+
+impl Executor for HpxMpRuntime {
+    fn name(&self) -> &'static str {
+        "hpxMP"
+    }
+
+    fn max_concurrency(&self) -> usize {
+        self.rt.sched.workers()
+    }
+
+    fn bulk_sync(
+        &self,
+        threads: usize,
+        range: Range<i64>,
+        sched: LoopSched,
+        body: &(dyn Fn(Range<i64>) + Sync),
+    ) {
+        // `F = &dyn Fn`: the engine monomorphizes over the (thin)
+        // reference, one indirect call per chunk.
+        self.bulk_sync_mono(threads, range, sched, &body);
+    }
+
+    fn scheduler(&self) -> Option<&Arc<Scheduler>> {
+        Some(&self.rt.sched)
+    }
+
+    /// Task-mode bulk dispatch: `tasks` static chunks as raw dataflow
+    /// tasks (no OpenMP team, so the body must not use team constructs —
+    /// barriers, worksharing, `omp_get_thread_num`), joined by a future
+    /// fulfilled when every chunk retired.
+    ///
+    /// Placement: an explicit `Hint::Worker(w)` pins the batch's chunks
+    /// to workers `w, w+1, ...`; `Hint::Any` claims a rotating base from
+    /// [`Scheduler::hint_base`] so concurrent task-mode clients
+    /// interleave across worker queues instead of all pinning onto
+    /// workers `0..tasks` (the multi-tenant fairness path, DESIGN.md §8).
+    fn bulk_async(
+        &self,
+        tasks: usize,
+        hint: Hint,
         range: Range<i64>,
         body: Arc<dyn Fn(Range<i64>) + Send + Sync>,
     ) -> Future<()> {
@@ -141,7 +198,7 @@ impl HpxMpRuntime {
         if n <= 0 {
             return Future::ready(());
         }
-        let tasks = num_tasks.clamp(1, n as usize) as i64;
+        let tasks = tasks.clamp(1, n as usize) as i64;
         let per = n / tasks + i64::from(n % tasks != 0);
         let chunks: Vec<Range<i64>> = (0..tasks)
             .map(|t| {
@@ -174,6 +231,10 @@ impl HpxMpRuntime {
             }
         }
 
+        let base = match hint {
+            Hint::Worker(w) => w,
+            Hint::Any => self.rt.sched.hint_base(chunks.len()),
+        };
         let bodies: Vec<(Hint, Box<dyn FnOnce() + Send>)> = chunks
             .into_iter()
             .enumerate()
@@ -187,7 +248,7 @@ impl HpxMpRuntime {
                     let _arrive = arrive;
                     body(r);
                 });
-                (Hint::Worker(t), chunk)
+                (Hint::Worker(base + t), chunk)
             })
             .collect();
         self.rt
@@ -197,58 +258,14 @@ impl HpxMpRuntime {
     }
 }
 
-impl ParallelRuntime for HpxMpRuntime {
-    fn name(&self) -> &'static str {
-        "hpxMP"
-    }
-
-    fn max_threads(&self) -> usize {
-        self.rt.sched.workers()
-    }
-
-    fn parallel_for(
-        &self,
-        num_threads: usize,
-        range: Range<i64>,
-        sched: LoopSched,
-        body: &(dyn Fn(Range<i64>) + Sync),
-    ) {
-        self.parallel_for_mono(num_threads, range, sched, &body)
-    }
-}
-
-/// Serial execution (below Blaze's parallelization thresholds both
-/// runtimes fall back to this).
-pub struct SerialRuntime;
-
-impl ParallelRuntime for SerialRuntime {
-    fn name(&self) -> &'static str {
-        "serial"
-    }
-
-    fn max_threads(&self) -> usize {
-        1
-    }
-
-    fn parallel_for(
-        &self,
-        _num_threads: usize,
-        range: Range<i64>,
-        _sched: LoopSched,
-        body: &(dyn Fn(Range<i64>) + Sync),
-    ) {
-        body(range);
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU32, Ordering};
 
-    fn check_covers(rt: &dyn ParallelRuntime, threads: usize, n: i64, sched: LoopSched) {
+    fn check_covers(rt: &dyn Executor, threads: usize, n: i64, sched: LoopSched) {
         let seen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-        rt.parallel_for(threads, 0..n, sched, &|r| {
+        rt.bulk_sync(threads, 0..n, sched, &|r| {
             for i in r {
                 seen[i as usize].fetch_add(1, Ordering::SeqCst);
             }
@@ -261,7 +278,7 @@ mod tests {
     }
 
     #[test]
-    fn hpxmp_parallel_for_covers_all_schedules() {
+    fn hpxmp_bulk_sync_covers_all_schedules() {
         let rt = HpxMpRuntime::new(OmpRuntime::for_tests(4));
         for threads in [1, 2, 4] {
             for sched in [
@@ -276,8 +293,8 @@ mod tests {
     }
 
     #[test]
-    fn serial_runtime_runs_whole_range_once() {
-        check_covers(&SerialRuntime, 1, 100, LoopSched::default());
+    fn serial_executor_runs_whole_range_once() {
+        check_covers(&Serial, 1, 100, LoopSched::default());
     }
 
     #[test]
@@ -381,5 +398,25 @@ mod tests {
                 "mono path missed/duplicated iterations ({sched:?})"
             );
         }
+    }
+
+    #[test]
+    fn explicit_hint_pins_async_batch_base() {
+        // `.hint(Worker(w))` must reach the scheduler: chunks land on
+        // workers w, w+1, ... — observable as coverage with any base.
+        let rt = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        let seen: Arc<Vec<AtomicU32>> = Arc::new((0..64).map(|_| AtomicU32::new(0)).collect());
+        let s = seen.clone();
+        for_each_async(
+            &task().on(&rt).threads(4).hint(Hint::Worker(1)),
+            0..64,
+            Arc::new(move |r: std::ops::Range<i64>| {
+                for i in r {
+                    s[i as usize].fetch_add(1, Ordering::SeqCst);
+                }
+            }),
+        )
+        .wait();
+        assert!(seen.iter().all(|c| c.load(Ordering::SeqCst) == 1));
     }
 }

@@ -1,9 +1,35 @@
 //! Tiny CLI argument parser (offline build: no clap).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional
-//! arguments; used by `main.rs` and the example binaries.
+//! arguments; used by `main.rs` and the example binaries.  Also home of
+//! the one closed-set name parser ([`lookup_choice`] / [`parse_choice`])
+//! behind every `--xxx <name>` selector and `HPXMP_*` env binding
+//! (execution mode, AMT policy, Blaze op, serving mix), so unknown
+//! values everywhere produce the same "valid set" error instead of a
+//! per-call-site panic or a silent default.
 
 use std::collections::HashMap;
+
+/// Match `s` case-insensitively against a `(name, value)` table (aliases
+/// are extra rows).  The shared lookup behind [`parse_choice`] and every
+/// `parse() -> Option<Self>` selector in the crate.
+pub fn lookup_choice<T: Copy>(s: &str, choices: &[(&str, T)]) -> Option<T> {
+    let s = s.trim();
+    choices
+        .iter()
+        .find(|(name, _)| s.eq_ignore_ascii_case(name))
+        .map(|(_, v)| *v)
+}
+
+/// Like [`lookup_choice`], but an unknown value yields an error listing
+/// the whole valid set — what CLI flags and env vars should surface
+/// instead of silently falling back to a default.
+pub fn parse_choice<T: Copy>(what: &str, s: &str, choices: &[(&str, T)]) -> Result<T, String> {
+    lookup_choice(s, choices).ok_or_else(|| {
+        let names: Vec<&str> = choices.iter().map(|(name, _)| *name).collect();
+        format!("unknown {what} '{s}' (valid: {})", names.join("|"))
+    })
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -116,5 +142,23 @@ mod tests {
         let a = parse(&[], &[]);
         assert_eq!(a.get_or("op", "all"), "all");
         assert_eq!(a.get_usize("reps", 3), 3);
+    }
+
+    #[test]
+    fn choice_lookup_is_case_insensitive_and_alias_aware() {
+        let choices = [("par", 1), ("parallel", 1), ("task", 2)];
+        assert_eq!(lookup_choice("PAR", &choices), Some(1));
+        assert_eq!(lookup_choice(" parallel ", &choices), Some(1));
+        assert_eq!(lookup_choice("task", &choices), Some(2));
+        assert_eq!(lookup_choice("nope", &choices), None);
+    }
+
+    #[test]
+    fn parse_choice_error_lists_valid_set() {
+        let choices = [("seq", 0), ("par", 1)];
+        let err = parse_choice("exec mode", "bogus", &choices).unwrap_err();
+        assert!(err.contains("unknown exec mode 'bogus'"), "{err}");
+        assert!(err.contains("seq|par"), "{err}");
+        assert_eq!(parse_choice("exec mode", "par", &choices), Ok(1));
     }
 }

@@ -1,15 +1,17 @@
-//! Integration: Blaze-lite operations × both runtimes × schedules — the
+//! Integration: Blaze-lite operations × both executors × schedules — the
 //! correctness matrix underneath every figure, plus threshold behaviour
-//! and cross-runtime agreement.
+//! and cross-runtime agreement.  (The full policy × executor oracle
+//! matrix lives in `exec_policies.rs`; this file keeps the
+//! schedule-dimension and threshold checks.)
 
 use hpxmp::baseline::BaselineRuntime;
-use hpxmp::blaze::{self, thresholds, BlazeConfig, DynMatrix, DynVector};
+use hpxmp::blaze::{self, thresholds, DynMatrix, DynVector};
 use hpxmp::omp::OmpRuntime;
-use hpxmp::par::{HpxMpRuntime, LoopSched, ParallelRuntime, SerialRuntime};
+use hpxmp::par::exec::{par, seq, Executor, Policy};
+use hpxmp::par::{HpxMpRuntime, LoopSched};
 
-fn runtimes() -> Vec<Box<dyn ParallelRuntime>> {
+fn executors() -> Vec<Box<dyn Executor>> {
     vec![
-        Box::new(SerialRuntime),
         Box::new(BaselineRuntime::new(4)),
         Box::new(HpxMpRuntime::new(OmpRuntime::for_tests(4))),
     ]
@@ -25,76 +27,70 @@ fn scheds() -> Vec<LoopSched> {
 }
 
 #[test]
-fn dvecdvecadd_all_runtimes_and_schedules_agree() {
+fn dvecdvecadd_all_executors_and_schedules_agree() {
     let n = 50_000; // above threshold
     let a = DynVector::random(n, 1);
     let b = DynVector::random(n, 2);
     let mut expect = DynVector::zeros(n);
-    blaze::dvecdvecadd(&SerialRuntime, &BlazeConfig::new(1), &a, &b, &mut expect);
-    for rt in runtimes() {
+    blaze::dvecdvecadd(&seq(), &a, &b, &mut expect);
+    for ex in executors() {
         for sched in scheds() {
             let mut c = DynVector::zeros(n);
-            let cfg = BlazeConfig { threads: 4, sched };
-            blaze::dvecdvecadd(rt.as_ref(), &cfg, &a, &b, &mut c);
-            assert_eq!(
-                c.max_abs_diff(&expect),
-                0.0,
-                "{} {:?}",
-                rt.name(),
-                sched
-            );
+            let pol = par().on(ex.as_ref()).threads(4).chunk(sched);
+            blaze::dvecdvecadd(&pol, &a, &b, &mut c);
+            assert_eq!(c.max_abs_diff(&expect), 0.0, "{} {:?}", ex.name(), sched);
         }
     }
 }
 
 #[test]
-fn daxpy_all_runtimes_and_schedules_agree() {
+fn daxpy_all_executors_and_schedules_agree() {
     let n = 50_000;
     let a = DynVector::random(n, 3);
     let b0 = DynVector::random(n, 4);
     let mut expect = b0.clone();
-    blaze::daxpy(&SerialRuntime, &BlazeConfig::new(1), 3.0, &a, &mut expect);
-    for rt in runtimes() {
+    blaze::daxpy(&seq(), 3.0, &a, &mut expect);
+    for ex in executors() {
         for sched in scheds() {
             let mut b = b0.clone();
-            let cfg = BlazeConfig { threads: 4, sched };
-            blaze::daxpy(rt.as_ref(), &cfg, 3.0, &a, &mut b);
-            assert_eq!(b.max_abs_diff(&expect), 0.0, "{} {:?}", rt.name(), sched);
+            let pol = par().on(ex.as_ref()).threads(4).chunk(sched);
+            blaze::daxpy(&pol, 3.0, &a, &mut b);
+            assert_eq!(b.max_abs_diff(&expect), 0.0, "{} {:?}", ex.name(), sched);
         }
     }
 }
 
 #[test]
-fn dmatdmatadd_all_runtimes_agree() {
+fn dmatdmatadd_all_executors_agree() {
     let n = 200; // 40k elements, above 36100
     let a = DynMatrix::random(n, n, 5);
     let b = DynMatrix::random(n, n, 6);
     let mut expect = DynMatrix::zeros(n, n);
-    blaze::dmatdmatadd(&SerialRuntime, &BlazeConfig::new(1), &a, &b, &mut expect);
-    for rt in runtimes() {
+    blaze::dmatdmatadd(&seq(), &a, &b, &mut expect);
+    for ex in executors() {
         let mut c = DynMatrix::zeros(n, n);
-        blaze::dmatdmatadd(rt.as_ref(), &BlazeConfig::new(4), &a, &b, &mut c);
-        assert_eq!(c.max_abs_diff(&expect), 0.0, "{}", rt.name());
+        blaze::dmatdmatadd(&par().on(ex.as_ref()).threads(4), &a, &b, &mut c);
+        assert_eq!(c.max_abs_diff(&expect), 0.0, "{}", ex.name());
     }
 }
 
 #[test]
-fn dmatdmatmult_all_runtimes_agree() {
+fn dmatdmatmult_all_executors_agree() {
     let n = 96; // above 3025-element threshold
     let a = DynMatrix::random(n, n, 7);
     let b = DynMatrix::random(n, n, 8);
     let mut expect = DynMatrix::zeros(n, n);
-    blaze::dmatdmatmult(&SerialRuntime, &BlazeConfig::new(1), &a, &b, &mut expect);
-    for rt in runtimes() {
+    blaze::dmatdmatmult(&seq(), &a, &b, &mut expect);
+    for ex in executors() {
         let mut c = DynMatrix::zeros(n, n);
-        blaze::dmatdmatmult(rt.as_ref(), &BlazeConfig::new(4), &a, &b, &mut c);
-        assert_eq!(c.max_abs_diff(&expect), 0.0, "{}", rt.name());
+        blaze::dmatdmatmult(&par().on(ex.as_ref()).threads(4), &a, &b, &mut c);
+        assert_eq!(c.max_abs_diff(&expect), 0.0, "{}", ex.name());
     }
 }
 
 #[test]
-fn below_threshold_both_runtimes_execute_serially_and_correctly() {
-    // 10_000 < 38_000: the parallel_for seam must not even be entered —
+fn below_threshold_both_executors_execute_serially_and_correctly() {
+    // 10_000 < 38_000: the parallel seam must not even be entered —
     // verified indirectly (results exact vs serial kernel, single call).
     let n = 10_000;
     let a = DynVector::random(n, 9);
@@ -103,10 +99,10 @@ fn below_threshold_both_runtimes_execute_serially_and_correctly() {
     let base = BaselineRuntime::new(4);
     let mut expect = b0.clone();
     hpxmp::blaze::serial::daxpy_slice(3.0, a.as_slice(), expect.as_mut_slice());
-    for rt in [&hpx as &dyn ParallelRuntime, &base] {
+    for ex in [&hpx as &dyn Executor, &base] {
         let mut b = b0.clone();
-        blaze::daxpy(rt, &BlazeConfig::new(4), 3.0, &a, &mut b);
-        assert_eq!(b.max_abs_diff(&expect), 0.0, "{}", rt.name());
+        blaze::daxpy(&par().on(ex).threads(4), 3.0, &a, &mut b);
+        assert_eq!(b.max_abs_diff(&expect), 0.0, "{}", ex.name());
     }
     assert!(!thresholds::parallelize(n, thresholds::DAXPY_THRESHOLD));
 }
@@ -119,7 +115,7 @@ fn matmul_rectangular_shapes() {
     let b = DynMatrix::random(k, n, 12);
     let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
     let mut c_par = DynMatrix::zeros(m, n);
-    blaze::dmatdmatmult(&hpx, &BlazeConfig::new(4), &a, &b, &mut c_par);
+    blaze::dmatdmatmult(&par().on(&hpx).threads(4), &a, &b, &mut c_par);
     // Naive oracle.
     let mut c_ref = DynMatrix::zeros(m, n);
     for i in 0..m {
@@ -141,11 +137,12 @@ fn repeated_invocations_are_deterministic() {
     let a = DynVector::random(n, 13);
     let b = DynVector::random(n, 14);
     let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+    let pol: Policy<'_> = par().on(&hpx).threads(4);
     let mut first = DynVector::zeros(n);
-    blaze::dvecdvecadd(&hpx, &BlazeConfig::new(4), &a, &b, &mut first);
+    blaze::dvecdvecadd(&pol, &a, &b, &mut first);
     for _ in 0..20 {
         let mut c = DynVector::zeros(n);
-        blaze::dvecdvecadd(&hpx, &BlazeConfig::new(4), &a, &b, &mut c);
+        blaze::dvecdvecadd(&pol, &a, &b, &mut c);
         assert_eq!(c.max_abs_diff(&first), 0.0);
     }
 }

@@ -1,0 +1,193 @@
+//! ISSUE 5: the policy-equivalence oracle matrix.
+//!
+//! Every Blaze kernel × {seq, par, task} × {hpxMP, baseline} must be
+//! **bitwise equal** to the serial oracle (the `seq()` policy), including
+//! non-square shapes — the correctness contract that makes the one-line
+//! policy swap safe.  Chunked element-wise kernels perform the identical
+//! per-element operations regardless of partition; the matmul task path
+//! accumulates over the full depth in increasing k exactly like the
+//! serial kernel — so equality is exact, not epsilon.
+//!
+//! Plus: the RAII arrive-guard contract — `for_each_async` under
+//! `task()` still fulfils its join future when a chunk body panics.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use hpxmp::baseline::BaselineRuntime;
+use hpxmp::blaze::{self, DynMatrix, DynVector};
+use hpxmp::omp::OmpRuntime;
+use hpxmp::par::exec::{self, for_each_async, seq, ExecMode, Executor, Policy};
+use hpxmp::par::HpxMpRuntime;
+
+/// The two real executors of the matrix.  `task()` on the baseline pool
+/// degrades to eager inline execution (no AMT substrate) — the
+/// "where applicable" edge — but must still be bitwise correct.
+fn executors() -> Vec<(&'static str, Box<dyn Executor>)> {
+    vec![
+        (
+            "hpxmp",
+            Box::new(HpxMpRuntime::new(OmpRuntime::for_tests(4))) as Box<dyn Executor>,
+        ),
+        ("baseline", Box::new(BaselineRuntime::new(4))),
+    ]
+}
+
+fn policies<'e>(ex: &'e dyn Executor) -> Vec<Policy<'e>> {
+    ExecMode::ALL
+        .iter()
+        .map(|&m| Policy::with_mode(m).on(ex).threads(4).tile(16))
+        .collect()
+}
+
+#[test]
+fn dvecdvecadd_matrix_matches_serial_oracle() {
+    let n = 50_000; // above the 38k threshold
+    let a = DynVector::random(n, 1);
+    let b = DynVector::random(n, 2);
+    let mut oracle = DynVector::zeros(n);
+    blaze::dvecdvecadd(&seq(), &a, &b, &mut oracle);
+    for (name, ex) in executors() {
+        for pol in policies(ex.as_ref()) {
+            let mut c = DynVector::zeros(n);
+            blaze::dvecdvecadd(&pol, &a, &b, &mut c);
+            assert_eq!(c.max_abs_diff(&oracle), 0.0, "{name} {pol:?}");
+        }
+    }
+}
+
+#[test]
+fn daxpy_matrix_matches_serial_oracle() {
+    let n = 60_000;
+    let a = DynVector::random(n, 3);
+    let b0 = DynVector::random(n, 4);
+    let mut oracle = b0.clone();
+    blaze::daxpy(&seq(), 3.0, &a, &mut oracle);
+    for (name, ex) in executors() {
+        for pol in policies(ex.as_ref()) {
+            let mut b = b0.clone();
+            blaze::daxpy(&pol, 3.0, &a, &mut b);
+            assert_eq!(b.max_abs_diff(&oracle), 0.0, "{name} {pol:?}");
+        }
+    }
+}
+
+#[test]
+fn dmatdmatadd_matrix_matches_serial_oracle_including_non_square() {
+    // (m, n) over the 36100-element threshold, square and not.
+    for (m, n) in [(200usize, 200usize), (210, 190), (150, 300)] {
+        let a = DynMatrix::random(m, n, 5);
+        let b = DynMatrix::random(m, n, 6);
+        let mut oracle = DynMatrix::zeros(m, n);
+        blaze::dmatdmatadd(&seq(), &a, &b, &mut oracle);
+        for (name, ex) in executors() {
+            for pol in policies(ex.as_ref()) {
+                let mut c = DynMatrix::zeros(m, n);
+                blaze::dmatdmatadd(&pol, &a, &b, &mut c);
+                assert_eq!(c.max_abs_diff(&oracle), 0.0, "{name} {pol:?} {m}x{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dmatdmatmult_matrix_matches_serial_oracle_including_non_square() {
+    // (m, k, n) over the 3025-element threshold: square/even tiles,
+    // non-square, and tile-ragged shapes.
+    for (m, k, n) in [(64usize, 64usize, 64usize), (100, 60, 130), (57, 119, 83)] {
+        let a = DynMatrix::random(m, k, 7);
+        let b = DynMatrix::random(k, n, 8);
+        let mut oracle = DynMatrix::zeros(m, n);
+        blaze::dmatdmatmult(&seq(), &a, &b, &mut oracle);
+        for (name, ex) in executors() {
+            for pol in policies(ex.as_ref()) {
+                let mut c = DynMatrix::zeros(m, n);
+                blaze::dmatdmatmult(&pol, &a, &b, &mut c);
+                assert_eq!(
+                    c.max_abs_diff(&oracle),
+                    0.0,
+                    "{name} {pol:?} ({m},{k},{n})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dmatdvecmult_matrix_matches_serial_oracle_including_non_square() {
+    // (m, n) straddling the 330-row threshold, wide and tall.
+    for (m, n) in [(400usize, 400usize), (400, 37), (350, 700)] {
+        let a = DynMatrix::random(m, n, 9);
+        let x = DynVector::random(n, 10);
+        let mut oracle = DynVector::zeros(m);
+        blaze::dmatdvecmult(&seq(), &a, &x, &mut oracle);
+        for (name, ex) in executors() {
+            for pol in policies(ex.as_ref()) {
+                let mut y = DynVector::zeros(m);
+                blaze::dmatdvecmult(&pol, &a, &x, &mut y);
+                assert_eq!(y.max_abs_diff(&oracle), 0.0, "{name} {pol:?} {m}x{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn task_policy_tile_sizes_stay_bitwise_equal() {
+    // The .tile(..) combinator must not perturb results: every tiling of
+    // the same product agrees with the serial oracle exactly.
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+    let n = 130;
+    let a = DynMatrix::random(n, n, 11);
+    let b = DynMatrix::random(n, n, 12);
+    let mut oracle = DynMatrix::zeros(n, n);
+    blaze::dmatdmatmult(&seq(), &a, &b, &mut oracle);
+    for tile in [8usize, 16, 33, 64, 256] {
+        let mut c = DynMatrix::zeros(n, n);
+        blaze::dmatdmatmult(&exec::task().on(&hpx).threads(4).tile(tile), &a, &b, &mut c);
+        assert_eq!(c.max_abs_diff(&oracle), 0.0, "tile {tile}");
+    }
+}
+
+#[test]
+fn for_each_async_task_panicking_body_still_fulfils_join() {
+    // The RAII arrive guard: a panicking chunk counts down on drop, so
+    // the joined future fulfils and the panic stays isolated in the
+    // worker layer.
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+    let ran = Arc::new(AtomicU32::new(0));
+    let r2 = ran.clone();
+    let fut = for_each_async(
+        &exec::task().on(&hpx).threads(4),
+        0..4,
+        Arc::new(move |r: std::ops::Range<i64>| {
+            if r.start == 2 {
+                panic!("chunk body panics");
+            }
+            r2.fetch_add(1, Ordering::SeqCst);
+        }),
+    );
+    fut.wait();
+    assert_eq!(ran.load(Ordering::SeqCst), 3, "surviving chunks ran");
+    assert_eq!(hpx.rt.sched.task_panics(), 1, "panic not isolated");
+}
+
+#[test]
+fn policy_swap_is_one_line_on_one_buffer() {
+    // The API promise in miniature: the same call site, three policies,
+    // identical bits every time.
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+    let n = 50_000;
+    let a = DynVector::random(n, 21);
+    let b0 = DynVector::random(n, 22);
+    let mut oracle = b0.clone();
+    blaze::daxpy(&seq(), 3.0, &a, &mut oracle);
+    for pol in [
+        exec::seq().on(&hpx),
+        exec::par().on(&hpx),
+        exec::task().on(&hpx),
+    ] {
+        let mut b = b0.clone();
+        blaze::daxpy(&pol, 3.0, &a, &mut b);
+        assert_eq!(b.max_abs_diff(&oracle), 0.0, "{}", pol.label());
+    }
+}

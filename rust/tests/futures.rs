@@ -7,9 +7,10 @@ use std::sync::{Arc, Mutex};
 
 use hpxmp::amt::future::{when_all, Future, Promise};
 use hpxmp::amt::{PolicyKind, Scheduler};
-use hpxmp::blaze::{dmatdmatmult, dmatdmatmult_dataflow_tiled, BlazeConfig, DynMatrix};
+use hpxmp::blaze::{dmatdmatmult, DynMatrix};
 use hpxmp::omp::{current_ctx, fork_call, Dep, DepKind, OmpRuntime};
-use hpxmp::par::{HpxMpRuntime, SerialRuntime};
+use hpxmp::par::exec::{seq, task};
+use hpxmp::par::HpxMpRuntime;
 
 #[test]
 fn when_all_empty_set_is_ready_without_a_scheduler() {
@@ -156,9 +157,9 @@ fn dataflow_mmult_matches_serial_oracle_across_shapes() {
         let a = DynMatrix::random(m, k, 41);
         let b = DynMatrix::random(k, n, 42);
         let mut c_df = DynMatrix::zeros(m, n);
-        dmatdmatmult_dataflow_tiled(&hpx, &BlazeConfig::new(4), &a, &b, &mut c_df, 32);
+        dmatdmatmult(&task().on(&hpx).threads(4).tile(32), &a, &b, &mut c_df);
         let mut c_ref = DynMatrix::zeros(m, n);
-        dmatdmatmult(&SerialRuntime, &BlazeConfig::new(1), &a, &b, &mut c_ref);
+        dmatdmatmult(&seq(), &a, &b, &mut c_ref);
         assert_eq!(
             c_df.max_abs_diff(&c_ref),
             0.0,

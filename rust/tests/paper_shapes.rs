@@ -5,10 +5,11 @@
 //! so here we keep only the structural facts.)
 
 use hpxmp::baseline::BaselineRuntime;
-use hpxmp::blaze::{self, thresholds, BlazeConfig, DynVector};
+use hpxmp::blaze::{self, thresholds, DynVector};
 use hpxmp::coordinator::blazemark::Op;
 use hpxmp::omp::OmpRuntime;
-use hpxmp::par::{HpxMpRuntime, ParallelRuntime};
+use hpxmp::par::exec::{par, Executor};
+use hpxmp::par::HpxMpRuntime;
 
 /// Shape (i): below the threshold both runtimes execute the *identical*
 /// serial kernel — results are bitwise equal and no parallel region runs.
@@ -20,7 +21,7 @@ fn below_threshold_no_parallel_region() {
     let a = DynVector::random(n, 1);
     let mut b = DynVector::random(n, 2);
     let spawned_before = rt.sched.metrics().spawned;
-    blaze::daxpy(&hpx, &BlazeConfig::new(4), 3.0, &a, &mut b);
+    blaze::daxpy(&par().on(&hpx).threads(4), 3.0, &a, &mut b);
     let spawned_after = rt.sched.metrics().spawned;
     assert_eq!(
         spawned_before, spawned_after,
@@ -38,7 +39,7 @@ fn at_threshold_parallel_region_forks() {
     let a = DynVector::random(n, 3);
     let mut b = DynVector::random(n, 4);
     let before = rt.sched.metrics().spawned;
-    blaze::daxpy(&hpx, &BlazeConfig::new(4), 3.0, &a, &mut b);
+    blaze::daxpy(&par().on(&hpx).threads(4), 3.0, &a, &mut b);
     let after = rt.sched.metrics().spawned;
     assert!(after >= before + 4, "expected 4 implicit tasks");
 }
@@ -73,8 +74,8 @@ fn comparable_regime_results_identical() {
     let b0 = DynVector::random(n, 6);
     let mut bh = b0.clone();
     let mut bb = b0.clone();
-    blaze::daxpy(&hpx, &BlazeConfig::new(4), 3.0, &a, &mut bh);
-    blaze::daxpy(&base, &BlazeConfig::new(4), 3.0, &a, &mut bb);
+    blaze::daxpy(&par().on(&hpx).threads(4), 3.0, &a, &mut bh);
+    blaze::daxpy(&par().on(&base).threads(4), 3.0, &a, &mut bb);
     assert_eq!(bh.max_abs_diff(&bb), 0.0);
     assert_eq!(hpx.name(), "hpxMP");
     assert_eq!(base.name(), "OpenMP(baseline)");

@@ -240,8 +240,9 @@ fn prop_barrier_publishes_writes() {
 /// the correctness contract behind every benchmark figure.
 #[test]
 fn prop_blaze_parallel_matches_serial() {
-    use hpxmp::blaze::{self, BlazeConfig, DynVector};
-    use hpxmp::par::{HpxMpRuntime, LoopSched, ParallelRuntime};
+    use hpxmp::blaze::{self, DynVector};
+    use hpxmp::par::exec::{par, Executor};
+    use hpxmp::par::{HpxMpRuntime, LoopSched};
     forall(
         PropCfg { cases: 10, seed: 0xB1A2E },
         |r| {
@@ -261,8 +262,8 @@ fn prop_blaze_parallel_matches_serial() {
             let a = DynVector::random(n, seed);
             let b0 = DynVector::random(n, seed ^ 1);
             let mut b_par = b0.clone();
-            let cfg = BlazeConfig { threads, sched };
-            blaze::daxpy(&rt, &cfg, 3.0, &a, &mut b_par);
+            let pol = par().on(&rt).threads(threads).chunk(sched);
+            blaze::daxpy(&pol, 3.0, &a, &mut b_par);
             let mut b_ser = b0.clone();
             hpxmp::blaze::serial::daxpy_slice(3.0, a.as_slice(), b_ser.as_mut_slice());
             ensure(
