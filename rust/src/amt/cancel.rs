@@ -1,0 +1,200 @@
+//! Hierarchical cancellation tokens (ISSUE 6; DESIGN.md §11).
+//!
+//! A [`CancelToken`] is a cheap, clonable handle to a shared cancellation
+//! flag.  Tokens form a tree: [`CancelToken::child`] derives a token that
+//! observes its parent's cancellation *in addition to* its own — cancelling
+//! a parent fans out to every descendant with **no** per-child bookkeeping
+//! on the parent (children walk up the chain on query and cache the answer
+//! in their own flag, so a deep chain is paid at most once per token).
+//!
+//! Tokens optionally carry a **deadline** ([`CancelToken::with_deadline`]):
+//! a token whose deadline has passed reports cancelled without anyone
+//! calling [`CancelToken::cancel`].  This is how the policy layer's
+//! `.deadline(..)` combinator and the serving layer's per-request deadlines
+//! are expressed — one mechanism for both explicit and timed cancellation.
+//!
+//! Checking is always *cooperative*: nothing is interrupted; running code
+//! polls [`CancelToken::is_cancelled`] at cancellation points (scheduler
+//! dispatch, chunk starts, `omp cancellation point`) and unwinds its own
+//! bookkeeping before returning.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Inner {
+    /// Set by [`CancelToken::cancel`], or cached from an ancestor / an
+    /// expired deadline on first observation (monotonic: never cleared).
+    flag: AtomicBool,
+    /// Passing this instant cancels the token implicitly.
+    deadline: Option<Instant>,
+    /// Parent link — the upward half of the fan-out tree.
+    parent: Option<Arc<Inner>>,
+}
+
+impl Inner {
+    fn is_cancelled(&self) -> bool {
+        if self.flag.load(Ordering::Acquire) {
+            return true;
+        }
+        let hit = self.deadline.is_some_and(|d| Instant::now() >= d)
+            || self.parent.as_ref().is_some_and(|p| p.is_cancelled());
+        if hit {
+            // Cache: later checks on this token short-circuit without
+            // re-walking the chain or re-reading the clock.
+            self.flag.store(true, Ordering::Release);
+        }
+        hit
+    }
+}
+
+/// A clonable handle to one node of a cancellation tree.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl CancelToken {
+    /// A fresh root token (not cancelled, no deadline, no parent).
+    pub fn new() -> Self {
+        Self::build(None, None)
+    }
+
+    /// A root token that auto-cancels once `timeout` has elapsed.
+    pub fn with_deadline(timeout: Duration) -> Self {
+        Self::build(Some(Instant::now() + timeout), None)
+    }
+
+    /// A root token that auto-cancels at `at`.
+    pub fn at_deadline(at: Instant) -> Self {
+        Self::build(Some(at), None)
+    }
+
+    /// Derive a child: cancelled when *either* this token is cancelled or
+    /// [`CancelToken::cancel`] is called on the child itself.
+    pub fn child(&self) -> Self {
+        Self::build(None, Some(self.inner.clone()))
+    }
+
+    /// Derive a child with its own deadline (parent cancellation still
+    /// propagates; whichever fires first wins).
+    pub fn child_with_deadline(&self, timeout: Duration) -> Self {
+        Self::build(Some(Instant::now() + timeout), Some(self.inner.clone()))
+    }
+
+    fn build(deadline: Option<Instant>, parent: Option<Arc<Inner>>) -> Self {
+        Self {
+            inner: Arc::new(Inner {
+                flag: AtomicBool::new(false),
+                deadline,
+                parent,
+            }),
+        }
+    }
+
+    /// Request cancellation of this token and (transitively) every child
+    /// derived from it.  Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.inner.flag.store(true, Ordering::Release);
+    }
+
+    /// Whether this token — or any ancestor, or an expired deadline along
+    /// the chain — has been cancelled.  The cancellation-point predicate.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.is_cancelled()
+    }
+
+    /// Identity equality (two handles to the same tree node).
+    pub fn ptr_eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("cancelled", &self.is_cancelled())
+            .field("deadline", &self.inner.deadline)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_is_live_and_cancel_is_sticky() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        t.cancel();
+        assert!(t.is_cancelled());
+        assert!(t.is_cancelled(), "cancellation is monotonic");
+    }
+
+    #[test]
+    fn parent_cancel_fans_out_to_children_and_grandchildren() {
+        let root = CancelToken::new();
+        let child = root.child();
+        let grandchild = child.child();
+        assert!(!grandchild.is_cancelled());
+        root.cancel();
+        assert!(child.is_cancelled());
+        assert!(grandchild.is_cancelled());
+    }
+
+    #[test]
+    fn child_cancel_does_not_propagate_upward() {
+        let root = CancelToken::new();
+        let child = root.child();
+        child.cancel();
+        assert!(child.is_cancelled());
+        assert!(!root.is_cancelled());
+    }
+
+    #[test]
+    fn sibling_is_unaffected_by_other_childs_cancel() {
+        let root = CancelToken::new();
+        let a = root.child();
+        let b = root.child();
+        a.cancel();
+        assert!(!b.is_cancelled());
+    }
+
+    #[test]
+    fn expired_deadline_reads_as_cancelled() {
+        let t = CancelToken::with_deadline(Duration::from_micros(0));
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn future_deadline_is_still_live() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(!t.is_cancelled());
+    }
+
+    #[test]
+    fn child_deadline_expires_without_touching_parent() {
+        let root = CancelToken::new();
+        let child = root.child_with_deadline(Duration::from_micros(0));
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(child.is_cancelled());
+        assert!(!root.is_cancelled());
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(a.ptr_eq(&b));
+        b.cancel();
+        assert!(a.is_cancelled());
+    }
+}

@@ -1,12 +1,13 @@
 //! Futures and continuations — the `hpx::future`/`hpx::promise` analog
-//! (ISSUE 2; DESIGN.md §7).
+//! (ISSUE 2; DESIGN.md §7, error channel from ISSUE 6 / §11).
 //!
 //! The paper's closing argument is that an OpenMP-over-AMT runtime only
 //! pays off once applications can leave fork/join behind for a *task-based
 //! dataflow* model — exactly what HPX's `future`/`when_all`/`then` triple
 //! provides.  This module is that missing subsystem:
 //!
-//! * [`Promise<T>`] — the write end: fulfilled exactly once.
+//! * [`Promise<T>`] — the write end: fulfilled exactly once, with a value
+//!   or an error ([`Outcome`]).
 //! * [`Future<T>`]  — the (shared, clonable) read end: `hpx::shared_future`
 //!   semantics — continuations observe the value by reference, any number
 //!   of continuations may attach, before or after fulfilment.
@@ -23,26 +24,31 @@
 //!   like the OpenMP layer's barriers, and fulfilment wakes parked
 //!   waiters explicitly.
 //!
-//! The state machine of one future (§7 of DESIGN.md):
+//! The state machine of one future (§7/§11 of DESIGN.md):
 //!
 //! ```text
-//! Pending{conts} --set_value--> Ready(v) ; conts drained:
-//!     Spawned  -> Scheduler::spawn(move || f(&v))   (runs on a worker)
-//!     Inline   -> f(&v) on the fulfilling thread    (cheap hooks only)
+//! Pending{conts} --set_value / set_cancelled / set_panicked / Drop-->
+//!     Ready(Outcome) ; conts drained:
+//!     Spawned  -> Scheduler::spawn(move || f(&outcome))  (on a worker)
+//!     Inline   -> f(&outcome) on the fulfilling thread   (cheap hooks)
 //! attach after Ready -> dispatched immediately (same two flavors)
 //! ```
 //!
-//! Dropping a [`Promise`] without fulfilling it leaks its pending
-//! continuations (they never run) — a "broken promise".  The OpenMP
-//! tasking layer fulfils on every path (completion promises are set via
-//! an RAII retire guard, so even a panicking task body releases its
-//! dependents).  A raw [`Future::then`] continuation that panics, by
-//! contrast, leaves its *result* future forever pending — there is no
-//! value to fulfil it with and no error channel; the panic itself is
-//! still isolated and counted by the worker layer.
+//! **Error propagation (ISSUE 6).**  A future completes with one of
+//! [`Outcome::Value`], [`Outcome::Cancelled`], or [`Outcome::Panicked`].
+//! `then` continuations run only on `Value`; on an error outcome the
+//! continuation body is *skipped* and the error is forwarded to the
+//! result future, so a whole chain short-circuits in O(chain) inline
+//! work.  A `then` body that panics drops its result promise mid-unwind,
+//! and a [`Promise`] dropped unfulfilled completes its future with
+//! `Panicked` — the "broken promise" of the old design now *fails fast*
+//! instead of hanging every downstream `wait`.  [`when_all`] propagates
+//! the worst outcome among its inputs (`Panicked` > `Cancelled` >
+//! `Value`).  Unwinding itself still stops at the worker boundary
+//! (`worker::execute` catches it); the outcome is the cross-task signal.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use once_cell::sync::OnceCell;
 
@@ -51,25 +57,93 @@ use super::scheduler::Scheduler;
 use super::task::{Hint, Priority};
 use super::worker;
 
+/// How a future completed.  Ordered by severity: a combinator joining
+/// several outcomes reports the worst one (`Panicked` > `Cancelled` >
+/// `Value`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome<T> {
+    /// Normal completion.
+    Value(T),
+    /// Completed without a value because the work was cancelled (token
+    /// fired or deadline passed) before it ran.
+    Cancelled,
+    /// The producer panicked (or its promise was dropped unfulfilled —
+    /// indistinguishable from the outside, and in practice caused by an
+    /// unwind through the producer).
+    Panicked,
+}
+
+impl<T> Outcome<T> {
+    /// The value, if this is a normal completion.
+    pub fn value(&self) -> Option<&T> {
+        match self {
+            Outcome::Value(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn is_value(&self) -> bool {
+        matches!(self, Outcome::Value(_))
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self, Outcome::Cancelled)
+    }
+
+    pub fn is_panicked(&self) -> bool {
+        matches!(self, Outcome::Panicked)
+    }
+
+    /// Severity rank used by joining combinators (0 value, 1 cancelled,
+    /// 2 panicked).
+    fn severity(&self) -> usize {
+        match self {
+            Outcome::Value(_) => 0,
+            Outcome::Cancelled => 1,
+            Outcome::Panicked => 2,
+        }
+    }
+
+    /// The error half with the value type erased (what a combinator
+    /// forwards downstream).
+    fn as_error<U>(&self) -> Option<Outcome<U>> {
+        match self {
+            Outcome::Value(_) => None,
+            Outcome::Cancelled => Some(Outcome::Cancelled),
+            Outcome::Panicked => Some(Outcome::Panicked),
+        }
+    }
+}
+
+/// Lock a continuation list, recovering from poisoning.  A panic while
+/// holding `conts` can only happen inside an *inline* hook (user `then`
+/// bodies run as spawned tasks, outside the lock); the list itself — a
+/// `Vec` mutated only by `push` and `mem::take`, both panic-free — is
+/// structurally valid at every unlock point, so the poison flag carries
+/// no information and clearing it is sound.
+fn lock_conts<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// One registered continuation.
 enum Cont<T> {
     /// Scheduled as an AMT task at fulfilment — the `future::then` path.
     Spawned {
         sched: Arc<Scheduler>,
         desc: &'static str,
-        f: Box<dyn FnOnce(&T) + Send>,
+        f: Box<dyn FnOnce(&Outcome<T>) + Send>,
     },
     /// Run inline on the fulfilling thread.  Reserved for cheap,
     /// non-blocking bookkeeping (the [`when_all`] countdown): user code
     /// never runs inline, so fulfilment cannot block on it.
-    Inline(Box<dyn FnOnce(&T) + Send>),
+    Inline(Box<dyn FnOnce(&Outcome<T>) + Send>),
 }
 
 /// Shared state of one promise/future pair.
 struct SharedState<T> {
-    /// Write-once value cell; `get().is_some()` is the ready flag (the
-    /// cell's internal ordering publishes the value to readers).
-    value: OnceCell<T>,
+    /// Write-once outcome cell; `get().is_some()` is the ready flag (the
+    /// cell's internal ordering publishes the outcome to readers).
+    value: OnceCell<Outcome<T>>,
     /// Continuations registered while pending; drained at fulfilment.
     conts: Mutex<Vec<Cont<T>>>,
     /// Parked [`Future::wait`]ers; notified right after the value lands
@@ -88,8 +162,29 @@ fn dispatch<T: Send + Sync + 'static>(state: Arc<SharedState<T>>, cont: Cont<T>)
     }
 }
 
-/// The write end: fulfil with [`Promise::set_value`] exactly once.
-pub struct Promise<T> {
+/// Publish `outcome` and drain the pending continuations.  Idempotent:
+/// the first caller wins (needed because `Promise::drop` races with
+/// nothing but runs unconditionally after the consuming setters).
+fn fulfil<T: Send + Sync + 'static>(state: &Arc<SharedState<T>>, outcome: Outcome<T>) {
+    if state.value.set(outcome).is_err() {
+        return;
+    }
+    // Wake parked `wait`ers first — they only need the ready flag,
+    // which is already published — then dispatch continuations.
+    state.wakers.notify_all();
+    // Continuations registered from here on observe the outcome under the
+    // lock and dispatch themselves; we drain only what was pending.
+    let pending = std::mem::take(&mut *lock_conts(&state.conts));
+    for cont in pending {
+        dispatch(state.clone(), cont);
+    }
+}
+
+/// The write end: fulfil with [`Promise::set_value`] (or an error setter)
+/// exactly once.  Dropping a promise unfulfilled completes its future
+/// with [`Outcome::Panicked`] — downstream waits fail fast instead of
+/// hanging (the panicking-`then`-body path relies on exactly this).
+pub struct Promise<T: Send + Sync + 'static> {
     state: Arc<SharedState<T>>,
 }
 
@@ -117,18 +212,35 @@ impl<T: Send + Sync + 'static> Promise<T> {
     /// continuations as AMT tasks).  Consumes the promise — a future is
     /// fulfilled at most once.
     pub fn set_value(self, value: T) {
-        if self.state.value.set(value).is_err() {
-            unreachable!("Promise::set_value consumes self; double-fulfil is unconstructible");
-        }
-        // Wake parked `wait`ers first — they only need the ready flag,
-        // which is already published — then dispatch continuations.
-        self.state.wakers.notify_all();
-        // Continuations registered from here on observe the value under the
-        // lock and dispatch themselves; we drain only what was pending.
-        let pending = std::mem::take(&mut *self.state.conts.lock().unwrap());
-        for cont in pending {
-            dispatch(self.state.clone(), cont);
-        }
+        fulfil(&self.state, Outcome::Value(value));
+    }
+
+    /// Complete with [`Outcome::Cancelled`] — the work was abandoned
+    /// before producing a value.
+    pub fn set_cancelled(self) {
+        fulfil(&self.state, Outcome::Cancelled);
+    }
+
+    /// Complete with [`Outcome::Panicked`] — the producer failed.
+    pub fn set_panicked(self) {
+        fulfil(&self.state, Outcome::Panicked);
+    }
+
+    /// Complete with an arbitrary pre-built outcome (combinators
+    /// forwarding a joined error).
+    pub fn set_outcome(self, outcome: Outcome<T>) {
+        fulfil(&self.state, outcome);
+    }
+}
+
+impl<T: Send + Sync + 'static> Drop for Promise<T> {
+    /// Broken-promise backstop: if the promise dies unfulfilled (producer
+    /// panicked mid-unwind, or a combinator dropped it on an error path),
+    /// fail the future instead of leaving every waiter pending forever.
+    /// After any `set_*` (which consume `self` and run this drop on the
+    /// way out) the cell is already occupied and this is a no-op.
+    fn drop(&mut self) {
+        fulfil(&self.state, Outcome::Panicked);
     }
 }
 
@@ -154,16 +266,23 @@ impl<T> Clone for Future<T> {
 impl<T: Send + Sync + 'static> Future<T> {
     /// An already-fulfilled future (`hpx::make_ready_future`).
     pub fn ready(value: T) -> Self {
+        Self::with_outcome(Outcome::Value(value))
+    }
+
+    /// An already-completed future carrying an arbitrary outcome (ready
+    /// errors for short-circuit paths).
+    pub fn with_outcome(outcome: Outcome<T>) -> Self {
         let state = Arc::new(SharedState {
             value: OnceCell::new(),
             conts: Mutex::new(Vec::new()),
             wakers: WakeList::new(),
         });
-        let _ = state.value.set(value);
+        let _ = state.value.set(outcome);
         Self { state }
     }
 
-    /// Whether the value is available (never blocks).
+    /// Whether the future has completed — with *any* outcome (never
+    /// blocks).
     pub fn is_ready(&self) -> bool {
         self.state.value.get().is_some()
     }
@@ -180,23 +299,47 @@ impl<T: Send + Sync + 'static> Future<T> {
     /// pending tasks while the value is not ready (so the producer chain
     /// can make progress *through* the waiter — no deadlock, no burnt
     /// core); otherwise it escalates spin → yield → timed-park, and
-    /// fulfilment delivers an explicit wake to parked waiters.
+    /// fulfilment delivers an explicit wake to parked waiters.  Returns
+    /// on any outcome, error or value.
     pub fn wait(&self) {
         worker::wait_until(Some(&self.state.wakers), || self.is_ready());
     }
 
+    /// The outcome, if completed (never blocks).
+    pub fn try_outcome(&self) -> Option<&Outcome<T>> {
+        self.state.value.get()
+    }
+
+    /// Wait, then return the outcome by reference.  The error-aware
+    /// sibling of [`Future::get`].
+    pub fn wait_outcome(&self) -> &Outcome<T> {
+        self.wait();
+        self.state.value.get().expect("ready after wait")
+    }
+
     /// Wait, then clone the value out.
+    ///
+    /// # Panics
+    /// On an error outcome — `get` is the infallible convenience accessor
+    /// for chains known to succeed; error-tolerant callers use
+    /// [`Future::wait_outcome`].
     pub fn get(&self) -> T
     where
         T: Clone,
     {
-        self.wait();
-        self.state.value.get().expect("ready after wait").clone()
+        match self.wait_outcome() {
+            Outcome::Value(v) => v.clone(),
+            Outcome::Cancelled => panic!("Future::get on a cancelled future"),
+            Outcome::Panicked => panic!("Future::get on a panicked future (producer failed)"),
+        }
     }
 
     /// Attach a continuation scheduled as an AMT task on `sched` once the
     /// value is ready (immediately if it already is).  Returns the future
-    /// of the continuation's own result — chains compose.
+    /// of the continuation's own result — chains compose.  On an error
+    /// outcome `f` is skipped and the error is forwarded to the result
+    /// future (short-circuit); if `f` panics the result future completes
+    /// as [`Outcome::Panicked`] via the promise-drop backstop.
     pub fn then<R: Send + Sync + 'static>(
         &self,
         sched: &Arc<Scheduler>,
@@ -217,8 +360,15 @@ impl<T: Send + Sync + 'static> Future<T> {
     ) -> Future<R> {
         let promise = Promise::new();
         let result = promise.get_future();
-        let body: Box<dyn FnOnce(&T) + Send> = Box::new(move |v: &T| {
-            promise.set_value(f(v));
+        let body: Box<dyn FnOnce(&Outcome<T>) + Send> = Box::new(move |out: &Outcome<T>| {
+            crate::util::fault::inject(crate::util::fault::Site::Continuation);
+            match out {
+                // A panic in `f` unwinds through here dropping `promise`
+                // unfulfilled -> the drop backstop publishes `Panicked`.
+                Outcome::Value(v) => promise.set_value(f(v)),
+                Outcome::Cancelled => promise.set_cancelled(),
+                Outcome::Panicked => promise.set_panicked(),
+            }
         });
         self.attach(Cont::Spawned {
             sched: sched.clone(),
@@ -230,17 +380,17 @@ impl<T: Send + Sync + 'static> Future<T> {
 
     /// Inline hook run on the fulfilling thread (or right here if already
     /// ready).  Crate-internal: hooks must be cheap and non-blocking —
-    /// they execute inside `set_value`.
-    pub(crate) fn on_ready(&self, f: impl FnOnce(&T) + Send + 'static) {
+    /// they execute inside the fulfilment path.
+    pub(crate) fn on_ready(&self, f: impl FnOnce(&Outcome<T>) + Send + 'static) {
         self.attach(Cont::Inline(Box::new(f)));
     }
 
     fn attach(&self, cont: Cont<T>) {
         {
-            let mut pending = self.state.conts.lock().unwrap();
-            // Checked under the lock: `set_value` publishes the value
+            let mut pending = lock_conts(&self.state.conts);
+            // Checked under the lock: `fulfil` publishes the outcome
             // *before* draining under this same lock, so either we see the
-            // value (dispatch ourselves, below) or our push is in the vec
+            // outcome (dispatch ourselves, below) or our push is in the vec
             // the drain takes.  No continuation is lost or run twice.
             if self.state.value.get().is_none() {
                 pending.push(cont);
@@ -258,6 +408,13 @@ impl<T: Send + Sync + 'static> Future<T> {
 /// The countdown runs as inline hooks on the fulfilling threads — no task
 /// is spawned per input; downstream work attaches to the returned future
 /// with [`Future::then`].  An empty set yields an already-ready future.
+///
+/// The join reports the **worst** input outcome: all-`Value` → `Value(())`,
+/// any `Cancelled` → `Cancelled`, any `Panicked` → `Panicked` — so one
+/// failed input fails (not hangs) every continuation hung off the join.
+/// It still waits for *all* inputs before completing (sibling work is
+/// not abandoned mid-flight; cancellation of unstarted work is the
+/// token layer's job).
 pub fn when_all<T: Send + Sync + 'static>(futures: &[Future<T>]) -> Future<()> {
     let promise = Promise::new();
     let joined = promise.get_future();
@@ -266,18 +423,25 @@ pub fn when_all<T: Send + Sync + 'static>(futures: &[Future<T>]) -> Future<()> {
         return joined;
     }
     let remaining = Arc::new(AtomicUsize::new(futures.len()));
+    let worst = Arc::new(AtomicUsize::new(0));
     let promise = Arc::new(Mutex::new(Some(promise)));
     for fut in futures {
         let remaining = remaining.clone();
+        let worst = worst.clone();
         let promise = promise.clone();
-        fut.on_ready(move |_| {
+        fut.on_ready(move |out| {
+            worst.fetch_max(out.severity(), Ordering::AcqRel);
             if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                 let p = promise
                     .lock()
-                    .unwrap()
+                    .unwrap_or_else(PoisonError::into_inner)
                     .take()
                     .expect("when_all countdown reached zero twice");
-                p.set_value(());
+                match worst.load(Ordering::Acquire) {
+                    0 => p.set_value(()),
+                    1 => p.set_cancelled(),
+                    _ => p.set_panicked(),
+                }
             }
         });
     }
@@ -394,5 +558,66 @@ mod tests {
             );
             s.shutdown();
         }
+    }
+
+    #[test]
+    fn dropped_promise_fails_fast_instead_of_hanging() {
+        let p: Promise<usize> = Promise::new();
+        let f = p.get_future();
+        drop(p);
+        f.wait(); // must return, not hang
+        assert!(f.wait_outcome().is_panicked());
+    }
+
+    #[test]
+    fn panicking_then_body_fails_downstream_chain() {
+        let s = Scheduler::new(2, PolicyKind::PriorityLocal);
+        let p = Promise::new();
+        let f = p.get_future();
+        let g = f.then(&s, |_: &usize| -> usize { panic!("continuation bomb") });
+        let h = g.then(&s, |v: &usize| v + 1);
+        p.set_value(1);
+        assert!(h.wait_outcome().is_panicked(), "error must propagate, not hang");
+        assert_eq!(s.task_panics(), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn cancelled_outcome_short_circuits_then_chain() {
+        let s = Scheduler::new(1, PolicyKind::PriorityLocal);
+        let p: Promise<usize> = Promise::new();
+        let f = p.get_future();
+        let ran = Arc::new(AU::new(0));
+        let ran2 = ran.clone();
+        let g = f.then(&s, move |_| {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        });
+        p.set_cancelled();
+        assert!(g.wait_outcome().is_cancelled());
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "skipped body must not run");
+        s.shutdown();
+    }
+
+    #[test]
+    fn when_all_propagates_worst_outcome() {
+        let a = Future::ready(1usize);
+        let p: Promise<usize> = Promise::new();
+        let b = p.get_future();
+        let q: Promise<usize> = Promise::new();
+        let c = q.get_future();
+        let joined = when_all(&[a, b, c]);
+        p.set_cancelled();
+        assert!(!joined.is_ready(), "join waits for every input");
+        drop(q); // -> Panicked
+        assert!(joined.wait_outcome().is_panicked(), "worst outcome wins");
+    }
+
+    #[test]
+    fn get_panics_descriptively_on_error_outcome() {
+        let f: Future<usize> = Future::with_outcome(Outcome::Cancelled);
+        let err =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.get())).unwrap_err();
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("cancelled"), "got: {msg}");
     }
 }

@@ -7,6 +7,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct Metrics {
     pub spawned: AtomicU64,
     pub executed: AtomicU64,
+    /// Tasks dropped unrun at dispatch because their cancel token had
+    /// fired (ISSUE 6) — disjoint from `executed`.
+    pub cancelled: AtomicU64,
     pub stolen: AtomicU64,
     pub overflowed: AtomicU64,
     /// Worker main-loop park *descents* (idle, nothing runnable): counted
@@ -50,6 +53,7 @@ impl Metrics {
         MetricsSnapshot {
             spawned: self.spawned.load(Ordering::Relaxed),
             executed: self.executed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
             stolen: self.stolen.load(Ordering::Relaxed),
             overflowed: self.overflowed.load(Ordering::Relaxed),
             parked: self.parked.load(Ordering::Relaxed),
@@ -67,6 +71,7 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub spawned: u64,
     pub executed: u64,
+    pub cancelled: u64,
     pub stolen: u64,
     pub overflowed: u64,
     pub parked: u64,
@@ -81,10 +86,11 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "spawned={} executed={} stolen={} overflowed={} parked={} helped={} \
+            "spawned={} executed={} cancelled={} stolen={} overflowed={} parked={} helped={} \
              wait_parks={} quiesce_parks={} wakes_targeted={} wakes_any={}",
             self.spawned,
             self.executed,
+            self.cancelled,
             self.stolen,
             self.overflowed,
             self.parked,
@@ -120,6 +126,7 @@ mod tests {
         for key in [
             "spawned",
             "executed",
+            "cancelled",
             "stolen",
             "overflowed",
             "parked",

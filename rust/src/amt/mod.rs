@@ -22,6 +22,7 @@
 //! * [`metrics`] — counters for spawned/executed/stolen/parked tasks and
 //!   the targeted-wake observability surface.
 
+pub mod cancel;
 pub mod deque;
 pub mod future;
 pub mod metrics;
@@ -31,7 +32,8 @@ pub mod scheduler;
 pub mod task;
 pub mod worker;
 
-pub use future::{when_all, Future, Promise};
+pub use cancel::CancelToken;
+pub use future::{when_all, Future, Outcome, Promise};
 pub use park::IdleMode;
 pub use policy::PolicyKind;
 pub use scheduler::Scheduler;

@@ -7,6 +7,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::cancel::CancelToken;
+
 /// Scheduling priority, mirroring `hpx::threads::thread_priority_*`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Priority {
@@ -33,6 +35,11 @@ pub struct Task {
     pub priority: Priority,
     /// Description shown by metrics/tracing ("omp_implicit_task", ...).
     pub desc: &'static str,
+    /// Cancellation scope, if any: checked by the worker at dispatch — a
+    /// cancelled task's body is dropped unrun (ISSUE 6).  Bodies whose
+    /// side effects others wait on must release them from `Drop` guards,
+    /// not from the closure tail.
+    pub cancel: Option<CancelToken>,
     f: Box<dyn FnOnce() + Send + 'static>,
 }
 
@@ -46,8 +53,20 @@ impl Task {
             id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
             priority,
             desc,
+            cancel: None,
             f: Box::new(f),
         }
+    }
+
+    /// Attach a cancellation scope (builder-style).
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Whether the task's cancellation scope (if any) has fired.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|t| t.is_cancelled())
     }
 
     /// Build from an already-boxed body — the batch-spawn path hands over
@@ -62,6 +81,7 @@ impl Task {
             id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
             priority,
             desc,
+            cancel: None,
             f,
         }
     }

@@ -58,6 +58,22 @@ pub(super) fn set_current(ctx: Option<(Arc<Shared>, usize)>) {
 
 /// Execute one task, with panic isolation and accounting.
 pub(super) fn execute(shared: &Shared, task: Task) {
+    // Scheduler-dispatch cancellation point (ISSUE 6): a task whose
+    // cancel token fired is dropped unrun.  Dropping the closure still
+    // runs its RAII guards (task-layer completion promises, OMP retire
+    // guards), so waiters observe completion — with a `Cancelled`/empty
+    // outcome — instead of hanging.
+    if task.is_cancelled() {
+        Metrics::inc(&shared.metrics.cancelled);
+        let result = catch_unwind(AssertUnwindSafe(|| drop(task)));
+        if result.is_err() {
+            shared.panics.fetch_add(1, Ordering::SeqCst);
+        }
+        if shared.live.fetch_sub(1, Ordering::Release) == 1 {
+            shared.quiesce.notify_all();
+        }
+        return;
+    }
     Metrics::inc(&shared.metrics.executed);
     let result = catch_unwind(AssertUnwindSafe(|| task.run()));
     if result.is_err() {

@@ -16,13 +16,14 @@
 //! are thin front-ends over this module.
 
 use std::sync::{Arc, Barrier};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::baseline::BaselineRuntime;
 use crate::blaze::{self, DynMatrix, DynVector};
 use crate::omp::OmpRuntime;
 use crate::par::{ExecMode, Executor, HpxMpRuntime, Policy};
 use crate::util::stats::percentile;
+use crate::util::timing::spin_wait;
 
 /// Which kernels a client's request stream cycles through.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,6 +101,21 @@ pub struct ServeCfg {
     pub matvec_dim: usize,
     /// dmatdmatmult square dimension (element threshold 3 025 ≈ 55×55).
     pub mmult_dim: usize,
+    /// Per-request wall-clock deadline in microseconds (ISSUE 6).  When
+    /// set, every request's [`Policy`] carries `.deadline(..)` — requests
+    /// that blow the budget abandon their un-started chunks — and
+    /// requests finishing late count as `deadline_misses` (excluded from
+    /// goodput).  `None` disables deadline accounting entirely.
+    pub deadline_us: Option<u64>,
+    /// Deadline-aware load shedding: before submitting, a client consults
+    /// [`Executor::overloaded`] (the admission budget's saturation gauge)
+    /// and — after `retries` bounded backoff attempts — *rejects* the
+    /// request outright instead of queueing it into certain deadline
+    /// death.  Shed requests are counted, never timed.
+    pub shed: bool,
+    /// Backoff attempts before a shed (exponential spin: 50 µs, 100 µs,
+    /// 200 µs, ... capped at 3.2 ms per attempt).
+    pub retries: usize,
 }
 
 impl ServeCfg {
@@ -113,6 +129,9 @@ impl ServeCfg {
             vec_len: 50_000,
             matvec_dim: 400,
             mmult_dim: 64,
+            deadline_us: None,
+            shed: false,
+            retries: 2,
         }
     }
 }
@@ -124,10 +143,40 @@ pub struct ServeStats {
     pub mix: KernelMix,
     pub clients: usize,
     pub threads: usize,
+    /// Requests that actually executed (shed and crashed requests are
+    /// accounted separately — a run where nothing completed reports 0).
     pub total_requests: usize,
     pub reqs_per_sec: f64,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// Client threads that panicked; their streams are charged to
+    /// `failed_requests` and the survivors' results still aggregate
+    /// (ISSUE 6 fault containment — one crashed client must not take the
+    /// run down with it).
+    pub failed_clients: usize,
+    /// Requests lost to crashed clients (`requests_per_client` each).
+    pub failed_requests: usize,
+    /// Requests rejected by the load shedder (overloaded after retries).
+    pub shed: usize,
+    /// Backoff attempts taken across all clients before submit/shed.
+    pub retries: usize,
+    /// Completed requests that finished after their deadline.
+    pub deadline_misses: usize,
+    /// Requests completed *within* their deadline per wall second — the
+    /// serving metric shedding is supposed to protect.  Equals
+    /// `reqs_per_sec` when no deadline is configured.
+    pub goodput_per_sec: f64,
+}
+
+/// What one client thread brings home (drive() aggregates these).
+struct ClientReport {
+    start: Instant,
+    stop: Instant,
+    latencies: Vec<f64>,
+    shed: usize,
+    retries: usize,
+    deadline_misses: usize,
+    in_deadline: usize,
 }
 
 /// Serve the stream on **one shared hpxMP runtime**: every client's
@@ -170,23 +219,51 @@ fn drive(cfg: &ServeCfg, runtime: &'static str, rts: Vec<Arc<dyn Executor>>) -> 
         })
         .collect();
     start.wait();
+    // Coordinator-side fallback clock: when *every* client crashed there
+    // are no client-side timestamps, but the run still has a duration.
+    let t_origin = Instant::now();
     // Wall time spans the clients' own clocks (earliest start to latest
     // stop), not the coordinator's post-barrier wakeup — a descheduled
     // coordinator must not inflate reqs/sec.
     let mut latencies = Vec::with_capacity(cfg.clients * cfg.requests_per_client);
     let mut first_start: Option<Instant> = None;
     let mut last_stop: Option<Instant> = None;
+    let (mut failed_clients, mut failed_requests) = (0, 0);
+    let (mut shed, mut retries, mut deadline_misses, mut in_deadline) = (0, 0, 0, 0);
     for h in handles {
-        let (t_start, t_stop, lat) = h.join().expect("serve client panicked");
-        first_start = Some(first_start.map_or(t_start, |f| f.min(t_start)));
-        last_stop = Some(last_stop.map_or(t_stop, |l| l.max(t_stop)));
-        latencies.extend(lat);
+        match h.join() {
+            Ok(rep) => {
+                first_start = Some(first_start.map_or(rep.start, |f| f.min(rep.start)));
+                last_stop = Some(last_stop.map_or(rep.stop, |l| l.max(rep.stop)));
+                latencies.extend(rep.latencies);
+                shed += rep.shed;
+                retries += rep.retries;
+                deadline_misses += rep.deadline_misses;
+                in_deadline += rep.in_deadline;
+            }
+            Err(_) => {
+                // The client thread panicked mid-stream.  Its requests
+                // are lost, but the run survives: charge the whole stream
+                // as failed and keep aggregating the other clients.
+                failed_clients += 1;
+                failed_requests += cfg.requests_per_client;
+            }
+        }
     }
-    let wall = last_stop
-        .unwrap()
-        .duration_since(first_start.unwrap())
-        .as_secs_f64()
-        .max(1e-9);
+    let wall = match (first_start, last_stop) {
+        (Some(f), Some(l)) => l.duration_since(f),
+        _ => t_origin.elapsed(),
+    }
+    .as_secs_f64()
+    .max(1e-9);
+    let (p50_us, p99_us) = if latencies.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (
+            percentile(&latencies, 50.0) * 1e6,
+            percentile(&latencies, 99.0) * 1e6,
+        )
+    };
     ServeStats {
         runtime,
         mix: cfg.mix,
@@ -194,23 +271,33 @@ fn drive(cfg: &ServeCfg, runtime: &'static str, rts: Vec<Arc<dyn Executor>>) -> 
         threads: cfg.threads,
         total_requests: latencies.len(),
         reqs_per_sec: latencies.len() as f64 / wall,
-        p50_us: percentile(&latencies, 50.0) * 1e6,
-        p99_us: percentile(&latencies, 99.0) * 1e6,
+        p50_us,
+        p99_us,
+        failed_clients,
+        failed_requests,
+        shed,
+        retries,
+        deadline_misses,
+        goodput_per_sec: in_deadline as f64 / wall,
     }
 }
 
 /// One client: allocate operands once (outside the clock), then issue the
-/// request stream, timing each request individually.  Returns this
-/// client's (stream start, stream stop, per-request latencies).
-fn client_loop(
-    ci: usize,
-    rt: Arc<dyn Executor>,
-    cfg: &ServeCfg,
-    start: &Barrier,
-) -> (Instant, Instant, Vec<f64>) {
-    let pol = Policy::with_mode(cfg.mode)
+/// request stream, timing each request individually.
+///
+/// With a deadline configured every request's policy carries it (late
+/// requests abandon un-started chunks and count as misses); with `shed`
+/// on, requests arriving while the executor is saturated back off
+/// (bounded exponential spin) and are finally *rejected* rather than
+/// queued — overload turns into explicit `Rejected` outcomes instead of
+/// a latency collapse.
+fn client_loop(ci: usize, rt: Arc<dyn Executor>, cfg: &ServeCfg, start: &Barrier) -> ClientReport {
+    let mut pol = Policy::with_mode(cfg.mode)
         .on(rt.as_ref())
         .threads(cfg.threads);
+    if let Some(d) = cfg.deadline_us {
+        pol = pol.deadline(Duration::from_micros(d));
+    }
     let kernels = cfg.mix.kernels();
     let seed = ci as u64;
     let a = DynVector::random(cfg.vec_len, 100 + seed);
@@ -225,8 +312,33 @@ fn client_loop(
 
     start.wait();
     let stream_start = Instant::now();
-    let mut latencies = Vec::with_capacity(cfg.requests_per_client);
+    let mut rep = ClientReport {
+        start: stream_start,
+        stop: stream_start,
+        latencies: Vec::with_capacity(cfg.requests_per_client),
+        shed: 0,
+        retries: 0,
+        deadline_misses: 0,
+        in_deadline: 0,
+    };
     for r in 0..cfg.requests_per_client {
+        if cfg.shed && rt.overloaded() {
+            // Bounded backoff: give in-flight regions a chance to retire
+            // before giving up on this request.
+            let mut admitted = false;
+            for attempt in 0..cfg.retries {
+                spin_wait(Duration::from_micros(50 << attempt.min(6)));
+                rep.retries += 1;
+                if !rt.overloaded() {
+                    admitted = true;
+                    break;
+                }
+            }
+            if !admitted {
+                rep.shed += 1;
+                continue;
+            }
+        }
         let kernel = kernels[(ci + r) % kernels.len()];
         let t0 = Instant::now();
         match kernel {
@@ -235,9 +347,15 @@ fn client_loop(
             Kernel::MatVec => blaze::dmatdvecmult(&pol, &mv_a, &mv_x, &mut mv_y),
             Kernel::MMult => blaze::dmatdmatmult(&pol, &mm_a, &mm_b, &mut mm_c),
         }
-        latencies.push(t0.elapsed().as_secs_f64());
+        let elapsed = t0.elapsed();
+        rep.latencies.push(elapsed.as_secs_f64());
+        match cfg.deadline_us {
+            Some(d) if elapsed > Duration::from_micros(d) => rep.deadline_misses += 1,
+            _ => rep.in_deadline += 1,
+        }
     }
-    (stream_start, Instant::now(), latencies)
+    rep.stop = Instant::now();
+    rep
 }
 
 #[cfg(test)]
@@ -306,6 +424,138 @@ mod tests {
         assert_eq!(rt.reserved_workers(), 0, "admission budget leaked");
         let per = serve_per_client(&cfg);
         assert_eq!(per.total_requests, 2 * 4);
+    }
+
+    /// Executor whose every fork crashes — the hostile tenant the
+    /// fault-containment satellite hardens `drive` against.
+    struct PanickingExec;
+
+    impl Executor for PanickingExec {
+        fn name(&self) -> &'static str {
+            "boom"
+        }
+
+        fn max_concurrency(&self) -> usize {
+            4
+        }
+
+        fn bulk_sync(
+            &self,
+            _threads: usize,
+            _range: std::ops::Range<i64>,
+            _sched: crate::par::LoopSched,
+            _body: &(dyn Fn(std::ops::Range<i64>) + Sync),
+        ) {
+            panic!("injected executor fault");
+        }
+    }
+
+    /// Executor that reports permanent saturation (the admission budget
+    /// pinned at its ceiling) but executes fine — isolates the shedder.
+    struct SaturatedExec;
+
+    impl Executor for SaturatedExec {
+        fn name(&self) -> &'static str {
+            "saturated"
+        }
+
+        fn max_concurrency(&self) -> usize {
+            2
+        }
+
+        fn bulk_sync(
+            &self,
+            _threads: usize,
+            range: std::ops::Range<i64>,
+            _sched: crate::par::LoopSched,
+            body: &(dyn Fn(std::ops::Range<i64>) + Sync),
+        ) {
+            body(range);
+        }
+
+        fn overloaded(&self) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn panicking_client_is_contained_and_survivors_aggregate() {
+        // Client 0's executor blows up on its first over-threshold fork;
+        // client 1 must still finish and the run must still report.
+        let cfg = ServeCfg::new(2, 2, 4, KernelMix::Vector); // vec_len 50 000 > threshold
+        let rts: Vec<Arc<dyn Executor>> = vec![
+            Arc::new(PanickingExec),
+            Arc::new(BaselineRuntime::new(2)) as Arc<dyn Executor>,
+        ];
+        let stats = drive(&cfg, "mixed-fates", rts);
+        assert_eq!(stats.failed_clients, 1);
+        assert_eq!(stats.failed_requests, 4, "crashed stream charged whole");
+        assert_eq!(stats.total_requests, 4, "survivor's stream aggregated");
+        assert!(stats.reqs_per_sec > 0.0);
+    }
+
+    #[test]
+    fn all_clients_crashed_still_reports_without_hanging() {
+        // Zero successful clients: no client-side clocks, no latencies —
+        // the coordinator's fallback clock and empty-percentile guards
+        // must carry the report.
+        let cfg = ServeCfg::new(2, 2, 3, KernelMix::Vector);
+        let rts: Vec<Arc<dyn Executor>> =
+            vec![Arc::new(PanickingExec), Arc::new(PanickingExec)];
+        let stats = drive(&cfg, "all-dead", rts);
+        assert_eq!(stats.failed_clients, 2);
+        assert_eq!(stats.failed_requests, 6);
+        assert_eq!(stats.total_requests, 0);
+        assert_eq!(stats.reqs_per_sec, 0.0);
+        assert_eq!(stats.p50_us, 0.0);
+        assert_eq!(stats.goodput_per_sec, 0.0);
+    }
+
+    #[test]
+    fn overloaded_executor_sheds_after_bounded_retries() {
+        // Permanently saturated + shedding on: every request backs off
+        // `retries` times, then is rejected — never queued, never timed.
+        let mut cfg = tiny(KernelMix::Vector);
+        cfg.shed = true;
+        cfg.retries = 1;
+        let rts: Vec<Arc<dyn Executor>> =
+            vec![Arc::new(SaturatedExec), Arc::new(SaturatedExec)];
+        let stats = drive(&cfg, "shed-all", rts);
+        assert_eq!(stats.shed, 2 * 4, "every request rejected");
+        assert_eq!(stats.retries, 2 * 4, "one backoff attempt per request");
+        assert_eq!(stats.total_requests, 0);
+        assert_eq!(stats.goodput_per_sec, 0.0);
+        assert_eq!(stats.failed_clients, 0, "shedding is not failure");
+    }
+
+    #[test]
+    fn zero_deadline_counts_every_completion_as_miss() {
+        // deadline_us = 0: nothing can finish in time, so goodput must
+        // read zero while throughput still counts the completions.
+        let rt = OmpRuntime::for_tests(2);
+        let mut cfg = tiny(KernelMix::Vector);
+        cfg.deadline_us = Some(0);
+        let stats = serve_shared(&rt, &cfg);
+        assert_eq!(stats.total_requests, 2 * 4);
+        assert_eq!(stats.deadline_misses, 2 * 4);
+        assert_eq!(stats.goodput_per_sec, 0.0);
+        assert!(stats.reqs_per_sec > 0.0);
+        assert_eq!(rt.reserved_workers(), 0, "admission budget leaked");
+    }
+
+    #[test]
+    fn expired_deadline_abandons_chunks_in_real_serving() {
+        // Over-threshold requests on the shared runtime with an already-
+        // expired deadline: the policy's token fires at algorithm entry,
+        // chunks are abandoned, and the stream still completes cleanly.
+        let rt = OmpRuntime::for_tests(2);
+        let mut cfg = tiny(KernelMix::Vector);
+        cfg.vec_len = 50_000;
+        cfg.deadline_us = Some(0);
+        let stats = serve_shared(&rt, &cfg);
+        assert_eq!(stats.total_requests, 2 * 4);
+        assert_eq!(stats.deadline_misses, 2 * 4);
+        assert_eq!(rt.reserved_workers(), 0, "admission budget leaked");
     }
 
     #[test]

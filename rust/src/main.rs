@@ -31,7 +31,7 @@ use hpxmp::util::timing::BenchCfg;
 
 const VALUE_OPTS: &[&str] = &[
     "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks", "clients", "requests",
-    "mix", "exec", "tile",
+    "mix", "exec", "tile", "deadline-us", "retries",
 ];
 
 fn main() {
@@ -83,6 +83,9 @@ fn print_help() {
            --clients M               concurrent serving clients (serve; default 4)\n\
            --requests N              requests per client (serve; default 200)\n\
            --mix <vec|mixed>         serving kernel mix (serve; default mixed)\n\
+           --deadline-us D           per-request deadline in microseconds (serve)\n\
+           --shed                    shed requests when the runtime is saturated (serve)\n\
+           --retries N               backoff attempts before a shed (serve; default 2)\n\
            --quick                   fast measurement profile\n\
            --out DIR                 report directory (default results/)\n"
     );
@@ -291,26 +294,49 @@ fn cmd_serve(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
         None => PolicyKind::PriorityLocal,
     };
 
+    let deadline_us = match args.get("deadline-us") {
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("--deadline-us: {e}"))?,
+        ),
+        None => None,
+    };
+
     let rt = OmpRuntime::new(workers, policy);
     rt.icv.set_nthreads(threads);
     let mut cfg = ServeCfg::new(clients, threads, requests, mix);
     cfg.mode = mode;
+    cfg.deadline_us = deadline_us;
+    cfg.shed = args.flag("shed");
+    cfg.retries = args.get_usize("retries", 2);
     println!(
         "serve: {clients} clients x {requests} requests, {threads}-thread regions, \
-         mix={}, exec={}, shared runtime has {workers} workers",
+         mix={}, exec={}, shared runtime has {workers} workers{}{}",
         mix.name(),
-        mode.name()
+        mode.name(),
+        match deadline_us {
+            Some(d) => format!(", deadline {d} us"),
+            None => String::new(),
+        },
+        if cfg.shed { ", shedding on" } else { "" }
     );
     let shared = serve_shared(&rt, &cfg);
     let per = serve_per_client(&cfg);
     println!(
-        "{:<20} {:>12} {:>12} {:>12}",
-        "runtime", "reqs/s", "p50 us", "p99 us"
+        "{:<20} {:>12} {:>12} {:>12} {:>10} {:>8} {:>8} {:>8}",
+        "runtime", "reqs/s", "p50 us", "p99 us", "goodput/s", "shed", "misses", "failed"
     );
     for s in [&shared, &per] {
         println!(
-            "{:<20} {:>12.1} {:>12.1} {:>12.1}",
-            s.runtime, s.reqs_per_sec, s.p50_us, s.p99_us
+            "{:<20} {:>12.1} {:>12.1} {:>12.1} {:>10.1} {:>8} {:>8} {:>8}",
+            s.runtime,
+            s.reqs_per_sec,
+            s.p50_us,
+            s.p99_us,
+            s.goodput_per_sec,
+            s.shed,
+            s.deadline_misses,
+            s.failed_requests
         );
     }
     println!(

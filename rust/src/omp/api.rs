@@ -8,8 +8,8 @@ use std::sync::atomic::Ordering;
 
 use super::icv::num_procs;
 use super::lock::{OmpLock, OmpNestLock};
-use super::team::current_ctx;
 use super::runtime;
+use super::team::{current_ctx, CancelKind};
 
 // --- team/thread introspection --------------------------------------------
 
@@ -86,6 +86,30 @@ pub fn omp_set_max_active_levels(n: usize) {
 /// `omp_get_max_active_levels`.
 pub fn omp_get_max_active_levels() -> usize {
     runtime().icv.max_active_levels()
+}
+
+// --- cancellation (OpenMP 4.0) ----------------------------------------------
+
+/// `omp_get_cancellation`: whether the `cancel-var` ICV is on
+/// (`OMP_CANCELLATION`) — when off, `omp cancel` requests and
+/// cancellation points are no-ops per spec.
+pub fn omp_get_cancellation() -> bool {
+    runtime().icv.cancellation()
+}
+
+/// `#pragma omp cancel <kind>` against the calling thread's innermost
+/// context.  Returns `true` if the request was armed (ICV on and inside a
+/// parallel region), `false` otherwise.
+pub fn omp_cancel(kind: CancelKind) -> bool {
+    current_ctx().map(|c| c.cancel(kind)).unwrap_or(false)
+}
+
+/// `#pragma omp cancellation point <kind>` — `true` when the named
+/// construct has been cancelled and the caller should jump to its end.
+pub fn omp_cancellation_point(kind: CancelKind) -> bool {
+    current_ctx()
+        .map(|c| c.cancellation_point(kind))
+        .unwrap_or(false)
 }
 
 // --- dynamic/nested ---------------------------------------------------------
@@ -225,6 +249,14 @@ mod tests {
     #[test]
     fn num_procs_at_least_one() {
         assert!(omp_get_num_procs() >= 1);
+    }
+
+    #[test]
+    fn cancellation_api_is_noop_outside_parallel() {
+        // Outside any region there is no construct to cancel; both calls
+        // are safe no-ops regardless of the ICV.
+        assert!(!omp_cancel(CancelKind::Parallel));
+        assert!(!omp_cancellation_point(CancelKind::Taskgroup));
     }
 
     #[test]

@@ -66,6 +66,11 @@ pub struct Icvs {
     pub run_sched: Mutex<Schedule>,
     /// Max nesting depth for active parallel regions.
     pub max_active_levels: AtomicUsize,
+    /// `cancel-var` (`OMP_CANCELLATION`, OpenMP 4.0): whether `omp cancel`
+    /// and cancellation points have any effect.  Off by default per the
+    /// spec — cancellation requests become no-ops and every cancellation
+    /// point reports "not cancelled".
+    pub cancel: AtomicBool,
 }
 
 impl Icvs {
@@ -87,13 +92,27 @@ impl Icvs {
             .ok()
             .and_then(|v| v.trim().parse().ok())
             .unwrap_or(usize::MAX);
+        let cancel = env_bool("OMP_CANCELLATION", false);
         Self {
             nthreads: AtomicUsize::new(nthreads),
             dynamic: AtomicBool::new(dynamic),
             nested: AtomicBool::new(nested),
             run_sched: Mutex::new(run_sched),
             max_active_levels: AtomicUsize::new(max_active_levels),
+            cancel: AtomicBool::new(cancel),
         }
+    }
+
+    /// `cancel-var`: whether cancellation is enabled (`OMP_CANCELLATION`).
+    pub fn cancellation(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Enable/disable cancellation at runtime (tests/benches; the spec
+    /// only binds the env var at startup, but an explicit setter keeps
+    /// in-process harnesses from mutating the environment).
+    pub fn set_cancellation(&self, on: bool) {
+        self.cancel.store(on, Ordering::Relaxed);
     }
 
     pub fn nthreads(&self) -> usize {

@@ -13,6 +13,8 @@ use std::sync::Arc;
 
 use crossbeam_utils::CachePadded;
 
+use crate::amt::cancel::CancelToken;
+
 use super::barrier::wait_tick_no_help;
 use super::icv::{SchedKind, Schedule};
 use super::team::Ctx;
@@ -301,6 +303,18 @@ impl Iterator for StaticChunks {
 }
 
 impl Ctx {
+    /// Loop-construct cancellation token, present only when the
+    /// `cancel-var` ICV is on — `omp cancel for` makes every member stop
+    /// claiming/executing chunks at its next chunk boundary (OpenMP 4.0;
+    /// already-running chunk bodies finish, per spec).
+    fn loop_cancel(&self) -> Option<CancelToken> {
+        self.team
+            .rt()
+            .icv
+            .cancellation()
+            .then(|| self.team.loop_cancel_token())
+    }
+
     /// `#pragma omp for schedule(static[,chunk])` over `range`.
     /// No implicit barrier — callers add `ctx.barrier()` unless `nowait`.
     pub fn for_static(&self, range: Range<i64>, chunk: Option<usize>, mut body: impl FnMut(i64)) {
@@ -309,7 +323,11 @@ impl Ctx {
         if n <= 0 {
             return;
         }
+        let cancel = self.loop_cancel();
         for sub in static_chunks(self.tid, self.team.size, n, chunk) {
+            if cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                break;
+            }
             for i in sub {
                 body(range.start + i);
             }
@@ -328,7 +346,11 @@ impl Ctx {
         if n <= 0 {
             return;
         }
+        let cancel = self.loop_cancel();
         for sub in static_chunks(self.tid, self.team.size, n, chunk) {
+            if cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                break;
+            }
             body(range.start + sub.start..range.start + sub.end);
         }
     }
@@ -342,7 +364,11 @@ impl Ctx {
         mut body: impl FnMut(i64),
     ) {
         let desc = self.dispatch_init(range.clone(), schedule);
+        let cancel = self.loop_cancel();
         while let Some(sub) = desc.next_chunk() {
+            if cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                break;
+            }
             for i in sub {
                 body(range.start + i);
             }
@@ -582,6 +608,30 @@ mod tests {
         // First chunk is the largest; all >= the minimum chunk.
         assert!(sizes[0] >= *sizes.last().unwrap());
         assert!(sizes.iter().all(|&s| s >= 4 || s == *sizes.last().unwrap()));
+    }
+
+    #[test]
+    fn cancelled_loop_abandons_remaining_chunks() {
+        use crate::omp::team::{current_ctx, fork_call, CancelKind};
+        use crate::omp::OmpRuntime;
+        let rt = OmpRuntime::for_tests(2);
+        rt.icv.set_cancellation(true);
+        let seen = Arc::new(AtomicUsize::new(0));
+        let s = seen.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let c2 = ctx.clone();
+            let s2 = s.clone();
+            ctx.for_dynamic(0..1000, Schedule::new(SchedKind::Dynamic, Some(1)), move |i| {
+                s2.fetch_add(1, Ordering::SeqCst);
+                if i == 3 {
+                    assert!(c2.cancel(CancelKind::Loop));
+                }
+            });
+        });
+        // Team of one, chunk of one: iterations 0..=3 ran, then the next
+        // chunk boundary observed the cancel and abandoned the rest.
+        assert_eq!(seen.load(Ordering::SeqCst), 4);
     }
 
     #[test]

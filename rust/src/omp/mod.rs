@@ -33,8 +33,8 @@ use crate::amt::{PolicyKind, Scheduler};
 
 pub use icv::{SchedKind, Schedule};
 pub use pool::TeamPool;
-pub use tasking::{dep_in, dep_inout, dep_out, Dep, DepKind};
-pub use team::{current_ctx, fork_call, last_fork_was_pool_hit, Ctx, HotTeam};
+pub use tasking::{dep_in, dep_inout, dep_out, Dep, DepKind, TaskGroup};
+pub use team::{current_ctx, fork_call, last_fork_was_pool_hit, CancelKind, Ctx, HotTeam};
 
 /// One hpxMP runtime instance: the AMT scheduler ("HPX backend") plus ICVs
 /// and the OMPT registry.
@@ -54,6 +54,10 @@ pub struct OmpRuntime {
     /// the admission budget that keeps K concurrent fork/join clients
     /// from oversubscribing the W scheduler workers (DESIGN.md §8).
     pub(crate) reserved_workers: AtomicUsize,
+    /// Parallel-region member bodies that panicked and were contained
+    /// (team still joined, budget released, team still poolable) —
+    /// ISSUE 6's fault-containment observability gauge.
+    pub(crate) region_panics: AtomicUsize,
 }
 
 /// `HPXMP_HOT_TEAM` — defaults to on; `0|false|off|no` disables.
@@ -79,6 +83,7 @@ impl OmpRuntime {
             team_pool: TeamPool::default(),
             hot_team_on: AtomicBool::new(hot_team_from_env()),
             reserved_workers: AtomicUsize::new(0),
+            region_panics: AtomicUsize::new(0),
         })
     }
 
@@ -95,6 +100,7 @@ impl OmpRuntime {
             team_pool: TeamPool::default(),
             hot_team_on: AtomicBool::new(hot_team_from_env()),
             reserved_workers: AtomicUsize::new(0),
+            region_panics: AtomicUsize::new(0),
         })
     }
 
@@ -132,6 +138,12 @@ impl OmpRuntime {
     /// (admission budget gauge; 0 when the runtime is quiescent).
     pub fn reserved_workers(&self) -> usize {
         self.reserved_workers.load(Ordering::Relaxed)
+    }
+
+    /// Contained panics inside parallel-region member bodies (the team
+    /// joined anyway and went back to the pool; see `team::implicit_body`).
+    pub fn region_panics(&self) -> usize {
+        self.region_panics.load(Ordering::Relaxed)
     }
 
     /// Remove and return one parked team (test/diagnostic hook — lets

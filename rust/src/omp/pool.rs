@@ -22,6 +22,8 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::util::lock_unpoisoned;
+
 use super::team::HotTeam;
 
 /// Shard count: sizes are small integers, so `size % SHARDS` spreads
@@ -63,8 +65,14 @@ impl TeamPool {
     /// Check out a parked team of exactly `size`, if one is available.
     /// Counts a hit or a miss either way — the pool's hit rate *is* the
     /// fast-path rate of top-level fork/join.
+    ///
+    /// Shard locks recover from poisoning ([`lock_unpoisoned`]): every
+    /// critical section here is a single `Vec` push/pop/remove plus a
+    /// gauge bump, valid at every unlock — a client thread that panics
+    /// while forking (chaos injection, user bug) must not wedge the pool
+    /// for every other tenant.
     pub fn checkout(&self, size: usize) -> Option<HotTeam> {
-        let mut shard = self.shard(size).lock().unwrap();
+        let mut shard = lock_unpoisoned(self.shard(size));
         if let Some(pos) = shard.iter().position(|h| h.team.size == size) {
             let h = shard.swap_remove(pos);
             // Gauge updated under the shard lock so it can never transiently
@@ -83,7 +91,7 @@ impl TeamPool {
     /// Park an idle (joined, pristine) team for the next same-size region.
     /// Returns `false` (dropping the team) when the shard is at capacity.
     pub fn park(&self, team: HotTeam) -> bool {
-        let mut shard = self.shard(team.team.size).lock().unwrap();
+        let mut shard = lock_unpoisoned(self.shard(team.team.size));
         if shard.len() >= MAX_PARKED_PER_SHARD {
             return false;
         }
@@ -96,7 +104,7 @@ impl TeamPool {
     pub fn drain(&self) -> Vec<HotTeam> {
         let mut all = Vec::new();
         for shard in &self.shards {
-            let mut s = shard.lock().unwrap();
+            let mut s = lock_unpoisoned(shard);
             self.parked.fetch_sub(s.len(), Ordering::Relaxed);
             all.append(&mut *s);
         }
@@ -106,7 +114,7 @@ impl TeamPool {
     /// Pop one parked team of any size (diagnostics/leak checks).
     pub fn take_any(&self) -> Option<HotTeam> {
         for shard in &self.shards {
-            let mut s = shard.lock().unwrap();
+            let mut s = lock_unpoisoned(shard);
             if let Some(h) = s.pop() {
                 self.parked.fetch_sub(1, Ordering::Relaxed);
                 return Some(h);

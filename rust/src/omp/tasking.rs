@@ -20,16 +20,38 @@
 //! final child retirement.
 
 use std::collections::HashMap;
-use std::sync::atomic::AtomicUsize;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::amt::cancel::CancelToken;
 use crate::amt::future::{when_all, Future, Promise};
 use crate::amt::task::Hint;
 use crate::amt::{worker, Priority};
+use crate::util::{fault, lock_unpoisoned};
 
 use super::barrier::WaitCounter;
 use super::ompt::TaskStatus;
 use super::team::{with_ctx, Ctx, ParentFrame};
+
+/// One live `taskgroup` scope: the outstanding-task counter the group end
+/// waits on, plus the cancellation token `omp_cancel(taskgroup)` trips.
+/// Tasks snapshot the group stack at creation; the token is checked at
+/// dispatch, so cancelling a group observably skips every member task
+/// that has not yet begun executing (OpenMP 4.0 semantics).
+#[derive(Clone)]
+pub struct TaskGroup {
+    pub(super) counter: Arc<WaitCounter>,
+    pub(super) token: CancelToken,
+}
+
+impl TaskGroup {
+    fn new() -> Self {
+        Self {
+            counter: Arc::new(WaitCounter::new()),
+            token: CancelToken::new(),
+        }
+    }
+}
 
 /// Dependence kind of one `depend` clause item.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,15 +100,52 @@ pub(super) struct TaskNode {
     ctx: Arc<Ctx>,
     /// Counters to release on completion.
     parent_children: Arc<WaitCounter>,
-    groups: Vec<Arc<WaitCounter>>,
+    groups: Vec<TaskGroup>,
     ompt_id: u64,
     /// Fulfilled exactly once, right after the body ran (before the
     /// counters drop — where the old engine drained successor edges), so
     /// dependent continuations dispatch as early as possible.
     promise: Mutex<Option<Promise<()>>>,
+    /// Retirement-happened latch: [`TaskNode::retire`] is reachable from
+    /// both the execute-path drop guard and [`Drop`] (a node whose closure
+    /// is discarded unrun — cancelled at dispatch, short-circuited
+    /// continuation, scheduler teardown) and must release its counters
+    /// exactly once either way.
+    retired: AtomicBool,
 }
 
 impl TaskNode {
+    /// Publish completion and release every counter, exactly once.
+    ///
+    /// The promise is fulfilled with `Value(())` even when the body
+    /// panicked or never ran: dependence edges order *storage access*,
+    /// not success — a crashed or skipped predecessor must release its
+    /// dependents (which apply their own cancellation checks), never
+    /// hang or poison them.
+    fn retire(&self) {
+        if self.retired.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // Publish completion first (where the old engine drained
+        // successor edges): dependent continuations dispatch now, and
+        // anyone who later observes the counters dropped (`taskwait`
+        // returning) finds this future ready.
+        if let Some(p) = lock_unpoisoned(&self.promise).take() {
+            p.set_value(());
+        }
+        for g in &self.groups {
+            g.counter.decrement();
+        }
+        self.parent_children.decrement();
+        self.ctx.team.explicit.decrement();
+        // Tolerant upgrade: retirement can run from `Drop` during
+        // scheduler teardown, after the runtime itself is gone.
+        if let Some(rt) = self.ctx.team.rt_opt() {
+            rt.ompt
+                .emit_task_schedule(self.ompt_id, TaskStatus::Complete, 0);
+        }
+    }
+
     fn execute(self: &Arc<Self>) {
         let rt = self.ctx.team.rt();
         rt.ompt
@@ -97,30 +156,26 @@ impl TaskNode {
         // crashed task must not hang its dependents, `taskwait`ers, or
         // taskgroups (the panic itself stays isolated and counted by the
         // worker layer).
-        struct Retire<'a>(&'a Arc<TaskNode>, &'a Arc<super::OmpRuntime>);
+        struct Retire<'a>(&'a TaskNode);
         impl Drop for Retire<'_> {
             fn drop(&mut self) {
-                let node = self.0;
-                // Publish completion first (where the old engine drained
-                // successor edges): dependent continuations dispatch now,
-                // and anyone who later observes the counters dropped
-                // (`taskwait` returning) finds this future ready.
-                if let Some(p) = node.promise.lock().unwrap().take() {
-                    p.set_value(());
-                }
-                for g in &node.groups {
-                    g.decrement();
-                }
-                node.parent_children.decrement();
-                node.ctx.team.explicit.decrement();
-                self.1
-                    .ompt
-                    .emit_task_schedule(node.ompt_id, TaskStatus::Complete, 0);
+                self.0.retire();
             }
         }
-        let _retire = Retire(self, &rt);
+        let _retire = Retire(self);
 
-        let payload = self.payload.lock().unwrap().take();
+        // `omp_cancel(taskgroup)`: a member task whose group was cancelled
+        // before it started retires without running its body (the spec's
+        // "tasks that have not yet begun execution" are skipped).
+        if rt.icv.cancellation() && self.groups.iter().any(|g| g.token.is_cancelled()) {
+            return;
+        }
+
+        // Chaos harness boundary: the guard above is armed, so an injected
+        // panic here exercises the retire-on-unwind path.
+        fault::inject(fault::Site::TaskRun);
+
+        let payload = lock_unpoisoned(&self.payload).take();
         if let Some(f) = payload {
             // Run under a task-private context: same team binding as the
             // creator (so team constructs resolve), but a fresh parent
@@ -136,6 +191,17 @@ impl TaskNode {
             });
             with_ctx(task_ctx, f);
         }
+    }
+}
+
+impl Drop for TaskNode {
+    fn drop(&mut self) {
+        // Backstop for nodes whose closure was discarded unrun — a
+        // cancelled AMT task dropped at dispatch, a dependence
+        // continuation short-circuited by an error outcome, or scheduler
+        // teardown.  [`TaskNode::retire`]'s latch makes this a no-op on
+        // the normal execute path.
+        self.retire();
     }
 }
 
@@ -231,9 +297,9 @@ impl Ctx {
 
         self.parent.children.increment();
         self.team.explicit.increment();
-        let groups: Vec<Arc<WaitCounter>> = self.parent.groups.lock().unwrap().clone();
+        let groups: Vec<TaskGroup> = lock_unpoisoned(&self.parent.groups).clone();
         for g in &groups {
-            g.increment();
+            g.counter.increment();
         }
 
         let promise = Promise::new();
@@ -245,6 +311,7 @@ impl Ctx {
             groups,
             ompt_id,
             promise: Mutex::new(Some(promise)),
+            retired: AtomicBool::new(false),
         });
 
         // Registration and predecessor lookup are one atomic step under
@@ -254,7 +321,7 @@ impl Ctx {
         let preds: Vec<Future<()>> = if deps.is_empty() {
             Vec::new()
         } else {
-            self.parent.deps.lock().unwrap().register(&done, deps)
+            lock_unpoisoned(&self.parent.deps).register(&done, deps)
         };
 
         let sched = rt.sched.clone();
@@ -295,19 +362,19 @@ impl Ctx {
     /// `body` cannot leave it on the stack — later tasks in the region
     /// would otherwise inherit a dead group and corrupt its accounting.
     pub fn taskgroup(&self, body: impl FnOnce()) {
-        let group = Arc::new(WaitCounter::new());
-        self.parent.groups.lock().unwrap().push(group.clone());
+        let group = TaskGroup::new();
+        lock_unpoisoned(&self.parent.groups).push(group.clone());
         struct PopGroup<'a>(&'a ParentFrame);
         impl Drop for PopGroup<'_> {
             fn drop(&mut self) {
-                self.0.groups.lock().unwrap().pop();
+                lock_unpoisoned(&self.0.groups).pop();
             }
         }
         {
             let _guard = PopGroup(&self.parent);
             body();
         }
-        group.wait_zero();
+        group.counter.wait_zero();
     }
 
     /// `#pragma omp taskyield`: give the scheduler a chance to run one
@@ -560,6 +627,78 @@ mod tests {
             ctx.taskwait();
         });
         assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn taskgroup_cancel_skips_not_yet_started_tasks() {
+        // ISSUE 6 acceptance: `omp_cancel(taskgroup)` must observably skip
+        // member tasks that have not begun executing.  One AMT worker is
+        // pinned inside the first task (gated on an atomic), so the 15
+        // tasks spawned afterwards provably cannot have started when the
+        // group is cancelled; on release they reach dispatch, see the
+        // cancelled group token, and retire without running their bodies.
+        use std::sync::atomic::AtomicBool;
+        let rt = OmpRuntime::for_tests(1);
+        rt.icv.set_cancellation(true);
+        let ran = Arc::new(AU::new(0));
+        let gate = Arc::new(AtomicBool::new(false));
+        let started = Arc::new(AtomicBool::new(false));
+        let (r, g, s) = (ran.clone(), gate.clone(), started.clone());
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let (r_in, g_in, s_in) = (r.clone(), g.clone(), s.clone());
+            ctx.taskgroup(|| {
+                let (r0, g0, s0) = (r_in.clone(), g_in.clone(), s_in.clone());
+                ctx.task(move || {
+                    s0.store(true, Ordering::SeqCst);
+                    while !g0.load(Ordering::SeqCst) {
+                        std::hint::spin_loop();
+                    }
+                    r0.fetch_add(1, Ordering::SeqCst);
+                });
+                // The sole worker is now inside the gated task.
+                while !s_in.load(Ordering::SeqCst) {
+                    std::hint::spin_loop();
+                }
+                for _ in 0..15 {
+                    let r = r_in.clone();
+                    ctx.task(move || {
+                        r.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+                assert!(ctx.cancel(crate::omp::team::CancelKind::Taskgroup));
+                g_in.store(true, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(
+            ran.load(Ordering::SeqCst),
+            1,
+            "only the already-running member may complete"
+        );
+        assert_eq!(rt.sched.task_panics(), 0);
+    }
+
+    #[test]
+    fn taskgroup_cancel_requires_icv() {
+        // With `cancel-var` off (the default), the cancel request is a
+        // no-op and every task runs.
+        let rt = OmpRuntime::for_tests(2);
+        let ran = Arc::new(AU::new(0));
+        let r = ran.clone();
+        fork_call(&rt, Some(1), move |_| {
+            let ctx = current_ctx().unwrap();
+            let r_in = r.clone();
+            ctx.taskgroup(|| {
+                assert!(!ctx.cancel(crate::omp::team::CancelKind::Taskgroup));
+                for _ in 0..8 {
+                    let r = r_in.clone();
+                    ctx.task(move || {
+                        r.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 8);
     }
 
     #[test]

@@ -34,17 +34,21 @@
 //!   so concurrent clients' teams land on disjoint queues.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
+use crate::amt::cancel::CancelToken;
 use crate::amt::park::WakeList;
 use crate::amt::task::Hint;
 use crate::amt::{worker, Priority};
+use crate::util::fault;
+use crate::util::lock_unpoisoned;
 
 use super::barrier::{TeamBarrier, WaitCounter};
 use super::loops::WsRing;
 use super::ompt::Endpoint;
-use super::tasking::DepMap;
+use super::tasking::{DepMap, TaskGroup};
 use super::OmpRuntime;
 
 /// A parallel team: `size` implicit tasks sharing barriers, worksharing
@@ -74,6 +78,43 @@ pub struct Team {
     pub(super) ws: WsRing,
     /// `single` construct claims: seq -> claiming tid.
     pub(super) singles: Mutex<HashMap<u64, usize>>,
+    /// `omp cancel` flags for this region (OpenMP 4.0): one token per
+    /// cancellable construct kind bound to the region, re-armed fresh on
+    /// every (re)use of the team.  Guarded by the `cancel-var` ICV at the
+    /// API layer; the tokens themselves are always present.  Valid at
+    /// every unlock point: the critical sections only clone or replace
+    /// whole tokens.
+    cancels: Mutex<RegionCancels>,
+}
+
+/// The per-region cancellation tokens (`omp cancel parallel` / `omp
+/// cancel for`; `taskgroup` tokens live on the taskgroup stack instead —
+/// they are scoped to a construct, not the region).
+struct RegionCancels {
+    parallel: CancelToken,
+    wsloop: CancelToken,
+}
+
+impl RegionCancels {
+    fn fresh() -> Self {
+        let parallel = CancelToken::new();
+        // A cancelled parallel region implies its worksharing loops are
+        // cancelled too (the spec's cancellation nesting), expressed as
+        // token parentage.
+        let wsloop = parallel.child();
+        Self { parallel, wsloop }
+    }
+}
+
+/// Which construct an `omp cancel` / `omp cancellation point` names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelKind {
+    /// The innermost enclosing parallel region.
+    Parallel,
+    /// The innermost enclosing worksharing loop.
+    Loop,
+    /// The innermost enclosing taskgroup of the current task.
+    Taskgroup,
 }
 
 impl Team {
@@ -96,7 +137,19 @@ impl Team {
             explicit: WaitCounter::new(),
             ws: WsRing::new(),
             singles: Mutex::new(HashMap::new()),
+            cancels: Mutex::new(RegionCancels::fresh()),
         })
+    }
+
+    /// The region's `parallel` cancellation token (clone of the shared
+    /// handle; cancellation through any clone is visible to all).
+    pub(super) fn parallel_cancel_token(&self) -> CancelToken {
+        lock_unpoisoned(&self.cancels).parallel.clone()
+    }
+
+    /// The region's worksharing-loop cancellation token.
+    pub(super) fn loop_cancel_token(&self) -> CancelToken {
+        lock_unpoisoned(&self.cancels).wsloop.clone()
     }
 
     /// The owning runtime.  Alive whenever a team member can run: the
@@ -106,6 +159,13 @@ impl Team {
         self.rt
             .upgrade()
             .expect("OmpRuntime dropped while a team was in use")
+    }
+
+    /// Tolerant variant of [`Team::rt`] for drop paths that may outlive
+    /// the runtime (task nodes discarded during scheduler teardown must
+    /// not panic-in-drop and abort).
+    pub(super) fn rt_opt(&self) -> Option<Arc<OmpRuntime>> {
+        self.rt.upgrade()
     }
 
     /// OMPT id of the region this team currently executes.
@@ -121,7 +181,7 @@ impl Team {
 pub struct ParentFrame {
     pub children: Arc<WaitCounter>,
     pub deps: Mutex<DepMap>,
-    pub groups: Mutex<Vec<Arc<WaitCounter>>>,
+    pub groups: Mutex<Vec<TaskGroup>>,
 }
 
 impl Default for ParentFrame {
@@ -137,11 +197,14 @@ impl Default for ParentFrame {
 impl ParentFrame {
     /// Re-arm for hot-team reuse: drop the finished region's dependence
     /// records (their tasks are all retired — keeping them would only pin
-    /// dead completion-future states in memory).
+    /// dead completion-future states in memory).  Poison-recovering locks
+    /// (ISSUE 6): both structures are valid at every unlock point (`clear`
+    /// and push/pop only), and a region with a contained member panic must
+    /// still park its team un-poisoned.
     fn reset(&self) {
         debug_assert_eq!(self.children.count(), 0, "reused frame with live children");
-        self.deps.lock().unwrap().clear();
-        debug_assert!(self.groups.lock().unwrap().is_empty());
+        lock_unpoisoned(&self.deps).clear();
+        debug_assert!(lock_unpoisoned(&self.groups).is_empty());
     }
 }
 
@@ -201,6 +264,52 @@ impl Ctx {
 
     pub(super) fn next_ws_seq(&self) -> u64 {
         self.ws_seq.fetch_add(1, Ordering::Relaxed) as u64
+    }
+
+    /// `#pragma omp cancel <kind>` — request cancellation of the named
+    /// construct.  Returns `true` when the request was activated; always
+    /// `false` (a no-op) when the `cancel-var` ICV (`OMP_CANCELLATION`)
+    /// is off, per the OpenMP 4.0 spec.
+    ///
+    /// Cancellation is cooperative: running bodies keep running until
+    /// they poll [`Ctx::cancellation_point`]; *not-yet-started* work
+    /// under the cancelled scope is skipped by the runtime (taskgroup
+    /// tasks at their dispatch check, worksharing chunks at claim,
+    /// implicit members at body start).
+    pub fn cancel(&self, kind: CancelKind) -> bool {
+        if !self.team.rt().icv.cancellation() {
+            return false;
+        }
+        match kind {
+            CancelKind::Parallel => lock_unpoisoned(&self.team.cancels).parallel.cancel(),
+            CancelKind::Loop => lock_unpoisoned(&self.team.cancels).wsloop.cancel(),
+            CancelKind::Taskgroup => {
+                // Innermost taskgroup of the current task, if any (cancel
+                // outside a taskgroup is a no-op on this kind).
+                if let Some(g) = lock_unpoisoned(&self.parent.groups).last() {
+                    g.token.cancel();
+                }
+            }
+        }
+        true
+    }
+
+    /// `#pragma omp cancellation point <kind>` — poll whether the named
+    /// construct was cancelled.  `false` whenever the `cancel-var` ICV is
+    /// off (cancellation points are no-ops then, per spec); on `true` the
+    /// caller jumps to the end of the construct.
+    pub fn cancellation_point(&self, kind: CancelKind) -> bool {
+        if !self.team.rt().icv.cancellation() {
+            return false;
+        }
+        match kind {
+            CancelKind::Parallel => lock_unpoisoned(&self.team.cancels).parallel.is_cancelled(),
+            CancelKind::Loop => lock_unpoisoned(&self.team.cancels).wsloop.is_cancelled(),
+            CancelKind::Taskgroup => lock_unpoisoned(&self.parent.groups)
+                .last()
+                .map(|g| g.token.is_cancelled())
+                .unwrap_or(false),
+        }
     }
 }
 
@@ -332,7 +441,13 @@ impl HotTeam {
     /// — teams are only parked pristine (cleared at the park site).
     fn rearm(&self, parallel_id: u64) {
         self.team.parallel_id.store(parallel_id, Ordering::Relaxed);
-        self.team.singles.lock().unwrap().clear();
+        // Poison-recovering (ISSUE 6): the singles map is valid at every
+        // unlock point (insert/clear only), and a pooled team must stay
+        // checkout-able after a contained member panic.
+        lock_unpoisoned(&self.team.singles).clear();
+        // Fresh cancellation scope per region: a cancel fired last region
+        // must not leak into this one.
+        *lock_unpoisoned(&self.team.cancels) = RegionCancels::fresh();
         self.join.reset(self.team.size - 1);
         for ctx in &self.ctxs {
             ctx.ws_seq.store(0, Ordering::Relaxed);
@@ -474,13 +589,21 @@ fn fork_call_dyn(
         });
         rt.ompt
             .emit_implicit_task(Endpoint::Begin, parallel_id, 1, 0);
-        with_ctx(ctx.clone(), || {
-            micro(&ctx);
+        // Containment (ISSUE 6): a panicking body still drains its
+        // explicit tasks and closes its OMPT scopes before the panic
+        // resumes on the caller — region bookkeeping is always balanced.
+        let body_panic = with_ctx(ctx.clone(), || {
+            let r = catch_unwind(AssertUnwindSafe(|| micro(&ctx)));
             // Implicit region-end barrier (drains explicit tasks, per spec).
             ctx.barrier();
+            r
         });
         rt.ompt.emit_implicit_task(Endpoint::End, parallel_id, 1, 0);
         rt.ompt.emit_parallel_end(parallel_id);
+        if let Err(p) = body_panic {
+            rt.region_panics.fetch_add(1, Ordering::Relaxed);
+            resume_unwind(p);
+        }
         return;
     }
 
@@ -540,17 +663,24 @@ fn fork_call_dyn(
     rt.sched
         .spawn_batch(Priority::Low, "omp_implicit_task", bodies);
 
+    let mut master_panic = None;
     if participate {
         // Master is team member 0 on its own stack — deadlock-safe: it is
         // strictly deeper than any context it could be nested in, and its
         // barrier arrival is what the spawned members wait for.
+        // Containment (ISSUE 6): a panicking master body still arrives at
+        // the barrier (else every member deadlocks) and still joins/parks
+        // the team below; the panic resumes on the caller only after the
+        // region is fully torn down.
         let ctx0 = ctxs[0].clone();
         rt.ompt
             .emit_implicit_task(Endpoint::Begin, parallel_id, n, 0);
-        with_ctx(ctx0.clone(), || {
-            micro(&ctx0);
+        master_panic = with_ctx(ctx0.clone(), || {
+            let r = catch_unwind(AssertUnwindSafe(|| micro(&ctx0)));
             ctx0.barrier();
-        });
+            r
+        })
+        .err();
         rt.ompt
             .emit_implicit_task(Endpoint::End, parallel_id, n, 0);
     }
@@ -564,10 +694,22 @@ fn fork_call_dyn(
     if cache && rt.hot_team_enabled() {
         // Park pristine: drop the finished region's dependence records now
         // so an idle parked team never pins retired task graphs in memory.
+        // This runs on the panic path too — a region with a contained
+        // panic returns its team to the pool un-poisoned, so the next
+        // same-size region still hits the fast path.
         for ctx in &ctxs {
             ctx.parent.reset();
         }
         rt.team_pool.park(HotTeam { team, ctxs, join });
+    }
+
+    if let Some(p) = master_panic {
+        // Budget (`reservation` guard) and pool state are settled; the
+        // master's own panic now continues on the forking thread, where
+        // the application (or the serving layer's per-request isolation)
+        // owns it.
+        rt.region_panics.fetch_add(1, Ordering::Relaxed);
+        resume_unwind(p);
     }
 }
 
@@ -609,17 +751,46 @@ fn implicit_body(
         }
         let parallel_id = ctx.team.parallel_id();
         let (n, i) = (ctx.team.size, ctx.tid);
+        // Arrival is a drop guard from here on: whatever happens inside
+        // the body — even an unwind that escapes the containment below
+        // (it cannot, but the join latch is the last line of defence
+        // against a team-wide hang) — the master's join.wait() completes.
+        struct Arrive(Arc<Join>);
+        impl Drop for Arrive {
+            fn drop(&mut self) {
+                self.0.arrive();
+            }
+        }
+        let _arrive = Arrive(join.clone());
         rt.ompt
             .emit_implicit_task(Endpoint::Begin, parallel_id, n, i);
         with_ctx(ctx.clone(), || {
-            micro(&ctx);
+            // Containment (ISSUE 6): a panicking member must still reach
+            // the region-end barrier — its teammates are blocked there and
+            // a skipped arrival deadlocks the whole team.  The unwind is
+            // caught *inside* the barrier discipline; the worker layer
+            // would otherwise catch it after the damage was done.
+            let body = catch_unwind(AssertUnwindSafe(|| {
+                // Not-yet-started members of a cancelled parallel region
+                // skip straight to the region end (`omp cancel parallel`
+                // skips work that has not begun; running members poll
+                // cancellation points instead).
+                let skip = rt.icv.cancellation()
+                    && ctx.team.parallel_cancel_token().is_cancelled();
+                if !skip {
+                    fault::inject(fault::Site::Fork);
+                    micro(&ctx);
+                }
+            }));
+            if body.is_err() {
+                rt.region_panics.fetch_add(1, Ordering::Relaxed);
+            }
             // Implicit region-end barrier (includes explicit-task drain,
-            // per spec).
+            // per spec) — on the panic path too.
             ctx.barrier();
         });
         rt.ompt
             .emit_implicit_task(Endpoint::End, parallel_id, n, i);
-        join.arrive();
     })
 }
 
@@ -851,5 +1022,93 @@ mod tests {
             fork_call(&rt, Some(4), |_| {});
             assert_eq!(rt.reserved_workers(), 0, "reservation leaked");
         }
+    }
+
+    #[test]
+    fn panicking_member_is_contained_and_team_stays_poolable() {
+        let rt = OmpRuntime::for_tests(4);
+        for round in 0..3 {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                fork_call(&rt, Some(4), |ctx| {
+                    if ctx.tid == 2 {
+                        panic!("member bomb");
+                    }
+                });
+            }));
+            assert!(r.is_ok(), "spawned-member panic must not reach the forker (round {round})");
+            assert_eq!(rt.reserved_workers(), 0, "budget leaked (round {round})");
+        }
+        assert!(rt.region_panics() >= 3);
+        fork_call(&rt, Some(4), |_| {});
+        assert!(
+            last_fork_was_pool_hit(),
+            "team must return to the pool un-poisoned after contained panics"
+        );
+    }
+
+    #[test]
+    fn panicking_master_unwinds_only_after_teardown() {
+        let rt = OmpRuntime::for_tests(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            fork_call(&rt, Some(2), |ctx| {
+                if ctx.tid == 0 {
+                    panic!("master bomb");
+                }
+            });
+        }));
+        assert!(r.is_err(), "master panic propagates to the forker");
+        assert_eq!(rt.reserved_workers(), 0, "budget released before the unwind");
+        fork_call(&rt, Some(2), |_| {});
+        assert!(
+            last_fork_was_pool_hit(),
+            "team was parked before the panic resumed"
+        );
+    }
+
+    #[test]
+    fn cancel_is_a_noop_with_icv_off_and_armed_with_it_on() {
+        let rt = OmpRuntime::for_tests(2);
+        let saw = Arc::new(Mutex::new(Vec::new()));
+        let s = saw.clone();
+        fork_call(&rt, Some(1), move |ctx| {
+            // ICV off (default): requests and points are no-ops.
+            assert!(!ctx.cancel(CancelKind::Parallel));
+            assert!(!ctx.cancellation_point(CancelKind::Parallel));
+            s.lock().unwrap().push("off");
+        });
+        rt.icv.set_cancellation(true);
+        let s = saw.clone();
+        fork_call(&rt, Some(1), move |ctx| {
+            assert!(!ctx.cancellation_point(CancelKind::Parallel));
+            assert!(ctx.cancel(CancelKind::Parallel));
+            assert!(ctx.cancellation_point(CancelKind::Parallel));
+            // `cancel parallel` implies the loop scope is cancelled too.
+            assert!(ctx.cancellation_point(CancelKind::Loop));
+            s.lock().unwrap().push("on");
+        });
+        assert_eq!(*saw.lock().unwrap(), vec!["off", "on"]);
+    }
+
+    #[test]
+    fn rearm_clears_last_regions_cancel_flags() {
+        let rt = OmpRuntime::for_tests(2);
+        rt.icv.set_cancellation(true);
+        fork_call(&rt, Some(2), |ctx| {
+            if ctx.tid == 0 {
+                ctx.cancel(CancelKind::Parallel);
+            }
+        });
+        let clean = Arc::new(AtomicUsize::new(0));
+        let c = clean.clone();
+        fork_call(&rt, Some(2), move |ctx| {
+            if !ctx.cancellation_point(CancelKind::Parallel) {
+                c.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(
+            clean.load(Ordering::SeqCst),
+            2,
+            "cancel flag leaked across hot-team reuse"
+        );
     }
 }

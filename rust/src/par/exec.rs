@@ -36,9 +36,12 @@
 //! kernel — see `DESIGN.md` §10 for the migration map.
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::amt::future::{when_all, Future};
+use crate::amt::cancel::CancelToken;
+use crate::amt::future::{when_all, Future, Outcome, Promise};
 use crate::amt::task::Hint;
 use crate::amt::Scheduler;
 use crate::par::LoopSched;
@@ -100,6 +103,16 @@ pub trait Executor: Send + Sync {
         let body_ref: &(dyn Fn(Range<i64>) + Sync) = &*body;
         self.bulk_sync(tasks, range, LoopSched::Static { chunk: None }, body_ref);
         Future::ready(())
+    }
+
+    /// Is the executor saturated *right now*?  Deadline-aware callers
+    /// (the serving coordinator's load shedder) consult this before
+    /// submitting work that would only queue behind already-admitted
+    /// regions and blow its deadline anyway.  Executors without an
+    /// admission budget (the OS-thread pool, [`Serial`]) are never
+    /// overloaded — every submission starts immediately.
+    fn overloaded(&self) -> bool {
+        false
     }
 }
 
@@ -207,6 +220,36 @@ pub struct Policy<'e> {
     sched: LoopSched,
     tile: usize,
     hint: Hint,
+    /// Wall-clock budget measured from algorithm entry; expired → the
+    /// algorithm abandons un-started chunks (ISSUE 6).
+    deadline: Option<Duration>,
+    /// External cancellation token the algorithm observes at chunk
+    /// boundaries.  Borrowed so `Policy` stays `Copy`.
+    token: Option<&'e CancelToken>,
+}
+
+/// How a cancellable algorithm run ended (ISSUE 6): returned by
+/// [`for_each`] so callers can distinguish full completion from an
+/// abandoned tail or an isolated chunk failure without inventing
+/// side-channels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecResult {
+    /// Every chunk executed.
+    Done,
+    /// The policy's token fired or its deadline expired mid-run:
+    /// `chunks_skipped` dispatched sub-ranges were abandoned un-run
+    /// (already-started chunk bodies always finish).
+    Cancelled { chunks_skipped: usize },
+    /// At least one chunk body panicked (task mode; the panic stays
+    /// isolated in the worker layer) — surviving chunks still completed
+    /// and the join resolved.
+    Failed,
+}
+
+impl ExecResult {
+    pub fn is_done(&self) -> bool {
+        matches!(self, ExecResult::Done)
+    }
 }
 
 /// Serial execution policy (`hpx::execution::seq` analog).
@@ -237,13 +280,18 @@ impl Policy<'static> {
             sched: LoopSched::Static { chunk: None },
             tile: DEFAULT_TILE,
             hint: Hint::Any,
+            deadline: None,
+            token: None,
         }
     }
 }
 
 impl<'e> Policy<'e> {
     /// Place the policy on an executor (`hpx`'s `.on(executor)`).
-    pub fn on<'n>(self, exec: &'n dyn Executor) -> Policy<'n> {
+    pub fn on<'n>(self, exec: &'n dyn Executor) -> Policy<'n>
+    where
+        'e: 'n,
+    {
         Policy {
             mode: self.mode,
             exec,
@@ -251,6 +299,8 @@ impl<'e> Policy<'e> {
             sched: self.sched,
             tile: self.tile,
             hint: self.hint,
+            deadline: self.deadline,
+            token: self.token,
         }
     }
 
@@ -278,6 +328,48 @@ impl<'e> Policy<'e> {
     pub fn hint(mut self, hint: Hint) -> Self {
         self.hint = hint;
         self
+    }
+
+    /// Wall-clock budget for the algorithm, measured from its entry:
+    /// once `d` elapses, chunks that have not started are abandoned and
+    /// the run reports [`ExecResult::Cancelled`].  Already-running chunk
+    /// bodies finish (cooperative cancellation — nothing is torn down
+    /// mid-iteration).
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Observe an external cancellation token at every chunk boundary —
+    /// composes with [`Policy::deadline`] (the deadline becomes a child
+    /// of `token`, so either firing abandons the tail).
+    pub fn token(mut self, token: &'e CancelToken) -> Self {
+        self.token = Some(token);
+        self
+    }
+
+    /// The configured wall-clock budget, if any.
+    pub fn deadline_limit(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    /// The configured external cancellation token, if any.
+    pub fn cancel_token(&self) -> Option<&'e CancelToken> {
+        self.token
+    }
+
+    /// Resolve the policy's cancellation sources into one token for this
+    /// run: the external token, a fresh deadline token, or a
+    /// deadline-bearing child of the external token — `None` when the
+    /// policy is not cancellable (the hot path stays check-free).
+    /// Deadlines are armed *now* (algorithm entry).
+    pub fn effective_token(&self) -> Option<CancelToken> {
+        match (self.token, self.deadline) {
+            (None, None) => None,
+            (Some(t), None) => Some(t.clone()),
+            (Some(t), Some(d)) => Some(t.child_with_deadline(d)),
+            (None, Some(d)) => Some(CancelToken::with_deadline(d)),
+        }
     }
 
     pub fn mode(&self) -> ExecMode {
@@ -330,6 +422,8 @@ impl std::fmt::Debug for Policy<'_> {
             .field("sched", &self.sched)
             .field("tile", &self.tile)
             .field("hint", &self.hint)
+            .field("deadline", &self.deadline)
+            .field("token", &self.token.is_some())
             .finish()
     }
 }
@@ -342,17 +436,27 @@ impl std::fmt::Debug for Policy<'_> {
 /// * `par()`: a fork-join region via [`Executor::bulk_sync`].
 /// * `task()`: chunk tasks via [`Executor::bulk_async`], helping /
 ///   parking until the join future fulfils.
-pub fn for_each<F>(pol: &Policy<'_>, range: Range<i64>, body: F)
+///
+/// With a [`Policy::deadline`] / [`Policy::token`] attached, chunks that
+/// have not started when the token fires are abandoned and the run
+/// reports [`ExecResult::Cancelled`]; otherwise the result is
+/// [`ExecResult::Done`] (or [`ExecResult::Failed`] when a task-mode
+/// chunk panicked — the join still resolves).
+pub fn for_each<F>(pol: &Policy<'_>, range: Range<i64>, body: F) -> ExecResult
 where
     F: Fn(Range<i64>) + Sync,
 {
     if range.start >= range.end {
-        return;
+        return ExecResult::Done;
     }
+    let cancel = pol.effective_token();
     if pol.is_serial() {
         // The one serial spelling: covers seq() and single-thread policies.
+        if cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+            return ExecResult::Cancelled { chunks_skipped: 1 };
+        }
         body(range);
-        return;
+        return ExecResult::Done;
     }
     if pol.mode() == ExecMode::Task {
         // The join below blocks until every chunk retired, so
@@ -360,21 +464,59 @@ where
         // sound: smuggle the thin pointer as an address and
         // re-materialize inside each chunk task (`F: Sync` makes the
         // shared re-borrow across workers sound).
+        let skipped = Arc::new(AtomicUsize::new(0));
         let body_addr = &body as *const F as usize;
+        let sk = skipped.clone();
+        let tok = cancel.clone();
         let chunk: Arc<dyn Fn(Range<i64>) + Send + Sync> = Arc::new(move |r| {
-            // SAFETY: see above — `wait()` keeps `body` alive past
-            // every use, and `F: Sync` permits the shared re-borrow.
+            if tok.as_ref().is_some_and(|t| t.is_cancelled()) {
+                sk.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            // SAFETY: see above — the blocking join below keeps `body`
+            // alive past every use, and `F: Sync` permits the shared
+            // re-borrow.
             let body: &F = unsafe { &*(body_addr as *const F) };
             body(r);
         });
-        pol.executor()
-            .bulk_async(pol.num_threads(), pol.placement(), range, chunk)
-            .wait();
-        return;
+        let join = pol
+            .executor()
+            .bulk_async(pol.num_threads(), pol.placement(), range, chunk);
+        let outcome = join.wait_outcome();
+        let n_skipped = skipped.load(Ordering::Relaxed);
+        return match outcome {
+            Outcome::Panicked => ExecResult::Failed,
+            _ if n_skipped > 0 => ExecResult::Cancelled {
+                chunks_skipped: n_skipped,
+            },
+            Outcome::Cancelled => ExecResult::Cancelled { chunks_skipped: 0 },
+            Outcome::Value(_) => ExecResult::Done,
+        };
     }
     // Par (Seq never reaches here: seq() is always serial).
-    pol.executor()
-        .bulk_sync(pol.num_threads(), range, pol.sched(), &body);
+    match cancel {
+        None => {
+            pol.executor()
+                .bulk_sync(pol.num_threads(), range, pol.sched(), &body);
+            ExecResult::Done
+        }
+        Some(tok) => {
+            let skipped = AtomicUsize::new(0);
+            let run = |r: Range<i64>| {
+                if tok.is_cancelled() {
+                    skipped.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                body(r);
+            };
+            pol.executor()
+                .bulk_sync(pol.num_threads(), range, pol.sched(), &run);
+            match skipped.load(Ordering::Relaxed) {
+                0 => ExecResult::Done,
+                s => ExecResult::Cancelled { chunks_skipped: s },
+            }
+        }
+    }
 }
 
 /// Non-blocking [`for_each`]: returns a [`Future`] fulfilled when every
@@ -387,6 +529,9 @@ where
 /// shared (`Arc`) because task mode outlives the caller's stack frame;
 /// chunk panics are isolated in the worker layer and the join future
 /// still fulfils (arrival is a drop guard).
+/// A cancellable policy reports through the returned future's *outcome*:
+/// [`Outcome::Cancelled`] when any chunk was abandoned (`wait()` still
+/// returns; error-tolerant callers read [`Future::wait_outcome`]).
 pub fn for_each_async(
     pol: &Policy<'_>,
     range: Range<i64>,
@@ -395,12 +540,19 @@ pub fn for_each_async(
     if range.start >= range.end {
         return Future::ready(());
     }
+    let cancel = pol.effective_token();
     match pol.mode() {
         ExecMode::Seq => {
+            if cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                return Future::with_outcome(Outcome::Cancelled);
+            }
             body(range);
             Future::ready(())
         }
         ExecMode::Par => {
+            if cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                return Future::with_outcome(Outcome::Cancelled);
+            }
             let body_ref: &(dyn Fn(Range<i64>) + Sync) = &*body;
             pol.executor()
                 .bulk_sync(pol.num_threads(), range, pol.sched(), body_ref);
@@ -408,9 +560,37 @@ pub fn for_each_async(
         }
         // Even a single-chunk task() stays asynchronous: the caller may
         // rely on the future, not on inline completion.
-        ExecMode::Task => pol
-            .executor()
-            .bulk_async(pol.num_threads(), pol.placement(), range, body),
+        ExecMode::Task => match cancel {
+            None => pol
+                .executor()
+                .bulk_async(pol.num_threads(), pol.placement(), range, body),
+            Some(tok) => {
+                let skipped = Arc::new(AtomicUsize::new(0));
+                let sk = skipped.clone();
+                let wrapped: Arc<dyn Fn(Range<i64>) + Send + Sync> = Arc::new(move |r| {
+                    if tok.is_cancelled() {
+                        sk.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    body(r);
+                });
+                let join =
+                    pol.executor()
+                        .bulk_async(pol.num_threads(), pol.placement(), range, wrapped);
+                // Re-join through a fresh promise so an abandoned tail
+                // surfaces as a Cancelled outcome instead of a silent
+                // Value — downstream `then` chains short-circuit on it.
+                let promise = Promise::new();
+                let fut = promise.get_future();
+                join.on_ready(move |out: &Outcome<()>| match out {
+                    Outcome::Panicked => promise.set_panicked(),
+                    _ if skipped.load(Ordering::Relaxed) > 0 => promise.set_cancelled(),
+                    Outcome::Cancelled => promise.set_cancelled(),
+                    Outcome::Value(_) => promise.set_value(()),
+                });
+                fut
+            }
+        },
     }
 }
 
@@ -442,6 +622,26 @@ pub fn for_each_tile_async(
     if rows == 0 || cols == 0 {
         return Future::ready(());
     }
+    // Cancellable policy: every tile checks the resolved token before
+    // running; abandoned tiles are counted and surface as a Cancelled
+    // outcome on the join.
+    let cancel = pol.effective_token();
+    let skipped = Arc::new(AtomicUsize::new(0));
+    let body: Arc<dyn Fn(Range<usize>, Range<usize>) + Send + Sync> = match &cancel {
+        None => body,
+        Some(tok) => {
+            let tok = tok.clone();
+            let sk = skipped.clone();
+            let inner = body;
+            Arc::new(move |ri: Range<usize>, rj: Range<usize>| {
+                if tok.is_cancelled() {
+                    sk.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                inner(ri, rj);
+            })
+        }
+    };
     let tile = pol.tile_size().max(8);
     let row_tiles = rows.div_ceil(tile);
     let col_tiles = cols.div_ceil(tile);
@@ -467,7 +667,11 @@ pub fn for_each_tile_async(
                     &band,
                 );
             }
-            return Future::ready(());
+            return if skipped.load(Ordering::Relaxed) > 0 {
+                Future::with_outcome(Outcome::Cancelled)
+            } else {
+                Future::ready(())
+            };
         }
     };
 
@@ -488,7 +692,21 @@ pub fn for_each_tile_async(
             tiles.push(tile_task);
         }
     }
-    when_all(&tiles)
+    let join = when_all(&tiles);
+    match cancel {
+        None => join,
+        Some(_) => {
+            let promise = Promise::new();
+            let fut = promise.get_future();
+            join.on_ready(move |out: &Outcome<()>| match out {
+                Outcome::Panicked => promise.set_panicked(),
+                _ if skipped.load(Ordering::Relaxed) > 0 => promise.set_cancelled(),
+                Outcome::Cancelled => promise.set_cancelled(),
+                Outcome::Value(_) => promise.set_value(()),
+            });
+            fut
+        }
+    }
 }
 
 #[cfg(test)]
@@ -547,6 +765,98 @@ mod tests {
         assert_eq!(par().on(&hpx).num_threads(), 2);
         assert!(seq().is_serial());
         assert!(par().on(&hpx).threads(1).is_serial());
+        // Cancellation combinators (ISSUE 6).
+        let tok = CancelToken::new();
+        let pol2 = par()
+            .on(&hpx)
+            .deadline(Duration::from_millis(5))
+            .token(&tok);
+        assert_eq!(pol2.deadline_limit(), Some(Duration::from_millis(5)));
+        assert!(pol2.cancel_token().is_some());
+        assert!(pol2.effective_token().is_some());
+        assert!(seq().effective_token().is_none(), "hot path stays check-free");
+    }
+
+    #[test]
+    fn cancelled_token_abandons_unstarted_chunks_in_every_mode() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        let tok = CancelToken::new();
+        tok.cancel();
+        for mode in ExecMode::ALL {
+            let ran = AtomicU32::new(0);
+            let pol = Policy::with_mode(mode).on(&hpx).threads(4).token(&tok);
+            let res = for_each(&pol, 0..1000, |r| {
+                ran.fetch_add((r.end - r.start) as u32, Ordering::SeqCst);
+            });
+            assert_eq!(ran.load(Ordering::SeqCst), 0, "{mode:?} ran cancelled work");
+            assert!(
+                matches!(res, ExecResult::Cancelled { .. }),
+                "{mode:?} reported {res:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn expired_deadline_reports_cancelled() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        // Zero budget: expired at algorithm entry.
+        let pol = par().on(&hpx).threads(2).deadline(Duration::from_secs(0));
+        let ran = AtomicU32::new(0);
+        let res = for_each(&pol, 0..100, |r| {
+            ran.fetch_add((r.end - r.start) as u32, Ordering::SeqCst);
+        });
+        assert!(matches!(res, ExecResult::Cancelled { .. }), "{res:?}");
+        assert_eq!(ran.load(Ordering::SeqCst), 0);
+        // Without a budget the same run completes.
+        assert_eq!(
+            for_each(&par().on(&hpx).threads(2), 0..100, |_r| {}),
+            ExecResult::Done
+        );
+    }
+
+    #[test]
+    fn token_fired_mid_run_abandons_the_tail() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        let tok = CancelToken::new();
+        let pol = par()
+            .on(&hpx)
+            .threads(2)
+            .chunk(LoopSched::Dynamic { chunk: 1 })
+            .token(&tok);
+        let ran = AtomicU32::new(0);
+        let res = for_each(&pol, 0..1000, |r| {
+            if r.start == 0 {
+                tok.cancel();
+            }
+            crate::util::timing::spin_wait(std::time::Duration::from_micros(50));
+            ran.fetch_add((r.end - r.start) as u32, Ordering::SeqCst);
+        });
+        assert!(matches!(res, ExecResult::Cancelled { .. }), "{res:?}");
+        assert!(
+            ran.load(Ordering::SeqCst) < 1000,
+            "no chunks were abandoned after the token fired"
+        );
+    }
+
+    #[test]
+    fn async_cancelled_policy_reports_cancelled_outcome() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        let tok = CancelToken::new();
+        tok.cancel();
+        let pol = task().on(&hpx).threads(4).token(&tok);
+        let fut = for_each_async(&pol, 0..100, Arc::new(|_r| panic!("must not run")));
+        assert!(
+            matches!(fut.wait_outcome(), Outcome::Cancelled),
+            "abandoned run must surface as a Cancelled outcome"
+        );
+        // Tiled variant: same contract.
+        let tiled = for_each_tile_async(
+            &task().on(&hpx).threads(2).tile(16).token(&tok),
+            64,
+            64,
+            Arc::new(|_ri, _rj| panic!("must not run")),
+        );
+        assert!(matches!(tiled.wait_outcome(), Outcome::Cancelled));
     }
 
     #[test]

@@ -18,15 +18,16 @@
 pub mod exec;
 
 pub use exec::{
-    for_each, for_each_async, for_each_tile_async, par, seq, task, ExecMode, Executor, Policy,
-    Serial,
+    for_each, for_each_async, for_each_tile_async, par, seq, task, ExecMode, ExecResult, Executor,
+    Policy, Serial,
 };
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::amt::future::{Future, Promise};
+use crate::util::lock_unpoisoned;
 use crate::amt::task::Hint;
 use crate::amt::{Priority, Scheduler};
 use crate::omp::icv::Schedule;
@@ -177,6 +178,13 @@ impl Executor for HpxMpRuntime {
         Some(&self.rt.sched)
     }
 
+    /// Saturated when the admission budget has reserved every worker
+    /// slot: a new top-level region would wait for a slot (DESIGN.md §8),
+    /// so deadline-bound callers should shed or back off instead.
+    fn overloaded(&self) -> bool {
+        self.rt.reserved_workers() >= self.rt.sched.workers()
+    }
+
     /// Task-mode bulk dispatch: `tasks` static chunks as raw dataflow
     /// tasks (no OpenMP team, so the body must not use team constructs —
     /// barriers, worksharing, `omp_get_thread_num`), joined by a future
@@ -212,20 +220,34 @@ impl Executor for HpxMpRuntime {
         let promise = Arc::new(Mutex::new(Some(Promise::new())));
         let joined = promise.lock().unwrap().as_ref().unwrap().get_future();
         let remaining = Arc::new(AtomicUsize::new(chunks.len()));
+        let panicked = Arc::new(AtomicBool::new(false));
 
         /// Chunk arrival as a drop guard: a panicking body must still
         /// count down and (as last arriver) fulfil the joined promise —
         /// otherwise one crashed chunk would hang every waiter forever
-        /// (the panic itself stays isolated in the worker layer).
+        /// (the panic itself stays isolated in the worker layer).  A
+        /// crashed chunk is *recorded* (`std::thread::panicking()` at
+        /// drop), so the join resolves with a `Panicked` outcome instead
+        /// of silently claiming success — `wait()` still returns, and
+        /// error-aware callers ([`exec::for_each`]) map it to
+        /// [`ExecResult::Failed`].
         struct Arrive {
             remaining: Arc<AtomicUsize>,
+            panicked: Arc<AtomicBool>,
             promise: Arc<Mutex<Option<Promise<()>>>>,
         }
         impl Drop for Arrive {
             fn drop(&mut self) {
+                if std::thread::panicking() {
+                    self.panicked.store(true, Ordering::Release);
+                }
                 if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                    if let Some(p) = self.promise.lock().unwrap().take() {
-                        p.set_value(());
+                    if let Some(p) = lock_unpoisoned(&self.promise).take() {
+                        if self.panicked.load(Ordering::Acquire) {
+                            p.set_panicked();
+                        } else {
+                            p.set_value(());
+                        }
                     }
                 }
             }
@@ -242,6 +264,7 @@ impl Executor for HpxMpRuntime {
                 let body = body.clone();
                 let arrive = Arrive {
                     remaining: remaining.clone(),
+                    panicked: panicked.clone(),
                     promise: promise.clone(),
                 };
                 let chunk: Box<dyn FnOnce() + Send> = Box::new(move || {
@@ -340,6 +363,12 @@ mod tests {
         fut.wait();
         assert_eq!(ran.load(Ordering::SeqCst), 3, "surviving chunks ran");
         assert_eq!(rt.rt.sched.task_panics(), 1, "panic not isolated");
+        // The join resolves — with an honest Panicked outcome, not a
+        // silent success (ISSUE 6).
+        assert!(matches!(
+            fut.wait_outcome(),
+            crate::amt::future::Outcome::Panicked
+        ));
     }
 
     #[test]

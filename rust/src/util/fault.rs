@@ -1,0 +1,268 @@
+//! Chaos-injection harness (ISSUE 6; DESIGN.md §11).
+//!
+//! Deterministic fault injection at the runtime's three execution
+//! boundaries, so cancellation and panic containment are testable in CI
+//! instead of only under real failures:
+//!
+//! * [`Site::TaskRun`] — inside `TaskNode::execute`, after the retire
+//!   guard is armed (an injected panic exercises the OMP tasking layer's
+//!   counter/promise containment).
+//! * [`Site::Fork`] — inside a team member's implicit-task body, inside
+//!   its `catch_unwind` (exercises barrier/join containment and the
+//!   un-poisoned return of the team to the pool).
+//! * [`Site::Continuation`] — at the head of a spawned `then` body
+//!   (exercises `Outcome::Panicked` propagation through future chains
+//!   via the promise-drop backstop).
+//!
+//! Every site sits *inside* an already-contained region: injection can
+//! never leak counters or wedge a barrier that real panics would not
+//! also wedge — by construction the harness only widens coverage of
+//! paths the containment machinery already owns.
+//!
+//! Configured from `HPXMP_FAULT` (comma-separated actions):
+//!
+//! ```text
+//! HPXMP_FAULT=panic:0.01,delay:0.05:200,cancel:0.002
+//!             ^panic w.p. 1%   ^200µs sleep w.p. 5%   ^token-fire w.p. 0.2%
+//! HPXMP_FAULT_SEED=42          # optional; default 0xC0FFEE
+//! ```
+//!
+//! Draws come from a per-thread [`Xoshiro256`] seeded from the global
+//! seed plus a per-thread counter — deterministic for a fixed seed and
+//! thread schedule, and re-seeded whenever a new config is
+//! [`install`]ed (epoch bump), so in-process benches can sweep fault
+//! rates without stale generator state.  The disabled fast path is one
+//! relaxed atomic load.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use once_cell::sync::Lazy;
+
+use super::rng::Xoshiro256;
+use crate::amt::cancel::CancelToken;
+
+/// Where in the runtime an injection check sits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Explicit-task body (OMP tasking layer).
+    TaskRun,
+    /// Implicit-task body of a parallel region member.
+    Fork,
+    /// Spawned future continuation (`then` body head).
+    Continuation,
+}
+
+/// One parsed fault configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultCfg {
+    /// Probability of `panic!` per injection point.
+    pub panic_p: f64,
+    /// Probability of a busy-thread `sleep(delay_us)` per injection point.
+    pub delay_p: f64,
+    pub delay_us: u64,
+    /// Probability of firing the ambient cancel token (if one is set via
+    /// [`set_ambient_token`]) per injection point.
+    pub cancel_p: f64,
+    /// RNG seed; per-thread streams derive from it.
+    pub seed: u64,
+}
+
+impl FaultCfg {
+    /// Parse the `HPXMP_FAULT` grammar: `panic:p`, `delay:p:us`,
+    /// `cancel:p`, comma-separated.  Unknown or malformed actions are
+    /// ignored (chaos config must never crash the host).  Returns `None`
+    /// when no action carries a positive probability.
+    pub fn parse(spec: &str, seed: u64) -> Option<Self> {
+        let mut cfg = FaultCfg {
+            seed,
+            ..Default::default()
+        };
+        for action in spec.split(',') {
+            let mut parts = action.trim().split(':');
+            let (kind, p) = (parts.next().unwrap_or(""), parts.next());
+            let p: f64 = match p.and_then(|s| s.parse().ok()) {
+                Some(p) => p,
+                None => continue,
+            };
+            match kind {
+                "panic" => cfg.panic_p = p,
+                "delay" => {
+                    cfg.delay_p = p;
+                    cfg.delay_us = parts.next().and_then(|s| s.parse().ok()).unwrap_or(100);
+                }
+                "cancel" => cfg.cancel_p = p,
+                _ => {}
+            }
+        }
+        (cfg.panic_p > 0.0 || cfg.delay_p > 0.0 || cfg.cancel_p > 0.0).then_some(cfg)
+    }
+
+    /// Read `HPXMP_FAULT` / `HPXMP_FAULT_SEED` from the environment.
+    pub fn from_env() -> Option<Self> {
+        let spec = std::env::var("HPXMP_FAULT").ok()?;
+        let seed = std::env::var("HPXMP_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self::parse(&spec, seed)
+    }
+}
+
+struct Global {
+    /// Fast-path gate: false -> `inject` is one relaxed load.
+    enabled: AtomicBool,
+    /// Bumped on every `install`; per-thread RNGs re-seed when they
+    /// observe a new epoch.
+    epoch: AtomicU64,
+    cfg: Mutex<Option<Arc<FaultCfg>>>,
+    /// Counts injections actually fired (all sites), for observability
+    /// and test assertions.
+    fired: AtomicUsize,
+    /// Target of `cancel:p` injections, when a scope has armed one.
+    ambient_token: Mutex<Option<CancelToken>>,
+}
+
+static GLOBAL: Lazy<Global> = Lazy::new(|| {
+    let g = Global {
+        enabled: AtomicBool::new(false),
+        epoch: AtomicU64::new(0),
+        cfg: Mutex::new(None),
+        fired: AtomicUsize::new(0),
+        ambient_token: Mutex::new(None),
+    };
+    if let Some(cfg) = FaultCfg::from_env() {
+        *g.cfg.lock().unwrap() = Some(Arc::new(cfg));
+        g.epoch.store(1, Ordering::Release);
+        g.enabled.store(true, Ordering::Release);
+    }
+    g
+});
+
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // Chaos state is trivially valid (Option swaps only); recover from
+    // poisoning so an injected panic cannot disable the harness itself.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Install (or clear, with `None`) the active fault configuration.
+/// In-process benches use this to sweep rates; the environment variable
+/// is only read once at first use.
+pub fn install(cfg: Option<FaultCfg>) {
+    let mut slot = lock_recover(&GLOBAL.cfg);
+    GLOBAL.enabled.store(cfg.is_some(), Ordering::Release);
+    *slot = cfg.map(Arc::new);
+    GLOBAL.epoch.fetch_add(1, Ordering::AcqRel);
+}
+
+/// Arm (or clear) the token that `cancel:p` injections fire.  Scopes that
+/// want chaos-driven cancellation (the serve loop, tests) install their
+/// region token here.
+pub fn set_ambient_token(token: Option<CancelToken>) {
+    *lock_recover(&GLOBAL.ambient_token) = token;
+}
+
+/// Total injections fired since process start (panics + delays + cancels).
+pub fn injections_fired() -> usize {
+    GLOBAL.fired.load(Ordering::Relaxed)
+}
+
+/// Whether any fault configuration is active.
+pub fn enabled() -> bool {
+    GLOBAL.enabled.load(Ordering::Relaxed)
+}
+
+static THREAD_SALT: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (epoch the stream was seeded under, generator).
+    static STREAM: std::cell::RefCell<(u64, Xoshiro256)> =
+        std::cell::RefCell::new((0, Xoshiro256::seed_from_u64(0)));
+}
+
+/// Possibly inject a fault at `site`.  No-op (one atomic load) when
+/// disabled.  May panic — call only from inside a containment region
+/// (see the module docs for the placement invariant).
+#[inline]
+pub fn inject(site: Site) {
+    if !GLOBAL.enabled.load(Ordering::Relaxed) {
+        return;
+    }
+    inject_slow(site);
+}
+
+#[cold]
+fn inject_slow(site: Site) {
+    let cfg = match lock_recover(&GLOBAL.cfg).clone() {
+        Some(cfg) => cfg,
+        None => return,
+    };
+    let epoch = GLOBAL.epoch.load(Ordering::Acquire);
+    let draw = STREAM.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.0 != epoch {
+            let salt = THREAD_SALT.fetch_add(1, Ordering::Relaxed);
+            *s = (
+                epoch,
+                Xoshiro256::seed_from_u64(cfg.seed ^ (salt.wrapping_mul(0x9E3779B97F4A7C15))),
+            );
+        }
+        s.1.next_f64()
+    });
+    // One draw decides among the actions via stacked thresholds, so the
+    // per-site fault rate is exactly the configured sum.
+    let mut lo = 0.0;
+    if draw < lo + cfg.delay_p {
+        GLOBAL.fired.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_micros(cfg.delay_us));
+        return;
+    }
+    lo += cfg.delay_p;
+    if draw < lo + cfg.cancel_p {
+        if let Some(tok) = lock_recover(&GLOBAL.ambient_token).clone() {
+            GLOBAL.fired.fetch_add(1, Ordering::Relaxed);
+            tok.cancel();
+        }
+        return;
+    }
+    lo += cfg.cancel_p;
+    if draw < lo + cfg.panic_p {
+        GLOBAL.fired.fetch_add(1, Ordering::Relaxed);
+        panic!("injected fault at {site:?} (HPXMP_FAULT)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let cfg = FaultCfg::parse("panic:0.01,delay:0.05:200,cancel:0.002", 7).unwrap();
+        assert_eq!(cfg.panic_p, 0.01);
+        assert_eq!(cfg.delay_p, 0.05);
+        assert_eq!(cfg.delay_us, 200);
+        assert_eq!(cfg.cancel_p, 0.002);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn parse_ignores_malformed_actions() {
+        let cfg = FaultCfg::parse("bogus:x,panic:0.5,:::", 1).unwrap();
+        assert_eq!(cfg.panic_p, 0.5);
+        assert_eq!(cfg.delay_p, 0.0);
+    }
+
+    #[test]
+    fn parse_all_zero_is_none() {
+        assert!(FaultCfg::parse("panic:0,delay:0:10", 1).is_none());
+        assert!(FaultCfg::parse("", 1).is_none());
+    }
+
+    #[test]
+    fn delay_defaults_to_100us_when_omitted() {
+        let cfg = FaultCfg::parse("delay:0.5", 1).unwrap();
+        assert_eq!(cfg.delay_us, 100);
+    }
+}

@@ -3,8 +3,25 @@
 
 pub mod cli;
 pub mod csv;
+pub mod fault;
 pub mod heatmap;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod timing;
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, recovering from poisoning (ISSUE 6 fault containment).
+///
+/// Only for state with the *valid-at-every-unlock* invariant: every
+/// critical section either completes its mutation or performs none (plain
+/// reads/writes of `Copy` fields, `Vec` push/pop/clear, `HashMap`
+/// insert/remove — no multi-step states observable mid-panic).  Each call
+/// site documents why its protected state satisfies this; given that, the
+/// poison flag carries no information and clearing it is sound — while
+/// propagating it would let one contained panic (a chaos injection, a
+/// user task) wedge every other tenant of the shared structure.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

@@ -1,0 +1,184 @@
+//! End-to-end cancellation and fault-containment tests (ISSUE 6
+//! acceptance), driven entirely through the crate's public surface:
+//! `omp cancel(taskgroup)` skipping queued tasks, contained member
+//! panics leaving the runtime poolable with a zero admission budget,
+//! panicked `when_all` inputs failing instead of hanging, and the
+//! policy-level deadline/token combinators.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use hpxmp::amt::cancel::CancelToken;
+use hpxmp::amt::future::{when_all, Future, Outcome};
+use hpxmp::omp::{current_ctx, fork_call, last_fork_was_pool_hit, CancelKind, OmpRuntime};
+use hpxmp::par::{exec, ExecResult, HpxMpRuntime};
+
+/// The headline acceptance test: `omp cancel(taskgroup)` observably
+/// skips tasks that were queued but had not started when the cancel
+/// fired — they retire (counters balance, the group's wait returns)
+/// without running their bodies.
+#[test]
+fn omp_cancel_taskgroup_skips_not_yet_started_tasks() {
+    // One AMT worker pins all explicit tasks to a single consumer, so
+    // "not yet started" is deterministic: while the gated first task
+    // blocks the worker, the 15 queued behind it cannot begin.
+    let rt = OmpRuntime::for_tests(1);
+    rt.icv.set_cancellation(true);
+    let ran = Arc::new(AtomicUsize::new(0));
+    let started = Arc::new(AtomicBool::new(false));
+    let gate = Arc::new(AtomicBool::new(false));
+    let (ran2, started2, gate2) = (ran.clone(), started.clone(), gate.clone());
+    fork_call(&rt, Some(1), move |_| {
+        let ctx = current_ctx().unwrap();
+        let (ran, started, gate) = (ran2.clone(), started2.clone(), gate2.clone());
+        ctx.taskgroup(|| {
+            let (r, s, g) = (ran.clone(), started.clone(), gate.clone());
+            ctx.task(move || {
+                r.fetch_add(1, Ordering::SeqCst);
+                s.store(true, Ordering::SeqCst);
+                while !g.load(Ordering::SeqCst) {
+                    std::hint::spin_loop();
+                }
+            });
+            // Only cancel once the worker is provably inside task 1.
+            while !started.load(Ordering::SeqCst) {
+                std::hint::spin_loop();
+            }
+            for _ in 0..15 {
+                let r = ran.clone();
+                ctx.task(move || {
+                    r.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            assert!(ctx.cancel(CancelKind::Taskgroup), "cancel must arm");
+            gate.store(true, Ordering::SeqCst);
+            // taskgroup's group-end wait must still return: skipped
+            // tasks retire without running.
+        });
+    });
+    assert_eq!(
+        ran.load(Ordering::SeqCst),
+        1,
+        "queued tasks ran despite the taskgroup cancel"
+    );
+    assert_eq!(rt.sched.task_panics(), 0, "skipping must not panic");
+    assert_eq!(rt.reserved_workers(), 0, "admission budget leaked");
+}
+
+/// With the cancel-var ICV off (the default), the same cancel request is
+/// a spec-mandated no-op and every task runs.
+#[test]
+fn taskgroup_cancel_without_icv_runs_everything() {
+    let rt = OmpRuntime::for_tests(2);
+    let ran = Arc::new(AtomicUsize::new(0));
+    let ran2 = ran.clone();
+    fork_call(&rt, Some(1), move |_| {
+        let ctx = current_ctx().unwrap();
+        let ran = ran2.clone();
+        ctx.taskgroup(|| {
+            for _ in 0..8 {
+                let r = ran.clone();
+                ctx.task(move || {
+                    r.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            assert!(!ctx.cancel(CancelKind::Taskgroup), "ICV off: no-op");
+        });
+    });
+    assert_eq!(ran.load(Ordering::SeqCst), 8);
+}
+
+/// A panicking team member is contained: the region joins, the admission
+/// budget returns to zero, and the team goes back to the pool un-poisoned
+/// (the next fork is a pool hit, not a rebuild).
+#[test]
+fn contained_member_panic_leaves_runtime_poolable() {
+    let rt = OmpRuntime::for_tests(4);
+    for round in 0..3 {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            fork_call(&rt, Some(4), |ctx| {
+                if ctx.tid == 2 {
+                    panic!("member bomb");
+                }
+            });
+        }));
+        assert!(r.is_ok(), "round {round}: member panic escaped the region");
+        assert_eq!(rt.reserved_workers(), 0, "round {round}: budget leaked");
+    }
+    assert!(rt.region_panics() >= 3, "containment gauge did not count");
+    // The fast path survived: a fresh region re-arms a parked team.
+    fork_call(&rt, Some(4), |_| {});
+    assert!(last_fork_was_pool_hit(), "team pool poisoned by the panic");
+    assert_eq!(rt.reserved_workers(), 0);
+}
+
+/// A `when_all` over futures where one input resolved `Panicked` must
+/// fail (worst-severity outcome), not hang its waiter.
+#[test]
+fn when_all_with_panicked_input_fails_instead_of_hanging() {
+    let inputs = [
+        Future::ready(()),
+        Future::with_outcome(Outcome::Panicked),
+        Future::ready(()),
+    ];
+    let join = when_all(&inputs);
+    join.wait(); // must return
+    assert!(matches!(join.wait_outcome(), Outcome::Panicked));
+
+    // Cancelled ranks below Panicked but above Value.
+    let inputs = [Future::ready(()), Future::with_outcome(Outcome::Cancelled)];
+    assert!(matches!(when_all(&inputs).wait_outcome(), Outcome::Cancelled));
+}
+
+/// Policy-level cancellation through the public exec API: a fired token
+/// abandons every chunk; an un-cancelled run completes.
+#[test]
+fn policy_token_and_deadline_cancel_for_each() {
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+    let tok = CancelToken::new();
+    tok.cancel();
+    let ran = AtomicU32::new(0);
+    let res = exec::for_each(&exec::par().on(&hpx).threads(2).token(&tok), 0..256, |r| {
+        ran.fetch_add((r.end - r.start) as u32, Ordering::SeqCst);
+    });
+    assert!(matches!(res, ExecResult::Cancelled { .. }));
+    assert_eq!(ran.load(Ordering::SeqCst), 0);
+
+    // Expired deadline: same contract, no external token needed.
+    let res = exec::for_each(
+        &exec::par()
+            .on(&hpx)
+            .threads(2)
+            .deadline(Duration::from_secs(0)),
+        0..256,
+        |_r| {},
+    );
+    assert!(matches!(res, ExecResult::Cancelled { .. }));
+
+    // No budget, no token: the run completes.
+    assert_eq!(
+        exec::for_each(&exec::par().on(&hpx).threads(2), 0..256, |_r| {}),
+        ExecResult::Done
+    );
+    assert_eq!(hpx.rt.reserved_workers(), 0, "admission budget leaked");
+}
+
+/// Hierarchical tokens: cancelling the parent fans out to children built
+/// before *and* after the cancel.
+#[test]
+fn cancel_token_hierarchy_fans_out() {
+    let parent = CancelToken::new();
+    let child_before = parent.child();
+    parent.cancel();
+    let child_after = parent.child();
+    assert!(parent.is_cancelled());
+    assert!(child_before.is_cancelled());
+    assert!(child_after.is_cancelled());
+    // Child cancellation stays local.
+    let p2 = CancelToken::new();
+    let c2 = p2.child();
+    c2.cancel();
+    assert!(!p2.is_cancelled());
+}
