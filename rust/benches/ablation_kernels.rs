@@ -1,0 +1,285 @@
+//! Kernel-variant roofline (ISSUE 7): every Blaze kernel under every
+//! `KernelVariant`, reported in GFLOP/s — the regression guard for the
+//! raw-compute layer (`blaze/kernel.rs`).
+//!
+//! Sweeps kernel × variant × size × policy × threads:
+//!
+//! * kernels — all five Blazemark ops;
+//! * variants — `scalar` (the `serial.rs` oracle loops) vs `unrolled`
+//!   (4-wide accumulator-split loops, FMA when the `simd` feature is
+//!   compiled and the CPU has avx2+fma); `dmatdmatmult` additionally
+//!   runs `packed` (the cache-blocked MR×NR micro-kernel over packed
+//!   panels) instead of `unrolled`, since the row kernel is the scalar
+//!   path there;
+//! * sizes — two to three per op (`BENCH_SMOKE=1` shrinks the grid and
+//!   iteration counts for CI);
+//! * policies — `seq` once per (kernel, variant, size) at threads=1,
+//!   then `par` and `task` at each `BENCH_THREADS` entry (default
+//!   1,2,4), each cell on a runtime built with exactly `t` workers;
+//! * operands — first-touch constructors under the cell's policy, so
+//!   pages land where the workers that traverse them run.
+//!
+//! Emits `results/BENCH_kernels.json`:
+//!
+//! * `simd`: the compile/runtime SIMD state the run executed under;
+//! * `rows[]`: `{kernel, variant, policy, threads, n, gflops}` per cell
+//!   (higher is better);
+//! * `speedup_packed_vs_scalar_dmatdmatmult`: at the largest matmul
+//!   size, the best packed/scalar GFLOP/s ratio over matching
+//!   (policy, threads) cells — the ISSUE 7 headline;
+//! * `speedup_unrolled_vs_scalar`: same ratio per remaining kernel at
+//!   its largest size.
+
+use std::time::Instant;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::blaze::{self, kernel, DynMatrix, DynVector};
+use hpxmp::coordinator::blazemark::Op;
+use hpxmp::omp::OmpRuntime;
+use hpxmp::par::exec::{ExecMode, KernelVariant, Policy};
+use hpxmp::par::HpxMpRuntime;
+use hpxmp::util::timing::{bench, mflops, BenchCfg};
+
+mod common;
+
+struct Row {
+    kernel: &'static str,
+    variant: &'static str,
+    policy: &'static str,
+    threads: usize,
+    n: usize,
+    gflops: f64,
+}
+
+/// Variants worth comparing per op.  `dmatdmatmult` pits the packed
+/// micro-kernel against the scalar row kernel (its `unrolled` spelling
+/// resolves to the same row path, so benching it would duplicate a
+/// column); everything else pits unrolled against scalar.
+fn variants_for(op: Op) -> &'static [KernelVariant] {
+    match op {
+        Op::DMatDMatMult => &[KernelVariant::Scalar, KernelVariant::Packed],
+        _ => &[KernelVariant::Scalar, KernelVariant::Unrolled],
+    }
+}
+
+/// Size grid per op (full / smoke profile).  The largest matmul size is
+/// where the `speedup_packed_vs_scalar_dmatdmatmult` headline is read,
+/// so it sits well past the packed crossover even under smoke.
+fn sizes_for(op: Op, smoke: bool) -> Vec<usize> {
+    match op {
+        Op::DVecDVecAdd | Op::Daxpy => {
+            if smoke {
+                vec![65_536]
+            } else {
+                vec![262_144, 1_048_576]
+            }
+        }
+        Op::DMatDMatAdd => {
+            if smoke {
+                vec![230]
+            } else {
+                vec![300, 500]
+            }
+        }
+        Op::DMatDMatMult => {
+            if smoke {
+                vec![128, 256]
+            } else {
+                vec![192, 384, 576]
+            }
+        }
+        Op::DMatDVecMult => {
+            if smoke {
+                vec![455]
+            } else {
+                vec![700, 1200]
+            }
+        }
+    }
+}
+
+/// GFLOP/s for one cell: first-touch operands under `pol`, then the
+/// shared steady-state timing loop.
+fn gflops(pol: &Policy<'_>, op: Op, n: usize, cfg: &BenchCfg) -> f64 {
+    let summary = match op {
+        Op::DVecDVecAdd => {
+            let a = DynVector::random_first_touch(pol, n, 11);
+            let b = DynVector::random_first_touch(pol, n, 12);
+            let mut c = DynVector::zeros_first_touch(pol, n);
+            bench(cfg, || blaze::dvecdvecadd(pol, &a, &b, &mut c))
+        }
+        Op::Daxpy => {
+            let a = DynVector::random_first_touch(pol, n, 13);
+            let mut b = DynVector::random_first_touch(pol, n, 14);
+            bench(cfg, || blaze::daxpy(pol, 3.0, &a, &mut b))
+        }
+        Op::DMatDMatAdd => {
+            let a = DynMatrix::random_first_touch(pol, n, n, 15);
+            let b = DynMatrix::random_first_touch(pol, n, n, 16);
+            let mut c = DynMatrix::zeros_first_touch(pol, n, n);
+            bench(cfg, || blaze::dmatdmatadd(pol, &a, &b, &mut c))
+        }
+        Op::DMatDMatMult => {
+            let a = DynMatrix::random_first_touch(pol, n, n, 17);
+            let b = DynMatrix::random_first_touch(pol, n, n, 18);
+            let mut c = DynMatrix::zeros_first_touch(pol, n, n);
+            bench(cfg, || blaze::dmatdmatmult(pol, &a, &b, &mut c))
+        }
+        Op::DMatDVecMult => {
+            let a = DynMatrix::random_first_touch(pol, n, n, 19);
+            let x = DynVector::random_first_touch(pol, n, 20);
+            let mut y = DynVector::zeros_first_touch(pol, n);
+            bench(cfg, || blaze::dmatdvecmult(pol, &a, &x, &mut y))
+        }
+    };
+    mflops(&summary, op.flops(n)) / 1e3
+}
+
+fn main() {
+    let threads = common::env_grid("BENCH_THREADS", &[1, 2, 4]);
+    let smoke = common::smoke();
+    let cfg = if smoke {
+        BenchCfg {
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 5,
+            min_time: std::time::Duration::from_millis(2),
+        }
+    } else {
+        BenchCfg::quick()
+    };
+
+    eprintln!("[kernels] simd: {}", kernel::simd_label());
+    let t0 = Instant::now();
+    let mut rows: Vec<Row> = Vec::new();
+    for op in Op::ALL {
+        for &v in variants_for(op) {
+            for n in sizes_for(op, smoke) {
+                // seq once per (kernel, variant, size): the serial roofline row.
+                let pol = Policy::with_mode(ExecMode::Seq).kernel(v);
+                let g = gflops(&pol, op, n, &cfg);
+                rows.push(Row {
+                    kernel: op.name(),
+                    variant: v.name(),
+                    policy: "seq",
+                    threads: 1,
+                    n,
+                    gflops: g,
+                });
+                for &t in &threads {
+                    // Exactly t workers per cell, as in ablation_exec: the
+                    // task graph parallelizes over every scheduler worker.
+                    let rt = OmpRuntime::new(t, PolicyKind::PriorityLocal);
+                    rt.icv.set_nthreads(t);
+                    let hpx = HpxMpRuntime::new(rt);
+                    for mode in [ExecMode::Par, ExecMode::Task] {
+                        let pol = Policy::with_mode(mode).on(&hpx).threads(t).kernel(v);
+                        let g = gflops(&pol, op, n, &cfg);
+                        rows.push(Row {
+                            kernel: op.name(),
+                            variant: v.name(),
+                            policy: mode.name(),
+                            threads: t,
+                            n,
+                            gflops: g,
+                        });
+                        eprintln!(
+                            "[kernels] {:<12} {:<8} {:<4} threads={t:<2} n={n:<7} {g:>8.3} GFLOP/s",
+                            op.name(),
+                            v.name(),
+                            mode.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    println!(
+        "{:<14} {:<9} {:<6} {:>8} {:>9} {:>10}",
+        "kernel", "variant", "policy", "threads", "n", "GFLOP/s"
+    );
+    for r in &rows {
+        println!(
+            "{:<14} {:<9} {:<6} {:>8} {:>9} {:>10.3}",
+            r.kernel, r.variant, r.policy, r.threads, r.n, r.gflops
+        );
+    }
+
+    // Headlines: per kernel, the best fast-variant/scalar GFLOP/s ratio
+    // over matching (policy, threads) cells at the largest size.
+    let fast = |op: Op| variants_for(op)[1].name();
+    let mut headlines: Vec<(&'static str, &'static str, f64)> = Vec::new();
+    for op in Op::ALL {
+        let n = *sizes_for(op, smoke).last().expect("non-empty size grid");
+        let mut best: Option<f64> = None;
+        let cells: Vec<(&'static str, usize)> = std::iter::once(("seq", 1))
+            .chain(threads.iter().flat_map(|&t| [("par", t), ("task", t)]))
+            .collect();
+        for (policy, t) in cells {
+            let find = |variant: &str| {
+                rows.iter()
+                    .find(|r| {
+                        r.kernel == op.name()
+                            && r.variant == variant
+                            && r.policy == policy
+                            && r.threads == t
+                            && r.n == n
+                    })
+                    .map(|r| r.gflops)
+            };
+            if let (Some(s), Some(f)) = (find("scalar"), find(fast(op))) {
+                if s > 0.0 {
+                    let ratio = f / s;
+                    best = Some(best.map_or(ratio, |b: f64| b.max(ratio)));
+                }
+            }
+        }
+        if let Some(b) = best {
+            println!("best speedup {} vs scalar [{}]: {b:.3}x", fast(op), op.name());
+            headlines.push((op.name(), fast(op), b));
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"kernels\",\n");
+    json.push_str(&format!("  \"simd\": \"{}\",\n  \"rows\": [\n", kernel::simd_label()));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"variant\": \"{}\", \"policy\": \"{}\", \"threads\": {}, \"n\": {}, \"gflops\": {:.4}}}{}\n",
+            r.kernel,
+            r.variant,
+            r.policy,
+            r.threads,
+            r.n,
+            r.gflops,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+    for (k, _, b) in headlines.iter().filter(|(k, _, _)| *k == "dmatdmatmult") {
+        json.push_str(&format!(
+            "  \"speedup_packed_vs_scalar_{k}\": {b:.3},\n"
+        ));
+    }
+    json.push_str("  \"speedup_unrolled_vs_scalar\": {");
+    let unrolled: Vec<_> = headlines
+        .iter()
+        .filter(|(_, v, _)| *v == "unrolled")
+        .collect();
+    for (i, (k, _, b)) in unrolled.iter().enumerate() {
+        json.push_str(&format!(
+            "{}\"{}\": {:.3}",
+            if i == 0 { "" } else { ", " },
+            k,
+            b
+        ));
+    }
+    json.push_str("}\n}\n");
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_kernels.json");
+    std::fs::write(&path, json).expect("write BENCH_kernels.json");
+    println!("{}", path.display());
+    eprintln!("[kernels] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,12 +1,23 @@
 //! Microbenchmarks of the runtime's hot paths — the quantities the §Perf
 //! optimization loop tracks (EXPERIMENTS.md):
 //!
-//! * empty fork/join round-trip (hpxMP vs baseline pool) — the per-region
-//!   cost that separates the runtimes at small sizes in every figure;
+//! * empty region round-trip through the `exec::Policy` seam — `par` on
+//!   hpxMP, `par` on the baseline pool, and `task` on hpxMP — the
+//!   per-region cost that separates the runtimes at small sizes in
+//!   every figure;
 //! * barrier round-trip inside a live region;
 //! * explicit-task spawn+taskwait throughput;
 //! * dynamic-loop chunk dispatch rate;
 //! * AMT spawn/steal throughput.
+//!
+//! The region rows go through `exec::par()/task()` like every kernel
+//! does; the remaining rows deliberately reach *below* the policy seam
+//! (`ctx.barrier`, `ctx.task`, `ctx.dispatch_next`, `sched.spawn`) —
+//! they measure the substrate constructs themselves, which have no
+//! policy-level spelling.
+//!
+//! `BENCH_SMOKE=1` shrinks iteration counts for CI; `BENCH_THREADS`
+//! (first entry, default 4) sets the team width.
 //!
 //! Emits `results/ablation_overheads.csv`.
 
@@ -18,9 +29,11 @@ use hpxmp::amt::PolicyKind;
 use hpxmp::baseline::BaselinePool;
 use hpxmp::omp::team::{current_ctx, fork_call};
 use hpxmp::omp::{OmpRuntime, SchedKind, Schedule};
+use hpxmp::par::exec;
+use hpxmp::par::HpxMpRuntime;
 use hpxmp::util::csv::CsvWriter;
 
-const THREADS: usize = 4;
+mod common;
 
 fn time_per<T>(iters: usize, mut f: impl FnMut() -> T) -> f64 {
     let t0 = Instant::now();
@@ -31,34 +44,54 @@ fn time_per<T>(iters: usize, mut f: impl FnMut() -> T) -> f64 {
 }
 
 fn main() {
-    let rt = OmpRuntime::new(THREADS, PolicyKind::PriorityLocal);
-    rt.icv.set_nthreads(THREADS);
-    let pool = BaselinePool::new(THREADS);
+    let smoke = common::smoke();
+    let threads = common::env_grid("BENCH_THREADS", &[4])[0];
+    // Iteration counts per measurement (full / smoke).
+    let (region_iters, barrier_iters, task_n, dispatch_n, spawn_n) = if smoke {
+        (30, 20, 2_000, 20_000i64, 10_000)
+    } else {
+        (300, 200, 20_000, 200_000i64, 100_000)
+    };
+
+    let rt = OmpRuntime::new(threads, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(threads);
+    let hpx = HpxMpRuntime::new(rt);
+    let pool = BaselinePool::new(threads);
     let mut rows: Vec<(String, f64)> = Vec::new();
 
-    // --- empty region: hpxMP fork_call vs baseline pool.fork ---------------
-    let hpx_region = time_per(300, || {
-        fork_call(&rt, Some(THREADS), |_| {});
+    // --- empty region through the Policy seam ------------------------------
+    // One for_each over an empty body: the full fork + chunk + join cost a
+    // kernel pays before doing any work.
+    let hpx_pol = exec::par().on(&hpx).threads(threads);
+    let hpx_region = time_per(region_iters, || {
+        exec::for_each(&hpx_pol, 0..threads as i64, |_r| {});
     });
     rows.push(("hpxmp_empty_region_us".into(), hpx_region * 1e6));
 
-    let base_region = time_per(300, || {
-        pool.fork(THREADS, &|_, _| {});
+    let base_pol = exec::par().on(&pool).threads(threads);
+    let base_region = time_per(region_iters, || {
+        exec::for_each(&base_pol, 0..threads as i64, |_r| {});
     });
     rows.push(("baseline_empty_region_us".into(), base_region * 1e6));
 
-    // --- barrier round-trip inside one region ------------------------------
+    let task_pol = exec::task().on(&hpx).threads(threads);
+    let task_region = time_per(region_iters, || {
+        exec::for_each(&task_pol, 0..threads as i64, |_r| {});
+    });
+    rows.push(("hpxmp_empty_task_graph_us".into(), task_region * 1e6));
+
+    // --- barrier round-trip inside one region (substrate: ctx.barrier) -----
     {
         let t_us = Arc::new(std::sync::Mutex::new(0.0f64));
         let t2 = t_us.clone();
-        fork_call(&rt, Some(THREADS), move |ctx| {
-            const N: usize = 200;
+        let n = barrier_iters;
+        fork_call(&hpx.rt, Some(threads), move |ctx| {
             ctx.barrier();
             let t0 = Instant::now();
-            for _ in 0..N {
+            for _ in 0..n {
                 ctx.barrier();
             }
-            let per = t0.elapsed().as_secs_f64() / N as f64;
+            let per = t0.elapsed().as_secs_f64() / n as f64;
             if ctx.tid == 0 {
                 *t2.lock().unwrap() = per * 1e6;
             }
@@ -66,17 +99,17 @@ fn main() {
         rows.push(("hpxmp_barrier_us".into(), *t_us.lock().unwrap()));
     }
 
-    // --- explicit task spawn + taskwait -------------------------------------
+    // --- explicit task spawn + taskwait (substrate: ctx.task) --------------
     {
         let rate = Arc::new(std::sync::Mutex::new(0.0f64));
         let r2 = rate.clone();
-        fork_call(&rt, Some(2), move |c| {
+        let n = task_n;
+        fork_call(&hpx.rt, Some(2), move |c| {
             if c.tid == 0 {
                 let ctx = current_ctx().unwrap();
                 let done = Arc::new(AtomicUsize::new(0));
-                const N: usize = 20_000;
                 let t0 = Instant::now();
-                for _ in 0..N {
+                for _ in 0..n {
                     let d = done.clone();
                     ctx.task(move || {
                         d.fetch_add(1, Ordering::Relaxed);
@@ -84,22 +117,22 @@ fn main() {
                 }
                 ctx.taskwait();
                 let dt = t0.elapsed().as_secs_f64();
-                assert_eq!(done.load(Ordering::SeqCst), N);
-                *r2.lock().unwrap() = N as f64 / dt;
+                assert_eq!(done.load(Ordering::SeqCst), n);
+                *r2.lock().unwrap() = n as f64 / dt;
             }
         });
         rows.push(("hpxmp_tasks_per_s".into(), *rate.lock().unwrap()));
     }
 
-    // --- dynamic chunk dispatch rate ----------------------------------------
+    // --- dynamic chunk dispatch rate (substrate: ctx.dispatch_next) --------
     {
         let rate = Arc::new(std::sync::Mutex::new(0.0f64));
         let r2 = rate.clone();
         let total = Arc::new(AtomicUsize::new(0));
-        fork_call(&rt, Some(THREADS), move |ctx| {
-            const N: i64 = 200_000;
+        let n = dispatch_n;
+        fork_call(&hpx.rt, Some(threads), move |ctx| {
             let t0 = Instant::now();
-            let desc = ctx.dispatch_init(0..N, Schedule::new(SchedKind::Dynamic, Some(1)));
+            let desc = ctx.dispatch_init(0..n, Schedule::new(SchedKind::Dynamic, Some(1)));
             let mut claimed = 0usize;
             while let Some(r) = ctx.dispatch_next(&desc, 0) {
                 claimed += (r.end - r.start) as usize;
@@ -115,14 +148,14 @@ fn main() {
         rows.push(("hpxmp_chunks_per_s".into(), *rate.lock().unwrap()));
     }
 
-    // --- raw AMT spawn throughput -------------------------------------------
+    // --- raw AMT spawn throughput (substrate: sched.spawn) ------------------
     {
         let done = Arc::new(AtomicUsize::new(0));
-        const N: usize = 100_000;
+        let n = spawn_n;
         let t0 = Instant::now();
-        for i in 0..N {
+        for i in 0..n {
             let d = done.clone();
-            rt.sched.spawn(
+            hpx.rt.sched.spawn(
                 hpxmp::amt::Priority::Normal,
                 hpxmp::amt::task::Hint::Worker(i),
                 "bench",
@@ -131,13 +164,15 @@ fn main() {
                 },
             );
         }
-        rt.sched.wait_quiescent();
+        hpx.rt.sched.wait_quiescent();
         let dt = t0.elapsed().as_secs_f64();
-        rows.push(("amt_spawn_tasks_per_s".into(), N as f64 / dt));
+        rows.push(("amt_spawn_tasks_per_s".into(), n as f64 / dt));
     }
 
     // --- report -----------------------------------------------------------
-    let mut w = CsvWriter::create(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../results/ablation_overheads.csv")).expect("csv");
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let mut w = CsvWriter::create(dir.join("ablation_overheads.csv")).expect("csv");
     w.row(&["metric", "value"]).unwrap();
     println!("{:<28} {:>14}", "metric", "value");
     for (k, v) in &rows {
@@ -146,6 +181,6 @@ fn main() {
     }
     w.flush().unwrap();
     println!("wrote results/ablation_overheads.csv");
-    let m = rt.sched.metrics();
+    let m = hpx.rt.sched.metrics();
     println!("scheduler metrics: {m}");
 }

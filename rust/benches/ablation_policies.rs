@@ -1,20 +1,32 @@
 //! Ablation: the seven §3.2 scheduling policies under three workloads —
 //! the design-choice study DESIGN.md calls out (which policy should back
-//! an OpenMP runtime?).  Emits `results/ablation_policies.csv`.
+//! an OpenMP runtime?).
+//!
+//! The fork/join workload goes through the `exec::par()` policy seam
+//! (the same path every kernel takes); the spawn and imbalanced
+//! workloads deliberately drive the raw [`Scheduler`] — the ablated
+//! variable *is* the scheduler policy, below any policy-API spelling.
+//!
+//! `BENCH_SMOKE=1` shrinks workload sizes for CI; `BENCH_THREADS`
+//! (first entry, default 4) sets the worker count.
+//!
+//! Emits `results/ablation_policies.csv`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use hpxmp::amt::{task::Hint, PolicyKind, Priority, Scheduler};
-use hpxmp::omp::{fork_call, OmpRuntime};
+use hpxmp::omp::OmpRuntime;
+use hpxmp::par::exec;
+use hpxmp::par::HpxMpRuntime;
 use hpxmp::util::csv::CsvWriter;
 
-const WORKERS: usize = 4;
+mod common;
 
 /// Raw task throughput: spawn N trivial tasks, quiesce.
-fn bench_spawn(policy: PolicyKind, tasks: usize) -> f64 {
-    let s = Scheduler::new(WORKERS, policy);
+fn bench_spawn(policy: PolicyKind, workers: usize, tasks: usize) -> f64 {
+    let s = Scheduler::new(workers, policy);
     let done = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     for i in 0..tasks {
@@ -29,15 +41,19 @@ fn bench_spawn(policy: PolicyKind, tasks: usize) -> f64 {
     tasks as f64 / dt
 }
 
-/// Fork/join churn: OpenMP regions per second.
-fn bench_fork_join(policy: PolicyKind, regions: usize) -> f64 {
-    let rt = OmpRuntime::new(WORKERS, policy);
-    rt.icv.set_nthreads(WORKERS);
+/// Fork/join churn: parallel regions per second, each region a
+/// `exec::for_each` under `par()` on an hpxMP runtime built over the
+/// ablated scheduler policy.
+fn bench_fork_join(policy: PolicyKind, workers: usize, regions: usize) -> f64 {
+    let rt = OmpRuntime::new(workers, policy);
+    rt.icv.set_nthreads(workers);
+    let hpx = HpxMpRuntime::new(rt);
+    let pol = exec::par().on(&hpx).threads(workers);
     let sink = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     for _ in 0..regions {
-        let s = sink.clone();
-        fork_call(&rt, Some(WORKERS), move |_| {
+        let s = &sink;
+        exec::for_each(&pol, 0..workers as i64, move |_r| {
             s.fetch_add(1, Ordering::Relaxed);
         });
     }
@@ -46,15 +62,15 @@ fn bench_fork_join(policy: PolicyKind, regions: usize) -> f64 {
 }
 
 /// Imbalanced work: tasks with skewed costs — stresses stealing.
-fn bench_imbalanced(policy: PolicyKind, tasks: usize) -> f64 {
-    let s = Scheduler::new(WORKERS, policy);
+fn bench_imbalanced(policy: PolicyKind, workers: usize, tasks: usize) -> f64 {
+    let s = Scheduler::new(workers, policy);
     let done = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     for i in 0..tasks {
         let d = done.clone();
         // Every 16th task is ~100x heavier.
         let spin = if i % 16 == 0 { 20_000 } else { 200 };
-        s.spawn(Priority::Normal, Hint::Worker(i % WORKERS), "t", move || {
+        s.spawn(Priority::Normal, Hint::Worker(i % workers), "t", move || {
             let mut acc = 0u64;
             for k in 0..spin {
                 acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
@@ -70,7 +86,17 @@ fn bench_imbalanced(policy: PolicyKind, tasks: usize) -> f64 {
 }
 
 fn main() {
-    let mut w = CsvWriter::create(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../results/ablation_policies.csv")).expect("csv");
+    let smoke = common::smoke();
+    let workers = common::env_grid("BENCH_THREADS", &[4])[0];
+    let (spawn_n, region_n, imb_n) = if smoke {
+        (5_000, 50, 500)
+    } else {
+        (50_000, 500, 5_000)
+    };
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let mut w = CsvWriter::create(dir.join("ablation_policies.csv")).expect("csv");
     w.row(&["policy", "spawn_tasks_per_s", "fork_join_regions_per_s", "imbalanced_tasks_per_s"])
         .unwrap();
     println!(
@@ -78,9 +104,9 @@ fn main() {
         "policy", "spawn ktasks/s", "regions/s", "imbalanced kt/s"
     );
     for policy in PolicyKind::ALL {
-        let spawn = bench_spawn(policy, 50_000);
-        let fj = bench_fork_join(policy, 500);
-        let imb = bench_imbalanced(policy, 5_000);
+        let spawn = bench_spawn(policy, workers, spawn_n);
+        let fj = bench_fork_join(policy, workers, region_n);
+        let imb = bench_imbalanced(policy, workers, imb_n);
         println!(
             "{:<18} {:>16.1} {:>16.1} {:>18.1}",
             policy.name(),

@@ -42,14 +42,42 @@ pub fn smoke() -> bool {
 
 /// Thread grid for heatmaps.  The paper sweeps 1–16 on a 16-core node; we
 /// keep the sweep but note (EXPERIMENTS.md) that >num_procs rows are
-/// oversubscribed on this testbed.  `BENCH_THREADS=1,2,4` overrides.
+/// oversubscribed on this testbed.  `BENCH_THREADS=1,2,4` overrides;
+/// under `BENCH_SMOKE=1` the default shrinks to `[1, 2]`.
 pub fn heatmap_threads() -> Vec<usize> {
-    env_grid("BENCH_THREADS", &[1, 2, 4, 8, 12, 16])
+    let default: &[usize] = if smoke() { &[1, 2] } else { &[1, 2, 4, 8, 12, 16] };
+    env_grid("BENCH_THREADS", default)
 }
 
-/// The paper's scaling figures use 4, 8, 16 threads.
+/// The paper's scaling figures use 4, 8, 16 threads (smoke: just 2).
 pub fn scaling_threads() -> Vec<usize> {
-    env_grid("BENCH_SCALING_THREADS", &[4, 8, 16])
+    let default: &[usize] = if smoke() { &[2] } else { &[4, 8, 16] };
+    env_grid("BENCH_SCALING_THREADS", default)
+}
+
+/// Truncate a size grid to its first three entries under `BENCH_SMOKE=1`
+/// — the figure sweeps keep their shape but finish in CI time.
+pub fn smoke_sizes(sizes: Vec<usize>) -> Vec<usize> {
+    if smoke() {
+        sizes.into_iter().take(3).collect()
+    } else {
+        sizes
+    }
+}
+
+/// Steady-state timing profile: `quick()` normally, a few-iteration
+/// profile under `BENCH_SMOKE=1`.
+pub fn bench_cfg() -> BenchCfg {
+    if smoke() {
+        BenchCfg {
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 5,
+            min_time: std::time::Duration::from_millis(2),
+        }
+    } else {
+        BenchCfg::quick()
+    }
 }
 
 /// Concurrent-client grid for the serving/wake ablations.
@@ -84,8 +112,8 @@ pub fn run_heatmap(op: Op) {
     let threads = heatmap_threads();
     let max = threads.iter().copied().max().unwrap();
     let shared = build(max);
-    let cfg = BenchCfg::quick();
-    let sizes = op.heatmap_sizes();
+    let cfg = bench_cfg();
+    let sizes = smoke_sizes(op.heatmap_sizes());
     eprintln!(
         "[{}] heatmap: threads {threads:?} x sizes {sizes:?}",
         op.name()
@@ -134,8 +162,8 @@ pub fn run_scaling(op: Op) {
     let threads = scaling_threads();
     let max = threads.iter().copied().max().unwrap();
     let shared = build(max);
-    let cfg = BenchCfg::quick();
-    let sizes = op.scaling_sizes();
+    let cfg = bench_cfg();
+    let sizes = smoke_sizes(op.scaling_sizes());
     for &t in &threads {
         eprintln!("[{}] scaling @{t} threads", op.name());
         let row_rt;

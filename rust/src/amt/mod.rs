@@ -21,7 +21,11 @@
 //!   as AMT tasks, `when_all` joins, help-first waits (DESIGN.md §7).
 //! * [`metrics`] — counters for spawned/executed/stolen/parked tasks and
 //!   the targeted-wake observability surface.
+//! * [`arena`] — per-worker magazine/depot allocator for task payloads
+//!   (ISSUE 7): spawn-path closures recycle fixed-size blocks instead of
+//!   round-tripping malloc.
 
+pub mod arena;
 pub mod cancel;
 pub mod deque;
 pub mod future;
@@ -32,6 +36,7 @@ pub mod scheduler;
 pub mod task;
 pub mod worker;
 
+pub use arena::Payload;
 pub use cancel::CancelToken;
 pub use future::{when_all, Future, Outcome, Promise};
 pub use park::IdleMode;

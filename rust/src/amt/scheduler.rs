@@ -17,6 +17,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::arena::Payload;
 use super::cancel::CancelToken;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::park::{GlobalIdle, IdleMode, IdleSet, Parker, WakeList};
@@ -346,6 +347,29 @@ impl Scheduler {
         token: Option<CancelToken>,
         bodies: Vec<(Hint, Box<dyn FnOnce() + Send + 'static>)>,
     ) {
+        self.spawn_batch_payloads(
+            priority,
+            desc,
+            token,
+            bodies
+                .into_iter()
+                .map(|(h, f)| (h, Payload::Boxed(f)))
+                .collect(),
+        );
+    }
+
+    /// [`Scheduler::spawn_batch_cancellable`] over pre-wrapped
+    /// [`Payload`]s — the arena-aware bulk path (ISSUE 7): callers that
+    /// build payloads with [`Payload::new`] place small chunk closures
+    /// in recycled per-worker arena blocks, keeping malloc off the
+    /// spawn fast path entirely.
+    pub fn spawn_batch_payloads(
+        &self,
+        priority: Priority,
+        desc: &'static str,
+        token: Option<CancelToken>,
+        bodies: Vec<(Hint, Payload)>,
+    ) {
         let n = bodies.len();
         if n == 0 {
             return;
@@ -366,7 +390,7 @@ impl Scheduler {
             if let Hint::Worker(w) = hint {
                 targets.push(w % workers);
             }
-            let mut task = Task::from_boxed(priority, desc, f);
+            let mut task = Task::from_payload(priority, desc, f);
             task.cancel = token.clone();
             self.shared.queues.push(task, hint, submitter);
         }

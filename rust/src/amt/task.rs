@@ -7,6 +7,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::arena::Payload;
 use super::cancel::CancelToken;
 
 /// Scheduling priority, mirroring `hpx::threads::thread_priority_*`.
@@ -40,7 +41,7 @@ pub struct Task {
     /// side effects others wait on must release them from `Drop` guards,
     /// not from the closure tail.
     pub cancel: Option<CancelToken>,
-    f: Box<dyn FnOnce() + Send + 'static>,
+    f: Payload,
 }
 
 impl Task {
@@ -54,7 +55,7 @@ impl Task {
             priority,
             desc,
             cancel: None,
-            f: Box::new(f),
+            f: Payload::new(f),
         }
     }
 
@@ -77,6 +78,13 @@ impl Task {
         desc: &'static str,
         f: Box<dyn FnOnce() + Send + 'static>,
     ) -> Self {
+        Self::from_payload(priority, desc, Payload::Boxed(f))
+    }
+
+    /// Build from a pre-wrapped [`Payload`] — the arena-aware bulk-spawn
+    /// path (ISSUE 7) constructs payloads at chunk-closure creation so
+    /// the spawn path allocates from the worker arena, not malloc.
+    pub fn from_payload(priority: Priority, desc: &'static str, f: Payload) -> Self {
         Self {
             id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
             priority,
@@ -88,7 +96,7 @@ impl Task {
 
     /// Consume and execute the task body.
     pub fn run(self) {
-        (self.f)()
+        self.f.invoke()
     }
 }
 

@@ -120,6 +120,10 @@ pub(super) fn worker_loop(shared: Arc<Shared>, me: usize) {
         shared.worker_park(me);
         spin = 0;
     }
+    // Flush this worker's arena magazines to the depot: blocks cached
+    // here become reusable by surviving workers instead of idling in
+    // dead TLS.
+    super::arena::trim_thread();
     set_current(None);
 }
 

@@ -1,0 +1,747 @@
+//! The compute layer (ISSUE 7): explicitly unrolled micro-kernels and
+//! the packed cache-blocked matmul behind [`KernelVariant`] dispatch.
+//!
+//! `serial.rs` keeps the straightforward scalar loops — they are the
+//! oracle every test compares against.  This module adds the fast paths:
+//!
+//! * **Unrolled elementwise kernels** ([`vadd_unrolled`],
+//!   [`daxpy_unrolled`]) — 4-wide via `chunks_exact` so bounds checks
+//!   vanish from the inner loop.  Elementwise operations have one
+//!   independent sum per output element, so these are **bitwise equal**
+//!   to the scalar loops.
+//! * **Accumulator-split matvec** ([`matvec_unrolled`]) — four partial
+//!   dot-product accumulators folded as `(s0+s1)+(s2+s3)+tail`; this
+//!   *reassociates* the sum, so it only runs when explicitly requested.
+//! * **Packed cache-blocked matmul** ([`packed_matmul`],
+//!   [`packed_band_mm`]) — a BLIS-style [`MR`]×[`NR`] register-blocked
+//!   micro-kernel over panels packed into contiguous buffers
+//!   ([`pack_a_band`] / [`pack_b_band`]), stepping the depth in [`KC`]
+//!   strips.  Per output element the contributions accumulate in one
+//!   register in strictly ascending `k`, so the packed result is a pure
+//!   function of the operands — **bitwise identical across policies,
+//!   tile sizes, and thread counts** (only *different from the scalar
+//!   row kernel*, which streams C through memory per `k`).
+//! * **FMA paths** behind the `simd` cargo feature
+//!   (`#[target_feature(enable = "avx2,fma")]` + runtime CPUID
+//!   detection, surfaced by [`simd_label`] in `hpxmp info`).  Fused
+//!   multiply-add changes rounding, so FMA engages only for explicitly
+//!   requested variants — never under [`KernelVariant::Auto`].
+//!
+//! Dispatch contract (the reason every pre-existing bitwise test stays
+//! green): [`KernelVariant::Auto`] is numerics-preserving.  It unrolls
+//! elementwise kernels (bitwise-equal), keeps the scalar matvec (the
+//! split accumulator would reassociate), and selects the packed matmul
+//! only when `min(m, k, n) ≥` [`PACKED_MIN_DIM`] — above every
+//! dimension the repo's bitwise oracles exercise.  Resolution depends
+//! only on `(variant, dimensions)`, never on the execution mode or
+//! thread count.
+
+use super::serial;
+use super::thresholds::PACKED_MIN_DIM;
+use crate::par::exec::KernelVariant;
+
+/// Rows of the register-blocked micro-tile.  4×4 f64 accumulators fit
+/// the SSE2 register file (8 of 16 xmm) and map to four `__m256d` rows
+/// under AVX2.
+pub const MR: usize = 4;
+
+/// Columns of the register-blocked micro-tile (one `__m256d` wide).
+pub const NR: usize = 4;
+
+/// Depth-strip length of the packed matmul: one A-sliver strip
+/// (`MR·KC·8` = 8 KiB) plus one B-sliver strip stay L1-resident while
+/// the micro-kernel sweeps them.
+pub const KC: usize = 256;
+
+/// Row-band height of the serial [`packed_matmul`] driver (and the
+/// natural `.tile()` for the parallel paths): packs
+/// `PACKED_ROW_BAND·k` doubles of A at a time.
+pub const PACKED_ROW_BAND: usize = 64;
+
+/// Was the `simd` cargo feature compiled into this build (on x86-64)?
+pub fn simd_compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// Are the FMA fast paths usable *right now* — compiled in **and** the
+/// CPU reports AVX2+FMA?  Detection runs once and is cached.
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        use once_cell::sync::Lazy;
+        static AVX2_FMA: Lazy<bool> = Lazy::new(|| {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        });
+        *AVX2_FMA
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// One-line SIMD status for `hpxmp info` and bench metadata.
+pub fn simd_label() -> &'static str {
+    if !simd_compiled() {
+        "portable (simd feature not compiled)"
+    } else if simd_active() {
+        "avx2+fma (runtime-detected)"
+    } else {
+        "portable (simd compiled, cpu lacks avx2+fma)"
+    }
+}
+
+/// `c[i] = a[i] + b[i]`, explicitly 4-wide.  Bitwise equal to
+/// [`serial::vadd_slice`] (independent per-element sums).
+pub fn vadd_unrolled(a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), c.len());
+    let mut cc = c.chunks_exact_mut(4);
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for ((cv, av), bv) in (&mut cc).zip(&mut ca).zip(&mut cb) {
+        cv[0] = av[0] + bv[0];
+        cv[1] = av[1] + bv[1];
+        cv[2] = av[2] + bv[2];
+        cv[3] = av[3] + bv[3];
+    }
+    for ((ci, ai), bi) in cc
+        .into_remainder()
+        .iter_mut()
+        .zip(ca.remainder())
+        .zip(cb.remainder())
+    {
+        *ci = *ai + *bi;
+    }
+}
+
+/// `b[i] += beta * a[i]`, explicitly 4-wide.  Bitwise equal to
+/// [`serial::daxpy_slice`] (separate multiply and add per element — the
+/// FMA variant lives in the feature-gated module).
+pub fn daxpy_unrolled(beta: f64, a: &[f64], b: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut cb = b.chunks_exact_mut(4);
+    let mut ca = a.chunks_exact(4);
+    for (bv, av) in (&mut cb).zip(&mut ca) {
+        bv[0] += beta * av[0];
+        bv[1] += beta * av[1];
+        bv[2] += beta * av[2];
+        bv[3] += beta * av[3];
+    }
+    for (bi, ai) in cb.into_remainder().iter_mut().zip(ca.remainder()) {
+        *bi += beta * *ai;
+    }
+}
+
+/// Row band of `y = A * x` with 4-way accumulator splitting: four
+/// partial sums folded as `(s0+s1)+(s2+s3)+tail`.  **Reassociates** the
+/// dot product relative to [`serial::matvec_rows`] — tolerance-checked
+/// against the oracle, never selected by `Auto`.
+pub fn matvec_unrolled(a: &[f64], x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    debug_assert_eq!(a.len(), y.len() * n);
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &a[i * n..(i + 1) * n];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        let mut cr = row.chunks_exact(4);
+        let mut cx = x.chunks_exact(4);
+        for (rv, xv) in (&mut cr).zip(&mut cx) {
+            s0 += rv[0] * xv[0];
+            s1 += rv[1] * xv[1];
+            s2 += rv[2] * xv[2];
+            s3 += rv[3] * xv[3];
+        }
+        let mut tail = 0.0;
+        for (aij, xj) in cr.remainder().iter().zip(cx.remainder()) {
+            tail += *aij * *xj;
+        }
+        *yi = (s0 + s1) + (s2 + s3) + tail;
+    }
+}
+
+/// The FMA fast paths — compiled only with the `simd` cargo feature on
+/// x86-64, and only *called* after [`simd_active`] confirmed AVX2+FMA
+/// at runtime.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// `b[i] = fma(beta, a[i], b[i])` — fused rounding, so numerically
+    /// different from the scalar loop.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA via [`super::simd_active`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn daxpy_fma(beta: f64, a: &[f64], b: &mut [f64]) {
+        let vb = _mm256_set1_pd(beta);
+        let mut ca = a.chunks_exact(4);
+        let mut cb = b.chunks_exact_mut(4);
+        for (av, bv) in (&mut ca).zip(&mut cb) {
+            let r = _mm256_fmadd_pd(vb, _mm256_loadu_pd(av.as_ptr()), _mm256_loadu_pd(bv.as_ptr()));
+            _mm256_storeu_pd(bv.as_mut_ptr(), r);
+        }
+        for (ai, bi) in ca.remainder().iter().zip(cb.into_remainder()) {
+            *bi = beta.mul_add(*ai, *bi);
+        }
+    }
+
+    /// Row band of `y = A * x` with one `__m256d` accumulator per row
+    /// (4-way lane split + horizontal fold) and fused multiply-adds.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA via [`super::simd_active`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matvec_fma(a: &[f64], x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        debug_assert_eq!(a.len(), y.len() * n);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let row = &a[i * n..(i + 1) * n];
+            let mut acc = _mm256_setzero_pd();
+            let mut cr = row.chunks_exact(4);
+            let mut cx = x.chunks_exact(4);
+            for (rv, xv) in (&mut cr).zip(&mut cx) {
+                acc = _mm256_fmadd_pd(
+                    _mm256_loadu_pd(rv.as_ptr()),
+                    _mm256_loadu_pd(xv.as_ptr()),
+                    acc,
+                );
+            }
+            let lo = _mm256_castpd256_pd128(acc);
+            let hi = _mm256_extractf128_pd(acc, 1);
+            let pair = _mm_add_pd(lo, hi);
+            let mut sum = _mm_cvtsd_f64(_mm_add_sd(pair, _mm_unpackhi_pd(pair, pair)));
+            for (aij, xj) in cr.remainder().iter().zip(cx.remainder()) {
+                sum = aij.mul_add(*xj, sum);
+            }
+            *yi = sum;
+        }
+    }
+
+    /// The [`MR`]×[`NR`] micro-kernel over one depth strip, four
+    /// `__m256d` row accumulators: `acc[r] = fma(broadcast(a[r]), b, acc[r])`
+    /// per `kk`.  Same ascending-`kk` per-lane accumulation as the
+    /// scalar micro-kernel (decomposition-independent), fused rounding.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA via [`super::simd_active`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn microkernel_fma(ap: &[f64], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
+        let mut c0 = _mm256_loadu_pd(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_pd(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_pd(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_pd(acc[3].as_ptr());
+        for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+            let b = _mm256_loadu_pd(bv.as_ptr());
+            c0 = _mm256_fmadd_pd(_mm256_set1_pd(av[0]), b, c0);
+            c1 = _mm256_fmadd_pd(_mm256_set1_pd(av[1]), b, c1);
+            c2 = _mm256_fmadd_pd(_mm256_set1_pd(av[2]), b, c2);
+            c3 = _mm256_fmadd_pd(_mm256_set1_pd(av[3]), b, c3);
+        }
+        _mm256_storeu_pd(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_pd(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_pd(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_pd(acc[3].as_mut_ptr(), c3);
+    }
+}
+
+/// `c = a + b` under `variant` — the elementwise dispatch behind
+/// `dvecdvecadd` and `dmatdmatadd`.  Every variant is bitwise equal
+/// (independent per-element sums); `Scalar` pins the oracle loop.
+pub fn vadd(variant: KernelVariant, a: &[f64], b: &[f64], c: &mut [f64]) {
+    match variant {
+        KernelVariant::Scalar => serial::vadd_slice(a, b, c),
+        _ => vadd_unrolled(a, b, c),
+    }
+}
+
+/// `b += beta * a` under `variant`.  `Auto` unrolls without FMA
+/// (bitwise equal to scalar); `Unrolled`/`Packed` opt into the fused
+/// FMA path when compiled and detected.
+pub fn daxpy(variant: KernelVariant, beta: f64, a: &[f64], b: &mut [f64]) {
+    match variant {
+        KernelVariant::Scalar => serial::daxpy_slice(beta, a, b),
+        KernelVariant::Auto => daxpy_unrolled(beta, a, b),
+        KernelVariant::Unrolled | KernelVariant::Packed => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                if simd_active() {
+                    // SAFETY: AVX2+FMA confirmed by simd_active().
+                    unsafe { x86::daxpy_fma(beta, a, b) };
+                    return;
+                }
+            }
+            daxpy_unrolled(beta, a, b)
+        }
+    }
+}
+
+/// Row band of `C = A + B` under `variant` (flat slices — elementwise,
+/// same dispatch as [`vadd`]).
+pub fn madd(variant: KernelVariant, a: &[f64], b: &[f64], c: &mut [f64]) {
+    vadd(variant, a, b, c);
+}
+
+/// Row band of `y = A * x` under `variant`.  `Auto` keeps the scalar
+/// single-accumulator loop (splitting would reassociate the dot
+/// product); `Unrolled`/`Packed` opt into the split/FMA paths.
+pub fn matvec(variant: KernelVariant, a: &[f64], x: &[f64], y: &mut [f64]) {
+    match variant {
+        KernelVariant::Scalar | KernelVariant::Auto => serial::matvec_rows(a, x, y),
+        KernelVariant::Unrolled | KernelVariant::Packed => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                if simd_active() {
+                    // SAFETY: AVX2+FMA confirmed by simd_active().
+                    unsafe { x86::matvec_fma(a, x, y) };
+                    return;
+                }
+            }
+            matvec_unrolled(a, x, y)
+        }
+    }
+}
+
+/// Does `variant` select the packed matmul at these dimensions?
+/// `Packed` always; `Auto` only when every dimension clears
+/// [`PACKED_MIN_DIM`] (the numerics-preserving floor — see the module
+/// doc); `Scalar`/`Unrolled` keep the row kernel.
+pub fn matmul_uses_packed(variant: KernelVariant, m: usize, k: usize, n: usize) -> bool {
+    match variant {
+        KernelVariant::Packed => true,
+        KernelVariant::Auto => m.min(k).min(n) >= PACKED_MIN_DIM,
+        KernelVariant::Scalar | KernelVariant::Unrolled => false,
+    }
+}
+
+/// Packed-buffer length for a band of `rows` rows at depth `k`: row
+/// panels are padded up to a multiple of [`MR`].
+pub fn packed_a_len(rows: usize, k: usize) -> usize {
+    rows.div_ceil(MR) * MR * k
+}
+
+/// Packed-buffer length for a band of `cols` columns at depth `k`:
+/// column panels are padded up to a multiple of [`NR`].
+pub fn packed_b_len(k: usize, cols: usize) -> usize {
+    cols.div_ceil(NR) * NR * k
+}
+
+/// Pack rows `i0..i1` of row-major `a` (`lda = k`) into `buf`:
+/// panel-major, each panel [`MR`] rows stored as ascending-`kk` slivers
+/// (`buf[p·MR·k + kk·MR + r]`), rows past `i1` zero-padded.  A depth
+/// strip of a panel is then the contiguous range `kk0·MR..kk1·MR`.
+pub fn pack_a_band(a: &[f64], k: usize, i0: usize, i1: usize, buf: &mut [f64]) {
+    let rows = i1 - i0;
+    let panels = rows.div_ceil(MR);
+    debug_assert!(a.len() >= i1 * k);
+    debug_assert_eq!(buf.len(), panels * MR * k);
+    for p in 0..panels {
+        let pbuf = &mut buf[p * MR * k..(p + 1) * MR * k];
+        for r in 0..MR {
+            let i = i0 + p * MR + r;
+            if i < i1 {
+                for (kk, &v) in a[i * k..(i + 1) * k].iter().enumerate() {
+                    pbuf[kk * MR + r] = v;
+                }
+            } else {
+                for kk in 0..k {
+                    pbuf[kk * MR + r] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack columns `j0..j1` of row-major `b` (`k × n`) into `buf`:
+/// panel-major, each panel [`NR`] columns stored as ascending-`kk`
+/// slivers (`buf[q·NR·k + kk·NR + c]`), columns past `j1` zero-padded.
+pub fn pack_b_band(b: &[f64], k: usize, n: usize, j0: usize, j1: usize, buf: &mut [f64]) {
+    let cols = j1 - j0;
+    let panels = cols.div_ceil(NR);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(buf.len(), panels * NR * k);
+    for q in 0..panels {
+        let qbuf = &mut buf[q * NR * k..(q + 1) * NR * k];
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for c in 0..NR {
+                let j = j0 + q * NR + c;
+                qbuf[kk * NR + c] = if j < j1 { brow[j] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Scalar [`MR`]×[`NR`] micro-kernel over one depth strip: 16
+/// independent register accumulators, `kk` ascending.  `chunks_exact`
+/// keeps bounds checks out of the loop.
+#[inline]
+fn microkernel_scalar(ap: &[f64], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let ar = av[r];
+            for c in 0..NR {
+                acc[r][c] += ar * bv[c];
+            }
+        }
+    }
+}
+
+/// Micro-kernel dispatch: FMA when compiled + detected, scalar
+/// otherwise.  Both accumulate per output lane in ascending `kk`, so
+/// either way the packed product is decomposition-independent.
+#[inline]
+fn microkernel(ap: &[f64], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2+FMA confirmed by simd_active().
+            unsafe { x86::microkernel_fma(ap, bp, acc) };
+            return;
+        }
+    }
+    microkernel_scalar(ap, bp, acc);
+}
+
+/// Multiply one packed A band (`band_rows × k`, [`pack_a_band`] layout)
+/// by one packed B band (`k × band_cols`, [`pack_b_band`] layout) into
+/// the C rectangle at column offset `j_off` of the `band_rows × ldc`
+/// row-major slice `c` (overwrite, not accumulate — matching the `=`
+/// semantics of every Blaze kernel here).
+///
+/// Per (row panel, column panel) pair the [`MR`]×[`NR`] accumulator
+/// block is register-resident across the whole depth, stepped in [`KC`]
+/// strips; only the valid `rmax × cmax` corner is stored for edge
+/// panels, so zero-padding never leaks into C.
+#[allow(clippy::too_many_arguments)]
+pub fn packed_band_mm(
+    a_pack: &[f64],
+    band_rows: usize,
+    b_pack: &[f64],
+    band_cols: usize,
+    k: usize,
+    c: &mut [f64],
+    ldc: usize,
+    j_off: usize,
+) {
+    let a_panels = band_rows.div_ceil(MR);
+    let b_panels = band_cols.div_ceil(NR);
+    debug_assert_eq!(a_pack.len(), a_panels * MR * k);
+    debug_assert_eq!(b_pack.len(), b_panels * NR * k);
+    debug_assert!(band_rows == 0 || c.len() >= (band_rows - 1) * ldc + j_off + band_cols);
+    for p in 0..a_panels {
+        let ap_full = &a_pack[p * MR * k..(p + 1) * MR * k];
+        let rmax = (band_rows - p * MR).min(MR);
+        for q in 0..b_panels {
+            let bq_full = &b_pack[q * NR * k..(q + 1) * NR * k];
+            let cmax = (band_cols - q * NR).min(NR);
+            let mut acc = [[0.0f64; NR]; MR];
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + KC).min(k);
+                microkernel(
+                    &ap_full[k0 * MR..k1 * MR],
+                    &bq_full[k0 * NR..k1 * NR],
+                    &mut acc,
+                );
+                k0 = k1;
+            }
+            for (r, acc_row) in acc.iter().enumerate().take(rmax) {
+                let base = (p * MR + r) * ldc + j_off;
+                c[base..base + cmax].copy_from_slice(&acc_row[..cmax]);
+            }
+        }
+    }
+}
+
+/// Serial whole-matrix packed product `C = A·B` (`m × k` times
+/// `k × n`): B is packed once, A in [`PACKED_ROW_BAND`]-row bands, each
+/// band driven through [`packed_band_mm`].  The serial spelling of the
+/// same arithmetic the parallel paths decompose — bitwise identical to
+/// them for any decomposition.
+pub fn packed_matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let mut b_pack = vec![0.0f64; packed_b_len(k, n)];
+    pack_b_band(b, k, n, 0, n, &mut b_pack);
+    let band = PACKED_ROW_BAND.min(m);
+    let mut a_pack = vec![0.0f64; packed_a_len(band, k)];
+    for i0 in (0..m).step_by(PACKED_ROW_BAND) {
+        let i1 = (i0 + PACKED_ROW_BAND).min(m);
+        let len = packed_a_len(i1 - i0, k);
+        pack_a_band(a, k, i0, i1, &mut a_pack[..len]);
+        packed_band_mm(
+            &a_pack[..len],
+            i1 - i0,
+            &b_pack,
+            n,
+            k,
+            &mut c[i0 * n..i1 * n],
+            n,
+            0,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_f64(&mut v);
+        v
+    }
+
+    fn naive_mm(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn unrolled_elementwise_kernels_are_bitwise_equal_to_scalar() {
+        // Lengths straddling the 4-wide chunk boundary.
+        for n in [0usize, 1, 3, 4, 5, 17, 1024, 1027] {
+            let a = rand_vec(n, 1);
+            let b = rand_vec(n, 2);
+            let mut c_ref = vec![0.0; n];
+            serial::vadd_slice(&a, &b, &mut c_ref);
+            let mut c = vec![0.0; n];
+            vadd_unrolled(&a, &b, &mut c);
+            assert_eq!(c, c_ref, "vadd n={n}");
+
+            let mut b_ref = b.clone();
+            serial::daxpy_slice(3.0, &a, &mut b_ref);
+            let mut b_un = b.clone();
+            daxpy_unrolled(3.0, &a, &mut b_un);
+            assert_eq!(b_un, b_ref, "daxpy n={n}");
+        }
+    }
+
+    #[test]
+    fn matvec_unrolled_matches_oracle_within_tolerance() {
+        for (m, n) in [(1usize, 1usize), (7, 5), (40, 37), (13, 128), (33, 301)] {
+            let a = rand_vec(m * n, 3);
+            let x = rand_vec(n, 4);
+            let mut y_ref = vec![0.0; m];
+            serial::matvec_rows(&a, &x, &mut y_ref);
+            let mut y = vec![0.0; m];
+            matvec_unrolled(&a, &x, &mut y);
+            assert!(
+                max_abs_diff(&y, &y_ref) < 1e-12 * n as f64,
+                "matvec {m}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn pack_a_band_layout_and_padding() {
+        // 3 rows (one ragged panel), k=2.
+        let a = [1., 2., 3., 4., 5., 6.];
+        let mut buf = vec![f64::NAN; packed_a_len(3, 2)];
+        pack_a_band(&a, 2, 0, 3, &mut buf);
+        // Panel 0, kk=0 sliver: rows 0..3 col 0, pad 0.
+        assert_eq!(&buf[0..4], &[1., 3., 5., 0.]);
+        // kk=1 sliver: col 1, pad 0.
+        assert_eq!(&buf[4..8], &[2., 4., 6., 0.]);
+    }
+
+    #[test]
+    fn pack_b_band_layout_and_padding() {
+        // B 2x3, pack cols 0..3 (one ragged panel).
+        let b = [1., 2., 3., 4., 5., 6.];
+        let mut buf = vec![f64::NAN; packed_b_len(2, 3)];
+        pack_b_band(&b, 2, 3, 0, 3, &mut buf);
+        // kk=0 sliver: row 0 cols 0..3, pad 0.
+        assert_eq!(&buf[0..4], &[1., 2., 3., 0.]);
+        assert_eq!(&buf[4..8], &[4., 5., 6., 0.]);
+    }
+
+    #[test]
+    fn packed_matmul_identity() {
+        let n = 37;
+        let a = rand_vec(n * n, 5);
+        let mut eye = vec![0.0; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let mut c = vec![f64::NAN; n * n];
+        packed_matmul(&a, &eye, n, n, n, &mut c);
+        assert_eq!(max_abs_diff(&c, &a), 0.0);
+    }
+
+    #[test]
+    fn packed_matmul_matches_naive_oracle_on_ragged_shapes() {
+        for (m, k, n) in [
+            (1usize, 1usize, 1usize),
+            (4, 4, 4),
+            (5, 3, 7),
+            (64, 64, 64),
+            (57, 119, 83),
+            (70, 300, 9),
+            (130, 37, 65),
+        ] {
+            let a = rand_vec(m * k, 6);
+            let b = rand_vec(k * n, 7);
+            let mut c = vec![f64::NAN; m * n];
+            packed_matmul(&a, &b, m, k, n, &mut c);
+            let c_ref = naive_mm(&a, &b, m, k, n);
+            assert!(
+                max_abs_diff(&c, &c_ref) < 1e-12 * k as f64,
+                "packed {m}x{k}x{n} diverged from naive oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_product_is_decomposition_independent() {
+        // The same product computed band-by-band at several band/tile
+        // shapes must agree *bitwise* — per C element the accumulation
+        // is one register in ascending k regardless of decomposition.
+        let (m, k, n) = (90usize, 70usize, 110usize);
+        let a = rand_vec(m * k, 8);
+        let b = rand_vec(k * n, 9);
+        let mut c_full = vec![0.0; m * n];
+        packed_matmul(&a, &b, m, k, n, &mut c_full);
+        for tile in [8usize, 10, 16, 33, 64, 128] {
+            let mut c = vec![0.0; m * n];
+            let mut b_pack = vec![0.0; packed_b_len(k, tile.min(n))];
+            let mut a_pack = vec![0.0; packed_a_len(tile.min(m), k)];
+            for i0 in (0..m).step_by(tile) {
+                let i1 = (i0 + tile).min(m);
+                let alen = packed_a_len(i1 - i0, k);
+                pack_a_band(&a, k, i0, i1, &mut a_pack[..alen]);
+                for j0 in (0..n).step_by(tile) {
+                    let j1 = (j0 + tile).min(n);
+                    let blen = packed_b_len(k, j1 - j0);
+                    pack_b_band(&b, k, n, j0, j1, &mut b_pack[..blen]);
+                    packed_band_mm(
+                        &a_pack[..alen],
+                        i1 - i0,
+                        &b_pack[..blen],
+                        j1 - j0,
+                        k,
+                        &mut c[i0 * n..i1 * n],
+                        n,
+                        j0,
+                    );
+                }
+            }
+            assert_eq!(
+                max_abs_diff(&c, &c_full),
+                0.0,
+                "tile={tile} decomposition changed packed numerics"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_matmul_degenerate_dims() {
+        // k = 0: C is all zeros.  m/n = 0: no-op.
+        let mut c = vec![f64::NAN; 6];
+        packed_matmul(&[], &[], 2, 0, 3, &mut c);
+        assert!(c.iter().all(|&v| v == 0.0));
+        let mut empty: Vec<f64> = vec![];
+        packed_matmul(&[], &[1.0], 0, 1, 0, &mut empty);
+    }
+
+    #[test]
+    fn auto_resolution_is_numerics_preserving() {
+        // Auto engages packing only above the floor, in every dimension.
+        assert!(!matmul_uses_packed(KernelVariant::Auto, 255, 300, 300));
+        assert!(!matmul_uses_packed(KernelVariant::Auto, 300, 300, 130));
+        assert!(matmul_uses_packed(KernelVariant::Auto, 256, 256, 256));
+        // Explicit requests bypass the floor / never pack.
+        assert!(matmul_uses_packed(KernelVariant::Packed, 8, 8, 8));
+        assert!(!matmul_uses_packed(KernelVariant::Scalar, 4096, 4096, 4096));
+        assert!(!matmul_uses_packed(KernelVariant::Unrolled, 4096, 4096, 4096));
+    }
+
+    #[test]
+    fn dispatchers_agree_with_oracles() {
+        let n = 1029usize;
+        let a = rand_vec(n, 10);
+        let b = rand_vec(n, 11);
+        for v in KernelVariant::ALL {
+            let mut c = vec![0.0; n];
+            vadd(v, &a, &b, &mut c);
+            let mut c_ref = vec![0.0; n];
+            serial::vadd_slice(&a, &b, &mut c_ref);
+            assert_eq!(c, c_ref, "vadd bitwise under {v:?}");
+
+            let mut bb = b.clone();
+            daxpy(v, 3.0, &a, &mut bb);
+            let mut bb_ref = b.clone();
+            serial::daxpy_slice(3.0, &a, &mut bb_ref);
+            // FMA (explicit variants with the feature active) fuses
+            // rounding; everything else stays bitwise.
+            let fma_possible =
+                simd_active() && matches!(v, KernelVariant::Unrolled | KernelVariant::Packed);
+            if fma_possible {
+                assert!(max_abs_diff(&bb, &bb_ref) < 1e-12, "daxpy under {v:?}");
+            } else {
+                assert_eq!(bb, bb_ref, "daxpy bitwise under {v:?}");
+            }
+        }
+        // matvec: Scalar/Auto bitwise, explicit variants within tolerance.
+        let (m, cols) = (31usize, 301usize);
+        let a = rand_vec(m * cols, 12);
+        let x = rand_vec(cols, 13);
+        let mut y_ref = vec![0.0; m];
+        serial::matvec_rows(&a, &x, &mut y_ref);
+        for v in [KernelVariant::Scalar, KernelVariant::Auto] {
+            let mut y = vec![0.0; m];
+            matvec(v, &a, &x, &mut y);
+            assert_eq!(y, y_ref, "matvec bitwise under {v:?}");
+        }
+        for v in [KernelVariant::Unrolled, KernelVariant::Packed] {
+            let mut y = vec![0.0; m];
+            matvec(v, &a, &x, &mut y);
+            assert!(
+                max_abs_diff(&y, &y_ref) < 1e-12 * cols as f64,
+                "matvec under {v:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_introspection_is_consistent() {
+        // Feature off → never active; label always classifies the build.
+        if !simd_compiled() {
+            assert!(!simd_active());
+            assert_eq!(simd_label(), "portable (simd feature not compiled)");
+        } else {
+            assert!(simd_label().contains("avx2") || simd_label().contains("portable"));
+        }
+        if simd_active() {
+            assert!(simd_compiled());
+        }
+    }
+}

@@ -1,5 +1,6 @@
 //! `DynMatrix` — Blaze's row-major `DynamicMatrix<double>` analog.
 
+use crate::par::exec::Policy;
 use crate::util::rng::Xoshiro256;
 
 /// A heap-allocated dense row-major f64 matrix.
@@ -28,6 +29,33 @@ impl DynMatrix {
         let mut rng = Xoshiro256::seed_from_u64(seed);
         let mut data = vec![0.0; rows * cols];
         rng.fill_f64(&mut data);
+        Self { rows, cols, data }
+    }
+
+    /// Zero matrix with **first-touch placement** (ISSUE 7): the
+    /// backing pages are written block-by-block under `pol`, so on a
+    /// NUMA system each page lands on the node of the worker that
+    /// first wrote it — the same workers that will read it in a
+    /// parallel kernel.  Contents are identical to [`Self::zeros`].
+    pub fn zeros_first_touch(pol: &Policy<'_>, rows: usize, cols: usize) -> Self {
+        let mut data = vec![0.0; rows * cols];
+        super::first_touch_fill(pol, &mut data, |_, block| block.fill(0.0));
+        Self { rows, cols, data }
+    }
+
+    /// Seeded random matrix with first-touch placement.  Each
+    /// [`super::INIT_BLOCK`]-element block reseeds from `(seed, block)`,
+    /// so the contents are a pure function of `(rows, cols, seed)` —
+    /// bitwise identical across policies and thread counts (but a
+    /// *different* stream than [`Self::random`], which draws one
+    /// sequential stream).
+    pub fn random_first_touch(pol: &Policy<'_>, rows: usize, cols: usize, seed: u64) -> Self {
+        let mut data = vec![0.0; rows * cols];
+        super::first_touch_fill(pol, &mut data, |b, block| {
+            let mut rng =
+                Xoshiro256::seed_from_u64(seed ^ (b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            rng.fill_f64(block);
+        });
         Self { rows, cols, data }
     }
 
@@ -117,5 +145,25 @@ mod tests {
         let b = DynMatrix::random(4, 5, 1);
         assert_eq!(a, b);
         assert_eq!(a.elements(), 20);
+    }
+
+    #[test]
+    fn first_touch_is_policy_independent() {
+        use crate::baseline::BaselineRuntime;
+        use crate::par::exec::{par, seq};
+        let rt = BaselineRuntime::new(4);
+        // Large enough for several INIT_BLOCK blocks, ragged tail.
+        let (r, c) = (130usize, 101usize);
+        let serial = DynMatrix::random_first_touch(&seq(), r, c, 9);
+        let parallel = DynMatrix::random_first_touch(&par().on(&rt).threads(4), r, c, 9);
+        assert_eq!(serial, parallel);
+        assert!(serial
+            .as_slice()
+            .iter()
+            .all(|&x| (-1.0..1.0).contains(&x)));
+        let other = DynMatrix::random_first_touch(&seq(), r, c, 10);
+        assert_ne!(serial, other);
+        let z = DynMatrix::zeros_first_touch(&par().on(&rt).threads(4), r, c);
+        assert_eq!(z, DynMatrix::zeros(r, c));
     }
 }

@@ -3,13 +3,17 @@
 //! The paper runs Blazemark (Blaze 3.4's benchmark suite) on top of either
 //! OpenMP runtime.  This module rebuilds the relevant slice of Blaze:
 //! dynamic vectors/matrices ([`vector`], [`matrix`]), serial kernels
-//! ([`serial`]), the five benchmark operations generic over the
+//! ([`serial`]), the tuned micro-kernels and packed cache-blocked matmul
+//! ([`kernel`]), the five benchmark operations generic over the
 //! [`crate::par::exec::Policy`] seam ([`ops`]), and — crucially for the
 //! figures — Blaze's **parallelization thresholds** ([`thresholds`]):
 //! below the per-op element-count threshold the operation is executed
 //! single-threaded, which is why every paper plot is flat until the
 //! threshold and why the heatmaps only show structure to its right.
 
+use crate::par::exec::{self, Policy};
+
+pub mod kernel;
 pub mod matrix;
 pub mod ops;
 pub mod serial;
@@ -19,3 +23,45 @@ pub mod vector;
 pub use matrix::DynMatrix;
 pub use ops::{daxpy, dmatdmatadd, dmatdmatmult, dmatdvecmult, dvecdvecadd};
 pub use vector::DynVector;
+
+/// Block granularity (elements) of first-touch initialization: each
+/// block is filled by whichever worker claims it, so under a parallel
+/// policy its pages are faulted in — first-touched — on that worker's
+/// node.  4096 f64 = two 16 KiB half-pages per block keeps the claim
+/// traffic negligible against the page-zeroing cost.
+pub(crate) const INIT_BLOCK: usize = 4096;
+
+/// First-touch fill: partition `data` into [`INIT_BLOCK`]-element blocks
+/// and run `fill(block_index, block)` on each under `pol`, so the pages
+/// of each block are first touched by the worker that executes it.
+///
+/// `fill` receives the *global* block index, letting callers derive
+/// per-block deterministic state (e.g. a reseeded RNG) — the resulting
+/// contents are a pure function of `(len, fill)` and therefore bitwise
+/// identical across policies and thread counts.
+pub(crate) fn first_touch_fill<F>(pol: &Policy<'_>, data: &mut [f64], fill: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    let len = data.len();
+    let blocks = len.div_ceil(INIT_BLOCK);
+    if pol.is_serial() || blocks < 2 {
+        for b in 0..blocks {
+            let lo = b * INIT_BLOCK;
+            let hi = (lo + INIT_BLOCK).min(len);
+            fill(b, &mut data[lo..hi]);
+        }
+        return;
+    }
+    let base = ops::SendPtr::new(data.as_mut_ptr());
+    let fill_ref = &fill;
+    exec::for_each(pol, 0..blocks as i64, move |r| {
+        for b in r {
+            let lo = b as usize * INIT_BLOCK;
+            let hi = (lo + INIT_BLOCK).min(len);
+            // SAFETY: blocks partition `data` disjointly and for_each
+            // joins before returning, so no aliasing or escape.
+            fill_ref(b as usize, unsafe { base.slice_range(lo, hi) });
+        }
+    });
+}

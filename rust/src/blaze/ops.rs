@@ -12,9 +12,19 @@
 //! the whole op runs single-threaded regardless of policy — exactly
 //! Blaze's behaviour, and the cause of the flat region in every paper
 //! figure.
+//!
+//! Since ISSUE 7 the inner loops dispatch through
+//! [`super::kernel`] on [`Policy::kernel`]'s [`exec::KernelVariant`]:
+//! `Auto` is numerics-preserving (unrolled elementwise loops are
+//! bitwise-equal; matvec keeps its single accumulator; matmul packs only
+//! above [`PACKED_MIN_DIM`]), while explicit `Unrolled`/`Packed` opt into
+//! accumulator splitting, FMA (with the `simd` feature), and the packed
+//! cache-blocked product.  Thresholds honour [`Policy::threshold`] via
+//! [`Policy::par_threshold`].
 
 use std::ops::Range;
 
+use super::kernel;
 use super::matrix::DynMatrix;
 use super::serial;
 use super::thresholds::*;
@@ -26,16 +36,48 @@ use std::sync::Arc;
 /// rests on the loop-partition invariant (each index claimed exactly once)
 /// which `prop_invariants.rs` checks for every schedule.
 #[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
+pub(crate) struct SendPtr(*mut f64);
 
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
 impl SendPtr {
+    pub(crate) fn new(p: *mut f64) -> Self {
+        Self(p)
+    }
+
     /// # Safety
     /// `r` must be within the allocation and disjoint across callers.
     unsafe fn slice(&self, r: &Range<i64>) -> &mut [f64] {
         std::slice::from_raw_parts_mut(self.0.add(r.start as usize), (r.end - r.start) as usize)
+    }
+
+    /// # Safety
+    /// `lo..hi` must be within the allocation and disjoint across callers.
+    pub(crate) unsafe fn slice_range(&self, lo: usize, hi: usize) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.0.add(lo), hi - lo)
+    }
+}
+
+/// Covariant const-pointer smuggle for shared parallel reads from
+/// dataflow tasks (the read-side sibling of [`SendPtr`]).
+#[derive(Clone, Copy)]
+pub(crate) struct ConstPtr(*const f64);
+
+unsafe impl Send for ConstPtr {}
+unsafe impl Sync for ConstPtr {}
+
+impl ConstPtr {
+    pub(crate) fn new(p: *const f64) -> Self {
+        Self(p)
+    }
+
+    /// # Safety
+    /// `lo..hi` must be within the allocation, and no `&mut` to the
+    /// range may be live concurrently (writes must be ordered before
+    /// via the task graph / join).
+    pub(crate) unsafe fn slice(&self, lo: usize, hi: usize) -> &[f64] {
+        std::slice::from_raw_parts(self.0.add(lo), hi - lo)
     }
 }
 
@@ -44,8 +86,9 @@ pub fn dvecdvecadd(pol: &Policy<'_>, a: &DynVector, b: &DynVector, c: &mut DynVe
     let n = a.len();
     assert_eq!(n, b.len());
     assert_eq!(n, c.len());
-    if !parallelize(n, DVECDVECADD_THRESHOLD) || pol.is_serial() {
-        serial::vadd_slice(a.as_slice(), b.as_slice(), c.as_mut_slice());
+    let v = pol.kernel_variant();
+    if !parallelize(n, pol.par_threshold(DVECDVECADD_THRESHOLD)) || pol.is_serial() {
+        kernel::vadd(v, a.as_slice(), b.as_slice(), c.as_mut_slice());
         return;
     }
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
@@ -53,7 +96,7 @@ pub fn dvecdvecadd(pol: &Policy<'_>, a: &DynVector, b: &DynVector, c: &mut DynVe
         let (s, e) = (r.start as usize, r.end as usize);
         // SAFETY: chunks partition 0..n disjointly.
         let c_sub = unsafe { cp.slice(&r) };
-        serial::vadd_slice(&a.as_slice()[s..e], &b.as_slice()[s..e], c_sub);
+        kernel::vadd(v, &a.as_slice()[s..e], &b.as_slice()[s..e], c_sub);
     });
 }
 
@@ -62,8 +105,9 @@ pub fn dvecdvecadd(pol: &Policy<'_>, a: &DynVector, b: &DynVector, c: &mut DynVe
 pub fn daxpy(pol: &Policy<'_>, beta: f64, a: &DynVector, b: &mut DynVector) {
     let n = a.len();
     assert_eq!(n, b.len());
-    if !parallelize(n, DAXPY_THRESHOLD) || pol.is_serial() {
-        serial::daxpy_slice(beta, a.as_slice(), b.as_mut_slice());
+    let v = pol.kernel_variant();
+    if !parallelize(n, pol.par_threshold(DAXPY_THRESHOLD)) || pol.is_serial() {
+        kernel::daxpy(v, beta, a.as_slice(), b.as_mut_slice());
         return;
     }
     let bp = SendPtr(b.as_mut_slice().as_mut_ptr());
@@ -71,7 +115,7 @@ pub fn daxpy(pol: &Policy<'_>, beta: f64, a: &DynVector, b: &mut DynVector) {
         let (s, e) = (r.start as usize, r.end as usize);
         // SAFETY: chunks partition 0..n disjointly.
         let b_sub = unsafe { bp.slice(&r) };
-        serial::daxpy_slice(beta, &a.as_slice()[s..e], b_sub);
+        kernel::daxpy(v, beta, &a.as_slice()[s..e], b_sub);
     });
 }
 
@@ -81,8 +125,9 @@ pub fn dmatdmatadd(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynMa
     let (m, n) = (a.rows(), a.cols());
     assert_eq!((m, n), (b.rows(), b.cols()));
     assert_eq!((m, n), (c.rows(), c.cols()));
-    if !parallelize(m * n, DMATDMATADD_THRESHOLD) || pol.is_serial() {
-        serial::madd_rows(a.as_slice(), b.as_slice(), c.as_mut_slice());
+    let v = pol.kernel_variant();
+    if !parallelize(m * n, pol.par_threshold(DMATDMATADD_THRESHOLD)) || pol.is_serial() {
+        kernel::madd(v, a.as_slice(), b.as_slice(), c.as_mut_slice());
         return;
     }
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
@@ -91,7 +136,8 @@ pub fn dmatdmatadd(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynMa
         let flat = (rs * n) as i64..(re * n) as i64;
         // SAFETY: row bands are disjoint.
         let c_sub = unsafe { cp.slice(&flat) };
-        serial::madd_rows(
+        kernel::madd(
+            v,
             &a.as_slice()[rs * n..re * n],
             &b.as_slice()[rs * n..re * n],
             c_sub,
@@ -111,11 +157,24 @@ pub fn dmatdmatadd(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynMa
 /// summation order on every path (tile tasks accumulate over the full
 /// depth in increasing k), so all policies agree with the serial oracle
 /// bit-for-bit.
+///
+/// When [`kernel::matmul_uses_packed`] selects the packed cache-blocked
+/// kernel (explicit `Packed`, or `Auto` with every dimension ≥
+/// [`PACKED_MIN_DIM`]), the product runs through
+/// [`dmatdmatmult_packed`] instead: register-resident accumulation over
+/// packed panels — bitwise identical across policies and tile sizes,
+/// but *reassociated* relative to the scalar row kernel (tolerance-
+/// checked against it, never selected by `Auto` at bitwise-oracle
+/// sizes).
 pub fn dmatdmatmult(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynMatrix) {
     let (m, k_dim) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k_dim, k2);
     assert_eq!((m, n), (c.rows(), c.cols()));
+    if kernel::matmul_uses_packed(pol.kernel_variant(), m, k_dim, n) {
+        dmatdmatmult_packed(pol, a, b, c);
+        return;
+    }
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let row_body = |r: Range<i64>| {
         for i in r.start as usize..r.end as usize {
@@ -125,7 +184,7 @@ pub fn dmatdmatmult(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynM
             serial::matmul_row(a.row(i), b.as_slice(), n, c_row);
         }
     };
-    if !parallelize(m * n, DMATDMATMULT_THRESHOLD) || pol.is_serial() {
+    if !parallelize(m * n, pol.par_threshold(DMATDMATMULT_THRESHOLD)) || pol.is_serial() {
         row_body(0..m as i64);
         return;
     }
@@ -138,8 +197,8 @@ pub fn dmatdmatmult(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynM
                 // every tile task retired, so the operand borrows outlive
                 // all uses; tile (row × column) ranges partition C
                 // disjointly, so each segment has exactly one writer.
-                let a_all = unsafe { std::slice::from_raw_parts(ap.0, m * k_dim) };
-                let b_all = unsafe { std::slice::from_raw_parts(bp.0, k_dim * n) };
+                let a_all = unsafe { ap.slice(0, m * k_dim) };
+                let b_all = unsafe { bp.slice(0, k_dim * n) };
                 let (j0, j1) = (rj.start, rj.end);
                 for i in ri {
                     let flat = (i * n + j0) as i64..(i * n + j1) as i64;
@@ -153,6 +212,123 @@ pub fn dmatdmatmult(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynM
     exec::for_each(pol, 0..m as i64, row_body);
 }
 
+/// The packed cache-blocked `C = A * B` (ISSUE 7; DESIGN.md §12).
+///
+/// Serial (or below [`PACKED_DMATDMATMULT_THRESHOLD`]): one
+/// [`kernel::packed_matmul`] pass.  `par()`: B column-bands are packed
+/// in parallel, then C row-bands are computed in parallel, each chunk
+/// packing its own A band into a thread-local buffer.  `task()`: the
+/// prepped tile graph ([`exec::for_each_tile_async_prepped`]) — each
+/// row/column band's *packing* runs as a real task (the band future),
+/// every tile is a continuation on its two bands' pack futures, so
+/// packing overlaps compute and each band is packed exactly once and
+/// shared by all its tiles.
+///
+/// All three paths drive the same [`kernel::packed_band_mm`] arithmetic
+/// (one register accumulator per C element, depth ascending), so their
+/// results are **bitwise identical** to each other for any tile size or
+/// thread count.
+fn dmatdmatmult_packed(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynMatrix) {
+    let (m, k_dim) = (a.rows(), a.cols());
+    let n = b.cols();
+    if !parallelize(m * n, pol.par_threshold(PACKED_DMATDMATMULT_THRESHOLD)) || pol.is_serial() {
+        kernel::packed_matmul(a.as_slice(), b.as_slice(), m, k_dim, n, c.as_mut_slice());
+        return;
+    }
+    let tile = pol.tile_size();
+    let row_tiles = m.div_ceil(tile);
+    let col_tiles = n.div_ceil(tile);
+    // Uniform per-band strides so prep tasks can address their band's
+    // pack buffer without coordination; ragged edge bands use a prefix.
+    let a_stride = kernel::packed_a_len(tile.min(m), k_dim);
+    let b_stride = kernel::packed_b_len(k_dim, tile.min(n));
+    let mut b_pack = vec![0.0f64; col_tiles * b_stride];
+    let bpk_w = SendPtr::new(b_pack.as_mut_ptr());
+    let bpk_r = ConstPtr::new(b_pack.as_ptr());
+    let ap = ConstPtr::new(a.as_slice().as_ptr());
+    let bp = ConstPtr::new(b.as_slice().as_ptr());
+    let cp = SendPtr::new(c.as_mut_slice().as_mut_ptr());
+
+    if pol.mode() == ExecMode::Task {
+        let mut a_pack = vec![0.0f64; row_tiles * a_stride];
+        let apk_w = SendPtr::new(a_pack.as_mut_ptr());
+        let apk_r = ConstPtr::new(a_pack.as_ptr());
+        // SAFETY (all closures): the `wait()` below blocks until the
+        // whole graph retired, so the operand/pack-buffer borrows
+        // outlive every use.  Each band is packed by exactly one prep
+        // task (disjoint writes); tiles read a band's pack only after
+        // its prep future completed (a graph edge), so no read races a
+        // write; tile ranges partition C disjointly.
+        let row_prep: exec::BandPrep = Arc::new(move |bi, ri| {
+            let a_all = unsafe { ap.slice(0, m * k_dim) };
+            let len = kernel::packed_a_len(ri.end - ri.start, k_dim);
+            let buf = unsafe { apk_w.slice_range(bi * a_stride, bi * a_stride + len) };
+            kernel::pack_a_band(a_all, k_dim, ri.start, ri.end, buf);
+        });
+        let col_prep: exec::BandPrep = Arc::new(move |bj, rj| {
+            let b_all = unsafe { bp.slice(0, k_dim * n) };
+            let len = kernel::packed_b_len(k_dim, rj.end - rj.start);
+            let buf = unsafe { bpk_w.slice_range(bj * b_stride, bj * b_stride + len) };
+            kernel::pack_b_band(b_all, k_dim, n, rj.start, rj.end, buf);
+        });
+        let tile_body: Arc<dyn Fn(Range<usize>, Range<usize>) + Send + Sync> =
+            Arc::new(move |ri, rj| {
+                let (bi, bj) = (ri.start / tile, rj.start / tile);
+                let (br, bc) = (ri.end - ri.start, rj.end - rj.start);
+                let alen = kernel::packed_a_len(br, k_dim);
+                let blen = kernel::packed_b_len(k_dim, bc);
+                let a_band = unsafe { apk_r.slice(bi * a_stride, bi * a_stride + alen) };
+                let b_band = unsafe { bpk_r.slice(bj * b_stride, bj * b_stride + blen) };
+                let c_band = unsafe { cp.slice_range(ri.start * n, ri.end * n) };
+                kernel::packed_band_mm(a_band, br, b_band, bc, k_dim, c_band, n, rj.start);
+            });
+        exec::for_each_tile_async_prepped(pol, m, n, row_prep, col_prep, tile_body).wait();
+        return;
+    }
+
+    // par(): two fork-join phases — pack B bands, then sweep C row
+    // bands (each chunk packs its A bands into a local buffer so A pack
+    // pages are first-touched by their consumer).
+    exec::for_each(pol, 0..col_tiles as i64, |r| {
+        for bj in r.start as usize..r.end as usize {
+            let j0 = bj * tile;
+            let j1 = (j0 + tile).min(n);
+            let len = kernel::packed_b_len(k_dim, j1 - j0);
+            // SAFETY: band buffers are disjoint; joined before any read.
+            let buf = unsafe { bpk_w.slice_range(bj * b_stride, bj * b_stride + len) };
+            kernel::pack_b_band(b.as_slice(), k_dim, n, j0, j1, buf);
+        }
+    });
+    exec::for_each(pol, 0..row_tiles as i64, |r| {
+        let mut a_buf = vec![0.0f64; a_stride];
+        for bi in r.start as usize..r.end as usize {
+            let i0 = bi * tile;
+            let i1 = (i0 + tile).min(m);
+            let alen = kernel::packed_a_len(i1 - i0, k_dim);
+            kernel::pack_a_band(a.as_slice(), k_dim, i0, i1, &mut a_buf[..alen]);
+            // SAFETY: row bands of C are disjoint; B packs were joined
+            // above so the const reads race nothing.
+            let c_band = unsafe { cp.slice_range(i0 * n, i1 * n) };
+            for bj in 0..col_tiles {
+                let j0 = bj * tile;
+                let j1 = (j0 + tile).min(n);
+                let blen = kernel::packed_b_len(k_dim, j1 - j0);
+                let b_band = unsafe { bpk_r.slice(bj * b_stride, bj * b_stride + blen) };
+                kernel::packed_band_mm(
+                    &a_buf[..alen],
+                    i1 - i0,
+                    b_band,
+                    j1 - j0,
+                    k_dim,
+                    c_band,
+                    n,
+                    j0,
+                );
+            }
+        }
+    });
+}
+
 /// dmatdvecmult (ISSUE 3 — the suite's dense matrix-vector product, the
 /// missing fourth Blazemark kernel): `y = A * x`, rows of `y` distributed
 /// across the team; Blaze gates on the matrix's **row count** (threshold
@@ -161,8 +337,9 @@ pub fn dmatdvecmult(pol: &Policy<'_>, a: &DynMatrix, x: &DynVector, y: &mut DynV
     let (m, n) = (a.rows(), a.cols());
     assert_eq!(n, x.len());
     assert_eq!(m, y.len());
-    if !parallelize(m, DMATDVECMULT_THRESHOLD) || pol.is_serial() {
-        serial::matvec_rows(a.as_slice(), x.as_slice(), y.as_mut_slice());
+    let v = pol.kernel_variant();
+    if !parallelize(m, pol.par_threshold(DMATDVECMULT_THRESHOLD)) || pol.is_serial() {
+        kernel::matvec(v, a.as_slice(), x.as_slice(), y.as_mut_slice());
         return;
     }
     let yp = SendPtr(y.as_mut_slice().as_mut_ptr());
@@ -170,17 +347,9 @@ pub fn dmatdvecmult(pol: &Policy<'_>, a: &DynMatrix, x: &DynVector, y: &mut DynV
         let (rs, re) = (r.start as usize, r.end as usize);
         // SAFETY: row bands partition 0..m disjointly.
         let y_sub = unsafe { yp.slice(&r) };
-        serial::matvec_rows(&a.as_slice()[rs * n..re * n], x.as_slice(), y_sub);
+        kernel::matvec(v, &a.as_slice()[rs * n..re * n], x.as_slice(), y_sub);
     });
 }
-
-/// Covariant const-pointer smuggle for shared parallel reads from
-/// dataflow tasks (the read-side sibling of [`SendPtr`]).
-#[derive(Clone, Copy)]
-struct ConstPtr(*const f64);
-
-unsafe impl Send for ConstPtr {}
-unsafe impl Sync for ConstPtr {}
 
 /// Blazemark FLOP counts per operation (what MFLOP/s is computed from).
 pub mod flops {
@@ -216,7 +385,7 @@ mod tests {
     use super::*;
     use crate::baseline::BaselineRuntime;
     use crate::omp::OmpRuntime;
-    use crate::par::exec::{par, seq, task};
+    use crate::par::exec::{par, seq, task, KernelVariant};
     use crate::par::HpxMpRuntime;
 
     fn vec_ref_add(a: &DynVector, b: &DynVector) -> DynVector {
@@ -390,6 +559,92 @@ mod tests {
                 "task-policy dataflow diverged from serial oracle at n={n}"
             );
         }
+    }
+
+    #[test]
+    fn dmatdmatmult_packed_matches_scalar_within_tolerance() {
+        // Explicit Packed at a below-floor size, every policy: agrees
+        // with the scalar oracle to accumulation tolerance.
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        let n = 96;
+        let a = DynMatrix::random(n, n, 41);
+        let b = DynMatrix::random(n, n, 42);
+        let mut c_ref = DynMatrix::zeros(n, n);
+        dmatdmatmult(&seq(), &a, &b, &mut c_ref);
+        for pol in [
+            seq().kernel(KernelVariant::Packed),
+            par().on(&hpx).threads(4).kernel(KernelVariant::Packed),
+            task()
+                .on(&hpx)
+                .threads(4)
+                .tile(32)
+                .kernel(KernelVariant::Packed),
+        ] {
+            let mut c = DynMatrix::zeros(n, n);
+            dmatdmatmult(&pol, &a, &b, &mut c);
+            assert!(
+                c.max_abs_diff(&c_ref) < 1e-11,
+                "packed under {:?} diverged from scalar oracle",
+                pol.mode()
+            );
+        }
+    }
+
+    #[test]
+    fn dmatdmatmult_packed_is_bitwise_stable_across_policies_and_tiles() {
+        // The packed kernel's accumulation is decomposition-independent:
+        // serial, par, and task at several tile sizes agree bit-for-bit.
+        // Force the parallel packed path with a low threshold knob.
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        let (m, k, n) = (70usize, 90, 110);
+        let a = DynMatrix::random(m, k, 43);
+        let b = DynMatrix::random(k, n, 44);
+        let mut c_ref = DynMatrix::zeros(m, n);
+        dmatdmatmult(&seq().kernel(KernelVariant::Packed), &a, &b, &mut c_ref);
+        for tile in [16usize, 24, 64] {
+            for pol in [
+                par().on(&hpx).threads(4).kernel(KernelVariant::Packed),
+                task().on(&hpx).threads(4).kernel(KernelVariant::Packed),
+            ] {
+                let pol = pol.tile(tile).threshold(1);
+                let mut c = DynMatrix::zeros(m, n);
+                dmatdmatmult(&pol, &a, &b, &mut c);
+                assert_eq!(
+                    c.max_abs_diff(&c_ref),
+                    0.0,
+                    "packed {:?} tile={tile} changed numerics",
+                    pol.mode()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_knob_moves_the_crossover() {
+        // With .threshold(1) a tiny daxpy takes the parallel path and
+        // still matches; with a huge threshold a large one stays serial.
+        let rt = BaselineRuntime::new(2);
+        let a = DynVector::random(100, 45);
+        let b0 = DynVector::random(100, 46);
+        let mut b_par = b0.clone();
+        daxpy(&par().on(&rt).threads(2).threshold(1), 3.0, &a, &mut b_par);
+        let mut b_ser = b0.clone();
+        serial::daxpy_slice(3.0, a.as_slice(), b_ser.as_mut_slice());
+        assert_eq!(b_par.max_abs_diff(&b_ser), 0.0);
+
+        let n = 60_000;
+        let a = DynVector::random(n, 47);
+        let b0 = DynVector::random(n, 48);
+        let mut b_hi = b0.clone();
+        daxpy(
+            &par().on(&rt).threads(2).threshold(usize::MAX),
+            3.0,
+            &a,
+            &mut b_hi,
+        );
+        let mut b_ser = b0.clone();
+        serial::daxpy_slice(3.0, a.as_slice(), b_ser.as_mut_slice());
+        assert_eq!(b_hi.max_abs_diff(&b_ser), 0.0);
     }
 
     #[test]

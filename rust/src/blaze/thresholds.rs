@@ -26,6 +26,24 @@ pub const DMATDMATMULT_THRESHOLD: usize = 3_025;
 /// target vector's length), default 330.
 pub const DMATDVECMULT_THRESHOLD: usize = 330;
 
+/// Minimum dimension (all of m, k, n) at which [`crate::par::exec::KernelVariant::Auto`]
+/// selects the packed cache-blocked `dmatdmatmult` kernel (ISSUE 7).
+///
+/// Below this floor Auto keeps the scalar row kernel, so every existing
+/// bitwise oracle (which tests dimensions ≤ 130) is untouched by the
+/// packed path's reassociated summation; above it the packing cost is
+/// amortized and per-element accumulation happens in registers.
+/// Explicitly requesting `KernelVariant::Packed` bypasses the floor.
+pub const PACKED_MIN_DIM: usize = 256;
+
+/// Serial→parallel crossover (element count of the target matrix) for
+/// the **packed** `dmatdmatmult` path.  Higher than
+/// [`DMATDMATMULT_THRESHOLD`]: the packed kernel's per-call fixed cost
+/// (packing A/B panels into contiguous buffers) shifts the point where a
+/// parallel tile graph beats one serial packed pass — below ≈128×128
+/// the pack traffic dominates and the serial packed kernel wins.
+pub const PACKED_DMATDMATMULT_THRESHOLD: usize = 16_384;
+
 /// Would Blaze parallelize an operation on `elements` under `threshold`?
 #[inline]
 pub fn parallelize(elements: usize, threshold: usize) -> bool {
@@ -65,5 +83,16 @@ mod tests {
     fn boundary_is_inclusive() {
         assert!(parallelize(38_000, DVECDVECADD_THRESHOLD));
         assert!(!parallelize(37_999, DVECDVECADD_THRESHOLD));
+    }
+
+    #[test]
+    fn packed_floor_clears_every_bitwise_oracle_size() {
+        // The repo's bitwise matmul oracles test dimensions up to 230
+        // (BENCH_exec's largest mm size); the Auto→packed floor must sit
+        // strictly above them so Auto never changes their numerics.
+        assert!(PACKED_MIN_DIM > 230);
+        // And the packed parallel crossover is above the scalar one —
+        // packing adds per-call fixed cost.
+        assert!(PACKED_DMATDMATMULT_THRESHOLD > DMATDMATMULT_THRESHOLD);
     }
 }

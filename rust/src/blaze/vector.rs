@@ -1,5 +1,6 @@
 //! `DynVector` — Blaze's `DynamicVector<double>` analog.
 
+use crate::par::exec::Policy;
 use crate::util::rng::Xoshiro256;
 
 /// A heap-allocated dense f64 vector.
@@ -22,6 +23,31 @@ impl DynVector {
         let mut rng = Xoshiro256::seed_from_u64(seed);
         let mut data = vec![0.0; n];
         rng.fill_f64(&mut data);
+        Self { data }
+    }
+
+    /// Zero vector with **first-touch placement** (ISSUE 7): pages are
+    /// written block-by-block under `pol`, so each page lands on the
+    /// node of the worker that first wrote it.  Contents are identical
+    /// to [`Self::zeros`].
+    pub fn zeros_first_touch(pol: &Policy<'_>, n: usize) -> Self {
+        let mut data = vec![0.0; n];
+        super::first_touch_fill(pol, &mut data, |_, block| block.fill(0.0));
+        Self { data }
+    }
+
+    /// Seeded random vector with first-touch placement.  Each
+    /// [`super::INIT_BLOCK`]-element block reseeds from `(seed, block)`
+    /// — contents are a pure function of `(n, seed)`, bitwise identical
+    /// across policies and thread counts (but a *different* stream than
+    /// [`Self::random`]).
+    pub fn random_first_touch(pol: &Policy<'_>, n: usize, seed: u64) -> Self {
+        let mut data = vec![0.0; n];
+        super::first_touch_fill(pol, &mut data, |b, block| {
+            let mut rng =
+                Xoshiro256::seed_from_u64(seed ^ (b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            rng.fill_f64(block);
+        });
         Self { data }
     }
 
@@ -87,6 +113,20 @@ mod tests {
         assert!(a.as_slice().iter().all(|&x| (-1.0..1.0).contains(&x)));
         let c = DynVector::random(100, 8);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn first_touch_is_policy_independent() {
+        use crate::baseline::BaselineRuntime;
+        use crate::par::exec::{par, seq};
+        let rt = BaselineRuntime::new(4);
+        let n = 3 * super::super::INIT_BLOCK + 17; // several blocks, ragged tail
+        let serial = DynVector::random_first_touch(&seq(), n, 5);
+        let parallel = DynVector::random_first_touch(&par().on(&rt).threads(4), n, 5);
+        assert_eq!(serial, parallel);
+        assert!(serial.as_slice().iter().all(|&x| (-1.0..1.0).contains(&x)));
+        let z = DynVector::zeros_first_touch(&par().on(&rt).threads(4), n);
+        assert_eq!(z, DynVector::zeros(n));
     }
 
     #[test]

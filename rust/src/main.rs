@@ -31,26 +31,36 @@ use hpxmp::util::timing::BenchCfg;
 
 const VALUE_OPTS: &[&str] = &[
     "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks", "clients", "requests",
-    "mix", "exec", "tile", "deadline-us", "retries",
+    "mix", "exec", "tile", "deadline-us", "retries", "kernel", "threshold",
 ];
 
 fn main() {
     let args = Args::from_env(VALUE_OPTS);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
-    let result = exec_mode(&args).and_then(|mode| match cmd {
-        "info" => cmd_info(&args, mode),
-        "conformance" => cmd_conformance(&args),
-        "heatmap" => cmd_heatmap(&args, mode),
-        "scaling" => cmd_scaling(&args, mode),
-        "dataflow" => cmd_dataflow(&args),
-        "serve" => cmd_serve(&args, mode),
-        "offload" => cmd_offload(&args),
-        "policies" => cmd_policies(&args),
-        _ => {
-            print_help();
-            Ok(())
+    let result = (|| -> anyhow::Result<()> {
+        let mode = exec_mode(&args)?;
+        // Validate the policy knobs up front so every subcommand rejects
+        // bad values instead of silently defaulting mid-run.
+        kernel_variant(&args)?;
+        if let Some(s) = args.get("threshold") {
+            s.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("--threshold: {e}"))?;
         }
-    });
+        match cmd {
+            "info" => cmd_info(&args, mode),
+            "conformance" => cmd_conformance(&args),
+            "heatmap" => cmd_heatmap(&args, mode),
+            "scaling" => cmd_scaling(&args, mode),
+            "dataflow" => cmd_dataflow(&args),
+            "serve" => cmd_serve(&args, mode),
+            "offload" => cmd_offload(&args),
+            "policies" => cmd_policies(&args),
+            _ => {
+                print_help();
+                Ok(())
+            }
+        }
+    })();
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -67,6 +77,16 @@ fn exec_mode(args: &Args) -> anyhow::Result<ExecMode> {
     }
 }
 
+/// The `--kernel` selector (`HPXMP_KERNEL` is the env fallback): which
+/// micro-kernel variant the Blaze operations dispatch to (ISSUE 7).
+/// `auto` is numerics-preserving; `scalar|unrolled|packed` force a path.
+fn kernel_variant(args: &Args) -> anyhow::Result<exec::KernelVariant> {
+    match args.get("kernel") {
+        Some(s) => exec::KernelVariant::parse_or_list(s).map_err(|e| anyhow::anyhow!(e)),
+        None => Ok(exec::KernelVariant::from_env(exec::KernelVariant::Auto)),
+    }
+}
+
 fn print_help() {
     println!(
         "hpxmp — OpenMP-over-AMT runtime (hpxMP reproduction)\n\n\
@@ -76,6 +96,9 @@ fn print_help() {
            --exec <seq|par|task>     execution policy for every kernel (env: HPXMP_EXEC;\n\
                                      default par; task = futurized dataflow)\n\
            --tile N                  task-mode tile edge for dmatdmatmult (default 64)\n\
+           --kernel <auto|scalar|unrolled|packed>  micro-kernel variant (env: HPXMP_KERNEL;\n\
+                                     auto preserves scalar numerics — see DESIGN.md §12)\n\
+           --threshold N             serial→parallel element-count crossover override\n\
            --threads 1,2,4,8,16      thread counts (heatmap) / counts per figure (scaling)\n\
            --workers N               AMT worker threads (default: max(threads))\n\
            --policy <name>           priority-local|static|local|global|abp|hierarchical|periodic\n\
@@ -116,9 +139,16 @@ fn build_runtimes_with_workers(
 /// Stamp the subcommand's execution policy onto a runtime: the one-line
 /// seq/par/task swap, applied uniformly across subcommands.
 fn policy_on<'e>(mode: ExecMode, ex: &'e dyn exec::Executor, args: &Args) -> Policy<'e> {
-    Policy::with_mode(mode)
+    // `--kernel` was validated in main(); the fallback is unreachable.
+    let kv = kernel_variant(args).unwrap_or(exec::KernelVariant::Auto);
+    let mut pol = Policy::with_mode(mode)
         .on(ex)
         .tile(args.get_usize("tile", exec::DEFAULT_TILE))
+        .kernel(kv);
+    if let Some(t) = args.get("threshold").and_then(|s| s.parse().ok()) {
+        pol = pol.threshold(t);
+    }
+    pol
 }
 
 fn bench_cfg(args: &Args) -> BenchCfg {
@@ -136,12 +166,24 @@ fn ops_from(args: &Args) -> anyhow::Result<Vec<Op>> {
     }
 }
 
-fn cmd_info(_args: &Args, mode: ExecMode) -> anyhow::Result<()> {
+fn cmd_info(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
     println!("hpxmp-rs — hpxMP reproduction (Zhang et al. 2019)");
     println!("  num_procs        : {}", icv::num_procs());
     println!("  OMP_NUM_THREADS  : {:?}", std::env::var("OMP_NUM_THREADS").ok());
     println!("  HPXMP_POLICY     : {}", icv::policy_from_env().name());
     println!("  exec policy      : {} (of seq|par|task)", mode.name());
+    println!(
+        "  kernel variant   : {} (of auto|scalar|unrolled|packed)",
+        kernel_variant(args)?.name()
+    );
+    println!("  simd             : {}", hpxmp::blaze::kernel::simd_label());
+    {
+        let a = hpxmp::amt::arena::stats();
+        println!(
+            "  task arena       : {} fresh, {} reused, {} boxed-fallback, {} recycled, {} freed",
+            a.fresh_allocs, a.reuses, a.fallbacks, a.recycled, a.freed
+        );
+    }
     println!(
         "  policies         : {}",
         PolicyKind::ALL

@@ -17,9 +17,12 @@
 //!   [`Policy::on`], [`Policy::threads`], [`Policy::chunk`],
 //!   [`Policy::tile`], [`Policy::hint`].
 //! * Generic algorithms — [`for_each`] (blocking), [`for_each_async`]
-//!   (returns a [`Future`] that composes with `then`/`when_all`), and
+//!   (returns a [`Future`] that composes with `then`/`when_all`),
 //!   [`for_each_tile_async`] (2-D tiled dependence graph, the engine
-//!   behind `task()`-mode `dmatdmatmult`).
+//!   behind `task()`-mode `dmatdmatmult`), and
+//!   [`for_each_tile_async_prepped`] (same graph with per-band
+//!   preparation tasks as the band futures — the packing hook of the
+//!   ISSUE 7 packed matmul).
 //!
 //! Every Blaze kernel is generic over `&Policy`, so each of the paper's
 //! workloads is one call expressed three ways:
@@ -196,6 +199,85 @@ impl ExecMode {
     }
 }
 
+/// Which inner-loop implementation a Blaze kernel dispatches to — the
+/// axis `benches/ablation_kernels.rs` and the `--kernel` CLI flag sweep
+/// (ISSUE 7).  Selecting a variant never changes *where* work runs (the
+/// [`ExecMode`] does that); it changes the per-chunk compute loop.
+///
+/// Numerics contract: [`KernelVariant::Auto`] is **numerics-preserving**
+/// — it only picks an alternative implementation when the result is
+/// bitwise-identical to the scalar loop (elementwise unrolling without
+/// FMA) or when the operand is large enough that the repo-wide oracle
+/// tests use tolerances anyway (packed matmul above
+/// [`crate::blaze::thresholds::PACKED_MIN_DIM`]).  Explicitly requesting
+/// `Unrolled`/`Packed` opts into reassociated sums and (with the `simd`
+/// feature compiled and the CPU capable) fused multiply-add.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Pick per (kernel, size): the fastest numerics-preserving path.
+    Auto,
+    /// The straightforward scalar loops in `blaze/serial.rs` — the
+    /// oracle every other variant is tested against.
+    Scalar,
+    /// Explicitly 4-wide unrolled loops with split accumulators
+    /// (`blaze/kernel.rs`); FMA when compiled+detected.
+    Unrolled,
+    /// Packed cache-blocked matmul micro-kernel (MR×NR register tile
+    /// over KC-strip panels); non-matmul kernels fall back to
+    /// [`KernelVariant::Unrolled`].
+    Packed,
+}
+
+impl KernelVariant {
+    pub const ALL: [KernelVariant; 4] = [
+        KernelVariant::Auto,
+        KernelVariant::Scalar,
+        KernelVariant::Unrolled,
+        KernelVariant::Packed,
+    ];
+
+    /// Accepted spellings, resolved through the same
+    /// [`cli::lookup_choice`] helper as [`ExecMode`].
+    pub const CHOICES: &[(&str, KernelVariant)] = &[
+        ("auto", KernelVariant::Auto),
+        ("scalar", KernelVariant::Scalar),
+        ("unrolled", KernelVariant::Unrolled),
+        ("packed", KernelVariant::Packed),
+        ("simd", KernelVariant::Unrolled),
+        ("blocked", KernelVariant::Packed),
+    ];
+
+    /// Lenient parse (None on unknown).
+    pub fn parse(s: &str) -> Option<Self> {
+        cli::lookup_choice(s, Self::CHOICES)
+    }
+
+    /// Strict parse for `--kernel` / `HPXMP_KERNEL`: unknown values
+    /// report the valid set instead of silently defaulting.
+    pub fn parse_or_list(s: &str) -> Result<Self, String> {
+        cli::parse_choice("kernel variant", s, Self::CHOICES)
+    }
+
+    /// Resolve the `HPXMP_KERNEL` env binding, falling back to `default`
+    /// when unset; a set-but-bad value fails loudly with the valid set.
+    pub fn from_env(default: KernelVariant) -> KernelVariant {
+        match std::env::var("HPXMP_KERNEL") {
+            Err(_) => default,
+            Ok(v) => Self::parse_or_list(&v).unwrap_or_else(|e| panic!("HPXMP_KERNEL: {e}")),
+        }
+    }
+
+    /// Canonical name for reports and bench rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelVariant::Auto => "auto",
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Unrolled => "unrolled",
+            KernelVariant::Packed => "packed",
+        }
+    }
+}
+
 /// A composable execution policy: *how* a generic algorithm or Blaze
 /// kernel executes, as a value.
 ///
@@ -226,6 +308,12 @@ pub struct Policy<'e> {
     /// External cancellation token the algorithm observes at chunk
     /// boundaries.  Borrowed so `Policy` stays `Copy`.
     token: Option<&'e CancelToken>,
+    /// Inner-loop implementation Blaze kernels dispatch to (ISSUE 7).
+    kernel: KernelVariant,
+    /// Override for the kernel's serial→parallel crossover element
+    /// count; `None` keeps the per-kernel default from
+    /// `blaze/thresholds.rs`.
+    threshold: Option<usize>,
 }
 
 /// How a cancellable algorithm run ended (ISSUE 6): returned by
@@ -282,6 +370,8 @@ impl Policy<'static> {
             hint: Hint::Any,
             deadline: None,
             token: None,
+            kernel: KernelVariant::Auto,
+            threshold: None,
         }
     }
 }
@@ -301,6 +391,8 @@ impl<'e> Policy<'e> {
             hint: self.hint,
             deadline: self.deadline,
             token: self.token,
+            kernel: self.kernel,
+            threshold: self.threshold,
         }
     }
 
@@ -337,6 +429,24 @@ impl<'e> Policy<'e> {
     /// mid-iteration).
     pub fn deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Select the inner-loop implementation Blaze kernels dispatch to
+    /// (ISSUE 7); default [`KernelVariant::Auto`].
+    pub fn kernel(mut self, v: KernelVariant) -> Self {
+        self.kernel = v;
+        self
+    }
+
+    /// Override the serial→parallel crossover element count for Blaze
+    /// kernels: operands with at least this many elements (kernel FLOPs
+    /// for the compute-bound ops) parallelize; smaller ones run the
+    /// serial path regardless of mode.  `None` (the default) keeps the
+    /// per-kernel Blazemark-calibrated constants in
+    /// `blaze/thresholds.rs`.
+    pub fn threshold(mut self, elements: usize) -> Self {
+        self.threshold = Some(elements);
         self
     }
 
@@ -400,6 +510,18 @@ impl<'e> Policy<'e> {
         self.hint
     }
 
+    /// The selected inner-loop implementation ([`Policy::kernel`]).
+    pub fn kernel_variant(&self) -> KernelVariant {
+        self.kernel
+    }
+
+    /// Resolve the parallelization threshold for a kernel whose default
+    /// crossover is `default` elements: the explicit
+    /// [`Policy::threshold`] override wins, else the per-kernel constant.
+    pub fn par_threshold(&self, default: usize) -> usize {
+        self.threshold.unwrap_or(default)
+    }
+
     /// Does this policy execute serially?  True for `seq()` and for any
     /// policy resolved to a single thread — the predicate Blaze kernels
     /// combine with their size thresholds to pick the serial kernel.
@@ -424,6 +546,8 @@ impl std::fmt::Debug for Policy<'_> {
             .field("hint", &self.hint)
             .field("deadline", &self.deadline)
             .field("token", &self.token.is_some())
+            .field("kernel", &self.kernel)
+            .field("threshold", &self.threshold)
             .finish()
     }
 }
@@ -619,6 +743,52 @@ pub fn for_each_tile_async(
     cols: usize,
     body: Arc<dyn Fn(Range<usize>, Range<usize>) + Send + Sync>,
 ) -> Future<()> {
+    tile_graph(pol, rows, cols, None, body)
+}
+
+/// A band-preparation hook for [`for_each_tile_async_prepped`]: called
+/// once per row (or column) tile band with `(band_index, band_range)`
+/// before any tile of that band runs.
+pub type BandPrep = Arc<dyn Fn(usize, Range<usize>) + Send + Sync>;
+
+/// [`for_each_tile_async`] with *band futures that do work*: `row_prep`
+/// runs once per row-tile band and `col_prep` once per column-tile band
+/// as real tasks on the graph, and every tile's `when_all` input edge is
+/// its two bands' prep futures — so per-band preparation (packing a
+/// matrix panel into a contiguous buffer, ISSUE 7) overlaps tile compute
+/// and is shared across all tiles of the band instead of being redone
+/// per tile.
+///
+/// Ordering contract: `body(ri, rj)` observes the completed
+/// `row_prep(bi, ri)` and `col_prep(bj, rj)` for its own bands (the
+/// `when_all` edge), but bands are otherwise unordered against each
+/// other.  On an executor without an AMT scheduler (or a serial policy)
+/// all preps run before the eager tile sweep — parallel via
+/// [`Executor::bulk_sync`] when the policy is.  Cancellation skips tile
+/// bodies (as in [`for_each_tile_async`]) but never preps: a pack buffer
+/// must be consistent for the tiles that already started.
+pub fn for_each_tile_async_prepped(
+    pol: &Policy<'_>,
+    rows: usize,
+    cols: usize,
+    row_prep: BandPrep,
+    col_prep: BandPrep,
+    body: Arc<dyn Fn(Range<usize>, Range<usize>) + Send + Sync>,
+) -> Future<()> {
+    tile_graph(pol, rows, cols, Some((row_prep, col_prep)), body)
+}
+
+/// Shared engine behind [`for_each_tile_async`] and
+/// [`for_each_tile_async_prepped`] — identical graph shape, with band
+/// futures either materialized ready (`preps: None`) or hung off
+/// spawned preparation tasks.
+fn tile_graph(
+    pol: &Policy<'_>,
+    rows: usize,
+    cols: usize,
+    preps: Option<(BandPrep, BandPrep)>,
+    body: Arc<dyn Fn(Range<usize>, Range<usize>) + Send + Sync>,
+) -> Future<()> {
     if rows == 0 || cols == 0 {
         return Future::ready(());
     }
@@ -648,6 +818,32 @@ pub fn for_each_tile_async(
     let sched = match pol.executor().scheduler() {
         Some(s) if pol.mode() == ExecMode::Task && !pol.is_serial() => s.clone(),
         _ => {
+            if let Some((rp, cp)) = &preps {
+                // Eager fallback: every band prep completes before any
+                // tile runs.  One fused index space (row bands first,
+                // then column bands) so a parallel policy overlaps them.
+                let prep_band = |r: Range<i64>| {
+                    for b in r.start as usize..r.end as usize {
+                        if b < row_tiles {
+                            rp(b, b * tile..((b + 1) * tile).min(rows));
+                        } else {
+                            let bj = b - row_tiles;
+                            cp(bj, bj * tile..((bj + 1) * tile).min(cols));
+                        }
+                    }
+                };
+                let total = (row_tiles + col_tiles) as i64;
+                if pol.is_serial() {
+                    prep_band(0..total);
+                } else {
+                    pol.executor().bulk_sync(
+                        pol.num_threads(),
+                        0..total,
+                        LoopSched::Static { chunk: None },
+                        &prep_band,
+                    );
+                }
+            }
             let band = |r: Range<i64>| {
                 for bi in r.start as usize..r.end as usize {
                     let (i0, i1) = (bi * tile, ((bi + 1) * tile).min(rows));
@@ -676,9 +872,33 @@ pub fn for_each_tile_async(
     };
 
     // The input tiles of the graph: rows banded by tile, columns by
-    // tile, one future each.
-    let row_bands: Vec<Future<()>> = (0..row_tiles).map(|_| Future::ready(())).collect();
-    let col_bands: Vec<Future<()>> = (0..col_tiles).map(|_| Future::ready(())).collect();
+    // tile, one future each.  With preps attached the band future IS the
+    // spawned preparation task; without, it is materialized ready (the
+    // operands exist as-is).
+    let (row_bands, col_bands): (Vec<Future<()>>, Vec<Future<()>>) = match &preps {
+        None => (
+            (0..row_tiles).map(|_| Future::ready(())).collect(),
+            (0..col_tiles).map(|_| Future::ready(())).collect(),
+        ),
+        Some((rp, cp)) => (
+            (0..row_tiles)
+                .map(|bi| {
+                    let rp = rp.clone();
+                    let (i0, i1) = (bi * tile, ((bi + 1) * tile).min(rows));
+                    Future::ready(())
+                        .then_named(&sched, "exec_pack_row_band", move |_| rp(bi, i0..i1))
+                })
+                .collect(),
+            (0..col_tiles)
+                .map(|bj| {
+                    let cp = cp.clone();
+                    let (j0, j1) = (bj * tile, ((bj + 1) * tile).min(cols));
+                    Future::ready(())
+                        .then_named(&sched, "exec_pack_col_band", move |_| cp(bj, j0..j1))
+                })
+                .collect(),
+        ),
+    };
 
     let mut tiles: Vec<Future<()>> = Vec::with_capacity(row_tiles * col_tiles);
     for bi in 0..row_tiles {
@@ -775,6 +995,29 @@ mod tests {
         assert!(pol2.cancel_token().is_some());
         assert!(pol2.effective_token().is_some());
         assert!(seq().effective_token().is_none(), "hot path stays check-free");
+        // Kernel-variant / threshold combinators (ISSUE 7).
+        assert_eq!(seq().kernel_variant(), KernelVariant::Auto);
+        let pol3 = par()
+            .on(&hpx)
+            .kernel(KernelVariant::Packed)
+            .threshold(1234);
+        assert_eq!(pol3.kernel_variant(), KernelVariant::Packed);
+        assert_eq!(pol3.par_threshold(99), 1234, "override wins");
+        assert_eq!(par().par_threshold(99), 99, "default flows through");
+        // `.on()` preserves the new knobs.
+        assert_eq!(pol3.on(&hpx).kernel_variant(), KernelVariant::Packed);
+        assert_eq!(pol3.on(&hpx).par_threshold(99), 1234);
+    }
+
+    #[test]
+    fn kernel_variant_parse_roundtrip_and_listing() {
+        for v in KernelVariant::ALL {
+            assert_eq!(KernelVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(KernelVariant::parse("simd"), Some(KernelVariant::Unrolled));
+        assert_eq!(KernelVariant::parse("blocked"), Some(KernelVariant::Packed));
+        let err = KernelVariant::parse_or_list("bogus").unwrap_err();
+        assert!(err.contains("auto|scalar|unrolled|packed"), "{err}");
     }
 
     #[test]
@@ -945,6 +1188,72 @@ mod tests {
         );
         assert!(fut.is_ready(), "schedulerless tile dispatch must be eager");
         assert!(cells.iter().all(|v| v.load(Ordering::SeqCst) == 1));
+    }
+
+    /// Shared skeleton for the prepped-graph tests: every band prep must
+    /// run exactly once and *before* any tile of its band, every cell
+    /// exactly once.
+    fn prepped_coverage(pol: &Policy<'_>, rows: usize, cols: usize, tile: usize) {
+        let row_tiles = rows.div_ceil(tile);
+        let col_tiles = cols.div_ceil(tile);
+        let row_ready: Arc<Vec<AtomicU32>> =
+            Arc::new((0..row_tiles).map(|_| AtomicU32::new(0)).collect());
+        let col_ready: Arc<Vec<AtomicU32>> =
+            Arc::new((0..col_tiles).map(|_| AtomicU32::new(0)).collect());
+        let cells: Arc<Vec<AtomicU32>> =
+            Arc::new((0..rows * cols).map(|_| AtomicU32::new(0)).collect());
+        let (rr, cr, ce) = (row_ready.clone(), col_ready.clone(), cells.clone());
+        let (rr2, cr2) = (row_ready.clone(), col_ready.clone());
+        for_each_tile_async_prepped(
+            &pol.tile(tile),
+            rows,
+            cols,
+            Arc::new(move |bi, ri: Range<usize>| {
+                assert_eq!(ri.start, bi * tile, "row band range mismatch");
+                rr2[bi].fetch_add(1, Ordering::SeqCst);
+            }),
+            Arc::new(move |bj, rj: Range<usize>| {
+                assert_eq!(rj.start, bj * tile, "col band range mismatch");
+                cr2[bj].fetch_add(1, Ordering::SeqCst);
+            }),
+            Arc::new(move |ri: Range<usize>, rj: Range<usize>| {
+                // The ordering contract: this tile's bands are prepped.
+                assert_eq!(rr[ri.start / tile].load(Ordering::SeqCst), 1);
+                assert_eq!(cr[rj.start / tile].load(Ordering::SeqCst), 1);
+                for i in ri.clone() {
+                    for j in rj.clone() {
+                        ce[i * cols + j].fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }),
+        )
+        .wait();
+        assert!(row_ready.iter().all(|v| v.load(Ordering::SeqCst) == 1));
+        assert!(col_ready.iter().all(|v| v.load(Ordering::SeqCst) == 1));
+        assert!(
+            cells.iter().all(|v| v.load(Ordering::SeqCst) == 1),
+            "{}: prepped tiles missed/overlapped cells ({rows}x{cols}, tile {tile})",
+            pol.label()
+        );
+    }
+
+    #[test]
+    fn prepped_graph_runs_band_preps_before_tiles() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+        for (rows, cols, tile) in [(64usize, 64usize, 16usize), (57, 83, 16), (10, 200, 32)] {
+            prepped_coverage(&task().on(&hpx).threads(4), rows, cols, tile);
+        }
+    }
+
+    #[test]
+    fn prepped_fallbacks_run_preps_first() {
+        // Serial and schedulerless policies degrade to eager preps
+        // followed by the eager tile sweep — same contract.
+        prepped_coverage(&seq(), 40, 24, 8);
+        let base = crate::baseline::BaselineRuntime::new(3);
+        prepped_coverage(&task().on(&base).threads(3), 40, 24, 8);
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        prepped_coverage(&par().on(&hpx).threads(2), 40, 24, 8);
     }
 
     #[test]

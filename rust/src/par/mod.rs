@@ -29,7 +29,7 @@ use std::sync::{Arc, Mutex};
 use crate::amt::future::{Future, Promise};
 use crate::util::lock_unpoisoned;
 use crate::amt::task::Hint;
-use crate::amt::{Priority, Scheduler};
+use crate::amt::{Payload, Priority, Scheduler};
 use crate::omp::icv::Schedule;
 use crate::omp::{fork_call, OmpRuntime};
 
@@ -257,7 +257,10 @@ impl Executor for HpxMpRuntime {
             Hint::Worker(w) => w,
             Hint::Any => self.rt.sched.hint_base(chunks.len()),
         };
-        let bodies: Vec<(Hint, Box<dyn FnOnce() + Send>)> = chunks
+        // Payload::new places each small chunk closure in a recycled
+        // per-worker arena block (ISSUE 7) instead of a fresh Box —
+        // malloc stays off the bulk-spawn fast path.
+        let bodies: Vec<(Hint, Payload)> = chunks
             .into_iter()
             .enumerate()
             .map(|(t, r)| {
@@ -267,7 +270,7 @@ impl Executor for HpxMpRuntime {
                     panicked: panicked.clone(),
                     promise: promise.clone(),
                 };
-                let chunk: Box<dyn FnOnce() + Send> = Box::new(move || {
+                let chunk = Payload::new(move || {
                     let _arrive = arrive;
                     body(r);
                 });
@@ -276,7 +279,7 @@ impl Executor for HpxMpRuntime {
             .collect();
         self.rt
             .sched
-            .spawn_batch(Priority::Normal, "par_async_chunk", bodies);
+            .spawn_batch_payloads(Priority::Normal, "par_async_chunk", None, bodies);
         joined
     }
 }

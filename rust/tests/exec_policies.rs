@@ -8,6 +8,25 @@
 //! accumulates over the full depth in increasing k exactly like the
 //! serial kernel — so equality is exact, not epsilon.
 //!
+//! **Which paths stay bitwise-equal after ISSUE 7** (the `KernelVariant`
+//! numerics contract, see `blaze/kernel.rs` and DESIGN.md §12):
+//!
+//! * `Auto` (the default used by every test here) is
+//!   numerics-preserving: element-wise kernels resolve to the portable
+//!   unrolled loops (same per-element expression → bitwise-equal),
+//!   matvec resolves to the scalar oracle loop, and matmul resolves to
+//!   the scalar row kernel below `PACKED_MIN_DIM` = 256 — every shape in
+//!   this file.  All assertions below therefore remain `== 0.0`, with
+//!   or without the `simd` cargo feature.
+//! * Explicit `.kernel(Packed)` matmul reorders the k-summation into
+//!   MR×NR register lanes: results are policy- and tile-independent
+//!   **bitwise among themselves** (each C element is one lane summed in
+//!   ascending k) but only tolerance-equal to the scalar oracle —
+//!   see `packed_variant_is_tolerance_equal_and_self_consistent`.
+//! * Explicit `.kernel(Unrolled)` daxpy/matvec may contract through FMA
+//!   when the `simd` feature is compiled *and* the CPU has avx2+fma —
+//!   tolerance-equal only; covered in `tests/kernel_oracle.rs`.
+//!
 //! Plus: the RAII arrive-guard contract — `for_each_async` under
 //! `task()` still fulfils its join future when a chunk body panics.
 
@@ -145,6 +164,48 @@ fn task_policy_tile_sizes_stay_bitwise_equal() {
         let mut c = DynMatrix::zeros(n, n);
         blaze::dmatdmatmult(&exec::task().on(&hpx).threads(4).tile(tile), &a, &b, &mut c);
         assert_eq!(c.max_abs_diff(&oracle), 0.0, "tile {tile}");
+    }
+}
+
+#[test]
+fn packed_variant_is_tolerance_equal_and_self_consistent() {
+    // The ISSUE 7 packed matmul across the full executor × policy
+    // matrix: within max_abs_diff <= 1e-11 of the scalar oracle (the
+    // k-summation is reassociated into register lanes, so equality is
+    // epsilon, not bitwise) — but bitwise-identical *across* policies,
+    // executors, and tilings, because each C element is produced by
+    // exactly one lane summed in ascending k regardless of
+    // decomposition.
+    use hpxmp::par::exec::KernelVariant;
+    let (m, k, n) = (100usize, 60usize, 130usize);
+    let a = DynMatrix::random(m, k, 31);
+    let b = DynMatrix::random(k, n, 32);
+    let mut oracle = DynMatrix::zeros(m, n);
+    blaze::dmatdmatmult(&seq(), &a, &b, &mut oracle);
+    let mut packed_ref = DynMatrix::zeros(m, n);
+    blaze::dmatdmatmult(&seq().kernel(KernelVariant::Packed), &a, &b, &mut packed_ref);
+    assert!(
+        packed_ref.max_abs_diff(&oracle) <= 1e-11,
+        "packed seq vs scalar oracle: {}",
+        packed_ref.max_abs_diff(&oracle)
+    );
+    for (name, ex) in executors() {
+        for pol in policies(ex.as_ref()) {
+            for tile in [16usize, 33, 64] {
+                let mut c = DynMatrix::zeros(m, n);
+                blaze::dmatdmatmult(
+                    &pol.kernel(KernelVariant::Packed).tile(tile).threshold(1),
+                    &a,
+                    &b,
+                    &mut c,
+                );
+                assert_eq!(
+                    c.max_abs_diff(&packed_ref),
+                    0.0,
+                    "packed not decomposition-independent: {name} {pol:?} tile {tile}"
+                );
+            }
+        }
     }
 }
 

@@ -1,0 +1,250 @@
+//! ISSUE 7: the kernel-variant oracle matrix.
+//!
+//! Every tuned variant in `blaze/kernel.rs` is checked against the
+//! `serial.rs` scalar loops with an **explicit tolerance contract**:
+//!
+//! * portable unrolled element-wise kernels (vadd/daxpy/madd under
+//!   `Auto` or with the `simd` feature off) — bitwise-equal
+//!   (`max_abs_diff == 0.0`): the per-element expression is unchanged,
+//!   only the loop is restructured;
+//! * unrolled matvec — accumulator splitting reassociates the dot
+//!   product: `max_abs_diff <= 1e-12 * k`;
+//! * packed matmul — the MR×NR micro-kernel reassociates the
+//!   k-summation into register lanes: `max_abs_diff <= 1e-11` for the
+//!   unit-scale random operands used here;
+//! * FMA paths (explicit variants, `simd` feature, avx2+fma CPU) —
+//!   contraction changes rounding: same tolerances as above.
+//!
+//! Plus the placement layer: first-touch construction is bitwise
+//! policy-independent, and the `.threshold()` knob moves the serial/
+//! parallel crossover without changing results.
+
+use hpxmp::blaze::{self, kernel, serial, DynMatrix, DynVector};
+use hpxmp::omp::OmpRuntime;
+use hpxmp::par::exec::{self, seq, KernelVariant, Policy};
+use hpxmp::par::HpxMpRuntime;
+
+/// Max |a[i] - b[i]| over two equal-length slices.
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn unrolled_elementwise_kernels_are_bitwise_equal_to_serial() {
+    // Loop restructuring only — no reassociation, no FMA under Auto.
+    for n in [0usize, 1, 3, 4, 5, 17, 1000, 4097] {
+        let a = DynVector::random(n, 1);
+        let b = DynVector::random(n, 2);
+
+        let mut c_oracle = vec![0.0; n];
+        serial::vadd_slice(a.as_slice(), b.as_slice(), &mut c_oracle);
+        let mut c = vec![0.0; n];
+        kernel::vadd(KernelVariant::Unrolled, a.as_slice(), b.as_slice(), &mut c);
+        // vadd has no multiply, so no contraction is possible: the
+        // unrolled path is the same add in any build.
+        assert_eq!(max_abs_diff(&c, &c_oracle), 0.0, "vadd n={n}");
+
+        let mut y_oracle = b.as_slice().to_vec();
+        serial::daxpy_slice(3.0, a.as_slice(), &mut y_oracle);
+        let mut y = b.as_slice().to_vec();
+        kernel::daxpy(KernelVariant::Auto, 3.0, a.as_slice(), &mut y);
+        // Auto never engages FMA — bitwise by contract.
+        assert_eq!(max_abs_diff(&y, &y_oracle), 0.0, "daxpy auto n={n}");
+    }
+}
+
+#[test]
+fn explicit_unrolled_daxpy_is_tolerance_equal_even_with_fma() {
+    // With the simd feature + avx2+fma the explicit variant may
+    // contract a*x+y; one rounding per element bounds the error.
+    let n = 10_007;
+    let a = DynVector::random(n, 3);
+    let b = DynVector::random(n, 4);
+    let mut y_oracle = b.as_slice().to_vec();
+    serial::daxpy_slice(3.0, a.as_slice(), &mut y_oracle);
+    let mut y = b.as_slice().to_vec();
+    kernel::daxpy(KernelVariant::Unrolled, 3.0, a.as_slice(), &mut y);
+    let tol = if kernel::simd_active() { 1e-14 } else { 0.0 };
+    assert!(
+        max_abs_diff(&y, &y_oracle) <= tol,
+        "daxpy unrolled n={n}: {}",
+        max_abs_diff(&y, &y_oracle)
+    );
+}
+
+#[test]
+fn unrolled_matvec_is_tolerance_equal_to_serial() {
+    // Accumulator splitting reassociates the dot product.
+    for (m, k) in [(1usize, 1usize), (7, 5), (33, 64), (400, 37), (350, 700)] {
+        let a = DynMatrix::random(m, k, 5);
+        let x = DynVector::random(k, 6);
+        let mut y_oracle = vec![0.0; m];
+        serial::matvec_rows(a.as_slice(), x.as_slice(), &mut y_oracle);
+        let mut y = vec![0.0; m];
+        kernel::matvec(KernelVariant::Unrolled, a.as_slice(), x.as_slice(), &mut y);
+        let tol = 1e-12 * k as f64;
+        assert!(
+            max_abs_diff(&y, &y_oracle) <= tol,
+            "matvec ({m},{k}): {} > {tol}",
+            max_abs_diff(&y, &y_oracle)
+        );
+    }
+}
+
+#[test]
+fn packed_matmul_is_tolerance_equal_to_serial_on_ragged_shapes() {
+    // Through the full ops:: dispatch (explicit Packed variant), over
+    // shapes that exercise every edge: ragged MR/NR panels, k smaller
+    // than one KC strip, k spanning several strips, tall/wide extremes.
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+    for (m, k, n) in [
+        (1usize, 1usize, 1usize),
+        (5, 3, 7),
+        (57, 119, 83),
+        (400, 37, 350),
+        (70, 300, 9),
+        (130, 513, 65),
+    ] {
+        let a = DynMatrix::random(m, k, 7);
+        let b = DynMatrix::random(k, n, 8);
+        let mut oracle = DynMatrix::zeros(m, n);
+        blaze::dmatdmatmult(&seq(), &a, &b, &mut oracle);
+        for pol in [
+            seq().kernel(KernelVariant::Packed),
+            exec::par()
+                .on(&hpx)
+                .threads(4)
+                .kernel(KernelVariant::Packed)
+                .threshold(1),
+            exec::task()
+                .on(&hpx)
+                .threads(4)
+                .kernel(KernelVariant::Packed)
+                .threshold(1),
+        ] {
+            let mut c = DynMatrix::zeros(m, n);
+            blaze::dmatdmatmult(&pol, &a, &b, &mut c);
+            assert!(
+                c.max_abs_diff(&oracle) <= 1e-11,
+                "packed ({m},{k},{n}) {}: {}",
+                pol.label(),
+                c.max_abs_diff(&oracle)
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_matmul_engages_packed_only_at_the_documented_floor() {
+    use hpxmp::blaze::thresholds::PACKED_MIN_DIM;
+    // Below the floor Auto must stay on the scalar row kernel (that is
+    // what keeps the ISSUE 5 bitwise oracles green); at the floor it
+    // switches to packed.
+    let d = PACKED_MIN_DIM;
+    assert!(!kernel::matmul_uses_packed(KernelVariant::Auto, d - 1, d, d));
+    assert!(!kernel::matmul_uses_packed(KernelVariant::Auto, d, d - 1, d));
+    assert!(!kernel::matmul_uses_packed(KernelVariant::Auto, d, d, d - 1));
+    assert!(kernel::matmul_uses_packed(KernelVariant::Auto, d, d, d));
+    assert!(kernel::matmul_uses_packed(KernelVariant::Packed, 8, 8, 8));
+    assert!(!kernel::matmul_uses_packed(KernelVariant::Scalar, d, d, d));
+    assert!(!kernel::matmul_uses_packed(KernelVariant::Unrolled, d, d, d));
+}
+
+#[test]
+fn auto_matmul_above_the_floor_matches_the_scalar_oracle_within_tolerance() {
+    // One above-floor product end-to-end: Auto resolves to packed and
+    // must still agree with the scalar row kernel to tolerance.  Kept
+    // just over the floor so the test stays fast.
+    use hpxmp::blaze::thresholds::PACKED_MIN_DIM;
+    let d = PACKED_MIN_DIM;
+    let a = DynMatrix::random(d, d, 9);
+    let b = DynMatrix::random(d, d, 10);
+    let mut oracle = DynMatrix::zeros(d, d);
+    blaze::dmatdmatmult(&seq().kernel(KernelVariant::Scalar), &a, &b, &mut oracle);
+    let mut c = DynMatrix::zeros(d, d);
+    blaze::dmatdmatmult(&seq(), &a, &b, &mut c);
+    assert!(
+        c.max_abs_diff(&oracle) <= 1e-11,
+        "auto-packed at {d}: {}",
+        c.max_abs_diff(&oracle)
+    );
+}
+
+#[test]
+fn first_touch_constructors_are_policy_independent() {
+    // Placement must never change values: contents are a pure function
+    // of (shape, seed), whatever policy faults the pages in.
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(4));
+    let par = exec::par().on(&hpx).threads(4);
+    let task = exec::task().on(&hpx).threads(4);
+
+    let v_seq = DynVector::random_first_touch(&seq(), 100_003, 42);
+    let v_par = DynVector::random_first_touch(&par, 100_003, 42);
+    let v_task = DynVector::random_first_touch(&task, 100_003, 42);
+    assert_eq!(v_seq.max_abs_diff(&v_par), 0.0);
+    assert_eq!(v_seq.max_abs_diff(&v_task), 0.0);
+    // Different seed, different stream (first-touch reseeds per block, so
+    // it is *not* the same stream as DynVector::random — only seed and
+    // shape determine it).
+    let v_other = DynVector::random_first_touch(&seq(), 100_003, 43);
+    assert!(v_seq.max_abs_diff(&v_other) > 0.0);
+
+    let m_seq = DynMatrix::random_first_touch(&seq(), 130, 101, 7);
+    let m_par = DynMatrix::random_first_touch(&par, 130, 101, 7);
+    assert_eq!(m_seq.max_abs_diff(&m_par), 0.0);
+}
+
+#[test]
+fn threshold_knob_moves_the_crossover_not_the_answer() {
+    let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+    let n = 1000; // well under every default threshold
+    let a = DynVector::random(n, 11);
+    let b0 = DynVector::random(n, 12);
+    let mut oracle = b0.clone();
+    blaze::daxpy(&seq(), 2.5, &a, &mut oracle);
+    for pol in [
+        exec::par().on(&hpx).threads(2).threshold(1), // force parallel
+        exec::par().on(&hpx).threads(2).threshold(usize::MAX), // force serial
+    ] {
+        let mut b = b0.clone();
+        blaze::daxpy(&pol, 2.5, &a, &mut b);
+        assert_eq!(b.max_abs_diff(&oracle), 0.0);
+    }
+}
+
+/// The simd-feature-off build contract: without the cargo feature the
+/// runtime must report SIMD inactive regardless of the host CPU — the
+/// portable kernels are the only code path.
+#[cfg(not(feature = "simd"))]
+#[test]
+fn simd_is_inactive_when_the_feature_is_not_compiled() {
+    assert!(!kernel::simd_compiled());
+    assert!(!kernel::simd_active());
+    assert!(kernel::simd_label().contains("not compiled"));
+}
+
+/// With the feature compiled, activity must equal what the CPU reports.
+#[cfg(feature = "simd")]
+#[test]
+fn simd_activity_matches_cpu_detection() {
+    assert!(kernel::simd_compiled());
+    #[cfg(target_arch = "x86_64")]
+    assert_eq!(
+        kernel::simd_active(),
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    );
+    #[cfg(not(target_arch = "x86_64"))]
+    assert!(!kernel::simd_active());
+}
+
+#[test]
+fn policy_kernel_accessor_round_trips() {
+    let pol = Policy::with_mode(exec::ExecMode::Seq).kernel(KernelVariant::Packed);
+    assert_eq!(pol.kernel_variant(), KernelVariant::Packed);
+    assert_eq!(seq().kernel_variant(), KernelVariant::Auto);
+}
