@@ -36,6 +36,7 @@
 //! only on `(variant, dimensions)`, never on the execution mode or
 //! thread count.
 
+use super::ops::SendPtr;
 use super::serial;
 use super::thresholds::PACKED_MIN_DIM;
 use crate::par::exec::KernelVariant;
@@ -404,6 +405,48 @@ fn microkernel(ap: &[f64], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
     microkernel_scalar(ap, bp, acc);
 }
 
+/// The panel sweep shared by [`packed_band_mm`] and
+/// [`packed_band_mm_ptr`]: identical arithmetic, store abstracted so
+/// the two entry points differ only in how a finished accumulator row
+/// reaches C.  `store(row_in_band, col_in_band, values)` receives the
+/// valid (unpadded) corner of each accumulator row.
+#[inline]
+fn packed_band_mm_core(
+    a_pack: &[f64],
+    band_rows: usize,
+    b_pack: &[f64],
+    band_cols: usize,
+    k: usize,
+    mut store: impl FnMut(usize, usize, &[f64]),
+) {
+    let a_panels = band_rows.div_ceil(MR);
+    let b_panels = band_cols.div_ceil(NR);
+    debug_assert_eq!(a_pack.len(), a_panels * MR * k);
+    debug_assert_eq!(b_pack.len(), b_panels * NR * k);
+    for p in 0..a_panels {
+        let ap_full = &a_pack[p * MR * k..(p + 1) * MR * k];
+        let rmax = (band_rows - p * MR).min(MR);
+        for q in 0..b_panels {
+            let bq_full = &b_pack[q * NR * k..(q + 1) * NR * k];
+            let cmax = (band_cols - q * NR).min(NR);
+            let mut acc = [[0.0f64; NR]; MR];
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + KC).min(k);
+                microkernel(
+                    &ap_full[k0 * MR..k1 * MR],
+                    &bq_full[k0 * NR..k1 * NR],
+                    &mut acc,
+                );
+                k0 = k1;
+            }
+            for (r, acc_row) in acc.iter().enumerate().take(rmax) {
+                store(p * MR + r, q * NR, &acc_row[..cmax]);
+            }
+        }
+    }
+}
+
 /// Multiply one packed A band (`band_rows × k`, [`pack_a_band`] layout)
 /// by one packed B band (`k × band_cols`, [`pack_b_band`] layout) into
 /// the C rectangle at column offset `j_off` of the `band_rows × ldc`
@@ -425,34 +468,50 @@ pub fn packed_band_mm(
     ldc: usize,
     j_off: usize,
 ) {
-    let a_panels = band_rows.div_ceil(MR);
-    let b_panels = band_cols.div_ceil(NR);
-    debug_assert_eq!(a_pack.len(), a_panels * MR * k);
-    debug_assert_eq!(b_pack.len(), b_panels * NR * k);
     debug_assert!(band_rows == 0 || c.len() >= (band_rows - 1) * ldc + j_off + band_cols);
-    for p in 0..a_panels {
-        let ap_full = &a_pack[p * MR * k..(p + 1) * MR * k];
-        let rmax = (band_rows - p * MR).min(MR);
-        for q in 0..b_panels {
-            let bq_full = &b_pack[q * NR * k..(q + 1) * NR * k];
-            let cmax = (band_cols - q * NR).min(NR);
-            let mut acc = [[0.0f64; NR]; MR];
-            let mut k0 = 0;
-            while k0 < k {
-                let k1 = (k0 + KC).min(k);
-                microkernel(
-                    &ap_full[k0 * MR..k1 * MR],
-                    &bq_full[k0 * NR..k1 * NR],
-                    &mut acc,
-                );
-                k0 = k1;
-            }
-            for (r, acc_row) in acc.iter().enumerate().take(rmax) {
-                let base = (p * MR + r) * ldc + j_off;
-                c[base..base + cmax].copy_from_slice(&acc_row[..cmax]);
-            }
-        }
-    }
+    packed_band_mm_core(a_pack, band_rows, b_pack, band_cols, k, |row, col, vals| {
+        let base = row * ldc + j_off + col;
+        c[base..base + vals.len()].copy_from_slice(vals);
+    });
+}
+
+/// [`packed_band_mm`] storing through a raw [`SendPtr`] base instead of
+/// a borrowed C band: the C rectangle starts at row `row_off`, column
+/// `j_off` of the `ldc`-pitch row-major matrix behind `c`.  Only the
+/// disjoint per-row segments actually written are ever materialized as
+/// `&mut` — so concurrent tile tasks whose rectangles partition C can
+/// each call this against the same base pointer without two overlapping
+/// exclusive slices ever being live at once (unlike slicing out the
+/// whole row band, which aliases across the band's column tiles).
+/// Arithmetic is [`packed_band_mm_core`], i.e. bitwise identical to
+/// [`packed_band_mm`].
+///
+/// # Safety
+/// For every `r in 0..band_rows`, the segment
+/// `(row_off + r) * ldc + j_off .. + band_cols` must lie within the
+/// allocation behind `c`, and no other thread may access any of those
+/// segments concurrently (callers partition C into disjoint rectangles
+/// and order reads after this write via their task graph / join).
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn packed_band_mm_ptr(
+    a_pack: &[f64],
+    band_rows: usize,
+    b_pack: &[f64],
+    band_cols: usize,
+    k: usize,
+    c: SendPtr,
+    ldc: usize,
+    row_off: usize,
+    j_off: usize,
+) {
+    packed_band_mm_core(a_pack, band_rows, b_pack, band_cols, k, |row, col, vals| {
+        let base = (row_off + row) * ldc + j_off + col;
+        // SAFETY: in-bounds and exclusive per the function contract;
+        // this `&mut` covers only this tile's `vals.len()`-element row
+        // segment and dies before the next store.
+        let seg = unsafe { c.slice_range(base, base + vals.len()) };
+        seg.copy_from_slice(vals);
+    });
 }
 
 /// Serial whole-matrix packed product `C = A·B` (`m × k` times
@@ -660,6 +719,48 @@ mod tests {
                 "tile={tile} decomposition changed packed numerics"
             );
         }
+    }
+
+    #[test]
+    fn packed_band_mm_ptr_matches_slice_store_bitwise() {
+        // The ptr-store entry point (task-mode tiles) is the same core
+        // as the slice-store one — tile-by-tile results must be
+        // bit-identical, including ragged edge tiles.
+        let (m, k, n) = (53usize, 41usize, 67usize);
+        let a = rand_vec(m * k, 14);
+        let b = rand_vec(k * n, 15);
+        let tile = 16usize;
+        let mut c_slice = vec![0.0; m * n];
+        let mut c_ptr = vec![0.0; m * n];
+        let cp = SendPtr::new(c_ptr.as_mut_ptr());
+        for i0 in (0..m).step_by(tile) {
+            let i1 = (i0 + tile).min(m);
+            let alen = packed_a_len(i1 - i0, k);
+            let mut a_pack = vec![0.0; alen];
+            pack_a_band(&a, k, i0, i1, &mut a_pack);
+            for j0 in (0..n).step_by(tile) {
+                let j1 = (j0 + tile).min(n);
+                let blen = packed_b_len(k, j1 - j0);
+                let mut b_pack = vec![0.0; blen];
+                pack_b_band(&b, k, n, j0, j1, &mut b_pack);
+                packed_band_mm(
+                    &a_pack,
+                    i1 - i0,
+                    &b_pack,
+                    j1 - j0,
+                    k,
+                    &mut c_slice[i0 * n..i1 * n],
+                    n,
+                    j0,
+                );
+                // SAFETY: single-threaded; tile rectangles are
+                // in-bounds and visited once each.
+                unsafe {
+                    packed_band_mm_ptr(&a_pack, i1 - i0, &b_pack, j1 - j0, k, cp, n, i0, j0)
+                };
+            }
+        }
+        assert_eq!(c_ptr, c_slice, "ptr-store diverged from slice-store");
     }
 
     #[test]

@@ -225,9 +225,11 @@ pub fn dmatdmatmult(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynM
 /// shared by all its tiles.
 ///
 /// All three paths drive the same [`kernel::packed_band_mm`] arithmetic
-/// (one register accumulator per C element, depth ascending), so their
-/// results are **bitwise identical** to each other for any tile size or
-/// thread count.
+/// (one register accumulator per C element, depth ascending; the task
+/// tiles store through [`kernel::packed_band_mm_ptr`], which shares the
+/// core and materializes only each tile's disjoint per-row C segments),
+/// so their results are **bitwise identical** to each other for any
+/// tile size or thread count.
 fn dmatdmatmult_packed(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut DynMatrix) {
     let (m, k_dim) = (a.rows(), a.cols());
     let n = b.cols();
@@ -279,8 +281,16 @@ fn dmatdmatmult_packed(pol: &Policy<'_>, a: &DynMatrix, b: &DynMatrix, c: &mut D
                 let blen = kernel::packed_b_len(k_dim, bc);
                 let a_band = unsafe { apk_r.slice(bi * a_stride, bi * a_stride + alen) };
                 let b_band = unsafe { bpk_r.slice(bj * b_stride, bj * b_stride + blen) };
-                let c_band = unsafe { cp.slice_range(ri.start * n, ri.end * n) };
-                kernel::packed_band_mm(a_band, br, b_band, bc, k_dim, c_band, n, rj.start);
+                // Column tiles of one row band run concurrently, so the
+                // tile must NOT slice out the whole row band of C — the
+                // ptr-store kernel materializes only this tile's
+                // per-row `(i*n + rj.start)..(i*n + rj.end)` segments,
+                // which are disjoint across all live tiles.
+                unsafe {
+                    kernel::packed_band_mm_ptr(
+                        a_band, br, b_band, bc, k_dim, cp, n, ri.start, rj.start,
+                    )
+                };
             });
         exec::for_each_tile_async_prepped(pol, m, n, row_prep, col_prep, tile_body).wait();
         return;
