@@ -1,0 +1,121 @@
+//! Task Bench pattern-grid ablation (ISSUE 8): the proof layer for the
+//! scheduler fast paths — steal-half batching, locality-aware victim
+//! selection, continuation inlining.
+//!
+//! Runs the `coordinator::taskbench` sweep — five dependency patterns
+//! (stencil, nearest, fft, spread, random) × scheduling policies × task
+//! grains × thread counts — under two tuning arms built in-process via
+//! `Scheduler::with_tuning`:
+//!
+//! * `steal-half` — batched steals (up to half the victim's queue) +
+//!   continuation inlining: the ISSUE 8 fast paths, the default.
+//! * `steal-one`  — single-task steals, no inlining: the pre-ISSUE-8
+//!   behavior (what `HPXMP_STEAL_ONE=1 HPXMP_INLINE_CONT=0` gives a
+//!   whole process).
+//!
+//! Emits `results/BENCH_taskbench.json`:
+//!
+//! ```json
+//! { "bench": "taskbench",
+//!   "rows": [ {"pattern": "stencil", "policy": "priority-local",
+//!              "threads": 4, "grain_us": 0, "mode": "steal-half",
+//!              "us_per_task": 1.93, "eff": 0.0}, ... ],
+//!   "speedup_stealhalf_vs_single": {"1": r1, "2": r2, ...} }
+//! ```
+//!
+//! `us_per_task` is the METG-style overhead row (grain 0 = pure runtime
+//! overhead per task); `eff` is parallel efficiency at that grain.  The
+//! headline is, per thread count, the **best** `steal-one / steal-half`
+//! time ratio over matching (pattern, policy, grain) cells — >1 means
+//! the fast paths won somewhere at that width.  `BENCH_SMOKE=1` shrinks
+//! the grid for CI; `BENCH_THREADS=1,2` overrides the thread grid.
+
+use hpxmp::amt::{PolicyKind, Tuning};
+use hpxmp::coordinator::taskbench::{render, sweep, Pattern, SweepCfg, TbRow};
+
+mod common;
+
+fn main() {
+    let smoke = common::smoke();
+    let cfg = SweepCfg {
+        patterns: Pattern::ALL.to_vec(),
+        policies: vec![PolicyKind::PriorityLocal, PolicyKind::Abp, PolicyKind::Local],
+        threads: common::heatmap_threads(),
+        grains_us: if smoke { vec![0, 20] } else { vec![0, 5, 20] },
+        width: if smoke { 32 } else { 64 },
+        steps: if smoke { 16 } else { 32 },
+        reps: if smoke { 2 } else { 3 },
+        tunings: vec![
+            ("steal-half", Tuning { steal_batch: 32, inline_cont: true }),
+            ("steal-one", Tuning { steal_batch: 1, inline_cont: false }),
+        ],
+    };
+    eprintln!(
+        "[taskbench] {}x{} grid, threads {:?}, grains {:?} us",
+        cfg.width, cfg.steps, cfg.threads, cfg.grains_us
+    );
+    let rows = sweep(&cfg);
+    print!("{}", render(&rows));
+
+    // Headline: per thread count, best steal-one/steal-half ratio over
+    // matching (pattern, policy, grain) cells.
+    let cell = |mode: &str, t: usize, r: &TbRow| -> Option<f64> {
+        rows.iter()
+            .find(|o| {
+                o.mode == mode
+                    && o.threads == t
+                    && o.pattern == r.pattern
+                    && o.policy == r.policy
+                    && o.grain_us == r.grain_us
+            })
+            .map(|o| o.us_per_task)
+    };
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for &t in &cfg.threads {
+        let mut best: Option<f64> = None;
+        for r in rows.iter().filter(|r| r.mode == "steal-half" && r.threads == t) {
+            if let Some(one) = cell("steal-one", t, r) {
+                if r.us_per_task > 0.0 {
+                    let s = one / r.us_per_task;
+                    best = Some(best.map_or(s, |b: f64| b.max(s)));
+                }
+            }
+        }
+        if let Some(s) = best {
+            println!("best speedup steal-half vs steal-one @{t} threads: {s:.2}x");
+            speedups.push((t, s));
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"taskbench\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"pattern\": \"{}\", \"policy\": \"{}\", \"threads\": {}, \"grain_us\": {}, \
+             \"mode\": \"{}\", \"us_per_task\": {:.4}, \"eff\": {:.4}}}{}\n",
+            r.pattern,
+            r.policy,
+            r.threads,
+            r.grain_us,
+            r.mode,
+            r.us_per_task,
+            r.eff,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"speedup_stealhalf_vs_single\": {");
+    for (i, (t, s)) in speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "{}\"{}\": {:.3}",
+            if i == 0 { "" } else { ", " },
+            t,
+            s
+        ));
+    }
+    json.push_str("}\n}\n");
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_taskbench.json");
+    std::fs::write(&path, json).expect("write BENCH_taskbench.json");
+    println!("{}", path.display());
+}

@@ -14,7 +14,10 @@
 //! * [`Future::then`] — attaches a continuation that is **scheduled as an
 //!   AMT task** on the fulfilling thread's `Scheduler` handle: no new OS
 //!   threads, no blocking, just a `Scheduler::spawn` at fulfilment (or
-//!   immediately if the value is already there).
+//!   immediately if the value is already there).  When fulfilment happens
+//!   *on a worker* of that scheduler, short chains skip the spawn and run
+//!   the continuation inline on the fulfilling worker (ISSUE 8; bounded
+//!   by `MAX_INLINE_DEPTH`, disabled via `HPXMP_INLINE_CONT=0`).
 //! * [`when_all`] — joins N futures into one `Future<()>` with inline
 //!   countdown hooks (no task spawned per input; the combined future's own
 //!   continuations are where work hangs).
@@ -155,6 +158,31 @@ fn dispatch<T: Send + Sync + 'static>(state: Arc<SharedState<T>>, cont: Cont<T>)
     match cont {
         Cont::Inline(f) => f(state.value.get().expect("dispatch before fulfilment")),
         Cont::Spawned { sched, desc, f } => {
+            // Continuation inlining (ISSUE 8): when the fulfilling thread
+            // is a worker of the target scheduler and the per-worker depth
+            // bound allows, run the continuation right here — the operand
+            // is hot in this core's cache and the queue round-trip (push,
+            // wake, steal) per `then` link disappears.  Past the bound the
+            // chain falls back to `spawn` (fresh task, depth 0), so deep
+            // chains can neither overflow the worker stack nor keep one
+            // worker from its queues indefinitely.  `HPXMP_INLINE_CONT=0`
+            // (or `Tuning { inline_cont: false, .. }`) kills the path.
+            //
+            // Panic containment mirrors `worker::execute`: the unwind is
+            // caught and counted, the continuation's own result promise is
+            // dropped mid-unwind (publishing `Panicked` downstream), and
+            // the fulfilment drain loop keeps dispatching its remaining
+            // continuations.
+            if sched.try_begin_inline() {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f(state.value.get().expect("dispatch before fulfilment"));
+                }));
+                sched.end_inline();
+                if result.is_err() {
+                    sched.note_inline_panic();
+                }
+                return;
+            }
             sched.spawn(Priority::Normal, Hint::Any, desc, move || {
                 f(state.value.get().expect("dispatch before fulfilment"));
             });

@@ -10,7 +10,23 @@ pub struct Metrics {
     /// Tasks dropped unrun at dispatch because their cancel token had
     /// fired (ISSUE 6) — disjoint from `executed`.
     pub cancelled: AtomicU64,
-    pub stolen: AtomicU64,
+    /// Steal *sweeps*: one per `Queues::steal` call by a worker with an
+    /// empty local queue (a sweep probes victims in locality order).
+    /// `steals_success / steals_attempted` is the hit rate the
+    /// locality-aware victim ordering optimizes.
+    pub steals_attempted: AtomicU64,
+    /// Steal visits that yielded at least one task (was `stolen` before
+    /// steal-half batching landed).
+    pub steals_success: AtomicU64,
+    /// Total tasks moved by steals — `steal_batch_tasks /
+    /// steals_success` is the mean batch size (1.0 means every steal
+    /// moved a single task, i.e. the `HPXMP_STEAL_ONE=1` behavior).
+    pub steal_batch_tasks: AtomicU64,
+    /// Continuations run inline on the fulfilling worker instead of
+    /// round-tripping through `Scheduler::spawn` (`HPXMP_INLINE_CONT`).
+    /// Inlined continuations never enter `spawned`/`executed`, so the
+    /// task-conservation identity is untouched.
+    pub continuations_inlined: AtomicU64,
     pub overflowed: AtomicU64,
     /// Worker main-loop park *descents* (idle, nothing runnable): counted
     /// at the idle-set announce, i.e. including descents cancelled by the
@@ -54,7 +70,10 @@ impl Metrics {
             spawned: self.spawned.load(Ordering::Relaxed),
             executed: self.executed.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
-            stolen: self.stolen.load(Ordering::Relaxed),
+            steals_attempted: self.steals_attempted.load(Ordering::Relaxed),
+            steals_success: self.steals_success.load(Ordering::Relaxed),
+            steal_batch_tasks: self.steal_batch_tasks.load(Ordering::Relaxed),
+            continuations_inlined: self.continuations_inlined.load(Ordering::Relaxed),
             overflowed: self.overflowed.load(Ordering::Relaxed),
             parked: self.parked.load(Ordering::Relaxed),
             helped: self.helped.load(Ordering::Relaxed),
@@ -72,7 +91,10 @@ pub struct MetricsSnapshot {
     pub spawned: u64,
     pub executed: u64,
     pub cancelled: u64,
-    pub stolen: u64,
+    pub steals_attempted: u64,
+    pub steals_success: u64,
+    pub steal_batch_tasks: u64,
+    pub continuations_inlined: u64,
     pub overflowed: u64,
     pub parked: u64,
     pub helped: u64,
@@ -86,12 +108,16 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "spawned={} executed={} cancelled={} stolen={} overflowed={} parked={} helped={} \
+            "spawned={} executed={} cancelled={} steals_attempted={} steals_success={} \
+             steal_batch_tasks={} continuations_inlined={} overflowed={} parked={} helped={} \
              wait_parks={} quiesce_parks={} wakes_targeted={} wakes_any={}",
             self.spawned,
             self.executed,
             self.cancelled,
-            self.stolen,
+            self.steals_attempted,
+            self.steals_success,
+            self.steal_batch_tasks,
+            self.continuations_inlined,
             self.overflowed,
             self.parked,
             self.helped,
@@ -116,7 +142,7 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.spawned, 2);
         assert_eq!(s.executed, 1);
-        assert_eq!(s.stolen, 0);
+        assert_eq!(s.steals_success, 0);
     }
 
     #[test]
@@ -127,7 +153,10 @@ mod tests {
             "spawned",
             "executed",
             "cancelled",
-            "stolen",
+            "steals_attempted",
+            "steals_success",
+            "steal_batch_tasks",
+            "continuations_inlined",
             "overflowed",
             "parked",
             "helped",

@@ -19,8 +19,9 @@
 //!   (barrier, join, taskwait, future wait, quiescence) ticks through.
 //! * [`future`] — `hpx::future`/`promise` continuations: `then` scheduled
 //!   as AMT tasks, `when_all` joins, help-first waits (DESIGN.md §7).
-//! * [`metrics`] — counters for spawned/executed/stolen/parked tasks and
-//!   the targeted-wake observability surface.
+//! * [`metrics`] — counters for spawned/executed/parked tasks, the steal
+//!   pipeline (attempts/hits/batch sizes, inlined continuations — ISSUE 8)
+//!   and the targeted-wake observability surface.
 //! * [`arena`] — per-worker magazine/depot allocator for task payloads
 //!   (ISSUE 7): spawn-path closures recycle fixed-size blocks instead of
 //!   round-tripping malloc.
@@ -41,5 +42,5 @@ pub use cancel::CancelToken;
 pub use future::{when_all, Future, Outcome, Promise};
 pub use park::IdleMode;
 pub use policy::PolicyKind;
-pub use scheduler::Scheduler;
+pub use scheduler::{Scheduler, Tuning, MAX_INLINE_DEPTH};
 pub use task::{Hint, Priority, Task};

@@ -18,6 +18,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crossbeam_utils::CachePadded;
+
 use super::deque::{ChaseLev, Steal};
 use super::task::{Hint, Priority, Task};
 
@@ -107,11 +109,105 @@ pub trait Queues: Send + Sync {
     /// Fast local acquisition for worker `w`.
     fn pop(&self, worker: usize) -> Option<Task>;
     /// Cross-queue acquisition (work stealing / shared-queue fallback).
-    /// `spin` differentiates steal attempts so victims rotate.
-    fn steal(&self, worker: usize, spin: usize) -> Option<Task>;
+    /// `spin` differentiates steal attempts so victims rotate; `limit`
+    /// bounds how many tasks one visit may claim (steal-half batching —
+    /// `limit == 1` reproduces the classic single steal).  Returns the
+    /// first claimed task plus the total number claimed this visit;
+    /// extras beyond the first are requeued onto worker `w`'s *own*
+    /// queues, never a private stash, so help-first waiters (`help_one`)
+    /// always see every runnable task.
+    ///
+    /// Contract: call only from the thread that owns worker slot `w` —
+    /// the requeue uses the owner-side deque push.
+    fn steal(&self, worker: usize, spin: usize, limit: usize) -> Option<(Task, usize)>;
     /// Racy occupancy estimate for idle heuristics.
     fn approx_len(&self) -> usize;
     fn workers(&self) -> usize;
+}
+
+/// The one victim-rotation helper every stealing policy shares (ISSUE 8
+/// satellite: previously each policy hand-rolled `(w + k + spin) % n`,
+/// which skips a victim whenever `(k + spin) % n == 0` lands the probe on
+/// the thief itself — and two policies forgot the self-check entirely).
+/// Yields every worker except `w` exactly once, starting at an offset
+/// rotated by `spin`.
+pub(crate) fn rotation(w: usize, n: usize, spin: usize) -> impl Iterator<Item = usize> {
+    let m = n.saturating_sub(1);
+    (0..m).map(move |j| (w + 1 + (spin + j) % m) % n)
+}
+
+/// Per-thief victim ordering (ISSUE 8: locality-aware victim selection).
+///
+/// Probe order for thief `w`: (1) the last victim `w` stole from
+/// successfully — task graphs exhibit producer/consumer affinity, so the
+/// queue that fed us once likely still has work; (2) `w`'s locality group
+/// (contiguous blocks of [`VictimTable::GROUP`] workers — the same
+/// block-of-neighbors shape the PR 7 first-touch arena layer assumes, so
+/// group-mates share cache/NUMA locality); (3) full [`rotation`] over the
+/// remaining workers.  A remembered victim that misses
+/// [`VictimTable::MAX_FAILS`] visits in a row is forgotten.
+pub(crate) struct VictimTable {
+    slots: Vec<CachePadded<VictimSlot>>,
+}
+
+struct VictimSlot {
+    /// Last successful victim + 1 (0 = none remembered).
+    last: AtomicUsize,
+    /// Consecutive fully-failed steal visits since the last hit.
+    fails: AtomicUsize,
+}
+
+impl VictimTable {
+    /// Locality-group width: neighbors within the same block share the
+    /// arena/NUMA placement from the first-touch layer.
+    const GROUP: usize = 4;
+    /// Failed visits before a remembered victim is forgotten.
+    const MAX_FAILS: usize = 3;
+
+    pub(crate) fn new(workers: usize) -> Self {
+        Self {
+            slots: (0..workers)
+                .map(|_| {
+                    CachePadded::new(VictimSlot {
+                        last: AtomicUsize::new(0),
+                        fails: AtomicUsize::new(0),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Victim order for thief `w`: last hit, then locality group, then the
+    /// rotation over everyone else.  Every non-self worker appears exactly
+    /// once.
+    pub(crate) fn order(&self, w: usize, spin: usize) -> impl Iterator<Item = usize> + '_ {
+        let n = self.slots.len();
+        let last = self.slots[w]
+            .last
+            .load(Ordering::Relaxed)
+            .checked_sub(1)
+            .filter(|&v| v != w && v < n);
+        let g0 = (w / Self::GROUP) * Self::GROUP;
+        let g1 = (g0 + Self::GROUP).min(n);
+        let group = (g0..g1).filter(move |&v| v != w && Some(v) != last);
+        let rest = rotation(w, n, spin).filter(move |&v| !(g0..g1).contains(&v) && Some(v) != last);
+        last.into_iter().chain(group).chain(rest)
+    }
+
+    /// Record a successful steal from victim `v`.
+    pub(crate) fn note_hit(&self, w: usize, v: usize) {
+        self.slots[w].last.store(v + 1, Ordering::Relaxed);
+        self.slots[w].fails.store(0, Ordering::Relaxed);
+    }
+
+    /// Record a fully-failed steal visit; forget a cold remembered victim.
+    pub(crate) fn note_miss(&self, w: usize) {
+        let f = self.slots[w].fails.fetch_add(1, Ordering::Relaxed) + 1;
+        if f >= Self::MAX_FAILS {
+            self.slots[w].last.store(0, Ordering::Relaxed);
+            self.slots[w].fails.store(0, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Mutex-guarded FIFO used as inbox/injector/overflow in several policies.
@@ -149,6 +245,7 @@ pub struct PriorityLocal {
     per: Vec<PlWorker>,
     injector: MutexQueue,
     rr: AtomicUsize,
+    victims: VictimTable,
 }
 
 impl PriorityLocal {
@@ -163,6 +260,7 @@ impl PriorityLocal {
                 .collect(),
             injector: MutexQueue::default(),
             rr: AtomicUsize::new(0),
+            victims: VictimTable::new(workers),
         }
     }
 
@@ -171,6 +269,18 @@ impl PriorityLocal {
             Hint::Worker(w) => w % self.per.len(),
             Hint::Any => submitter
                 .unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed) % self.per.len()),
+        }
+    }
+
+    /// Batched-steal extras land on the thief's own deque (owner push —
+    /// valid by the `Queues::steal` ownership contract), spilling to its
+    /// inbox on ring-full.  Real queues, not a stash: `help_one` and
+    /// sibling thieves must be able to see them.
+    fn requeue_extras(&self, w: usize, extra: Vec<Task>) {
+        for t in extra {
+            if let Err(t) = self.per[w].deque.push(t) {
+                self.per[w].inbox.push_back(t);
+            }
         }
     }
 }
@@ -201,30 +311,35 @@ impl Queues for PriorityLocal {
             .or_else(|| self.injector.pop_front())
     }
 
-    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
-        let n = self.per.len();
-        for k in 1..n {
-            let v = (w + k + spin) % n;
-            if v == w {
-                continue;
-            }
+    fn steal(&self, w: usize, spin: usize, limit: usize) -> Option<(Task, usize)> {
+        for v in self.victims.order(w, spin) {
             if let Some(t) = self.per[v].high.pop_front() {
-                return Some(t);
+                self.victims.note_hit(w, v);
+                return Some((t, 1));
             }
-            match self.per[v].deque.steal() {
-                Steal::Success(t) => return Some(t),
-                Steal::Retry => {
-                    if let Steal::Success(t) = self.per[v].deque.steal() {
-                        return Some(t);
-                    }
-                }
-                Steal::Empty => {}
+            let mut extra = Vec::new();
+            let first = match self.per[v].deque.steal_batch(limit, &mut extra) {
+                Steal::Success(t) => Some(t),
+                // One bounded retry on contention, then move on.
+                Steal::Retry => match self.per[v].deque.steal_batch(limit, &mut extra) {
+                    Steal::Success(t) => Some(t),
+                    _ => None,
+                },
+                Steal::Empty => None,
+            };
+            if let Some(t) = first {
+                let claimed = 1 + extra.len();
+                self.requeue_extras(w, extra);
+                self.victims.note_hit(w, v);
+                return Some((t, claimed));
             }
             if let Some(t) = self.per[v].inbox.pop_front() {
-                return Some(t);
+                self.victims.note_hit(w, v);
+                return Some((t, 1));
             }
         }
-        self.injector.pop_front()
+        self.victims.note_miss(w);
+        self.injector.pop_front().map(|t| (t, 1))
     }
 
     fn approx_len(&self) -> usize {
@@ -290,7 +405,7 @@ impl Queues for StaticPriority {
             .or_else(|| self.per[w].normal.pop_front())
     }
 
-    fn steal(&self, _w: usize, _spin: usize) -> Option<Task> {
+    fn steal(&self, _w: usize, _spin: usize, _limit: usize) -> Option<(Task, usize)> {
         None // no stealing by definition
     }
 
@@ -316,6 +431,7 @@ pub struct Local {
     per: Vec<LWorker>,
     injector: MutexQueue,
     rr: AtomicUsize,
+    victims: VictimTable,
 }
 
 impl Local {
@@ -329,6 +445,15 @@ impl Local {
                 .collect(),
             injector: MutexQueue::default(),
             rr: AtomicUsize::new(0),
+            victims: VictimTable::new(workers),
+        }
+    }
+
+    fn requeue_extras(&self, w: usize, extra: Vec<Task>) {
+        for t in extra {
+            if let Err(t) = self.per[w].deque.push(t) {
+                self.per[w].inbox.push_back(t);
+            }
         }
     }
 }
@@ -357,21 +482,22 @@ impl Queues for Local {
             .or_else(|| self.injector.pop_front())
     }
 
-    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
-        let n = self.per.len();
-        for k in 1..n {
-            let v = (w + k + spin) % n;
-            if v == w {
-                continue;
-            }
-            if let Steal::Success(t) = self.per[v].deque.steal() {
-                return Some(t);
+    fn steal(&self, w: usize, spin: usize, limit: usize) -> Option<(Task, usize)> {
+        for v in self.victims.order(w, spin) {
+            let mut extra = Vec::new();
+            if let Steal::Success(t) = self.per[v].deque.steal_batch(limit, &mut extra) {
+                let claimed = 1 + extra.len();
+                self.requeue_extras(w, extra);
+                self.victims.note_hit(w, v);
+                return Some((t, claimed));
             }
             if let Some(t) = self.per[v].inbox.pop_front() {
-                return Some(t);
+                self.victims.note_hit(w, v);
+                return Some((t, 1));
             }
         }
-        self.injector.pop_front()
+        self.victims.note_miss(w);
+        self.injector.pop_front().map(|t| (t, 1))
     }
 
     fn approx_len(&self) -> usize {
@@ -420,7 +546,7 @@ impl Queues for Global {
         self.high.pop_front().or_else(|| self.shared.pop_front())
     }
 
-    fn steal(&self, _w: usize, _spin: usize) -> Option<Task> {
+    fn steal(&self, _w: usize, _spin: usize, _limit: usize) -> Option<(Task, usize)> {
         None // pop already sees everything
     }
 
@@ -445,6 +571,7 @@ struct AbpWorker {
 pub struct Abp {
     per: Vec<AbpWorker>,
     rr: AtomicUsize,
+    victims: VictimTable,
 }
 
 impl Abp {
@@ -457,6 +584,15 @@ impl Abp {
                 })
                 .collect(),
             rr: AtomicUsize::new(0),
+            victims: VictimTable::new(workers),
+        }
+    }
+
+    fn requeue_extras(&self, w: usize, extra: Vec<Task>) {
+        for t in extra {
+            if let Err(t) = self.per[w].deque.push(t) {
+                self.per[w].inbox.push_back(t);
+            }
         }
     }
 }
@@ -484,21 +620,27 @@ impl Queues for Abp {
             .or_else(|| self.per[w].inbox.pop_front())
     }
 
-    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
-        let n = self.per.len();
-        for k in 1..n {
-            let v = (w + k + spin) % n;
+    fn steal(&self, w: usize, spin: usize, limit: usize) -> Option<(Task, usize)> {
+        for v in self.victims.order(w, spin) {
+            let mut extra = Vec::new();
             loop {
-                match self.per[v].deque.steal() {
-                    Steal::Success(t) => return Some(t),
+                match self.per[v].deque.steal_batch(limit, &mut extra) {
+                    Steal::Success(t) => {
+                        let claimed = 1 + extra.len();
+                        self.requeue_extras(w, extra);
+                        self.victims.note_hit(w, v);
+                        return Some((t, claimed));
+                    }
                     Steal::Retry => continue,
                     Steal::Empty => break,
                 }
             }
             if let Some(t) = self.per[v].inbox.pop_front() {
-                return Some(t);
+                self.victims.note_hit(w, v);
+                return Some((t, 1));
             }
         }
+        self.victims.note_miss(w);
         None
     }
 
@@ -577,13 +719,25 @@ impl Queues for Hierarchical {
         None
     }
 
-    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
-        // Sibling-leaf scan (tree-local stealing).
+    fn steal(&self, w: usize, spin: usize, limit: usize) -> Option<(Task, usize)> {
+        // Sibling-leaf scan (tree-local stealing), on the shared rotation
+        // (previously this policy's hand-rolled loop never skipped the
+        // thief's own leaf, wasting one probe per sweep).  Batch extras
+        // migrate to our own leaf — the same move `pop` does root→leaf.
         let n = self.levels[0].len();
-        for k in 1..n {
-            let v = (w + k + spin) % n;
+        for v in rotation(w, n, spin) {
             if let Some(t) = self.levels[0][v].pop_front() {
-                return Some(t);
+                let mut claimed = 1;
+                for _ in 1..limit.min(self.batch) {
+                    match self.levels[0][v].pop_front() {
+                        Some(extra) => {
+                            self.levels[0][w].push_back(extra);
+                            claimed += 1;
+                        }
+                        None => break,
+                    }
+                }
+                return Some((t, claimed));
             }
         }
         None
@@ -653,16 +807,17 @@ impl Queues for PeriodicPriority {
         self.per[w].pop_front().or_else(|| self.low.pop_front())
     }
 
-    fn steal(&self, w: usize, spin: usize) -> Option<Task> {
-        // Periodic rebalancing: idle workers sweep sibling queues.
+    fn steal(&self, w: usize, spin: usize, _limit: usize) -> Option<(Task, usize)> {
+        // Periodic rebalancing: idle workers sweep sibling queues on the
+        // shared rotation (previously the hand-rolled loop could probe the
+        // thief's own queue — redundant with `pop` — and skip a sibling).
         let n = self.per.len();
-        for k in 1..n {
-            let v = (w + k + spin) % n;
+        for v in rotation(w, n, spin) {
             if let Some(t) = self.per[v].pop_front() {
-                return Some(t);
+                return Some((t, 1));
             }
         }
-        self.low.pop_front()
+        self.low.pop_front().map(|t| (t, 1))
     }
 
     fn approx_len(&self) -> usize {
@@ -715,7 +870,7 @@ mod tests {
                     got += 1;
                     any = true;
                 }
-                while let Some(t) = policy.steal(w, 0) {
+                while let Some((t, _claimed)) = policy.steal(w, 0, 8) {
                     t.run();
                     got += 1;
                     any = true;
@@ -744,7 +899,7 @@ mod tests {
         let q = StaticPriority::new(4);
         let c = Arc::new(AU::new(0));
         q.push(mk(&c, Priority::Normal), Hint::Worker(2), None);
-        assert!(q.steal(0, 0).is_none());
+        assert!(q.steal(0, 0, 8).is_none());
         assert!(q.pop(0).is_none());
         assert!(q.pop(2).is_some());
     }
@@ -782,6 +937,94 @@ mod tests {
             q.levels[0][0].len() > 0,
             "batch was not migrated to the leaf"
         );
+    }
+
+    #[test]
+    fn rotation_covers_every_non_self_victim_for_any_spin() {
+        for n in [1usize, 2, 3, 4, 7, 16] {
+            for w in 0..n {
+                for spin in [0usize, 1, 2, 5, n, 3 * n + 1] {
+                    let seen: Vec<usize> = rotation(w, n, spin).collect();
+                    assert_eq!(seen.len(), n - 1, "n={n} w={w} spin={spin}");
+                    let mut sorted = seen.clone();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    assert_eq!(sorted.len(), n - 1, "dup victim: n={n} w={w} spin={spin} {seen:?}");
+                    assert!(!seen.contains(&w), "self-probe: n={n} w={w} spin={spin} {seen:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn victim_table_orders_last_hit_first_and_covers_all() {
+        let vt = VictimTable::new(8);
+        // No history: order still covers all 7 non-self victims once.
+        let base: Vec<usize> = vt.order(1, 0).collect();
+        assert_eq!(base.len(), 7);
+        assert!(!base.contains(&1));
+        // After a hit on a far victim, it jumps to the front.
+        vt.note_hit(1, 6);
+        let after: Vec<usize> = vt.order(1, 0).collect();
+        assert_eq!(after[0], 6);
+        assert_eq!(after.len(), 7);
+        let mut sorted = after.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 2, 3, 4, 5, 6, 7]);
+        // Locality group (block of 4 containing worker 1) comes right after.
+        assert_eq!(&after[1..4], &[0, 2, 3]);
+        // Enough consecutive misses forget the remembered victim.
+        for _ in 0..VictimTable::MAX_FAILS {
+            vt.note_miss(1);
+        }
+        let forgot: Vec<usize> = vt.order(1, 0).collect();
+        assert_eq!(&forgot[..3], &[0, 2, 3], "group first once last is forgotten");
+    }
+
+    #[test]
+    fn steal_batch_requeues_extras_on_thief_queues() {
+        // Worker 0 self-pushes 8 deque tasks; thief 1 steals with a wide
+        // limit: it gets one task back and the extras appear in *visible*
+        // queues on worker 1 (deque/inbox), where pop can serve them.
+        let q = PriorityLocal::new(4);
+        let c = Arc::new(AU::new(0));
+        for _ in 0..8 {
+            q.push(mk(&c, Priority::Normal), Hint::Worker(0), Some(0));
+        }
+        let (t, claimed) = q.steal(1, 0, 32).expect("steal hits worker 0");
+        t.run();
+        assert!(claimed > 1, "wide limit should batch, got {claimed}");
+        let mut local = 0;
+        while let Some(t) = q.pop(1) {
+            t.run();
+            local += 1;
+        }
+        assert_eq!(local, claimed - 1, "extras must be poppable on the thief");
+        // Victim keeps the rest; nothing lost.
+        let mut rest = 0;
+        while let Some(t) = q.pop(0) {
+            t.run();
+            rest += 1;
+        }
+        assert_eq!(claimed + rest, 8);
+        assert_eq!(c.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn steal_limit_one_is_single_steal_everywhere() {
+        // HPXMP_STEAL_ONE=1 maps to limit 1: every policy that steals must
+        // then claim exactly one task per visit.
+        for kind in PolicyKind::ALL {
+            let q = kind.build(4);
+            let c = Arc::new(AU::new(0));
+            for _ in 0..16 {
+                q.push(mk(&c, Priority::Normal), Hint::Worker(0), Some(0));
+            }
+            while let Some((t, claimed)) = q.steal(1, 0, 1) {
+                t.run();
+                assert_eq!(claimed, 1, "policy {} batched at limit 1", kind.name());
+            }
+        }
     }
 
     #[test]

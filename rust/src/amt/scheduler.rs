@@ -32,6 +32,64 @@ use super::worker::Tick;
 /// without costing wake latency.
 const WORKER_PARK_TIMEOUT: Duration = Duration::from_micros(500);
 
+/// Scheduler fast-path knobs (ISSUE 8), captured once at construction —
+/// the same env-kill ablation idiom as `HPXMP_HOT_TEAM`/`HPXMP_GLOBAL_IDLE`:
+/// `HPXMP_STEAL_ONE=1` reverts to classic one-task steals,
+/// `HPXMP_INLINE_CONT=0` disables continuation inlining.  Benches and tests
+/// override in-process via [`Scheduler::with_tuning`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tuning {
+    /// Max tasks one steal visit may claim (steal-half batching;
+    /// 1 = classic single steal).
+    pub steal_batch: usize,
+    /// Run ready continuations inline on the fulfilling worker (bounded
+    /// by [`MAX_INLINE_DEPTH`]) instead of requeueing through `spawn`.
+    pub inline_cont: bool,
+}
+
+/// Inline-continuation depth bound: past this many nested `set_value` →
+/// run-continuation frames on one worker stack, continuations fall back to
+/// `Scheduler::spawn` (restarting at depth 0 on a fresh task).  Bounds both
+/// stack growth (a 10k-link `then` chain must not overflow) and the time
+/// one worker monopolizes a chain before other workers can steal into it.
+pub const MAX_INLINE_DEPTH: usize = 16;
+
+impl Tuning {
+    /// Default steal-batch bound.  `steal_batch` caps what the half-claim
+    /// may take in one visit, so a single thief cannot drain a very deep
+    /// victim wholesale (fairness toward other thieves).
+    pub const STEAL_BATCH_MAX: usize = 32;
+
+    pub fn from_env() -> Self {
+        Self {
+            steal_batch: if env_flag("HPXMP_STEAL_ONE", false) {
+                1
+            } else {
+                Self::STEAL_BATCH_MAX
+            },
+            inline_cont: env_flag("HPXMP_INLINE_CONT", true),
+        }
+    }
+}
+
+impl Default for Tuning {
+    fn default() -> Self {
+        Self {
+            steal_batch: Self::STEAL_BATCH_MAX,
+            inline_cont: true,
+        }
+    }
+}
+
+/// `"0" | "false" | "off" | "no"` (or unset ⇒ `default`) — the shared
+/// boolean-env convention (`hot_team_from_env` et al.).
+fn env_flag(name: &str, default: bool) -> bool {
+    match std::env::var(name) {
+        Ok(v) => !matches!(v.trim(), "0" | "false" | "off" | "no"),
+        Err(_) => default,
+    }
+}
+
 /// The idle substrate of one scheduler instance (DESIGN.md §9).
 pub(super) enum IdleBackend {
     /// Per-worker parkers + lock-free idle set: targeted wakes.
@@ -59,6 +117,7 @@ pub struct Shared {
     /// clients on one scheduler) across distinct worker queues.
     hint_cursor: AtomicUsize,
     policy: PolicyKind,
+    pub(super) tuning: Tuning,
 }
 
 impl Shared {
@@ -200,13 +259,35 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(workers: usize, policy: PolicyKind) -> Arc<Self> {
-        Self::with_idle_mode(workers, policy, IdleMode::from_env())
+        Self::with_config(workers, policy, IdleMode::from_env(), Tuning::from_env())
     }
 
     /// Build with an explicit idle substrate (tests/benches; [`Self::new`]
     /// reads `HPXMP_GLOBAL_IDLE`).
     pub fn with_idle_mode(workers: usize, policy: PolicyKind, mode: IdleMode) -> Arc<Self> {
+        Self::with_config(workers, policy, mode, Tuning::from_env())
+    }
+
+    /// Build with explicit steal/inline knobs — the in-process ablation
+    /// hook `benches/ablation_taskbench.rs` pairs configs through
+    /// (env kills only bind at process start; a bench comparing both
+    /// behaviors needs per-instance control).
+    pub fn with_tuning(workers: usize, policy: PolicyKind, tuning: Tuning) -> Arc<Self> {
+        Self::with_config(workers, policy, IdleMode::from_env(), tuning)
+    }
+
+    /// The one real constructor.
+    pub fn with_config(
+        workers: usize,
+        policy: PolicyKind,
+        mode: IdleMode,
+        tuning: Tuning,
+    ) -> Arc<Self> {
         let workers = workers.max(1);
+        let tuning = Tuning {
+            steal_batch: tuning.steal_batch.max(1),
+            ..tuning
+        };
         let idle = match mode {
             IdleMode::Targeted => IdleBackend::PerWorker {
                 parkers: (0..workers).map(|_| Arc::new(Parker::new())).collect(),
@@ -224,6 +305,7 @@ impl Scheduler {
             panics: AtomicU64::new(0),
             hint_cursor: AtomicUsize::new(0),
             policy,
+            tuning,
         });
         let handles = (0..workers)
             .map(|i| {
@@ -242,6 +324,44 @@ impl Scheduler {
 
     pub fn policy(&self) -> PolicyKind {
         self.shared.policy
+    }
+
+    /// The steal/inline knobs this instance runs with.
+    pub fn tuning(&self) -> Tuning {
+        self.shared.tuning
+    }
+
+    /// True when the calling thread is a worker of *this* scheduler.
+    pub fn on_worker(&self) -> bool {
+        worker::current().is_some_and(|(s, _)| Arc::ptr_eq(&s, &self.shared))
+    }
+
+    /// Try to enter an inline-continuation frame on the calling worker
+    /// (ISSUE 8: continuation inlining).  Succeeds only when inlining is
+    /// enabled, the caller is a worker of this scheduler, and the
+    /// per-worker depth is below [`MAX_INLINE_DEPTH`]; the caller must
+    /// pair a `true` return with [`Scheduler::end_inline`].
+    pub(crate) fn try_begin_inline(&self) -> bool {
+        if !self.shared.tuning.inline_cont || !self.on_worker() {
+            return false;
+        }
+        if !worker::inline_enter(MAX_INLINE_DEPTH) {
+            return false;
+        }
+        Metrics::inc(&self.shared.metrics.continuations_inlined);
+        true
+    }
+
+    /// Leave an inline-continuation frame entered via
+    /// [`Scheduler::try_begin_inline`].
+    pub(crate) fn end_inline(&self) {
+        worker::inline_exit();
+    }
+
+    /// Account a panic that escaped an *inlined* continuation body — the
+    /// containment parity with `worker::execute`'s catch_unwind path.
+    pub(crate) fn note_inline_panic(&self) {
+        self.shared.panics.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Which idle substrate this instance runs on.

@@ -35,6 +35,30 @@ thread_local! {
     /// ping-ponging another member's implicit task (measured: ~900 ms per
     /// empty parallel region on the 1-core testbed; EXPERIMENTS.md §Perf).
     static REQUEUED: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+    /// Inline-continuation nesting depth on this worker (ISSUE 8): each
+    /// `set_value` that runs a ready continuation directly pushes a frame;
+    /// past [`super::scheduler::MAX_INLINE_DEPTH`] the continuation falls
+    /// back to `spawn` (fresh task, depth 0) so chains cannot overflow the
+    /// worker stack or starve the queues.
+    static INLINE_DEPTH: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Claim an inline-continuation frame if the depth bound allows.
+pub(super) fn inline_enter(max: usize) -> bool {
+    INLINE_DEPTH.with(|d| {
+        let v = d.get();
+        if v >= max {
+            false
+        } else {
+            d.set(v + 1);
+            true
+        }
+    })
+}
+
+/// Release a frame claimed by [`inline_enter`].
+pub(super) fn inline_exit() {
+    INLINE_DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
 }
 
 /// Mark that the currently-executing task requeued itself unexecuted.
@@ -97,8 +121,10 @@ pub(super) fn worker_loop(shared: Arc<Shared>, me: usize) {
             execute(&shared, task);
             continue;
         }
-        if let Some(task) = shared.queues.steal(me, spin) {
-            Metrics::inc(&shared.metrics.stolen);
+        Metrics::inc(&shared.metrics.steals_attempted);
+        if let Some((task, claimed)) = shared.queues.steal(me, spin, shared.tuning.steal_batch) {
+            Metrics::inc(&shared.metrics.steals_success);
+            Metrics::add(&shared.metrics.steal_batch_tasks, claimed as u64);
             spin = 0;
             execute(&shared, task);
             continue;
@@ -136,11 +162,18 @@ pub(super) fn worker_loop(shared: Arc<Shared>, me: usize) {
 /// point in the OpenMP spec.
 pub fn help_one() -> bool {
     if let Some((shared, me)) = current() {
-        if let Some(task) = shared
-            .queues
-            .pop(me)
-            .or_else(|| shared.queues.steal(me, 0))
-        {
+        let got = shared.queues.pop(me).or_else(|| {
+            Metrics::inc(&shared.metrics.steals_attempted);
+            shared
+                .queues
+                .steal(me, 0, shared.tuning.steal_batch)
+                .map(|(t, claimed)| {
+                    Metrics::inc(&shared.metrics.steals_success);
+                    Metrics::add(&shared.metrics.steal_batch_tasks, claimed as u64);
+                    t
+                })
+        });
+        if let Some(task) = got {
             Metrics::inc(&shared.metrics.helped);
             execute(&shared, task);
             return true;

@@ -8,6 +8,9 @@
 //! * [`conformance`] — the Tables 1–3 feature inventory, verified live;
 //! * [`serve`] — the multi-tenant serving scenario (ISSUE 3): M client
 //!   threads × mixed kernels, shared runtime vs pool-per-client;
+//! * [`taskbench`] — the Task Bench dependency-pattern grid (ISSUE 8):
+//!   METG-style per-task overhead under stencil/nearest/fft/spread/random
+//!   future graphs, the proof layer for the scheduler fast paths;
 //! * [`report`] — CSV + ASCII emission under `results/`.
 
 pub mod blazemark;
@@ -15,6 +18,7 @@ pub mod conformance;
 pub mod report;
 pub mod serve;
 pub mod sweep;
+pub mod taskbench;
 
 pub use blazemark::{measure, Op};
 pub use sweep::{heatmap_sweep, scaling_sweep, HeatmapResult, ScalingResult};

@@ -1,0 +1,346 @@
+//! Task Bench pattern grid over the futurized engine (ISSUE 8 /
+//! ROADMAP open item 5).
+//!
+//! *Quantifying Overheads in Charm++ and HPX using Task Bench* (PAPERS.md)
+//! measures runtime overhead with one parameterized workload: a `steps ×
+//! width` grid of tasks where task `(step, i)` depends on a
+//! pattern-defined subset of row `step - 1`, each task doing a fixed
+//! amount of busy work (the *grain*).  Sweeping the grain downward until
+//! parallel efficiency collapses locates the **minimum effective task
+//! granularity** (METG) — the smallest task the runtime can schedule
+//! without its own overhead dominating.
+//!
+//! Here each grid row is a vector of [`Future<()>`]s and each task is a
+//! `then` continuation hung off the [`when_all`] join of its
+//! dependencies (single-dependency tasks skip the join and chain
+//! directly) — so the benchmark exercises exactly the scheduler paths
+//! ISSUE 8 optimizes: continuation dispatch (inlining), queue pressure
+//! (steal-half batching), and victim choice (locality ordering).
+//! Patterns:
+//!
+//! * `stencil` — `{i-1, i, i+1}` clamped at the edges (1-D halo exchange);
+//! * `nearest` — `{i-2, i, i+2}` periodic;
+//! * `fft`     — butterfly partner `i ^ (1 << (step mod log2 width))`;
+//! * `spread`  — three parents spread `width/3` apart (all-to-all-ish);
+//! * `random`  — three parents drawn from a PRNG seeded by `(step, i)`
+//!   (deterministic across runs and processes).
+//!
+//! Wall time includes graph construction (the same convention as the
+//! `chain_<len>` bench): METG charges the runtime for task *creation*,
+//! dependence resolution, and scheduling, not just execution.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::amt::future::{when_all, Future, Promise};
+use crate::amt::{PolicyKind, Scheduler, Tuning};
+use crate::util::rng::Xoshiro256;
+use crate::util::timing::spin_wait;
+
+/// The five Task Bench dependency patterns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    Stencil,
+    Nearest,
+    Fft,
+    Spread,
+    Random,
+}
+
+impl Pattern {
+    pub const ALL: [Pattern; 5] = [
+        Pattern::Stencil,
+        Pattern::Nearest,
+        Pattern::Fft,
+        Pattern::Spread,
+        Pattern::Random,
+    ];
+
+    pub const CHOICES: &[(&str, Pattern)] = &[
+        ("stencil", Pattern::Stencil),
+        ("nearest", Pattern::Nearest),
+        ("fft", Pattern::Fft),
+        ("spread", Pattern::Spread),
+        ("random", Pattern::Random),
+    ];
+
+    pub fn parse_or_list(s: &str) -> Result<Self, String> {
+        crate::util::cli::parse_choice("pattern", s, Self::CHOICES)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::Stencil => "stencil",
+            Pattern::Nearest => "nearest",
+            Pattern::Fft => "fft",
+            Pattern::Spread => "spread",
+            Pattern::Random => "random",
+        }
+    }
+
+    /// Column indices in row `step - 1` that task `(step, i)` depends on,
+    /// written into `out` (sorted, deduplicated; never empty for
+    /// `width >= 1`).  Deterministic in all arguments — the `random`
+    /// pattern derives its PRNG seed from `(step, i)`.
+    pub fn deps(&self, step: usize, i: usize, width: usize, out: &mut Vec<usize>) {
+        out.clear();
+        match self {
+            Pattern::Stencil => {
+                if i > 0 {
+                    out.push(i - 1);
+                }
+                out.push(i);
+                if i + 1 < width {
+                    out.push(i + 1);
+                }
+            }
+            Pattern::Nearest => {
+                out.push((i + width.saturating_sub(2 % width)) % width);
+                out.push(i);
+                out.push((i + 2) % width);
+            }
+            Pattern::Fft => {
+                out.push(i);
+                let log2w = width.next_power_of_two().trailing_zeros().max(1);
+                let partner = (i ^ (1usize << (step as u32 % log2w))) % width;
+                out.push(partner);
+            }
+            Pattern::Spread => {
+                let stride = (width / 3).max(1);
+                for j in 0..3 {
+                    out.push((i + j * stride) % width);
+                }
+            }
+            Pattern::Random => {
+                let seed = 0x5eed_7a5c_b000_0000u64
+                    ^ ((step as u64) << 24)
+                    ^ (i as u64);
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                for _ in 0..3 {
+                    out.push(rng.next_below(width));
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+    }
+}
+
+/// One Task Bench cell: a `steps × width` grid under one pattern, each
+/// task spinning for `grain_us` of busy work.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphCfg {
+    pub pattern: Pattern,
+    pub width: usize,
+    pub steps: usize,
+    pub grain_us: u64,
+}
+
+impl GraphCfg {
+    pub fn tasks(&self) -> usize {
+        self.width * self.steps
+    }
+}
+
+/// Build and execute one dependency graph; returns end-to-end wall time
+/// (construction + execution, the METG convention).
+pub fn run_graph(sched: &Arc<Scheduler>, cfg: &GraphCfg) -> Duration {
+    let grain = Duration::from_micros(cfg.grain_us);
+    let work = move || {
+        if !grain.is_zero() {
+            spin_wait(grain);
+        }
+    };
+    let t0 = Instant::now();
+    let head = Promise::new();
+    let mut row: Vec<Future<()>> = {
+        let h = head.get_future();
+        (0..cfg.width)
+            .map(|_| h.then_named(sched, "taskbench", move |_| work()))
+            .collect()
+    };
+    let mut deps = Vec::new();
+    let mut joined = Vec::new();
+    for step in 1..cfg.steps {
+        let mut next: Vec<Future<()>> = Vec::with_capacity(cfg.width);
+        for i in 0..cfg.width {
+            cfg.pattern.deps(step, i, cfg.width, &mut deps);
+            let f = if deps.len() == 1 {
+                // Single dependency: chain directly, no join object.
+                row[deps[0]].then_named(sched, "taskbench", move |_| work())
+            } else {
+                joined.clear();
+                joined.extend(deps.iter().map(|&d| row[d].clone()));
+                when_all(&joined).then_named(sched, "taskbench", move |_| work())
+            };
+            next.push(f);
+        }
+        row = next;
+    }
+    head.set_value(());
+    when_all(&row).wait();
+    t0.elapsed()
+}
+
+/// One measured sweep cell.
+#[derive(Clone, Debug)]
+pub struct TbRow {
+    pub pattern: &'static str,
+    pub policy: &'static str,
+    pub threads: usize,
+    pub grain_us: u64,
+    /// Tuning label: `"steal-half"` (batching + inlining on) or
+    /// `"steal-one"` (the classic single-steal, no-inline ablation arm).
+    pub mode: &'static str,
+    /// Wall microseconds per task — the METG-style overhead row (at
+    /// grain 0 this is pure runtime overhead per task).
+    pub us_per_task: f64,
+    /// Parallel efficiency: useful work (`tasks × grain`) over burned
+    /// core-time (`wall × min(threads, width)`).  0 at grain 0 by
+    /// construction; METG is the smallest grain keeping this above 0.5.
+    pub eff: f64,
+}
+
+/// Full sweep grid for [`sweep`].
+#[derive(Clone, Debug)]
+pub struct SweepCfg {
+    pub patterns: Vec<Pattern>,
+    pub policies: Vec<PolicyKind>,
+    pub threads: Vec<usize>,
+    pub grains_us: Vec<u64>,
+    pub width: usize,
+    pub steps: usize,
+    /// Timed repetitions per cell (one extra warm-up run is not counted);
+    /// the best rep is reported, Blazemark-style.
+    pub reps: usize,
+    /// Tuning arms, each `(mode label, knobs)` — one scheduler per
+    /// (threads, policy, arm), all cells of the pattern × grain grid
+    /// reuse it.
+    pub tunings: Vec<(&'static str, Tuning)>,
+}
+
+/// Run the whole pattern × policy × tuning × grain × threads grid.
+pub fn sweep(cfg: &SweepCfg) -> Vec<TbRow> {
+    let mut rows = Vec::new();
+    for &t in &cfg.threads {
+        for &policy in &cfg.policies {
+            for &(mode, tuning) in &cfg.tunings {
+                let sched = Scheduler::with_tuning(t, policy, tuning);
+                for &pattern in &cfg.patterns {
+                    for &grain_us in &cfg.grains_us {
+                        let g = GraphCfg {
+                            pattern,
+                            width: cfg.width,
+                            steps: cfg.steps,
+                            grain_us,
+                        };
+                        run_graph(&sched, &g); // warm-up
+                        let mut best = f64::INFINITY;
+                        for _ in 0..cfg.reps.max(1) {
+                            best = best.min(run_graph(&sched, &g).as_secs_f64());
+                        }
+                        let tasks = g.tasks() as f64;
+                        let cores = t.min(cfg.width).max(1) as f64;
+                        rows.push(TbRow {
+                            pattern: pattern.name(),
+                            policy: policy.name(),
+                            threads: t,
+                            grain_us,
+                            mode,
+                            us_per_task: best / tasks * 1e6,
+                            eff: if grain_us == 0 {
+                                0.0
+                            } else {
+                                (tasks * grain_us as f64) / (best * 1e6 * cores)
+                            },
+                        });
+                    }
+                }
+                sched.shutdown();
+            }
+        }
+    }
+    rows
+}
+
+/// Render sweep rows as the aligned table both the CLI subcommand and the
+/// ablation bench print.
+pub fn render(rows: &[TbRow]) -> String {
+    let mut out = format!(
+        "{:<8} {:<18} {:>7} {:>8} {:<10} {:>12} {:>6}\n",
+        "pattern", "policy", "threads", "grain_us", "mode", "us/task", "eff"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<8} {:<18} {:>7} {:>8} {:<10} {:>12.3} {:>6.2}\n",
+            r.pattern, r.policy, r.threads, r.grain_us, r.mode, r.us_per_task, r.eff
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deps_are_deterministic_sorted_and_in_range() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for pattern in Pattern::ALL {
+            for width in [1usize, 2, 3, 8, 64] {
+                for step in 1..6 {
+                    for i in 0..width {
+                        pattern.deps(step, i, width, &mut a);
+                        pattern.deps(step, i, width, &mut b);
+                        assert_eq!(a, b, "{} must be deterministic", pattern.name());
+                        assert!(!a.is_empty(), "{} empty deps", pattern.name());
+                        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted+dedup: {a:?}");
+                        assert!(a.iter().all(|&d| d < width), "range: {a:?} width {width}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stencil_clamps_at_edges() {
+        let mut d = Vec::new();
+        Pattern::Stencil.deps(1, 0, 8, &mut d);
+        assert_eq!(d, vec![0, 1]);
+        Pattern::Stencil.deps(1, 7, 8, &mut d);
+        assert_eq!(d, vec![6, 7]);
+        Pattern::Stencil.deps(1, 3, 8, &mut d);
+        assert_eq!(d, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn fft_partner_is_a_butterfly() {
+        let mut d = Vec::new();
+        Pattern::Fft.deps(1, 0, 8, &mut d); // step 1 -> bit 1 -> partner 2
+        assert_eq!(d, vec![0, 2]);
+        Pattern::Fft.deps(3, 0, 8, &mut d); // step 3 -> bit 0 -> partner 1
+        assert_eq!(d, vec![0, 1]);
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for p in Pattern::ALL {
+            assert_eq!(Pattern::parse_or_list(p.name()), Ok(p));
+        }
+        assert!(Pattern::parse_or_list("nope").is_err());
+    }
+
+    #[test]
+    fn tiny_graph_runs_every_pattern() {
+        let sched = Scheduler::with_tuning(2, PolicyKind::PriorityLocal, Tuning::default());
+        for pattern in Pattern::ALL {
+            let d = run_graph(
+                &sched,
+                &GraphCfg { pattern, width: 4, steps: 3, grain_us: 0 },
+            );
+            assert!(d > Duration::ZERO);
+        }
+        sched.shutdown();
+    }
+}

@@ -11,6 +11,7 @@
 //! hpxmp serve    [--clients M --mix m]    multi-tenant serving: shared vs per-client
 //! hpxmp offload  [--size N]               three-layer PJRT smoke run
 //! hpxmp policies [--tasks N]              AMT policy ablation
+//! hpxmp taskbench [--pattern p --grain-us g,h]  Task Bench dependency-pattern grid
 //! ```
 //!
 //! Common options: `--threads 1,2,4,...`, `--workers N`, `--policy <name>`,
@@ -31,7 +32,8 @@ use hpxmp::util::timing::BenchCfg;
 
 const VALUE_OPTS: &[&str] = &[
     "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks", "clients", "requests",
-    "mix", "exec", "tile", "deadline-us", "retries", "kernel", "threshold",
+    "mix", "exec", "tile", "deadline-us", "retries", "kernel", "threshold", "pattern", "width",
+    "steps", "grain-us",
 ];
 
 fn main() {
@@ -55,6 +57,7 @@ fn main() {
             "serve" => cmd_serve(&args, mode),
             "offload" => cmd_offload(&args),
             "policies" => cmd_policies(&args),
+            "taskbench" => cmd_taskbench(&args),
             _ => {
                 print_help();
                 Ok(())
@@ -90,7 +93,7 @@ fn kernel_variant(args: &Args) -> anyhow::Result<exec::KernelVariant> {
 fn print_help() {
     println!(
         "hpxmp — OpenMP-over-AMT runtime (hpxMP reproduction)\n\n\
-         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|serve|offload|policies> [options]\n\n\
+         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|serve|offload|policies|taskbench> [options]\n\n\
          options:\n\
            --op <dvecdvecadd|daxpy|dmatdmatadd|dmatdmatmult|dmatdvecmult|all>\n\
            --exec <seq|par|task>     execution policy for every kernel (env: HPXMP_EXEC;\n\
@@ -109,6 +112,9 @@ fn print_help() {
            --deadline-us D           per-request deadline in microseconds (serve)\n\
            --shed                    shed requests when the runtime is saturated (serve)\n\
            --retries N               backoff attempts before a shed (serve; default 2)\n\
+           --pattern <stencil|nearest|fft|spread|random|all>  dependency pattern (taskbench)\n\
+           --width N --steps N       task-grid shape (taskbench; default 64 x 32)\n\
+           --grain-us g,h            per-task busy-work grains in us (taskbench; default 0,20)\n\
            --quick                   fast measurement profile\n\
            --out DIR                 report directory (default results/)\n"
     );
@@ -177,6 +183,16 @@ fn cmd_info(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
         kernel_variant(args)?.name()
     );
     println!("  simd             : {}", hpxmp::blaze::kernel::simd_label());
+    {
+        let t = hpxmp::amt::Tuning::from_env();
+        println!(
+            "  scheduler tuning : steal_batch={} (HPXMP_STEAL_ONE), inline_cont={} \
+             (HPXMP_INLINE_CONT, depth bound {})",
+            t.steal_batch,
+            t.inline_cont,
+            hpxmp::amt::MAX_INLINE_DEPTH
+        );
+    }
     {
         let a = hpxmp::amt::arena::stats();
         println!(
@@ -436,13 +452,57 @@ fn cmd_policies(args: &Args) -> anyhow::Result<()> {
         let dt = t0.elapsed();
         let m = s.metrics();
         println!(
-            "  {:<18} {:>8.1} ktasks/s   (stolen={} parked={})",
+            "  {:<18} {:>8.1} ktasks/s   (steals {}/{} moving {} tasks, {} inlined, parked={})",
             policy.name(),
             tasks as f64 / dt.as_secs_f64() / 1e3,
-            m.stolen,
+            m.steals_success,
+            m.steals_attempted,
+            m.steal_batch_tasks,
+            m.continuations_inlined,
             m.parked
         );
         s.shutdown();
     }
+    Ok(())
+}
+
+/// Task Bench dependency-pattern grid (ISSUE 8): METG-style per-task
+/// overhead of future graphs under the scheduler fast paths.  The tuning
+/// arm comes from the environment (`HPXMP_STEAL_ONE` / `HPXMP_INLINE_CONT`)
+/// so the ablation is a one-variable rerun; the `ablation_taskbench`
+/// bench runs both arms in-process and emits JSON.
+fn cmd_taskbench(args: &Args) -> anyhow::Result<()> {
+    use hpxmp::amt::Tuning;
+    use hpxmp::coordinator::taskbench::{render, sweep, Pattern, SweepCfg};
+    let patterns = match args.get_or("pattern", "all") {
+        "all" => Pattern::ALL.to_vec(),
+        s => vec![Pattern::parse_or_list(s).map_err(|e| anyhow::anyhow!(e))?],
+    };
+    let policies = match args.get("policy") {
+        Some(p) => vec![PolicyKind::parse_or_list(p).map_err(|e| anyhow::anyhow!(e))?],
+        None => vec![PolicyKind::PriorityLocal, PolicyKind::Abp, PolicyKind::Local],
+    };
+    let threads = args.get_usize_list("threads", &[icv::num_procs().max(2)]);
+    let tuning = Tuning::from_env();
+    let mode = if tuning.steal_batch > 1 { "steal-half" } else { "steal-one" };
+    let cfg = SweepCfg {
+        patterns,
+        policies,
+        threads,
+        grains_us: args
+            .get_usize_list("grain-us", &[0, 20])
+            .into_iter()
+            .map(|g| g as u64)
+            .collect(),
+        width: args.get_usize("width", 64),
+        steps: args.get_usize("steps", 32),
+        reps: if args.flag("quick") { 2 } else { 5 },
+        tunings: vec![(mode, tuning)],
+    };
+    println!(
+        "taskbench: {} x {} grid, tuning {mode} (steal_batch={}, inline_cont={})",
+        cfg.width, cfg.steps, tuning.steal_batch, tuning.inline_cont
+    );
+    print!("{}", render(&sweep(&cfg)));
     Ok(())
 }

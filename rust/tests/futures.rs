@@ -6,7 +6,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use hpxmp::amt::future::{when_all, Future, Promise};
-use hpxmp::amt::{PolicyKind, Scheduler};
+use hpxmp::amt::{PolicyKind, Scheduler, Tuning};
 use hpxmp::blaze::{dmatdmatmult, DynMatrix};
 use hpxmp::omp::{current_ctx, fork_call, Dep, DepKind, OmpRuntime};
 use hpxmp::par::exec::{seq, task};
@@ -43,6 +43,47 @@ fn continuation_ordering_under_every_policy() {
             "policy {}",
             policy.name()
         );
+        sched.shutdown();
+    }
+}
+
+#[test]
+fn deep_then_chain_is_safe_with_inlining_on_and_off() {
+    // Continuation inlining (ISSUE 8) runs ready continuations directly on
+    // the fulfilling worker.  A 10k-link chain pins the depth bound: past
+    // MAX_INLINE_DEPTH consecutive inline frames the dispatcher must fall
+    // back to `spawn` (fresh task, depth 0), so the chain completes in
+    // order without overflowing the worker stack — and behaves identically
+    // with the path disabled.
+    const LINKS: usize = 10_000;
+    for inline_cont in [true, false] {
+        let sched = Scheduler::with_tuning(
+            2,
+            PolicyKind::PriorityLocal,
+            Tuning { inline_cont, ..Tuning::default() },
+        );
+        let count = Arc::new(AtomicUsize::new(0));
+        let head = Promise::new();
+        let mut tail: Future<()> = head.get_future();
+        for step in 0..LINKS {
+            let count = count.clone();
+            tail = tail.then(&sched, move |_| {
+                // Monotone stamp: link `step` must be the `step`-th to run.
+                assert_eq!(count.swap(step + 1, Ordering::SeqCst), step);
+            });
+        }
+        head.set_value(());
+        tail.wait();
+        assert_eq!(count.load(Ordering::SeqCst), LINKS, "inline={inline_cont}");
+        let m = sched.metrics();
+        if inline_cont {
+            assert!(
+                m.continuations_inlined > 0,
+                "inlining enabled but never engaged: {m}"
+            );
+        } else {
+            assert_eq!(m.continuations_inlined, 0, "inlining disabled: {m}");
+        }
         sched.shutdown();
     }
 }

@@ -128,6 +128,78 @@ fn prop_scheduler_conserves_tasks() {
     );
 }
 
+/// Steal-half conservation over the raw queue layer (ISSUE 8): N producer
+/// workers each publish a burst of tasks on their own deques, M thief
+/// workers drain exclusively through batched `steal` — every task runs
+/// exactly once, for any stealing policy and batch limit.  Duplication
+/// would overshoot the counter; loss would hang (bounded by the deadline).
+#[test]
+fn prop_steal_half_conserves_tasks() {
+    forall(
+        PropCfg { cases: 16, seed: 0x57EA1 },
+        |r| {
+            let policy = PolicyKind::ALL[r.next_below(7)];
+            let producers = 1 + r.next_below(3);
+            let thieves = 1 + r.next_below(3);
+            let per_producer = 200 + r.next_below(600);
+            let limit = [2, 8, 32][r.next_below(3)];
+            (policy, producers, thieves, per_producer, limit)
+        },
+        |&(policy, producers, thieves, per_producer, limit)| {
+            let workers = producers + thieves;
+            let queues = policy.build(workers);
+            let total = producers * per_producer;
+            let count = Arc::new(AtomicUsize::new(0));
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+            std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let queues = &queues;
+                    let count = count.clone();
+                    scope.spawn(move || {
+                        if w < producers {
+                            for _ in 0..per_producer {
+                                let c = count.clone();
+                                queues.push(
+                                    hpxmp::amt::Task::new(Priority::Normal, "prop", move || {
+                                        c.fetch_add(1, Ordering::SeqCst);
+                                    }),
+                                    Hint::Worker(w),
+                                    Some(w),
+                                );
+                            }
+                        }
+                        // Drain: own queue first (where stolen extras were
+                        // requeued), then a batched steal sweep.
+                        let mut spin = 0usize;
+                        while count.load(Ordering::SeqCst) < total
+                            && std::time::Instant::now() < deadline
+                        {
+                            if let Some(t) = queues.pop(w) {
+                                t.run();
+                            } else if let Some((t, _claimed)) = queues.steal(w, spin, limit) {
+                                t.run();
+                            } else {
+                                spin += 1;
+                                std::hint::spin_loop();
+                            }
+                        }
+                    });
+                }
+            });
+            let got = count.load(Ordering::SeqCst);
+            ensure_eq(
+                got,
+                total,
+                &format!(
+                    "policy {} producers={producers} thieves={thieves} limit={limit}",
+                    policy.name()
+                ),
+            )?;
+            ensure(queues.approx_len() == 0, "queues drained")
+        },
+    );
+}
+
 /// Dynamic/guided worksharing covers the range exactly once for random
 /// team sizes, ranges and chunks.
 #[test]

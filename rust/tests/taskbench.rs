@@ -1,0 +1,95 @@
+//! Integration tests for the Task Bench pattern grid (ISSUE 8): the
+//! dependency graphs complete under every stealing configuration, and the
+//! scheduler's counter algebra stays conserved while the fast paths
+//! (steal-half batching, continuation inlining) are exercised for real.
+
+use hpxmp::amt::{PolicyKind, Scheduler, Tuning};
+use hpxmp::coordinator::taskbench::{run_graph, GraphCfg, Pattern};
+
+const WIDTH: usize = 16;
+const STEPS: usize = 8;
+
+fn grid(pattern: Pattern) -> GraphCfg {
+    GraphCfg { pattern, width: WIDTH, steps: STEPS, grain_us: 0 }
+}
+
+/// Every pattern completes under both tuning arms on the three stealing
+/// policies the ablation sweeps — no hangs, no lost joins.
+#[test]
+fn every_pattern_completes_under_both_tuning_arms() {
+    for policy in [PolicyKind::PriorityLocal, PolicyKind::Abp, PolicyKind::Local] {
+        for tuning in [
+            Tuning { steal_batch: 32, inline_cont: true },
+            Tuning { steal_batch: 1, inline_cont: false },
+        ] {
+            let sched = Scheduler::with_tuning(4, policy, tuning);
+            for pattern in Pattern::ALL {
+                run_graph(&sched, &grid(pattern));
+            }
+            sched.shutdown();
+        }
+    }
+}
+
+/// With inlining off, every grid task round-trips through `spawn` — so one
+/// graph spawns exactly `width * steps` tasks.  This pins the pattern →
+/// future-graph mapping (a dropped or duplicated `then` would change the
+/// count) independently of wall-clock behavior.
+#[test]
+fn graph_spawns_exactly_width_times_steps_tasks_without_inlining() {
+    for pattern in Pattern::ALL {
+        let sched = Scheduler::with_tuning(
+            2,
+            PolicyKind::PriorityLocal,
+            Tuning { inline_cont: false, ..Tuning::default() },
+        );
+        run_graph(&sched, &grid(pattern));
+        sched.wait_quiescent();
+        let m = sched.metrics();
+        assert_eq!(
+            m.spawned,
+            (WIDTH * STEPS) as u64,
+            "pattern {} graph shape drifted: {m}",
+            pattern.name()
+        );
+        sched.shutdown();
+    }
+}
+
+/// The counter conservation identity after a storm of pattern graphs:
+/// every spawned task is accounted for (`spawned == executed + cancelled`),
+/// the steal pipeline is internally consistent (`steals_success <=
+/// steals_attempted`, every success moved at least one task), and inlined
+/// continuations stayed outside the spawn ledger.
+#[test]
+fn metrics_stay_conserved_across_pattern_storm() {
+    let sched = Scheduler::with_tuning(
+        4,
+        PolicyKind::PriorityLocal,
+        Tuning { steal_batch: 32, inline_cont: true },
+    );
+    for _ in 0..4 {
+        for pattern in Pattern::ALL {
+            run_graph(&sched, &grid(pattern));
+        }
+    }
+    sched.wait_quiescent();
+    let m = sched.metrics();
+    assert_eq!(
+        m.spawned,
+        m.executed + m.cancelled,
+        "conservation broken: {m}"
+    );
+    assert!(
+        m.steals_success <= m.steals_attempted,
+        "more hits than sweeps: {m}"
+    );
+    assert!(
+        m.steal_batch_tasks >= m.steals_success,
+        "a successful steal moved zero tasks: {m}"
+    );
+    // 20 graphs × width×steps continuations on 4 workers: with inlining on
+    // at least one fulfilment must have run its continuation in place.
+    assert!(m.continuations_inlined > 0, "inline path never engaged: {m}");
+    sched.shutdown();
+}
