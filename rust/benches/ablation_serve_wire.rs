@@ -1,0 +1,230 @@
+//! Wire-serving ablation (ISSUE 9): does same-kernel request coalescing
+//! buy throughput over dispatch-per-request, and does backpressure keep
+//! goodput up under overload?
+//!
+//! For every (connections × offered rate) cell the bench starts a fresh
+//! in-process [`WireServer`] on an ephemeral loopback port and drives it
+//! with the seeded open-loop generator (`net::run_loadgen`, Poisson
+//! arrivals) under two arms:
+//!
+//! * `batched`   — the default coalescing window (one fused team fork
+//!   and one cached/packed-operand pass per same-shape window);
+//! * `unbatched` — `BatchCfg::coalesce = false`, i.e. what
+//!   `HPXMP_COALESCE=0` gives a whole process: every request is its own
+//!   dispatch.
+//!
+//! After the grid, an **overload probe** reruns the batched arm at 2×
+//! the best measured throughput with a 5 ms deadline so the shed path
+//! (admission headroom + pending cap, DESIGN.md §14) is what's under
+//! test: goodput should degrade, not collapse.
+//!
+//! Emits `results/BENCH_serve_wire.json`:
+//!
+//! ```json
+//! { "bench": "serve_wire",
+//!   "rows": [ {"rate": 1000, "conns": 8, "mode": "batched",
+//!              "reqs_per_sec": 987.0, "goodput_per_sec": 987.0,
+//!              "p50_us": 212.0, "p99_us": 840.0, "shed": 0,
+//!              "deadline_misses": 0, "lost": 0, "batches": 310,
+//!              "max_batch": 9}, ... ],
+//!   "saturation_rps": s,
+//!   "throughput_batched_vs_unbatched": r,
+//!   "overload_goodput_ratio": g }
+//! ```
+//!
+//! The headline `throughput_batched_vs_unbatched` is the best
+//! batched/unbatched completed-requests ratio over rates at the widest
+//! connection count (>1 means coalescing won); `overload_goodput_ratio`
+//! is goodput at 2× saturation over the best pre-overload goodput
+//! (>= 0.5 means shedding kept the server inside 2× of its best).
+//! `BENCH_RATES` / `BENCH_CLIENTS` override the grids; `BENCH_SMOKE=1`
+//! shrinks durations and the connection grid for CI.
+
+use std::time::Duration;
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::net::{BatchCfg, Dist, LoadgenCfg, LoadgenReport, WireAddr, WireOp, WireServer};
+use hpxmp::omp::{icv, OmpRuntime};
+
+mod common;
+
+struct Cell {
+    rate: usize,
+    conns: usize,
+    mode: &'static str,
+    report: LoadgenReport,
+    batches: usize,
+    max_batch: usize,
+}
+
+/// One fresh server + one loadgen run; returns the merged measurement.
+fn run_cell(
+    workers: usize,
+    coalesce: bool,
+    rate: usize,
+    conns: usize,
+    duration: Duration,
+    deadline_us: u32,
+) -> Cell {
+    let rt = OmpRuntime::new(workers, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(workers);
+    let cfg = BatchCfg { coalesce, ..BatchCfg::default() };
+    let server = WireServer::start_tcp(rt, "127.0.0.1:0", cfg).expect("bind wire server");
+    let addr = WireAddr::Tcp(server.local_addr().expect("tcp addr").to_string());
+    let report = hpxmp::net::run_loadgen(&LoadgenCfg {
+        addr,
+        op: WireOp::Daxpy,
+        n: hpxmp::net::default_wire_n(WireOp::Daxpy),
+        rate: rate as f64,
+        conns,
+        dist: Dist::Poisson,
+        duration,
+        deadline_us,
+        seed: 0x5eed_417e,
+    })
+    .expect("loadgen run");
+    server.drain(Duration::from_secs(5));
+    let stats = server.stats();
+    Cell {
+        rate,
+        conns,
+        mode: if coalesce { "batched" } else { "unbatched" },
+        report,
+        batches: stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        max_batch: stats.max_batch.load(std::sync::atomic::Ordering::Relaxed),
+    }
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let workers = icv::num_procs().max(2);
+    let rates = common::rates_grid();
+    let mut conns_grid = common::clients_grid();
+    if smoke && conns_grid.len() > 2 {
+        conns_grid = vec![conns_grid[0], *conns_grid.last().unwrap()];
+    }
+    let duration = if smoke {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    eprintln!(
+        "[serve_wire] rates {rates:?} x conns {conns_grid:?}, {workers} workers, \
+         {}ms per cell",
+        duration.as_millis()
+    );
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for &conns in &conns_grid {
+        for &rate in &rates {
+            for coalesce in [true, false] {
+                let c = run_cell(workers, coalesce, rate, conns, duration, 0);
+                println!(
+                    "rate {:>6} conns {:>3} {:<9} -> {:>9.1} req/s  p50 {:>8.0}us  \
+                     p99 {:>8.0}us  shed {:>5}  batches {:>6} (max {})",
+                    c.rate,
+                    c.conns,
+                    c.mode,
+                    c.report.reqs_per_sec(),
+                    c.report.stats.p50_us(),
+                    c.report.stats.p99_us(),
+                    c.report.stats.shed,
+                    c.batches,
+                    c.max_batch
+                );
+                cells.push(c);
+            }
+        }
+    }
+
+    // Headline 1: best batched/unbatched completed-throughput ratio over
+    // rates at the widest connection count.
+    let wide = *conns_grid.iter().max().unwrap();
+    let mut tp_ratio: Option<f64> = None;
+    for &rate in &rates {
+        let find = |mode: &str| {
+            cells
+                .iter()
+                .find(|c| c.mode == mode && c.rate == rate && c.conns == wide)
+                .map(|c| c.report.reqs_per_sec())
+        };
+        if let (Some(b), Some(u)) = (find("batched"), find("unbatched")) {
+            if u > 0.0 {
+                let r = b / u;
+                tp_ratio = Some(tp_ratio.map_or(r, |t: f64| t.max(r)));
+            }
+        }
+    }
+    let tp_ratio = tp_ratio.unwrap_or(0.0);
+    println!("throughput batched vs unbatched @{wide} conns: {tp_ratio:.3}x");
+
+    // Headline 2: drive the batched arm at 2x the best throughput seen,
+    // with a deadline so shedding is live, and compare goodput against
+    // the best pre-overload cell.
+    let saturation = cells
+        .iter()
+        .filter(|c| c.mode == "batched")
+        .map(|c| c.report.reqs_per_sec())
+        .fold(0.0f64, f64::max);
+    let pre_goodput = cells
+        .iter()
+        .filter(|c| c.mode == "batched")
+        .map(|c| c.report.goodput_per_sec())
+        .fold(0.0f64, f64::max);
+    let overload = run_cell(
+        workers,
+        true,
+        (saturation * 2.0).max(100.0) as usize,
+        wide,
+        duration,
+        5_000,
+    );
+    let overload_ratio = if pre_goodput > 0.0 {
+        overload.report.goodput_per_sec() / pre_goodput
+    } else {
+        0.0
+    };
+    println!(
+        "overload probe @{:.0} req/s: goodput {:.1}/s = {:.3}x of best ({:.1}/s), shed {}",
+        saturation * 2.0,
+        overload.report.goodput_per_sec(),
+        overload_ratio,
+        pre_goodput,
+        overload.report.stats.shed
+    );
+    cells.push(overload);
+
+    let mut json = String::from("{\n  \"bench\": \"serve_wire\",\n  \"rows\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"rate\": {}, \"conns\": {}, \"mode\": \"{}\", \"reqs_per_sec\": {:.2}, \
+             \"goodput_per_sec\": {:.2}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \
+             \"shed\": {}, \"deadline_misses\": {}, \"lost\": {}, \"batches\": {}, \
+             \"max_batch\": {}}}{}\n",
+            c.rate,
+            c.conns,
+            c.mode,
+            c.report.reqs_per_sec(),
+            c.report.goodput_per_sec(),
+            c.report.stats.p50_us(),
+            c.report.stats.p99_us(),
+            c.report.stats.shed,
+            c.report.stats.deadline_misses,
+            c.report.lost,
+            c.batches,
+            c.max_batch,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"saturation_rps\": {saturation:.2},\n  \
+         \"throughput_batched_vs_unbatched\": {tp_ratio:.3},\n  \
+         \"overload_goodput_ratio\": {overload_ratio:.3}\n}}\n"
+    ));
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_serve_wire.json");
+    std::fs::write(&path, json).expect("write BENCH_serve_wire.json");
+    println!("{}", path.display());
+}

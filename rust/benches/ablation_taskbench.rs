@@ -19,9 +19,15 @@
 //! { "bench": "taskbench",
 //!   "rows": [ {"pattern": "stencil", "policy": "priority-local",
 //!              "threads": 4, "grain_us": 0, "mode": "steal-half",
-//!              "us_per_task": 1.93, "eff": 0.0}, ... ],
+//!              "us_per_task": 1.93, "eff": 0.0, "metg_us": 6.0}, ... ],
 //!   "speedup_stealhalf_vs_single": {"1": r1, "2": r2, ...} }
 //! ```
+//!
+//! `metg_us` is the automatically solved minimum effective task
+//! granularity (ISSUE 9): per (pattern, policy, threads, tuning)
+//! combination, `solve_metg` binary-searches the grain axis for the
+//! smallest grain sustaining >= 50% parallel efficiency; `null` when no
+//! grain up to the search ceiling reaches it.
 //!
 //! `us_per_task` is the METG-style overhead row (grain 0 = pure runtime
 //! overhead per task); `eff` is parallel efficiency at that grain.  The
@@ -49,6 +55,7 @@ fn main() {
             ("steal-half", Tuning { steal_batch: 32, inline_cont: true }),
             ("steal-one", Tuning { steal_batch: 1, inline_cont: false }),
         ],
+        metg: true,
     };
     eprintln!(
         "[taskbench] {}x{} grid, threads {:?}, grains {:?} us",
@@ -89,9 +96,12 @@ fn main() {
 
     let mut json = String::from("{\n  \"bench\": \"taskbench\",\n  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
+        let metg = r
+            .metg_us
+            .map_or_else(|| "null".to_string(), |m| format!("{m:.1}"));
         json.push_str(&format!(
             "    {{\"pattern\": \"{}\", \"policy\": \"{}\", \"threads\": {}, \"grain_us\": {}, \
-             \"mode\": \"{}\", \"us_per_task\": {:.4}, \"eff\": {:.4}}}{}\n",
+             \"mode\": \"{}\", \"us_per_task\": {:.4}, \"eff\": {:.4}, \"metg_us\": {}}}{}\n",
             r.pattern,
             r.policy,
             r.threads,
@@ -99,6 +109,7 @@ fn main() {
             r.mode,
             r.us_per_task,
             r.eff,
+            metg,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

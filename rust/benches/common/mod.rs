@@ -86,6 +86,14 @@ pub fn clients_grid() -> Vec<usize> {
     env_grid("BENCH_CLIENTS", &[1, 2, 4, 8])
 }
 
+/// Offered-load grid (requests/second) for the wire-serving ablation.
+/// `BENCH_RATES=100,1000` overrides; under `BENCH_SMOKE=1` the default
+/// shrinks to two light rates so CI stays inside its timeout.
+pub fn rates_grid() -> Vec<usize> {
+    let default: &[usize] = if smoke() { &[100, 1000] } else { &[500, 1000, 2000, 4000, 8000] };
+    env_grid("BENCH_RATES", default)
+}
+
 pub fn build(max_threads: usize) -> (HpxMpRuntime, BaselineRuntime) {
     let rt = OmpRuntime::new(max_threads, PolicyKind::PriorityLocal);
     rt.icv.set_nthreads(max_threads);

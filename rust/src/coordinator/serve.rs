@@ -22,7 +22,7 @@ use crate::baseline::BaselineRuntime;
 use crate::blaze::{self, DynMatrix, DynVector};
 use crate::omp::OmpRuntime;
 use crate::par::{ExecMode, Executor, HpxMpRuntime, Policy};
-use crate::util::stats::percentile;
+use crate::util::stats::RequestStats;
 use crate::util::timing::spin_wait;
 
 /// Which kernels a client's request stream cycles through.
@@ -168,15 +168,14 @@ pub struct ServeStats {
     pub goodput_per_sec: f64,
 }
 
-/// What one client thread brings home (drive() aggregates these).
+/// What one client thread brings home (drive() aggregates these).  The
+/// request accounting itself is the shared [`RequestStats`] accumulator —
+/// the same one the wire front-end's load generator fills — so the
+/// in-process and socket serving paths report identical row schemas.
 struct ClientReport {
     start: Instant,
     stop: Instant,
-    latencies: Vec<f64>,
-    shed: usize,
-    retries: usize,
-    deadline_misses: usize,
-    in_deadline: usize,
+    stats: RequestStats,
 }
 
 /// Serve the stream on **one shared hpxMP runtime**: every client's
@@ -225,21 +224,16 @@ fn drive(cfg: &ServeCfg, runtime: &'static str, rts: Vec<Arc<dyn Executor>>) -> 
     // Wall time spans the clients' own clocks (earliest start to latest
     // stop), not the coordinator's post-barrier wakeup — a descheduled
     // coordinator must not inflate reqs/sec.
-    let mut latencies = Vec::with_capacity(cfg.clients * cfg.requests_per_client);
+    let mut total = RequestStats::with_capacity(cfg.clients * cfg.requests_per_client);
     let mut first_start: Option<Instant> = None;
     let mut last_stop: Option<Instant> = None;
     let (mut failed_clients, mut failed_requests) = (0, 0);
-    let (mut shed, mut retries, mut deadline_misses, mut in_deadline) = (0, 0, 0, 0);
     for h in handles {
         match h.join() {
             Ok(rep) => {
                 first_start = Some(first_start.map_or(rep.start, |f| f.min(rep.start)));
                 last_stop = Some(last_stop.map_or(rep.stop, |l| l.max(rep.stop)));
-                latencies.extend(rep.latencies);
-                shed += rep.shed;
-                retries += rep.retries;
-                deadline_misses += rep.deadline_misses;
-                in_deadline += rep.in_deadline;
+                total.merge(&rep.stats);
             }
             Err(_) => {
                 // The client thread panicked mid-stream.  Its requests
@@ -254,31 +248,22 @@ fn drive(cfg: &ServeCfg, runtime: &'static str, rts: Vec<Arc<dyn Executor>>) -> 
         (Some(f), Some(l)) => l.duration_since(f),
         _ => t_origin.elapsed(),
     }
-    .as_secs_f64()
-    .max(1e-9);
-    let (p50_us, p99_us) = if latencies.is_empty() {
-        (0.0, 0.0)
-    } else {
-        (
-            percentile(&latencies, 50.0) * 1e6,
-            percentile(&latencies, 99.0) * 1e6,
-        )
-    };
+    .as_secs_f64();
     ServeStats {
         runtime,
         mix: cfg.mix,
         clients: cfg.clients,
         threads: cfg.threads,
-        total_requests: latencies.len(),
-        reqs_per_sec: latencies.len() as f64 / wall,
-        p50_us,
-        p99_us,
+        total_requests: total.completed(),
+        reqs_per_sec: total.reqs_per_sec(wall),
+        p50_us: total.p50_us(),
+        p99_us: total.p99_us(),
         failed_clients,
         failed_requests,
-        shed,
-        retries,
-        deadline_misses,
-        goodput_per_sec: in_deadline as f64 / wall,
+        shed: total.shed,
+        retries: total.retries,
+        deadline_misses: total.deadline_misses,
+        goodput_per_sec: total.goodput_per_sec(wall),
     }
 }
 
@@ -315,11 +300,7 @@ fn client_loop(ci: usize, rt: Arc<dyn Executor>, cfg: &ServeCfg, start: &Barrier
     let mut rep = ClientReport {
         start: stream_start,
         stop: stream_start,
-        latencies: Vec::with_capacity(cfg.requests_per_client),
-        shed: 0,
-        retries: 0,
-        deadline_misses: 0,
-        in_deadline: 0,
+        stats: RequestStats::with_capacity(cfg.requests_per_client),
     };
     for r in 0..cfg.requests_per_client {
         if cfg.shed && rt.overloaded() {
@@ -328,14 +309,14 @@ fn client_loop(ci: usize, rt: Arc<dyn Executor>, cfg: &ServeCfg, start: &Barrier
             let mut admitted = false;
             for attempt in 0..cfg.retries {
                 spin_wait(Duration::from_micros(50 << attempt.min(6)));
-                rep.retries += 1;
+                rep.stats.retries += 1;
                 if !rt.overloaded() {
                     admitted = true;
                     break;
                 }
             }
             if !admitted {
-                rep.shed += 1;
+                rep.stats.shed += 1;
                 continue;
             }
         }
@@ -348,11 +329,8 @@ fn client_loop(ci: usize, rt: Arc<dyn Executor>, cfg: &ServeCfg, start: &Barrier
             Kernel::MMult => blaze::dmatdmatmult(&pol, &mm_a, &mm_b, &mut mm_c),
         }
         let elapsed = t0.elapsed();
-        rep.latencies.push(elapsed.as_secs_f64());
-        match cfg.deadline_us {
-            Some(d) if elapsed > Duration::from_micros(d) => rep.deadline_misses += 1,
-            _ => rep.in_deadline += 1,
-        }
+        let missed = matches!(cfg.deadline_us, Some(d) if elapsed > Duration::from_micros(d));
+        rep.stats.record(elapsed.as_secs_f64(), missed);
     }
     rep.stop = Instant::now();
     rep

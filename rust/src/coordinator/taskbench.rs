@@ -199,6 +199,89 @@ pub struct TbRow {
     /// core-time (`wall × min(threads, width)`).  0 at grain 0 by
     /// construction; METG is the smallest grain keeping this above 0.5.
     pub eff: f64,
+    /// Solved minimum effective task granularity for this row's
+    /// (pattern, policy, threads, tuning) combination — the smallest
+    /// grain with `eff >=` [`METG_EFF_TARGET`], found by [`solve_metg`].
+    /// `None` when the solver was skipped ([`SweepCfg::metg`] off) or
+    /// efficiency never reached the target within the search ceiling.
+    pub metg_us: Option<f64>,
+}
+
+/// Efficiency threshold defining METG (the Task Bench convention: the
+/// smallest grain sustaining at least 50% parallel efficiency).
+pub const METG_EFF_TARGET: f64 = 0.5;
+
+/// Grain-axis search ceiling for [`solve_metg`], in microseconds.  A
+/// runtime whose overhead still eats half of 1 ms tasks has no useful
+/// METG to report.
+pub const METG_MAX_GRAIN_US: u64 = 1024;
+
+/// Measured parallel efficiency at one grain (best of `reps` runs).
+fn eff_at(
+    sched: &Arc<Scheduler>,
+    pattern: Pattern,
+    width: usize,
+    steps: usize,
+    threads: usize,
+    grain_us: u64,
+    reps: usize,
+) -> f64 {
+    if grain_us == 0 {
+        return 0.0;
+    }
+    let g = GraphCfg { pattern, width, steps, grain_us };
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        best = best.min(run_graph(sched, &g).as_secs_f64());
+    }
+    let tasks = g.tasks() as f64;
+    let cores = threads.min(width).max(1) as f64;
+    (tasks * grain_us as f64) / (best * 1e6 * cores)
+}
+
+/// Automated METG solver (ISSUE 9): binary-search the grain axis for the
+/// smallest integer grain whose parallel efficiency reaches
+/// [`METG_EFF_TARGET`] on an already-constructed scheduler.
+///
+/// Strategy: probe upward by doubling from 1 us until the target is met
+/// (giving a bracketing interval `(lo fails, hi passes]`), then bisect.
+/// Efficiency is only statistically monotone in grain, so each probe
+/// takes the best of `reps` runs to suppress noise; the result is a
+/// measurement, not an exact root.  Returns `None` when even
+/// `max_grain_us` cannot reach the target — overhead dominates the whole
+/// searched axis.
+pub fn solve_metg(
+    sched: &Arc<Scheduler>,
+    pattern: Pattern,
+    width: usize,
+    steps: usize,
+    threads: usize,
+    reps: usize,
+    max_grain_us: u64,
+) -> Option<f64> {
+    let passes =
+        |g: u64| eff_at(sched, pattern, width, steps, threads, g, reps) >= METG_EFF_TARGET;
+    let mut lo = 0u64; // grain 0 has eff 0 by construction
+    let mut hi = 1u64;
+    if hi > max_grain_us {
+        return None;
+    }
+    while !passes(hi) {
+        lo = hi;
+        hi = hi.saturating_mul(2);
+        if hi > max_grain_us {
+            return None;
+        }
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if passes(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi as f64)
 }
 
 /// Full sweep grid for [`sweep`].
@@ -217,6 +300,10 @@ pub struct SweepCfg {
     /// (threads, policy, arm), all cells of the pattern × grain grid
     /// reuse it.
     pub tunings: Vec<(&'static str, Tuning)>,
+    /// Run [`solve_metg`] once per (threads, policy, tuning, pattern)
+    /// combination and stamp the result on every row of that
+    /// combination's grain sweep.
+    pub metg: bool,
 }
 
 /// Run the whole pattern × policy × tuning × grain × threads grid.
@@ -227,6 +314,19 @@ pub fn sweep(cfg: &SweepCfg) -> Vec<TbRow> {
             for &(mode, tuning) in &cfg.tunings {
                 let sched = Scheduler::with_tuning(t, policy, tuning);
                 for &pattern in &cfg.patterns {
+                    let metg_us = if cfg.metg {
+                        solve_metg(
+                            &sched,
+                            pattern,
+                            cfg.width,
+                            cfg.steps,
+                            t,
+                            cfg.reps,
+                            METG_MAX_GRAIN_US,
+                        )
+                    } else {
+                        None
+                    };
                     for &grain_us in &cfg.grains_us {
                         let g = GraphCfg {
                             pattern,
@@ -253,6 +353,7 @@ pub fn sweep(cfg: &SweepCfg) -> Vec<TbRow> {
                             } else {
                                 (tasks * grain_us as f64) / (best * 1e6 * cores)
                             },
+                            metg_us,
                         });
                     }
                 }
@@ -267,13 +368,17 @@ pub fn sweep(cfg: &SweepCfg) -> Vec<TbRow> {
 /// ablation bench print.
 pub fn render(rows: &[TbRow]) -> String {
     let mut out = format!(
-        "{:<8} {:<18} {:>7} {:>8} {:<10} {:>12} {:>6}\n",
-        "pattern", "policy", "threads", "grain_us", "mode", "us/task", "eff"
+        "{:<8} {:<18} {:>7} {:>8} {:<10} {:>12} {:>6} {:>8}\n",
+        "pattern", "policy", "threads", "grain_us", "mode", "us/task", "eff", "metg_us"
     );
     for r in rows {
+        let metg = match r.metg_us {
+            Some(m) => format!("{m:.0}"),
+            None => "-".to_string(),
+        };
         out.push_str(&format!(
-            "{:<8} {:<18} {:>7} {:>8} {:<10} {:>12.3} {:>6.2}\n",
-            r.pattern, r.policy, r.threads, r.grain_us, r.mode, r.us_per_task, r.eff
+            "{:<8} {:<18} {:>7} {:>8} {:<10} {:>12.3} {:>6.2} {:>8}\n",
+            r.pattern, r.policy, r.threads, r.grain_us, r.mode, r.us_per_task, r.eff, metg
         ));
     }
     out
@@ -329,6 +434,20 @@ mod tests {
             assert_eq!(Pattern::parse_or_list(p.name()), Ok(p));
         }
         assert!(Pattern::parse_or_list("nope").is_err());
+    }
+
+    #[test]
+    fn metg_solver_brackets_and_bisects() {
+        let sched = Scheduler::with_tuning(2, PolicyKind::PriorityLocal, Tuning::default());
+        // A generous ceiling must find *some* grain on a tiny grid: at
+        // 1 ms tasks the spin work dwarfs scheduling overhead.
+        let m = solve_metg(&sched, Pattern::Stencil, 4, 3, 2, 1, METG_MAX_GRAIN_US);
+        if let Some(m) = m {
+            assert!(m >= 1.0 && m <= METG_MAX_GRAIN_US as f64, "metg {m}");
+        }
+        // A ceiling of 0 can never pass and must report None, not spin.
+        assert_eq!(solve_metg(&sched, Pattern::Stencil, 4, 3, 2, 1, 0), None);
+        sched.shutdown();
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //!   Blazemark operations with Blaze's parallelization thresholds.
 //! * [`runtime`] — PJRT bridge: loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and executes them from hpxMP tasks (the three-layer path).
+//! * [`net`] — the socket front-end: a length-prefixed kernel-request
+//!   protocol over TCP/UDS, same-kernel request batching, and
+//!   admission-coupled backpressure (serve at wire speed).
 //! * [`coordinator`] — the Blazemark-style benchmark harness regenerating
 //!   every figure of the paper's evaluation, plus conformance reports.
 //! * [`util`] — in-tree substrates (RNG, stats, CSV, CLI, property tests).
@@ -29,6 +32,7 @@ pub mod amt;
 pub mod baseline;
 pub mod blaze;
 pub mod coordinator;
+pub mod net;
 pub mod omp;
 pub mod par;
 pub mod runtime;

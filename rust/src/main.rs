@@ -9,6 +9,8 @@
 //! hpxmp scaling  --op <op|all> [...]      Figs 6-9 scaling series
 //! hpxmp dataflow [--sizes a,b,c]          fork-join vs futurized dataflow mmult
 //! hpxmp serve    [--clients M --mix m]    multi-tenant serving: shared vs per-client
+//! hpxmp serve    --listen <addr> [...]    wire server (TCP/UDS, coalescing front-end)
+//! hpxmp loadgen  [--addr a --rate R]      open-loop load generator for the wire server
 //! hpxmp offload  [--size N]               three-layer PJRT smoke run
 //! hpxmp policies [--tasks N]              AMT policy ablation
 //! hpxmp taskbench [--pattern p --grain-us g,h]  Task Bench dependency-pattern grid
@@ -33,7 +35,8 @@ use hpxmp::util::timing::BenchCfg;
 const VALUE_OPTS: &[&str] = &[
     "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks", "clients", "requests",
     "mix", "exec", "tile", "deadline-us", "retries", "kernel", "threshold", "pattern", "width",
-    "steps", "grain-us",
+    "steps", "grain-us", "listen", "addr", "rate", "conns", "dist", "duration", "coalesce-us",
+    "max-batch", "max-pending", "seed",
 ];
 
 fn main() {
@@ -55,6 +58,7 @@ fn main() {
             "scaling" => cmd_scaling(&args, mode),
             "dataflow" => cmd_dataflow(&args),
             "serve" => cmd_serve(&args, mode),
+            "loadgen" => cmd_loadgen(&args),
             "offload" => cmd_offload(&args),
             "policies" => cmd_policies(&args),
             "taskbench" => cmd_taskbench(&args),
@@ -93,7 +97,7 @@ fn kernel_variant(args: &Args) -> anyhow::Result<exec::KernelVariant> {
 fn print_help() {
     println!(
         "hpxmp — OpenMP-over-AMT runtime (hpxMP reproduction)\n\n\
-         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|serve|offload|policies|taskbench> [options]\n\n\
+         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|serve|loadgen|offload|policies|taskbench> [options]\n\n\
          options:\n\
            --op <dvecdvecadd|daxpy|dmatdmatadd|dmatdmatmult|dmatdvecmult|all>\n\
            --exec <seq|par|task>     execution policy for every kernel (env: HPXMP_EXEC;\n\
@@ -112,9 +116,21 @@ fn print_help() {
            --deadline-us D           per-request deadline in microseconds (serve)\n\
            --shed                    shed requests when the runtime is saturated (serve)\n\
            --retries N               backoff attempts before a shed (serve; default 2)\n\
+           --listen <addr>           serve the wire protocol on tcp:host:port or uds:/path\n\
+           --coalesce-us W           wire coalescing window in us (serve --listen; default 150;\n\
+                                     env HPXMP_COALESCE=0 disables batching)\n\
+           --max-batch N             flush a coalescing bucket at N requests (default 32)\n\
+           --max-pending N           hard shed cap on queued+in-flight requests (default 1024)\n\
+           --duration S              run seconds (serve --listen: 0 = forever; loadgen: 5)\n\
+           --addr <addr>             loadgen target (default 127.0.0.1:7070)\n\
+           --rate R --conns C        loadgen offered load: R req/s total over C connections\n\
+           --dist <poisson|uniform>  loadgen inter-arrival distribution (default poisson)\n\
+           --seed N                  loadgen payload/arrival seed\n\
            --pattern <stencil|nearest|fft|spread|random|all>  dependency pattern (taskbench)\n\
            --width N --steps N       task-grid shape (taskbench; default 64 x 32)\n\
            --grain-us g,h            per-task busy-work grains in us (taskbench; default 0,20)\n\
+           --metg                    solve METG per pattern (taskbench; binary-search grain\n\
+                                     for the smallest with eff >= 0.5)\n\
            --quick                   fast measurement profile\n\
            --out DIR                 report directory (default results/)\n"
     );
@@ -341,6 +357,9 @@ fn cmd_dataflow(args: &Args) -> anyhow::Result<()> {
 /// threading-systems regime the paper's composition pitch argues against).
 fn cmd_serve(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
     use hpxmp::coordinator::serve::{serve_per_client, serve_shared, KernelMix, ServeCfg};
+    if let Some(listen) = args.get("listen") {
+        return cmd_serve_wire(args, listen);
+    }
     let clients = args.get_usize("clients", 4);
     let threads = args.get_usize("threads", 2);
     let requests = args.get_usize("requests", if args.flag("quick") { 50 } else { 200 });
@@ -403,6 +422,126 @@ fn cmd_serve(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
         rt.pool_hits(),
         rt.pool_misses(),
         rt.pool_parked()
+    );
+    Ok(())
+}
+
+/// `hpxmp serve --listen <addr>` (ISSUE 9): the socket front-end.  Binds
+/// the wire protocol on TCP (`host:port` / `tcp:host:port`) or a Unix
+/// socket (`uds:/path`) and serves kernel requests through the
+/// coalescing engine until `--duration` seconds elapse (0 = run until
+/// killed), printing the wire counters once per second.
+fn cmd_serve_wire(args: &Args, listen: &str) -> anyhow::Result<()> {
+    use hpxmp::net::{BatchCfg, WireAddr, WireServer};
+    let addr = WireAddr::parse(listen).map_err(|e| anyhow::anyhow!(e))?;
+    let workers = args.get_usize("workers", icv::num_procs().max(2));
+    let policy = match args.get("policy") {
+        Some(p) => PolicyKind::parse_or_list(p).map_err(|e| anyhow::anyhow!(e))?,
+        None => PolicyKind::PriorityLocal,
+    };
+    let rt = OmpRuntime::new(workers, policy);
+    rt.icv.set_nthreads(workers);
+    let dflt = BatchCfg::default();
+    let cfg = BatchCfg {
+        coalesce_us: args.get_usize("coalesce-us", dflt.coalesce_us as usize) as u64,
+        max_batch: args.get_usize("max-batch", dflt.max_batch),
+        max_pending: args.get_usize("max-pending", dflt.max_pending),
+        default_deadline_us: args.get_usize("deadline-us", dflt.default_deadline_us as usize)
+            as u32,
+        ..dflt
+    };
+    let duration = args.get_usize("duration", 0);
+    let server = WireServer::start(rt, &[addr.clone()], cfg)?;
+    let bound = server
+        .local_addr()
+        .map(|a| format!("tcp:{a}"))
+        .unwrap_or_else(|| addr.to_string());
+    println!(
+        "wire server on {bound}: {workers} workers, coalesce {} ({} us window, batch <= {}), \
+         pending cap {}, {} server threads",
+        if cfg.coalesce { "on" } else { "off (HPXMP_COALESCE=0)" },
+        cfg.coalesce_us,
+        cfg.max_batch,
+        cfg.max_pending,
+        server.thread_count()
+    );
+    let start = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(1));
+        let s = server.stats();
+        use std::sync::atomic::Ordering::Relaxed;
+        println!(
+            "t={:>4}s conns {} reqs {} ok {} shed {} expired {} misses {} errors {} \
+             batches {} (max {}) pending {}",
+            start.elapsed().as_secs(),
+            s.accepted.load(Relaxed),
+            s.requests.load(Relaxed),
+            s.ok.load(Relaxed),
+            s.shed.load(Relaxed),
+            s.expired.load(Relaxed),
+            s.deadline_misses.load(Relaxed),
+            s.errors.load(Relaxed),
+            s.batches.load(Relaxed),
+            s.max_batch.load(Relaxed),
+            s.pending()
+        );
+        if duration > 0 && start.elapsed().as_secs() >= duration as u64 {
+            break;
+        }
+    }
+    server.drain(std::time::Duration::from_secs(5));
+    Ok(())
+}
+
+/// `hpxmp loadgen` (ISSUE 9): the seeded open-loop generator against a
+/// running wire server — `--addr`, `--rate` total req/s across
+/// `--conns` connections, `--dist poisson|uniform`.
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use hpxmp::net::{run_loadgen, Dist, LoadgenCfg, WireAddr, WireOp};
+    let addr = WireAddr::parse(args.get_or("addr", "127.0.0.1:7070"))
+        .map_err(|e| anyhow::anyhow!("--addr: {e}"))?;
+    let op = hpxmp::util::cli::parse_choice("op", args.get_or("op", "daxpy"), WireOp::CHOICES)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = LoadgenCfg {
+        addr,
+        op,
+        n: args.get_usize("size", hpxmp::net::default_wire_n(op) as usize) as u32,
+        rate: args.get_usize("rate", 1000) as f64,
+        conns: args.get_usize("conns", 4),
+        dist: Dist::parse(args.get_or("dist", "poisson")).map_err(|e| anyhow::anyhow!(e))?,
+        duration: std::time::Duration::from_secs(args.get_usize("duration", 5) as u64),
+        deadline_us: args.get_usize("deadline-us", 0) as u32,
+        seed: args.get_usize("seed", 0x5eed) as u64,
+    };
+    println!(
+        "loadgen: {} {} n={} rate {}/s over {} conns ({:?}), {}s{}",
+        cfg.addr,
+        args.get_or("op", "daxpy"),
+        cfg.n,
+        cfg.rate,
+        cfg.conns,
+        cfg.dist,
+        cfg.duration.as_secs(),
+        if cfg.deadline_us > 0 {
+            format!(", deadline {} us", cfg.deadline_us)
+        } else {
+            String::new()
+        }
+    );
+    let rep = run_loadgen(&cfg)?;
+    println!(
+        "sent {}  completed {}  {:.1} req/s  goodput {:.1}/s  p50 {:.0} us  p99 {:.0} us  \
+         shed {}  misses {}  failed {}  lost {}",
+        rep.sent,
+        rep.stats.completed(),
+        rep.reqs_per_sec(),
+        rep.goodput_per_sec(),
+        rep.stats.p50_us(),
+        rep.stats.p99_us(),
+        rep.stats.shed,
+        rep.stats.deadline_misses,
+        rep.stats.failed,
+        rep.lost
     );
     Ok(())
 }
@@ -498,6 +637,7 @@ fn cmd_taskbench(args: &Args) -> anyhow::Result<()> {
         steps: args.get_usize("steps", 32),
         reps: if args.flag("quick") { 2 } else { 5 },
         tunings: vec![(mode, tuning)],
+        metg: args.flag("metg"),
     };
     println!(
         "taskbench: {} x {} grid, tuning {mode} (steal_batch={}, inline_cont={})",

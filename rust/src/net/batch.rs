@@ -1,0 +1,642 @@
+//! Same-kernel request batching/coalescing and backpressure (ISSUE 9).
+//!
+//! Decoded requests are not executed one-by-one: [`Coalescer::submit`]
+//! buckets them by `(op, n)` and a batcher thread flushes each bucket
+//! when its **coalescing window** expires (or immediately once it holds
+//! [`BatchCfg::max_batch`] requests).  A flushed bucket becomes *one*
+//! fused [`for_each_async`] over the batch's concatenated index space —
+//! one team fork (hot-team checkout, PR 1) and one cached-operand /
+//! packed-B pass (PR 7) amortized over every request in the window,
+//! exactly the fork- and pack-amortization the in-process serving
+//! scenario gets from streaming, recovered for open-loop arrivals.
+//!
+//! **Correctness of coalescing** is structural, not numerical luck: each
+//! request's output segment is a disjoint slice of the batch response
+//! buffer, and every kernel's per-element/per-row/per-band arithmetic is
+//! decomposition-independent (elementwise ops trivially; `matvec` row
+//! dots; the packed matmul accumulates in ascending k within KC strips —
+//! DESIGN.md §12), so a request computes bit-for-bit the same reply
+//! whether it shared a batch or ran alone.  `HPXMP_COALESCE=0` (or
+//! `BatchCfg::coalesce = false`) degenerates to dispatch-per-request —
+//! the unbatched ablation arm.
+//!
+//! **Backpressure** (the overload path): admission headroom
+//! ([`crate::omp::OmpRuntime::admission_headroom`]) plus the pending
+//! gauge decide *before* queueing whether a request is accepted, so
+//! overload degrades in order — queue into the window, shrink effective
+//! team share (admission, PR 3), shed ([`Status::Shed`], PR 6) — instead
+//! of collapsing.  A hard [`BatchCfg::max_pending`] cap bounds memory
+//! regardless of the shed flag.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use once_cell::sync::OnceCell;
+
+use crate::amt::future::Outcome;
+use crate::blaze::kernel::{
+    self, pack_a_band, pack_b_band, packed_a_len, packed_b_len, PACKED_ROW_BAND,
+};
+use crate::blaze::ops::SendPtr;
+use crate::blaze::{serial, DynMatrix, DynVector};
+use crate::net::frame::{operand_seed, Request, Response, Status, WireOp};
+use crate::omp::OmpRuntime;
+use crate::par::exec::{self, KernelVariant};
+use crate::par::{ExecMode, HpxMpRuntime, Policy};
+
+/// Where a finished (or rejected) request's response goes.  The server's
+/// per-connection writer implements this; tests plug in channels.
+pub trait ReplySink: Send + Sync {
+    fn send(&self, resp: &Response);
+}
+
+/// Batching/backpressure knobs for the wire engine.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCfg {
+    /// Execution mode of the fused batch dispatch.  `Task` (the default)
+    /// keeps the batcher thread non-blocking — the batch is a futurized
+    /// pipeline whose responses are written by a continuation.
+    pub mode: ExecMode,
+    /// Team size per batch fork; 0 = the executor's max concurrency.
+    pub threads: usize,
+    /// Master switch: `false` dispatches every request alone (the
+    /// `HPXMP_COALESCE=0` ablation arm).
+    pub coalesce: bool,
+    /// Coalescing window in µs: how long the first request of a bucket
+    /// waits for same-shape company before the batch is flushed.
+    pub coalesce_us: u64,
+    /// Flush a bucket early once it holds this many requests.
+    pub max_batch: usize,
+    /// Hard cap on queued + in-flight requests; beyond it every submit is
+    /// shed regardless of [`BatchCfg::shed`] (memory bound).
+    pub max_pending: usize,
+    /// Soft shedding: reject new requests while the admission budget has
+    /// no headroom *and* at least a batch worth of work is already
+    /// pending — PR 6's deadline/shed machinery applied at the socket
+    /// edge.
+    pub shed: bool,
+    /// Deadline stamped on requests that carry none (µs; 0 = none).
+    pub default_deadline_us: u32,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        Self {
+            mode: ExecMode::Task,
+            threads: 0,
+            coalesce: coalesce_from_env(),
+            coalesce_us: coalesce_window_us_from_env(),
+            max_batch: 32,
+            max_pending: 1024,
+            shed: true,
+            default_deadline_us: 0,
+        }
+    }
+}
+
+/// `HPXMP_COALESCE=0` disables batching (the unbatched ablation arm);
+/// unset or any other value leaves it on.
+pub fn coalesce_from_env() -> bool {
+    std::env::var("HPXMP_COALESCE").map_or(true, |v| v != "0")
+}
+
+/// `HPXMP_COALESCE_US` overrides the coalescing window (default 150 µs —
+/// small against a millisecond-scale SLO, wide against inter-arrival
+/// gaps at interesting rates).
+pub fn coalesce_window_us_from_env() -> u64 {
+    std::env::var("HPXMP_COALESCE_US")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(150)
+}
+
+/// Counters the wire front-end exports (`hpxmp serve --listen` prints
+/// them; tests assert leak-freedom on `pending`).
+#[derive(Default)]
+pub struct WireStats {
+    /// Connections accepted across all listeners.
+    pub accepted: AtomicUsize,
+    /// Requests decoded and admitted past backpressure.
+    pub requests: AtomicUsize,
+    /// Frames rejected at decode (connection dropped after).
+    pub bad_frames: AtomicUsize,
+    /// Fused dispatches (a batch of one still counts).
+    pub batches: AtomicUsize,
+    /// Requests carried by those batches.
+    pub batched_requests: AtomicUsize,
+    /// Largest single batch seen.
+    pub max_batch: AtomicUsize,
+    /// Requests rejected by backpressure.
+    pub shed: AtomicUsize,
+    /// Requests abandoned because their deadline expired server-side.
+    pub expired: AtomicUsize,
+    /// Completed responses that missed their deadline (still served).
+    pub deadline_misses: AtomicUsize,
+    /// Requests answered `Status::Error` (batch died).
+    pub errors: AtomicUsize,
+    /// Requests answered `Status::Ok`.
+    pub ok: AtomicUsize,
+    /// Queued + in-flight requests (gauge; 0 when drained — the
+    /// admission-leak check of `tests/serve_wire.rs`).
+    pub pending: AtomicUsize,
+}
+
+impl WireStats {
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    fn note_batch(&self, len: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(len, Ordering::Relaxed);
+        self.max_batch.fetch_max(len, Ordering::Relaxed);
+    }
+}
+
+/// One admitted request waiting for (or riding) a batch.
+pub struct Job {
+    pub req: Request,
+    pub sink: Arc<dyn ReplySink>,
+    /// Absolute deadline derived from the frame's `deadline_us` (or the
+    /// configured default) at submit time — queueing in the coalescing
+    /// window burns this budget, by design.
+    pub deadline: Option<Instant>,
+}
+
+/// Generate the cached second operand for `(op, n)` — deterministic in
+/// `(op, n)` via [`operand_seed`], shared by the server's operand cache
+/// and the client-side oracle so expected replies are computable without
+/// a round-trip.  Vector ops get an n-vector; `MatVec` its n×n A;
+/// `MMult` its n×n B.
+pub fn gen_operand(op: WireOp, n: u32) -> Vec<f64> {
+    let seed = operand_seed(op, n);
+    let n = n as usize;
+    match op {
+        WireOp::Daxpy | WireOp::VAdd => DynVector::random(n, seed).as_slice().to_vec(),
+        WireOp::MatVec | WireOp::MMult => {
+            DynMatrix::random(n, n, seed).as_slice().to_vec()
+        }
+    }
+}
+
+enum CachedOperand {
+    /// daxpy/vadd second operand, or matvec A (row-major n×n).
+    Plain(Arc<Vec<f64>>),
+    /// mmult B together with its packed image — packed once per shape,
+    /// the "one packed-operand pass" every batch member shares.
+    PackedB(Arc<(Vec<f64>, Vec<f64>)>),
+}
+
+impl Clone for CachedOperand {
+    fn clone(&self) -> Self {
+        match self {
+            CachedOperand::Plain(v) => CachedOperand::Plain(v.clone()),
+            CachedOperand::PackedB(v) => CachedOperand::PackedB(v.clone()),
+        }
+    }
+}
+
+/// Executes flushed batches on the runtime and writes responses.
+pub struct Engine {
+    exec: HpxMpRuntime,
+    cfg: BatchCfg,
+    stats: Arc<WireStats>,
+    operands: Mutex<HashMap<(u8, u32), CachedOperand>>,
+}
+
+impl Engine {
+    pub fn new(rt: Arc<OmpRuntime>, cfg: BatchCfg, stats: Arc<WireStats>) -> Self {
+        Self {
+            exec: HpxMpRuntime::new(rt),
+            cfg,
+            stats,
+            operands: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn stats(&self) -> &Arc<WireStats> {
+        &self.stats
+    }
+
+    /// Worker slots not yet reserved by in-flight regions — the
+    /// admission-budget gauge backpressure consults.
+    pub fn admission_headroom(&self) -> usize {
+        self.exec.rt.admission_headroom()
+    }
+
+    fn operand(&self, op: WireOp, n: u32) -> CachedOperand {
+        let mut map = self.operands.lock().expect("operand cache poisoned");
+        map.entry((op.code(), n))
+            .or_insert_with(|| match op {
+                WireOp::Daxpy | WireOp::VAdd | WireOp::MatVec => {
+                    CachedOperand::Plain(Arc::new(gen_operand(op, n)))
+                }
+                WireOp::MMult => {
+                    let b = gen_operand(op, n);
+                    let dim = n as usize;
+                    let mut b_pack = vec![0.0f64; packed_b_len(dim, dim)];
+                    pack_b_band(&b, dim, dim, 0, dim, &mut b_pack);
+                    CachedOperand::PackedB(Arc::new((b, b_pack)))
+                }
+            })
+            .clone()
+    }
+
+    /// Execute one flushed bucket: a single fused dispatch over the
+    /// batch's concatenated index space, responses written by the join
+    /// continuation (Task mode never blocks the calling thread).
+    pub fn dispatch(&self, op: WireOp, n: u32, mut jobs: Vec<Job>) {
+        self.stats.note_batch(jobs.len());
+        // Requests whose whole budget burned in the window are answered
+        // Expired without compute when shedding; without shedding they
+        // run anyway and are flagged as misses on completion.
+        if self.cfg.shed {
+            let now = Instant::now();
+            let (dead, live): (Vec<Job>, Vec<Job>) = jobs
+                .drain(..)
+                .partition(|j| j.deadline.is_some_and(|d| d < now));
+            for j in &dead {
+                respond(&self.stats, j, Status::Expired, true, Vec::new());
+            }
+            jobs = live;
+        }
+        if jobs.is_empty() {
+            return;
+        }
+        // The fused batch deadline: the *latest* member deadline (earlier
+        // members are flagged individually on completion).  Only armed
+        // when every member carries one — an unbounded member must not be
+        // cancelled by its neighbors' budgets.
+        let batch_deadline = jobs
+            .iter()
+            .map(|j| j.deadline)
+            .collect::<Option<Vec<_>>>()
+            .and_then(|ds| ds.into_iter().max());
+        let dim = n as usize;
+        let reply_len = op.reply_len(n);
+        let mut out = vec![0.0f64; jobs.len() * reply_len];
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        let jobs = Arc::new(jobs);
+        let body = self.batch_body(op, n, &jobs, out_ptr);
+        // Units: elements (vector ops), rows (matvec), or row bands
+        // (mmult) across the whole batch.
+        let units_per_req = match op {
+            WireOp::Daxpy | WireOp::VAdd | WireOp::MatVec => dim,
+            WireOp::MMult => dim.div_ceil(PACKED_ROW_BAND),
+        };
+        let total = (jobs.len() * units_per_req) as i64;
+        let mut pol = Policy::with_mode(self.cfg.mode).on(&self.exec);
+        if self.cfg.threads > 0 {
+            pol = pol.threads(self.cfg.threads);
+        }
+        if let Some(at) = batch_deadline {
+            pol = pol.deadline_at(at);
+        }
+        let join = exec::for_each_async(&pol, 0..total, body);
+        let stats = self.stats.clone();
+        // `on_ready` (unlike `then`) runs for every outcome, including
+        // Cancelled/Panicked — a wire request must always get *some*
+        // response.  The join only fires once every chunk has arrived
+        // (run or skipped), so no writer is live when `out` drops.
+        join.on_ready(move |outcome: &Outcome<()>| {
+            let now = Instant::now();
+            let out = out;
+            match outcome {
+                Outcome::Value(()) => {
+                    for (i, job) in jobs.iter().enumerate() {
+                        let missed = job.deadline.is_some_and(|d| now > d);
+                        let payload = out[i * reply_len..(i + 1) * reply_len].to_vec();
+                        respond(&stats, job, Status::Ok, missed, payload);
+                    }
+                }
+                Outcome::Cancelled => {
+                    // The batch deadline fired: partial buffers are not
+                    // trustworthy — every member expires.
+                    for job in jobs.iter() {
+                        respond(&stats, job, Status::Expired, true, Vec::new());
+                    }
+                }
+                Outcome::Panicked => {
+                    for job in jobs.iter() {
+                        respond(&stats, job, Status::Error, false, Vec::new());
+                    }
+                }
+            }
+        });
+    }
+
+    /// The fused chunk body: maps a global unit range back to (request,
+    /// local range) pairs and runs the kernel on each segment.  Output
+    /// segments are disjoint per unit, so the raw-pointer stores satisfy
+    /// the [`SendPtr`] partition invariant.
+    fn batch_body(
+        &self,
+        op: WireOp,
+        n: u32,
+        jobs: &Arc<Vec<Job>>,
+        out: SendPtr,
+    ) -> Arc<dyn Fn(std::ops::Range<i64>) + Send + Sync> {
+        let dim = n as usize;
+        let jobs = jobs.clone();
+        match op {
+            WireOp::Daxpy | WireOp::VAdd => {
+                let operand = match self.operand(op, n) {
+                    CachedOperand::Plain(v) => v,
+                    CachedOperand::PackedB(_) => unreachable!("vector op"),
+                };
+                Arc::new(move |r: std::ops::Range<i64>| {
+                    let mut g = r.start as usize;
+                    let end = r.end as usize;
+                    while g < end {
+                        let req = g / dim;
+                        let lo = g % dim;
+                        let hi = dim.min(lo + (end - g));
+                        let x = &jobs[req].req.payload[lo..hi];
+                        let b = &operand[lo..hi];
+                        // SAFETY: [req*dim+lo, req*dim+hi) is this call's
+                        // exclusive slice of the batch buffer (global
+                        // unit indices are claimed exactly once).
+                        let y = unsafe { out.slice_range(req * dim + lo, req * dim + hi) };
+                        match op {
+                            WireOp::Daxpy => {
+                                y.copy_from_slice(b);
+                                kernel::daxpy(KernelVariant::Auto, 3.0, x, y);
+                            }
+                            _ => kernel::vadd(KernelVariant::Auto, x, b, y),
+                        }
+                        g = req * dim + hi;
+                    }
+                })
+            }
+            WireOp::MatVec => {
+                let a = match self.operand(op, n) {
+                    CachedOperand::Plain(v) => v,
+                    CachedOperand::PackedB(_) => unreachable!("matvec"),
+                };
+                Arc::new(move |r: std::ops::Range<i64>| {
+                    for g in r {
+                        let g = g as usize;
+                        let req = g / dim;
+                        let row = g % dim;
+                        let x = &jobs[req].req.payload[..];
+                        // SAFETY: one global row index -> one exclusive
+                        // output element.
+                        let y = unsafe { out.slice_range(g, g + 1) };
+                        serial::matvec_rows(&a[row * dim..(row + 1) * dim], x, y);
+                    }
+                })
+            }
+            WireOp::MMult => {
+                let packed = match self.operand(op, n) {
+                    CachedOperand::PackedB(v) => v,
+                    CachedOperand::Plain(_) => unreachable!("mmult"),
+                };
+                let bands = dim.div_ceil(PACKED_ROW_BAND);
+                // Per-request A, generated lazily from the request's seed
+                // by whichever band task gets there first (OnceCell makes
+                // the race benign) — bands of the same request share it.
+                let a_cells: Arc<Vec<OnceCell<Vec<f64>>>> =
+                    Arc::new((0..jobs.len()).map(|_| OnceCell::new()).collect());
+                Arc::new(move |r: std::ops::Range<i64>| {
+                    for g in r {
+                        let g = g as usize;
+                        let req = g / bands;
+                        let band = g % bands;
+                        let seed = jobs[req].req.payload[0].to_bits();
+                        let a = a_cells[req].get_or_init(|| {
+                            DynMatrix::random(dim, dim, seed).as_slice().to_vec()
+                        });
+                        let i0 = band * PACKED_ROW_BAND;
+                        let i1 = (i0 + PACKED_ROW_BAND).min(dim);
+                        let mut a_pack = vec![0.0f64; packed_a_len(i1 - i0, dim)];
+                        pack_a_band(a, dim, i0, i1, &mut a_pack);
+                        // SAFETY: rows [i0, i1) of request `req`'s C are
+                        // this band's exclusive rectangle of the batch
+                        // buffer — addressed from the batch base with
+                        // `row_off = req·dim + i0` (row-major squares
+                        // laid out back to back share the leading dim).
+                        unsafe {
+                            kernel::packed_band_mm_ptr(
+                                &a_pack,
+                                i1 - i0,
+                                &packed.1,
+                                dim,
+                                dim,
+                                out,
+                                dim,
+                                req * dim + i0,
+                                0,
+                            );
+                        }
+                    }
+                })
+            }
+        }
+    }
+}
+
+/// Send the terminal response for an admitted job and settle its
+/// accounting — the ONLY place the pending gauge is decremented, so
+/// "every admitted job passes through exactly once" is the leak-freedom
+/// invariant (`tests/serve_wire.rs` asserts the gauge returns to 0).
+fn respond(stats: &WireStats, job: &Job, status: Status, missed: bool, payload: Vec<f64>) {
+    match status {
+        Status::Ok => {
+            stats.ok.fetch_add(1, Ordering::Relaxed);
+            if missed {
+                stats.deadline_misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Status::Expired => {
+            stats.expired.fetch_add(1, Ordering::Relaxed);
+        }
+        Status::Error => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        Status::Shed | Status::BadRequest => {}
+    }
+    job.sink.send(&Response {
+        req_id: job.req.req_id,
+        status,
+        deadline_missed: missed,
+        n: job.req.n,
+        payload,
+    });
+    stats.pending.fetch_sub(1, Ordering::AcqRel);
+}
+
+/// Reference reply computation (client-side oracle / tests): what the
+/// server must answer for `(op, n, payload)` — bit-for-bit, whatever
+/// batch the request rode in.
+pub fn expected_reply(op: WireOp, n: u32, payload: &[f64]) -> Vec<f64> {
+    let dim = n as usize;
+    let operand = gen_operand(op, n);
+    match op {
+        WireOp::Daxpy => {
+            let mut y = operand;
+            kernel::daxpy(KernelVariant::Auto, 3.0, payload, &mut y);
+            y
+        }
+        WireOp::VAdd => {
+            let mut y = vec![0.0f64; dim];
+            kernel::vadd(KernelVariant::Auto, payload, &operand, &mut y);
+            y
+        }
+        WireOp::MatVec => {
+            let mut y = vec![0.0f64; dim];
+            serial::matvec_rows(&operand, payload, &mut y);
+            y
+        }
+        WireOp::MMult => {
+            let a = DynMatrix::random(dim, dim, payload[0].to_bits())
+                .as_slice()
+                .to_vec();
+            let mut c = vec![0.0f64; dim * dim];
+            kernel::packed_matmul(&a, &operand, dim, dim, dim, &mut c);
+            c
+        }
+    }
+}
+
+struct Bucket {
+    jobs: Vec<Job>,
+    first: Instant,
+}
+
+/// Buckets admitted requests by `(op, n)` and flushes them as fused
+/// batches; owns the backpressure decision.
+pub struct Coalescer {
+    engine: Arc<Engine>,
+    cfg: BatchCfg,
+    buckets: Mutex<HashMap<(u8, u32), Bucket>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Coalescer {
+    pub fn new(engine: Arc<Engine>, cfg: BatchCfg) -> Arc<Self> {
+        Arc::new(Self {
+            engine,
+            cfg,
+            buckets: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Admit-or-shed, then bucket (or dispatch immediately when
+    /// coalescing is off / the bucket filled).  Called from IO threads;
+    /// never blocks on compute in Task mode.
+    pub fn submit(&self, req: Request, sink: Arc<dyn ReplySink>) {
+        let stats = self.engine.stats();
+        let pending = stats.pending();
+        let hard_cap = pending >= self.cfg.max_pending;
+        let soft_shed = self.cfg.shed
+            && pending >= self.cfg.max_batch
+            && self.engine.admission_headroom() == 0;
+        if hard_cap || soft_shed {
+            stats.shed.fetch_add(1, Ordering::Relaxed);
+            sink.send(&Response {
+                req_id: req.req_id,
+                status: Status::Shed,
+                deadline_missed: false,
+                n: req.n,
+                payload: Vec::new(),
+            });
+            return;
+        }
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        stats.pending.fetch_add(1, Ordering::AcqRel);
+        let deadline_us = if req.deadline_us > 0 {
+            req.deadline_us
+        } else {
+            self.cfg.default_deadline_us
+        };
+        let deadline =
+            (deadline_us > 0).then(|| Instant::now() + Duration::from_micros(deadline_us as u64));
+        let key = (req.op.code(), req.n);
+        let op = req.op;
+        let n = req.n;
+        let job = Job { req, sink, deadline };
+        if !self.cfg.coalesce || self.cfg.coalesce_us == 0 {
+            self.engine.dispatch(op, n, vec![job]);
+            return;
+        }
+        let full = {
+            let mut map = self.buckets.lock().expect("coalescer poisoned");
+            let bucket = map.entry(key).or_insert_with(|| Bucket {
+                jobs: Vec::with_capacity(self.cfg.max_batch),
+                first: Instant::now(),
+            });
+            if bucket.jobs.is_empty() {
+                bucket.first = Instant::now();
+            }
+            bucket.jobs.push(job);
+            if bucket.jobs.len() >= self.cfg.max_batch {
+                map.remove(&key)
+            } else {
+                None
+            }
+        };
+        match full {
+            // A full bucket flushes on the submitting thread — zero
+            // added latency, and Task-mode dispatch never blocks it.
+            Some(bucket) => self.engine.dispatch(op, n, bucket.jobs),
+            None => self.cv.notify_one(),
+        }
+    }
+
+    /// The batcher loop: park until the oldest bucket's window expires,
+    /// flush every due bucket, repeat.  Owned by one server thread.
+    pub fn run_batcher(&self) {
+        let window = Duration::from_micros(self.cfg.coalesce_us.max(1));
+        let mut map = self.buckets.lock().expect("coalescer poisoned");
+        loop {
+            let now = Instant::now();
+            let mut due = Vec::new();
+            let mut next: Option<Instant> = None;
+            map.retain(|&(opc, n), bucket| {
+                let flush_at = bucket.first + window;
+                if flush_at <= now || self.shutdown.load(Ordering::Acquire) {
+                    due.push((opc, n, std::mem::take(&mut bucket.jobs)));
+                    false
+                } else {
+                    next = Some(next.map_or(flush_at, |t| t.min(flush_at)));
+                    true
+                }
+            });
+            if !due.is_empty() {
+                drop(map);
+                for (opc, n, jobs) in due {
+                    let op = WireOp::from_code(opc).expect("bucket key is a valid op");
+                    self.engine.dispatch(op, n, jobs);
+                }
+                map = self.buckets.lock().expect("coalescer poisoned");
+                continue;
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let timeout = next
+                .map(|t| t.saturating_duration_since(now))
+                .unwrap_or(Duration::from_millis(50));
+            let (guard, _) = self
+                .cv
+                .wait_timeout(map, timeout)
+                .expect("coalescer poisoned");
+            map = guard;
+        }
+    }
+
+    /// Flush everything and stop the batcher.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}

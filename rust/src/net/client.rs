@@ -1,0 +1,373 @@
+//! Wire client: blocking request/response for tests and tools, plus the
+//! seeded open-loop load generator behind `hpxmp loadgen`.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::blaze::DynVector;
+use crate::net::frame::{encode_request, FrameBuf, Request, Response, REQ_ID_OFFSET, WireOp};
+use crate::net::server::{WireAddr, WireStream};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::RequestStats;
+use crate::util::timing::spin_wait;
+
+/// Default request sizes per op for loadgen / the wire bench: big enough
+/// that the kernel dominates framing, small enough that a single request
+/// cannot saturate the machine on its own.
+pub fn default_wire_n(op: WireOp) -> u32 {
+    match op {
+        WireOp::Daxpy | WireOp::VAdd => 4096,
+        WireOp::MatVec => 256,
+        WireOp::MMult => 64,
+    }
+}
+
+/// Blocking round-trip client (tests, oracles, simple tools).
+pub struct WireClient {
+    stream: WireStream,
+    buf: FrameBuf,
+    next_id: u64,
+}
+
+fn to_io<E: std::error::Error + Send + Sync + 'static>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+}
+
+impl WireClient {
+    pub fn connect(addr: &WireAddr) -> std::io::Result<Self> {
+        let stream = match addr {
+            WireAddr::Tcp(hp) => {
+                let s = std::net::TcpStream::connect(hp.as_str())?;
+                let _ = s.set_nodelay(true);
+                WireStream::Tcp(s)
+            }
+            WireAddr::Uds(p) => WireStream::Uds(UnixStream::connect(p)?),
+        };
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Self {
+            stream,
+            buf: FrameBuf::new(),
+            next_id: 1,
+        })
+    }
+
+    /// Send raw bytes on the connection (tests use this to inject
+    /// malformed or truncated frames).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(bytes)
+    }
+
+    /// Send one request without waiting (pipelining).
+    pub fn send(&mut self, req: &Request) -> std::io::Result<()> {
+        self.stream.write_all(&encode_request(req))
+    }
+
+    /// Receive the next response frame (blocking, read-timeout bounded).
+    pub fn recv(&mut self) -> std::io::Result<Response> {
+        loop {
+            if let Some(resp) = self.buf.next_response().map_err(to_io)? {
+                return Ok(resp);
+            }
+            let mut tmp = [0u8; 64 * 1024];
+            let k = self.stream.read(&mut tmp)?;
+            if k == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed connection",
+                ));
+            }
+            self.buf.extend(&tmp[..k]);
+        }
+    }
+
+    /// One synchronous round-trip.
+    pub fn request(
+        &mut self,
+        op: WireOp,
+        n: u32,
+        payload: Vec<f64>,
+        deadline_us: u32,
+    ) -> std::io::Result<Response> {
+        let req_id = self.next_id;
+        self.next_id += 1;
+        self.send(&Request {
+            req_id,
+            op,
+            deadline_us,
+            n,
+            payload,
+        })?;
+        loop {
+            let resp = self.recv()?;
+            if resp.req_id == req_id {
+                return Ok(resp);
+            }
+        }
+    }
+}
+
+/// Inter-arrival distribution for the open-loop generator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    /// Exponential gaps (Poisson arrivals) — bursty, the realistic case
+    /// coalescing exploits.
+    Poisson,
+    /// Gaps uniform in `[0, 2/λ)` — same mean rate, bounded burstiness.
+    Uniform,
+}
+
+impl Dist {
+    pub const CHOICES: &'static [&'static str] = &["poisson", "uniform"];
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "poisson" => Ok(Dist::Poisson),
+            "uniform" => Ok(Dist::Uniform),
+            _ => Err(format!("unknown dist {s:?} (choices: poisson, uniform)")),
+        }
+    }
+}
+
+/// Open-loop load-generator configuration (`hpxmp loadgen`).
+#[derive(Clone, Debug)]
+pub struct LoadgenCfg {
+    pub addr: WireAddr,
+    pub op: WireOp,
+    pub n: u32,
+    /// Total offered load across all connections, requests/second.
+    pub rate: f64,
+    pub conns: usize,
+    pub dist: Dist,
+    pub duration: Duration,
+    /// Deadline stamped on every request (0 = none).
+    pub deadline_us: u32,
+    pub seed: u64,
+}
+
+/// What a loadgen run measured.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    /// Merged per-connection request accounting (latencies from `Ok`
+    /// responses; shed / expired / failed counters).
+    pub stats: RequestStats,
+    /// Send-window length in seconds (rates are relative to this).
+    pub wall_s: f64,
+    /// Requests put on the wire.
+    pub sent: usize,
+    /// Requests never answered (connection died or drain timed out).
+    pub lost: usize,
+}
+
+impl LoadgenReport {
+    pub fn reqs_per_sec(&self) -> f64 {
+        self.stats.reqs_per_sec(self.wall_s)
+    }
+
+    pub fn goodput_per_sec(&self) -> f64 {
+        self.stats.goodput_per_sec(self.wall_s)
+    }
+}
+
+/// How long after the send window closes the receivers keep draining
+/// responses before declaring the remainder lost.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// Run the open-loop generator: `conns` connections, each with a sender
+/// thread pacing seeded arrivals (send times never wait for responses —
+/// that is what makes the load open-loop) and a receiver thread matching
+/// responses back to send timestamps.  Client-side threads are fine; the
+/// thread-count bound under test is the *server's*.
+pub fn run_loadgen(cfg: &LoadgenCfg) -> std::io::Result<LoadgenReport> {
+    assert!(cfg.conns > 0, "loadgen needs at least one connection");
+    assert!(cfg.rate > 0.0, "loadgen rate must be positive");
+    let per_conn_rate = cfg.rate / cfg.conns as f64;
+    let mut senders = Vec::new();
+    let mut receivers = Vec::new();
+    let sent_total = Arc::new(AtomicUsize::new(0));
+    for conn_idx in 0..cfg.conns {
+        let stream = match &cfg.addr {
+            WireAddr::Tcp(hp) => {
+                let s = std::net::TcpStream::connect(hp.as_str())?;
+                let _ = s.set_nodelay(true);
+                WireStream::Tcp(s)
+            }
+            WireAddr::Uds(p) => WireStream::Uds(UnixStream::connect(p)?),
+        };
+        let reader = stream.try_clone()?;
+        reader.set_read_timeout(Some(Duration::from_millis(50)))?;
+        let outstanding: Arc<Mutex<HashMap<u64, Instant>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let done = Arc::new(AtomicBool::new(false));
+
+        let cfg_s = cfg.clone();
+        let out_s = outstanding.clone();
+        let done_s = done.clone();
+        let sent_s = sent_total.clone();
+        senders.push(std::thread::spawn(move || {
+            sender_loop(stream, &cfg_s, conn_idx as u64, per_conn_rate, &out_s, &sent_s);
+            done_s.store(true, Ordering::Release);
+        }));
+
+        receivers.push(std::thread::spawn(move || {
+            receiver_loop(reader, &outstanding, &done)
+        }));
+    }
+    for s in senders {
+        let _ = s.join();
+    }
+    let mut report = LoadgenReport {
+        wall_s: cfg.duration.as_secs_f64(),
+        sent: 0,
+        ..Default::default()
+    };
+    for r in receivers {
+        let (stats, unanswered) = r.join().unwrap_or_default();
+        report.stats.merge(&stats);
+        report.lost += unanswered;
+    }
+    report.sent = sent_total.load(Ordering::Acquire);
+    Ok(report)
+}
+
+fn sender_loop(
+    mut stream: WireStream,
+    cfg: &LoadgenCfg,
+    conn_idx: u64,
+    per_conn_rate: f64,
+    outstanding: &Mutex<HashMap<u64, Instant>>,
+    sent_total: &AtomicUsize,
+) {
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ (conn_idx.wrapping_mul(0x9E37)));
+    // Template frame re-used for every request: only the request id is
+    // patched per send, so the hot loop does no re-encoding.
+    let payload_len = cfg.op.payload_len(cfg.n);
+    let payload = if cfg.op == WireOp::MMult {
+        vec![f64::from_bits(cfg.seed ^ conn_idx)]
+    } else {
+        DynVector::random(payload_len, cfg.seed ^ conn_idx)
+            .as_slice()
+            .to_vec()
+    };
+    let mut frame = encode_request(&Request {
+        req_id: 0,
+        op: cfg.op,
+        deadline_us: cfg.deadline_us,
+        n: cfg.n,
+        payload,
+    });
+    let mean_gap = 1.0 / per_conn_rate;
+    let start = Instant::now();
+    let mut t_next = 0.0f64;
+    let mut seq: u64 = 0;
+    loop {
+        let elapsed = start.elapsed().as_secs_f64();
+        if elapsed >= cfg.duration.as_secs_f64() {
+            break;
+        }
+        if elapsed < t_next {
+            let wait = t_next - elapsed;
+            // Hybrid pacing: coarse sleep, then spin the last sliver so
+            // arrival times track the schedule at µs granularity.
+            if wait > 2e-3 {
+                std::thread::sleep(Duration::from_secs_f64(wait - 1e-3));
+            }
+            spin_wait(Duration::from_secs_f64(
+                (t_next - start.elapsed().as_secs_f64()).max(0.0),
+            ));
+        }
+        let req_id = (conn_idx << 32) | seq;
+        frame[REQ_ID_OFFSET..REQ_ID_OFFSET + 8].copy_from_slice(&req_id.to_le_bytes());
+        outstanding
+            .lock()
+            .expect("outstanding map poisoned")
+            .insert(req_id, Instant::now());
+        if stream.write_all(&frame).is_err() {
+            // The send never made it; do not leave it looking lost.
+            outstanding
+                .lock()
+                .expect("outstanding map poisoned")
+                .remove(&req_id);
+            break;
+        }
+        sent_total.fetch_add(1, Ordering::Relaxed);
+        seq += 1;
+        let u = rng.next_f64();
+        let gap = match cfg.dist {
+            Dist::Poisson => -(1.0 - u).ln() * mean_gap,
+            Dist::Uniform => u * 2.0 * mean_gap,
+        };
+        t_next += gap;
+    }
+}
+
+fn receiver_loop(
+    mut stream: WireStream,
+    outstanding: &Mutex<HashMap<u64, Instant>>,
+    done: &AtomicBool,
+) -> (RequestStats, usize) {
+    let mut stats = RequestStats::new();
+    let mut buf = FrameBuf::new();
+    let mut tmp = vec![0u8; 64 * 1024];
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        if done.load(Ordering::Acquire) {
+            let dl = *drain_deadline.get_or_insert_with(|| Instant::now() + DRAIN_TIMEOUT);
+            let empty = outstanding
+                .lock()
+                .expect("outstanding map poisoned")
+                .is_empty();
+            if empty || Instant::now() > dl {
+                break;
+            }
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(k) => {
+                buf.extend(&tmp[..k]);
+                loop {
+                    match buf.next_response() {
+                        Ok(Some(resp)) => account(&mut stats, &resp, outstanding),
+                        Ok(None) => break,
+                        Err(_) => return (stats, drain_outstanding(outstanding)),
+                    }
+                }
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    (stats, drain_outstanding(outstanding))
+}
+
+fn drain_outstanding(outstanding: &Mutex<HashMap<u64, Instant>>) -> usize {
+    let mut map = outstanding.lock().expect("outstanding map poisoned");
+    let n = map.len();
+    map.clear();
+    n
+}
+
+fn account(
+    stats: &mut RequestStats,
+    resp: &Response,
+    outstanding: &Mutex<HashMap<u64, Instant>>,
+) {
+    let sent_at = outstanding
+        .lock()
+        .expect("outstanding map poisoned")
+        .remove(&resp.req_id);
+    let Some(sent_at) = sent_at else { return };
+    use crate::net::frame::Status;
+    match resp.status {
+        Status::Ok => stats.record(sent_at.elapsed().as_secs_f64(), resp.deadline_missed),
+        Status::Shed => stats.shed += 1,
+        Status::Expired => stats.deadline_misses += 1,
+        Status::Error | Status::BadRequest => stats.failed += 1,
+    }
+}

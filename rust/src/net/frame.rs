@@ -1,0 +1,551 @@
+//! Wire protocol for the kernel-serving front-end (ISSUE 9).
+//!
+//! Every frame is a little-endian `u32` length prefix (bytes *after* the
+//! prefix) followed by an 18-byte header and an f64 payload:
+//!
+//! ```text
+//! request:  len:u32 | req_id:u64 | op:u8 | flags:u8 | deadline_us:u32 | n:u32 | payload f64*
+//! response: len:u32 | req_id:u64 | status:u8 | flags:u8 | reserved:u32 | n:u32 | payload f64*
+//! ```
+//!
+//! * `op` selects the kernel ([`WireOp`]); `n` is the operand dimension
+//!   (vector length / square-matrix edge).
+//! * `deadline_us` is the request's wall-clock budget measured from
+//!   server-side *decode* (0 = none): the server charges queueing in the
+//!   coalescing window against it ([`crate::par::Policy::deadline_at`]).
+//! * Response `flags` bit 0 = the request completed but *after* its
+//!   deadline (a goodput miss, still carrying the payload).
+//!
+//! The second operand of every kernel is a **cached server-side operand**
+//! derived deterministically from `(op, n)` via [`operand_seed`], so a
+//! client can compute the bitwise-exact expected reply locally (the
+//! loopback oracle in `tests/serve_wire.rs`) and the server amortizes one
+//! operand (and for `MMult` one packed-B buffer) across every request of
+//! that shape — the "one packed-operand pass" half of coalescing.
+//!
+//! Malformed frames (unknown op, dimension over the per-op cap, length
+//! disagreeing with `payload_len(op, n)`, oversized prefix) decode to
+//! [`FrameError`]; the server answers [`Status::BadRequest`] when the
+//! header was readable and drops the connection either way — a framing
+//! error leaves the byte stream unsynchronized.
+
+/// Frame length cap (bytes after the prefix): rejects absurd prefixes
+/// before any allocation happens.  Large enough for an `MMult` reply at
+/// the dimension cap (512² doubles = 2 MiB) with room to spare.
+pub const MAX_FRAME_LEN: u32 = 8 << 20;
+
+/// Bytes in the fixed header after the length prefix.
+pub const HDR_LEN: usize = 18;
+
+/// The kernels the wire protocol serves — the same four the in-process
+/// serving mix cycles through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WireOp {
+    /// `y = b_cached + 3.0 * x` (payload: x, reply: y; n doubles each).
+    Daxpy,
+    /// `y = x + b_cached` (payload: x, reply: y).
+    VAdd,
+    /// `y = A_cached · x` (payload: x of n, reply: y of n; A is n×n).
+    MatVec,
+    /// `C = A · B_cached` (payload: one double carrying the u64 seed A is
+    /// generated from, reply: C of n²; packed-kernel path).
+    MMult,
+}
+
+impl WireOp {
+    pub const ALL: [WireOp; 4] = [WireOp::Daxpy, WireOp::VAdd, WireOp::MatVec, WireOp::MMult];
+
+    pub const CHOICES: &[(&str, WireOp)] = &[
+        ("daxpy", WireOp::Daxpy),
+        ("vadd", WireOp::VAdd),
+        ("matvec", WireOp::MatVec),
+        ("mmult", WireOp::MMult),
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireOp::Daxpy => "daxpy",
+            WireOp::VAdd => "vadd",
+            WireOp::MatVec => "matvec",
+            WireOp::MMult => "mmult",
+        }
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            WireOp::Daxpy => 0,
+            WireOp::VAdd => 1,
+            WireOp::MatVec => 2,
+            WireOp::MMult => 3,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(WireOp::Daxpy),
+            1 => Some(WireOp::VAdd),
+            2 => Some(WireOp::MatVec),
+            3 => Some(WireOp::MMult),
+            _ => None,
+        }
+    }
+
+    /// Largest accepted dimension, per op: bounds both the decode
+    /// allocation and the reply size (`MMult` replies are n²).
+    pub fn max_n(&self) -> u32 {
+        match self {
+            WireOp::Daxpy | WireOp::VAdd => 1 << 20,
+            WireOp::MatVec => 1 << 12,
+            WireOp::MMult => 512,
+        }
+    }
+
+    /// Request payload length in f64 elements for dimension `n`.
+    pub fn payload_len(&self, n: u32) -> usize {
+        match self {
+            WireOp::Daxpy | WireOp::VAdd | WireOp::MatVec => n as usize,
+            WireOp::MMult => 1,
+        }
+    }
+
+    /// Reply payload length in f64 elements for dimension `n`.
+    pub fn reply_len(&self, n: u32) -> usize {
+        match self {
+            WireOp::Daxpy | WireOp::VAdd | WireOp::MatVec => n as usize,
+            WireOp::MMult => n as usize * n as usize,
+        }
+    }
+}
+
+/// Seed the server derives the cached second operand for `(op, n)` from —
+/// shared with the client-side oracle so expected replies are computable
+/// without a server round-trip.
+pub fn operand_seed(op: WireOp, n: u32) -> u64 {
+    0xC0FF_EE00_0000_0000 ^ ((op.code() as u64) << 32) ^ n as u64
+}
+
+/// Response status byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Computed; payload attached.
+    Ok,
+    /// Rejected by backpressure (admission headroom exhausted or the
+    /// pending cap hit) — never computed, no payload.
+    Shed,
+    /// The frame decoded far enough to answer but was invalid.
+    BadRequest,
+    /// The batch died (injected fault / panic isolation) — no payload.
+    Error,
+    /// The request's deadline expired before (or while) computing and the
+    /// server abandoned it — no payload.
+    Expired,
+}
+
+impl Status {
+    pub fn code(&self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Shed => 1,
+            Status::BadRequest => 2,
+            Status::Error => 3,
+            Status::Expired => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Shed),
+            2 => Some(Status::BadRequest),
+            3 => Some(Status::Error),
+            4 => Some(Status::Expired),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded kernel request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub req_id: u64,
+    pub op: WireOp,
+    /// Wall-clock budget in µs from server-side decode; 0 = none.
+    pub deadline_us: u32,
+    /// Operand dimension (vector length / matrix edge).
+    pub n: u32,
+    pub payload: Vec<f64>,
+}
+
+/// One response frame.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub req_id: u64,
+    pub status: Status,
+    /// Completed, but after its deadline (goodput miss).
+    pub deadline_missed: bool,
+    pub n: u32,
+    pub payload: Vec<f64>,
+}
+
+/// Why a frame failed to decode.  `req_id` is attached when the header
+/// was readable, so the server can still address a `BadRequest` reply.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Length prefix exceeds [`MAX_FRAME_LEN`].
+    Oversized { len: u32 },
+    /// Frame shorter than the fixed header.
+    Truncated,
+    /// Unknown op code.
+    BadOp { req_id: u64, code: u8 },
+    /// Dimension 0 or over the per-op cap.
+    BadDim { req_id: u64, n: u32 },
+    /// Frame length disagrees with `payload_len(op, n)`.
+    LengthMismatch { req_id: u64, expect: usize, got: usize },
+    /// Unknown status code (client-side decode).
+    BadStatus { req_id: u64, code: u8 },
+}
+
+impl FrameError {
+    /// The request id to address a `BadRequest` reply to, if the header
+    /// got far enough to carry one.
+    pub fn req_id(&self) -> Option<u64> {
+        match *self {
+            FrameError::Oversized { .. } | FrameError::Truncated => None,
+            FrameError::BadOp { req_id, .. }
+            | FrameError::BadDim { req_id, .. }
+            | FrameError::LengthMismatch { req_id, .. }
+            | FrameError::BadStatus { req_id, .. } => Some(req_id),
+        }
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { len } => write!(f, "frame length {len} over cap"),
+            FrameError::Truncated => write!(f, "frame shorter than header"),
+            FrameError::BadOp { code, .. } => write!(f, "unknown op code {code}"),
+            FrameError::BadDim { n, .. } => write!(f, "dimension {n} out of range"),
+            FrameError::LengthMismatch { expect, got, .. } => {
+                write!(f, "payload length {got} != expected {expect}")
+            }
+            FrameError::BadStatus { code, .. } => write!(f, "unknown status code {code}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn put_f64s(out: &mut Vec<u8>, vals: &[f64]) {
+    out.reserve(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn get_f64s(bytes: &[u8]) -> Vec<f64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+        .collect()
+}
+
+/// Encode a request into a fresh byte buffer (prefix included).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let body_len = HDR_LEN + req.payload.len() * 8;
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.extend_from_slice(&req.req_id.to_le_bytes());
+    out.push(req.op.code());
+    out.push(0); // request flags: reserved
+    out.extend_from_slice(&req.deadline_us.to_le_bytes());
+    out.extend_from_slice(&req.n.to_le_bytes());
+    put_f64s(&mut out, &req.payload);
+    out
+}
+
+/// Encode a response into a fresh byte buffer (prefix included).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let body_len = HDR_LEN + resp.payload.len() * 8;
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.extend_from_slice(&resp.req_id.to_le_bytes());
+    out.push(resp.status.code());
+    out.push(resp.deadline_missed as u8);
+    out.extend_from_slice(&0u32.to_le_bytes()); // reserved
+    out.extend_from_slice(&resp.n.to_le_bytes());
+    put_f64s(&mut out, &resp.payload);
+    out
+}
+
+/// Byte offset of `req_id` within an encoded frame — lets the load
+/// generator patch a pre-encoded template per send instead of re-encoding
+/// the payload every request.
+pub const REQ_ID_OFFSET: usize = 4;
+
+struct Header {
+    req_id: u64,
+    b0: u8,
+    b1: u8,
+    w0: u32,
+    n: u32,
+}
+
+fn split_header(body: &[u8]) -> Result<(Header, &[u8]), FrameError> {
+    if body.len() < HDR_LEN {
+        return Err(FrameError::Truncated);
+    }
+    let hdr = Header {
+        req_id: u64::from_le_bytes(body[0..8].try_into().expect("8 bytes")),
+        b0: body[8],
+        b1: body[9],
+        w0: u32::from_le_bytes(body[10..14].try_into().expect("4 bytes")),
+        n: u32::from_le_bytes(body[14..18].try_into().expect("4 bytes")),
+    };
+    Ok((hdr, &body[HDR_LEN..]))
+}
+
+/// Decode one complete request frame body (the bytes after the length
+/// prefix).
+pub fn decode_request(body: &[u8]) -> Result<Request, FrameError> {
+    let (h, payload) = split_header(body)?;
+    let op = WireOp::from_code(h.b0).ok_or(FrameError::BadOp {
+        req_id: h.req_id,
+        code: h.b0,
+    })?;
+    if h.n == 0 || h.n > op.max_n() {
+        return Err(FrameError::BadDim {
+            req_id: h.req_id,
+            n: h.n,
+        });
+    }
+    let expect = op.payload_len(h.n) * 8;
+    if payload.len() != expect {
+        return Err(FrameError::LengthMismatch {
+            req_id: h.req_id,
+            expect,
+            got: payload.len(),
+        });
+    }
+    Ok(Request {
+        req_id: h.req_id,
+        op,
+        deadline_us: h.w0,
+        n: h.n,
+        payload: get_f64s(payload),
+    })
+}
+
+/// Decode one complete response frame body (client side).
+pub fn decode_response(body: &[u8]) -> Result<Response, FrameError> {
+    let (h, payload) = split_header(body)?;
+    let status = Status::from_code(h.b0).ok_or(FrameError::BadStatus {
+        req_id: h.req_id,
+        code: h.b0,
+    })?;
+    Ok(Response {
+        req_id: h.req_id,
+        status,
+        deadline_missed: h.b1 & 1 != 0,
+        n: h.n,
+        payload: get_f64s(payload),
+    })
+}
+
+/// Incremental frame reassembly over a byte stream: feed reads in with
+/// [`FrameBuf::extend`], pop complete frame bodies with
+/// [`FrameBuf::next_body`].  A `FrameError` from the length prefix
+/// (oversized) is sticky — the stream has lost sync and the connection
+/// must be dropped.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`; compacted once it outgrows the tail.
+    pos: usize,
+}
+
+impl FrameBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn extend(&mut self, bytes: &[u8]) {
+        // Compact before growing: keeps the buffer bounded by the frame
+        // size rather than the connection's lifetime traffic.
+        if self.pos > 0 && self.pos >= self.buf.len().saturating_sub(self.pos) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered but not yet consumed.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pop the next complete frame body, `Ok(None)` when more bytes are
+    /// needed.  The returned slice excludes the length prefix.
+    pub fn next_body(&mut self) -> Result<Option<&[u8]>, FrameError> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(avail[0..4].try_into().expect("4 bytes"));
+        if len > MAX_FRAME_LEN {
+            return Err(FrameError::Oversized { len });
+        }
+        if (len as usize) < HDR_LEN {
+            // Even an empty-payload frame carries the full header.
+            return Err(FrameError::Truncated);
+        }
+        if avail.len() < 4 + len as usize {
+            return Ok(None);
+        }
+        let start = self.pos + 4;
+        self.pos = start + len as usize;
+        Ok(Some(&self.buf[start..start + len as usize]))
+    }
+
+    /// Pop and decode the next complete request frame.
+    pub fn next_request(&mut self) -> Result<Option<Request>, FrameError> {
+        match self.next_body()? {
+            None => Ok(None),
+            Some(body) => decode_request(body).map(Some),
+        }
+    }
+
+    /// Pop and decode the next complete response frame.
+    pub fn next_response(&mut self) -> Result<Option<Response>, FrameError> {
+        match self.next_body()? {
+            None => Ok(None),
+            Some(body) => decode_response(body).map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request(op: WireOp, n: u32) -> Request {
+        Request {
+            req_id: 0xDEAD_BEEF_0000_0001,
+            op,
+            deadline_us: 1500,
+            n,
+            payload: (0..op.payload_len(n)).map(|i| i as f64 * 0.5).collect(),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_every_op() {
+        for op in WireOp::ALL {
+            let req = sample_request(op, 8);
+            let bytes = encode_request(&req);
+            let mut fb = FrameBuf::new();
+            fb.extend(&bytes);
+            let got = fb.next_request().expect("decode").expect("complete");
+            assert_eq!(got.req_id, req.req_id);
+            assert_eq!(got.op, op);
+            assert_eq!(got.deadline_us, 1500);
+            assert_eq!(got.n, 8);
+            assert_eq!(got.payload, req.payload);
+            assert!(fb.next_request().expect("clean").is_none());
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_with_miss_flag() {
+        let resp = Response {
+            req_id: 7,
+            status: Status::Ok,
+            deadline_missed: true,
+            n: 3,
+            payload: vec![1.0, 2.0, 3.0],
+        };
+        let mut fb = FrameBuf::new();
+        fb.extend(&encode_response(&resp));
+        let got = fb.next_response().expect("decode").expect("complete");
+        assert_eq!(got.req_id, 7);
+        assert_eq!(got.status, Status::Ok);
+        assert!(got.deadline_missed);
+        assert_eq!(got.payload, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn byte_at_a_time_reassembly() {
+        let bytes = encode_request(&sample_request(WireOp::Daxpy, 4));
+        let mut fb = FrameBuf::new();
+        for (i, b) in bytes.iter().enumerate() {
+            fb.extend(std::slice::from_ref(b));
+            let r = fb.next_request().expect("no error mid-stream");
+            assert_eq!(r.is_some(), i == bytes.len() - 1, "byte {i}");
+        }
+    }
+
+    #[test]
+    fn two_pipelined_frames_pop_in_order() {
+        let mut a = sample_request(WireOp::VAdd, 4);
+        a.req_id = 1;
+        let mut b = sample_request(WireOp::MatVec, 4);
+        b.req_id = 2;
+        let mut fb = FrameBuf::new();
+        fb.extend(&encode_request(&a));
+        fb.extend(&encode_request(&b));
+        assert_eq!(fb.next_request().unwrap().unwrap().req_id, 1);
+        assert_eq!(fb.next_request().unwrap().unwrap().req_id, 2);
+        assert!(fb.next_request().unwrap().is_none());
+        assert_eq!(fb.pending(), 0);
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected() {
+        // Unknown op.
+        let mut bytes = encode_request(&sample_request(WireOp::Daxpy, 4));
+        bytes[REQ_ID_OFFSET + 8] = 200;
+        let mut fb = FrameBuf::new();
+        fb.extend(&bytes);
+        assert!(matches!(
+            fb.next_request(),
+            Err(FrameError::BadOp { code: 200, .. })
+        ));
+
+        // Oversized length prefix: rejected before allocation.
+        let mut fb = FrameBuf::new();
+        fb.extend(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        assert!(matches!(fb.next_body(), Err(FrameError::Oversized { .. })));
+
+        // Length prefix shorter than the header.
+        let mut fb = FrameBuf::new();
+        fb.extend(&4u32.to_le_bytes());
+        fb.extend(&[0u8; 4]);
+        assert!(matches!(fb.next_body(), Err(FrameError::Truncated)));
+
+        // Dimension over the per-op cap.
+        let mut req = sample_request(WireOp::MMult, 4);
+        req.n = WireOp::MMult.max_n() + 1;
+        let mut fb = FrameBuf::new();
+        fb.extend(&encode_request(&req));
+        assert!(matches!(fb.next_request(), Err(FrameError::BadDim { .. })));
+
+        // Payload length disagreeing with (op, n).
+        let mut req = sample_request(WireOp::Daxpy, 4);
+        req.n = 5; // header says 5, payload carries 4
+        let mut fb = FrameBuf::new();
+        fb.extend(&encode_request(&req));
+        let err = fb.next_request().unwrap_err();
+        assert!(matches!(err, FrameError::LengthMismatch { .. }));
+        assert_eq!(err.req_id(), Some(req.req_id));
+    }
+
+    #[test]
+    fn operand_seed_distinguishes_ops_and_sizes() {
+        let mut seen = std::collections::HashSet::new();
+        for op in WireOp::ALL {
+            for n in [4u32, 8, 64] {
+                assert!(seen.insert(operand_seed(op, n)), "seed collision");
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Socket front-end: serve kernels at wire speed (ISSUE 9).
+//!
+//! Layering of the wire path, socket to scheduler:
+//!
+//! - [`frame`] — the length-prefixed request/response protocol and the
+//!   incremental [`frame::FrameBuf`] decoder.
+//! - [`batch`] — same-kernel request coalescing, fused batch execution
+//!   as futurized pipelines on the runtime, and admission-coupled
+//!   backpressure.
+//! - [`server`] — TCP/UDS listeners, a constant-size acceptor/IO thread
+//!   set parked on `poll(2)` (no thread-per-connection), per-connection
+//!   reply writers.
+//! - [`client`] — blocking [`client::WireClient`] for tests/tools and
+//!   the seeded open-loop load generator behind `hpxmp loadgen`.
+
+pub mod batch;
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use batch::{expected_reply, BatchCfg, Coalescer, Engine, ReplySink, WireStats};
+pub use client::{
+    default_wire_n, run_loadgen, Dist, LoadgenCfg, LoadgenReport, WireClient,
+};
+pub use frame::{Request, Response, Status, WireOp};
+pub use server::{WireAddr, WireServer};

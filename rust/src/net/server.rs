@@ -1,0 +1,574 @@
+//! The wire server: TCP/UDS listeners feeding the coalescing engine.
+//!
+//! Thread model (the "no thread-per-connection" acceptance bar): the
+//! server runs a **constant** number of threads regardless of how many
+//! connections are open — one acceptor per listener parked on
+//! `poll(2)`, a small fixed pool of IO shards (each owning a subset of
+//! connections, parked on `poll(2)` across all of them plus a self-pipe
+//! for new-connection wakeups), and one batcher draining the coalescing
+//! windows.  Compute never happens on these threads: decoded requests
+//! become futurized pipelines on the runtime ([`super::batch`]), and
+//! responses are written by join continuations through per-connection
+//! [`ConnTx`] sinks.
+//!
+//! Sockets stay in blocking mode; readiness is established by `poll`
+//! before every single `read`, so a read returns whatever bytes are
+//! there without blocking the shard.  Writes are blocking with a short
+//! `SO_SNDTIMEO` so a client that stops reading degrades into a dead
+//! connection, not a wedged worker.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::net::batch::{BatchCfg, Coalescer, Engine, ReplySink, WireStats};
+use crate::net::frame::{encode_response, FrameBuf, Response, Status};
+use crate::omp::OmpRuntime;
+
+/// Listen / connect address: `tcp:host:port`, `uds:/path`, or a bare
+/// `host:port` (TCP).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireAddr {
+    Tcp(String),
+    Uds(PathBuf),
+}
+
+impl WireAddr {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if let Some(rest) = s.strip_prefix("uds:") {
+            if rest.is_empty() {
+                return Err(format!("empty uds path in {s:?}"));
+            }
+            return Ok(WireAddr::Uds(PathBuf::from(rest)));
+        }
+        let hostport = s.strip_prefix("tcp:").unwrap_or(s);
+        if hostport.rsplit_once(':').is_none() {
+            return Err(format!("expected tcp:host:port or uds:/path, got {s:?}"));
+        }
+        Ok(WireAddr::Tcp(hostport.to_string()))
+    }
+}
+
+impl std::fmt::Display for WireAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireAddr::Tcp(hp) => write!(f, "tcp:{hp}"),
+            WireAddr::Uds(p) => write!(f, "uds:{}", p.display()),
+        }
+    }
+}
+
+/// A connected stream of either family, unified so shards and the
+/// client speak one type.
+pub enum WireStream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl WireStream {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            WireStream::Tcp(s) => s.as_raw_fd(),
+            WireStream::Uds(s) => s.as_raw_fd(),
+        }
+    }
+
+    pub(crate) fn try_clone(&self) -> std::io::Result<WireStream> {
+        Ok(match self {
+            WireStream::Tcp(s) => WireStream::Tcp(s.try_clone()?),
+            WireStream::Uds(s) => WireStream::Uds(s.try_clone()?),
+        })
+    }
+
+    pub(crate) fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.set_read_timeout(t),
+            WireStream::Uds(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.set_write_timeout(t),
+            WireStream::Uds(s) => s.set_write_timeout(t),
+        }
+    }
+
+    fn set_nodelay(&self) {
+        if let WireStream::Tcp(s) = self {
+            let _ = s.set_nodelay(true);
+        }
+    }
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.read(buf),
+            WireStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.write(buf),
+            WireStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.flush(),
+            WireStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// Per-connection reply writer — the [`ReplySink`] handed to every job
+/// submitted from this connection.  Join continuations (worker threads)
+/// and the shard (BadRequest replies) serialize on the mutex; a failed
+/// write marks the sink dead so later responses for a dropped client
+/// are discarded instead of wedging anything.
+struct ConnTx {
+    stream: Mutex<WireStream>,
+    alive: AtomicBool,
+}
+
+impl ConnTx {
+    fn new(stream: WireStream) -> Self {
+        Self {
+            stream: Mutex::new(stream),
+            alive: AtomicBool::new(true),
+        }
+    }
+}
+
+impl ReplySink for ConnTx {
+    fn send(&self, resp: &Response) {
+        if !self.alive.load(Ordering::Acquire) {
+            return;
+        }
+        let bytes = encode_response(resp);
+        let mut s = self.stream.lock().expect("conn writer poisoned");
+        if s.write_all(&bytes).and_then(|_| s.flush()).is_err() {
+            self.alive.store(false, Ordering::Release);
+        }
+    }
+}
+
+enum WireListener {
+    Tcp(TcpListener),
+    Uds(UnixListener),
+}
+
+impl WireListener {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            WireListener::Tcp(l) => l.as_raw_fd(),
+            WireListener::Uds(l) => l.as_raw_fd(),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<WireStream> {
+        match self {
+            WireListener::Tcp(l) => l.accept().map(|(s, _)| WireStream::Tcp(s)),
+            WireListener::Uds(l) => l.accept().map(|(s, _)| WireStream::Uds(s)),
+        }
+    }
+}
+
+/// New connections handed from an acceptor to an IO shard; the self-pipe
+/// write interrupts the shard's `poll`.
+struct ShardInbox {
+    queue: Mutex<Vec<WireStream>>,
+    wake_wr: RawFd,
+}
+
+impl ShardInbox {
+    fn push(&self, s: WireStream) {
+        self.queue.lock().expect("shard inbox poisoned").push(s);
+        let b = [1u8];
+        // SAFETY: wake_wr is a pipe fd owned by the server for its
+        // whole lifetime; a failed/partial write only costs a wakeup
+        // that the shard's poll timeout covers anyway.
+        unsafe {
+            libc::write(self.wake_wr, b.as_ptr() as *const libc::c_void, 1);
+        }
+    }
+}
+
+struct Conn {
+    stream: WireStream,
+    buf: FrameBuf,
+    tx: Arc<ConnTx>,
+}
+
+/// Running wire server; dropping it shuts everything down and joins all
+/// threads.
+pub struct WireServer {
+    coalescer: Arc<Coalescer>,
+    stats: Arc<WireStats>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    tcp_addrs: Vec<SocketAddr>,
+    uds_paths: Vec<PathBuf>,
+    wake_fds: Vec<(RawFd, RawFd)>,
+}
+
+/// Fixed IO-shard count: connection parallelism on the read side without
+/// scaling threads with connections.
+const IO_SHARDS: usize = 2;
+
+impl WireServer {
+    /// Bind every address and start the acceptor/IO/batcher threads.
+    pub fn start(
+        rt: Arc<OmpRuntime>,
+        addrs: &[WireAddr],
+        cfg: BatchCfg,
+    ) -> std::io::Result<WireServer> {
+        let stats = Arc::new(WireStats::default());
+        let engine = Arc::new(Engine::new(rt, cfg, stats.clone()));
+        let coalescer = Coalescer::new(engine, cfg);
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let mut listeners = Vec::new();
+        let mut tcp_addrs = Vec::new();
+        let mut uds_paths = Vec::new();
+        for addr in addrs {
+            match addr {
+                WireAddr::Tcp(hp) => {
+                    let l = TcpListener::bind(hp.as_str())?;
+                    tcp_addrs.push(l.local_addr()?);
+                    listeners.push(WireListener::Tcp(l));
+                }
+                WireAddr::Uds(p) => {
+                    // A stale socket file from a previous run would make
+                    // bind fail; only ever unlink the path we then bind.
+                    let _ = std::fs::remove_file(p);
+                    listeners.push(WireListener::Uds(UnixListener::bind(p)?));
+                    uds_paths.push(p.clone());
+                }
+            }
+        }
+
+        let mut wake_fds = Vec::new();
+        let mut shards = Vec::new();
+        for _ in 0..IO_SHARDS {
+            let mut fds = [0 as RawFd; 2];
+            // SAFETY: plain pipe creation; fds are recorded and closed in
+            // shutdown().
+            let rc = unsafe { libc::pipe(fds.as_mut_ptr()) };
+            if rc != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            wake_fds.push((fds[0], fds[1]));
+            shards.push(Arc::new(ShardInbox {
+                queue: Mutex::new(Vec::new()),
+                wake_wr: fds[1],
+            }));
+        }
+
+        let mut threads = Vec::new();
+        let next_shard = Arc::new(AtomicUsize::new(0));
+        for l in listeners {
+            let shards = shards.clone();
+            let next = next_shard.clone();
+            let stop = shutdown.clone();
+            let stats = stats.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("hpxmp-wire-accept".into())
+                    .spawn(move || accept_loop(l, &shards, &next, &stop, &stats))
+                    .expect("spawn acceptor"),
+            );
+        }
+        for (i, inbox) in shards.into_iter().enumerate() {
+            let wake_rd = wake_fds[i].0;
+            let coal = coalescer.clone();
+            let stop = shutdown.clone();
+            let stats = stats.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("hpxmp-wire-io{i}"))
+                    .spawn(move || shard_loop(&inbox, wake_rd, &coal, &stop, &stats))
+                    .expect("spawn io shard"),
+            );
+        }
+        {
+            let coal = coalescer.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("hpxmp-wire-batch".into())
+                    .spawn(move || coal.run_batcher())
+                    .expect("spawn batcher"),
+            );
+        }
+
+        Ok(WireServer {
+            coalescer,
+            stats,
+            shutdown,
+            threads,
+            tcp_addrs,
+            uds_paths,
+            wake_fds,
+        })
+    }
+
+    /// Convenience: one TCP listener (ephemeral port with `:0`).
+    pub fn start_tcp(
+        rt: Arc<OmpRuntime>,
+        hostport: &str,
+        cfg: BatchCfg,
+    ) -> std::io::Result<WireServer> {
+        Self::start(rt, &[WireAddr::Tcp(hostport.to_string())], cfg)
+    }
+
+    /// Bound address of the first TCP listener.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.tcp_addrs.first().copied()
+    }
+
+    pub fn stats(&self) -> &Arc<WireStats> {
+        &self.stats
+    }
+
+    /// Requests queued or in flight right now (0 once drained).
+    pub fn pending(&self) -> usize {
+        self.stats.pending()
+    }
+
+    /// Server threads (constant in the number of connections — the
+    /// bound `tests/serve_wire.rs` asserts).
+    pub fn thread_count(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Block until every admitted request has been answered, up to
+    /// `timeout`; returns whether the drain completed.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let start = std::time::Instant::now();
+        while self.stats.pending() > 0 {
+            if start.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        true
+    }
+
+    fn stop(&mut self) {
+        if self.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.coalescer.shutdown();
+        for &(_, wr) in &self.wake_fds {
+            let b = [1u8];
+            // SAFETY: pipe write ends are open until the join below.
+            unsafe {
+                libc::write(wr, b.as_ptr() as *const libc::c_void, 1);
+            }
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        for &(rd, wr) in &self.wake_fds {
+            // SAFETY: closing fds this server created; threads are joined.
+            unsafe {
+                libc::close(rd);
+                libc::close(wr);
+            }
+        }
+        self.wake_fds.clear();
+        for p in &self.uds_paths {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: WireListener,
+    shards: &[Arc<ShardInbox>],
+    next: &AtomicUsize,
+    stop: &AtomicBool,
+    stats: &WireStats,
+) {
+    let fd = listener.as_raw_fd();
+    while !stop.load(Ordering::Acquire) {
+        let mut pfd = libc::pollfd {
+            fd,
+            events: libc::POLLIN,
+            revents: 0,
+        };
+        // SAFETY: polling one valid listener fd with a bounded timeout.
+        let rc = unsafe { libc::poll(&mut pfd, 1, 100) };
+        if rc <= 0 || pfd.revents & libc::POLLIN == 0 {
+            continue;
+        }
+        match listener.accept() {
+            Ok(stream) => {
+                stream.set_nodelay();
+                stats.accepted.fetch_add(1, Ordering::Relaxed);
+                let i = next.fetch_add(1, Ordering::Relaxed) % shards.len();
+                shards[i].push(stream);
+            }
+            Err(_) => continue,
+        }
+    }
+}
+
+fn shard_loop(
+    inbox: &ShardInbox,
+    wake_rd: RawFd,
+    coal: &Coalescer,
+    stop: &AtomicBool,
+    stats: &WireStats,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut read_buf = vec![0u8; 64 * 1024];
+    loop {
+        for stream in inbox.queue.lock().expect("shard inbox poisoned").drain(..) {
+            match stream.try_clone() {
+                Ok(write_half) => {
+                    let _ = write_half.set_write_timeout(Some(Duration::from_secs(1)));
+                    conns.push(Conn {
+                        stream,
+                        buf: FrameBuf::new(),
+                        tx: Arc::new(ConnTx::new(write_half)),
+                    });
+                }
+                Err(_) => drop(stream),
+            }
+        }
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+
+        let mut pfds = Vec::with_capacity(conns.len() + 1);
+        pfds.push(libc::pollfd {
+            fd: wake_rd,
+            events: libc::POLLIN,
+            revents: 0,
+        });
+        for c in &conns {
+            pfds.push(libc::pollfd {
+                fd: c.stream.as_raw_fd(),
+                events: libc::POLLIN,
+                revents: 0,
+            });
+        }
+        // SAFETY: every fd in pfds is owned by this shard (self-pipe +
+        // live connections) and the timeout is bounded.
+        let rc = unsafe { libc::poll(pfds.as_mut_ptr(), pfds.len() as libc::nfds_t, 100) };
+        if rc <= 0 {
+            continue;
+        }
+        if pfds[0].revents & libc::POLLIN != 0 {
+            let mut sink = [0u8; 64];
+            // SAFETY: draining the self-pipe this shard owns.
+            unsafe {
+                libc::read(wake_rd, sink.as_mut_ptr() as *mut libc::c_void, sink.len());
+            }
+        }
+        // pfds[idx + 1] stays aligned with conns[idx] for the whole
+        // pass; removals are applied afterwards (reverse index order so
+        // swap_remove never moves a not-yet-removed entry).
+        let mut dead = Vec::new();
+        for (idx, conn) in conns.iter_mut().enumerate() {
+            let revents = pfds[idx + 1].revents;
+            let ready = revents & (libc::POLLIN | libc::POLLHUP | libc::POLLERR) != 0;
+            if ready && !conn_readable(conn, coal, stats, &mut read_buf) {
+                dead.push(idx);
+            }
+        }
+        for &idx in dead.iter().rev() {
+            conns.swap_remove(idx);
+        }
+    }
+}
+
+/// One readiness-gated read plus frame decode; returns `false` when the
+/// connection should be dropped (EOF, IO error, or protocol violation).
+fn conn_readable(
+    conn: &mut Conn,
+    coal: &Coalescer,
+    stats: &WireStats,
+    scratch: &mut [u8],
+) -> bool {
+    match conn.stream.read(scratch) {
+        Ok(0) => false,
+        Ok(k) => {
+            conn.buf.extend(&scratch[..k]);
+            loop {
+                match conn.buf.next_request() {
+                    Ok(Some(req)) => {
+                        let sink: Arc<dyn ReplySink> = conn.tx.clone();
+                        coal.submit(req, sink);
+                    }
+                    Ok(None) => break true,
+                    Err(e) => {
+                        stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                        // Tell the client what it did wrong when the
+                        // frame still carried an id, then hang up — a
+                        // desynced stream cannot be trusted further.
+                        if let Some(req_id) = e.req_id() {
+                            conn.tx.send(&Response {
+                                req_id,
+                                status: Status::BadRequest,
+                                deadline_missed: false,
+                                n: 0,
+                                payload: Vec::new(),
+                            });
+                        }
+                        break false;
+                    }
+                }
+            }
+        }
+        Err(ref e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::Interrupted =>
+        {
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_addr_parses_all_forms() {
+        assert_eq!(
+            WireAddr::parse("tcp:127.0.0.1:8080").unwrap(),
+            WireAddr::Tcp("127.0.0.1:8080".into())
+        );
+        assert_eq!(
+            WireAddr::parse("127.0.0.1:0").unwrap(),
+            WireAddr::Tcp("127.0.0.1:0".into())
+        );
+        assert_eq!(
+            WireAddr::parse("uds:/tmp/x.sock").unwrap(),
+            WireAddr::Uds(PathBuf::from("/tmp/x.sock"))
+        );
+        assert!(WireAddr::parse("uds:").is_err());
+        assert!(WireAddr::parse("nonsense").is_err());
+        assert_eq!(WireAddr::parse("uds:/a b").unwrap().to_string(), "uds:/a b");
+    }
+}

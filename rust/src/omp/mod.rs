@@ -140,6 +140,16 @@ impl OmpRuntime {
         self.reserved_workers.load(Ordering::Relaxed)
     }
 
+    /// Worker slots the admission budget has *not* reserved yet — the
+    /// headroom gauge the wire front-end's backpressure consults before
+    /// queueing another batch (ISSUE 9): 0 means every worker is claimed
+    /// by an in-flight top-level region and new work will only queue.
+    pub fn admission_headroom(&self) -> usize {
+        self.sched
+            .workers()
+            .saturating_sub(self.reserved_workers.load(Ordering::Relaxed))
+    }
+
     /// Contained panics inside parallel-region member bodies (the team
     /// joined anyway and went back to the pool; see `team::implicit_body`).
     pub fn region_panics(&self) -> usize {

@@ -41,7 +41,7 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::amt::cancel::CancelToken;
 use crate::amt::future::{when_all, Future, Outcome, Promise};
@@ -305,6 +305,12 @@ pub struct Policy<'e> {
     /// Wall-clock budget measured from algorithm entry; expired → the
     /// algorithm abandons un-started chunks (ISSUE 6).
     deadline: Option<Duration>,
+    /// *Absolute* deadline instant (ISSUE 9: wire requests carry their
+    /// deadline from arrival, not from algorithm entry — a request that
+    /// queued in the coalescing window has already spent budget).
+    /// Composes with `deadline`/`token`: whichever source fires first
+    /// abandons the tail.
+    deadline_at: Option<Instant>,
     /// External cancellation token the algorithm observes at chunk
     /// boundaries.  Borrowed so `Policy` stays `Copy`.
     token: Option<&'e CancelToken>,
@@ -369,6 +375,7 @@ impl Policy<'static> {
             tile: DEFAULT_TILE,
             hint: Hint::Any,
             deadline: None,
+            deadline_at: None,
             token: None,
             kernel: KernelVariant::Auto,
             threshold: None,
@@ -390,6 +397,7 @@ impl<'e> Policy<'e> {
             tile: self.tile,
             hint: self.hint,
             deadline: self.deadline,
+            deadline_at: self.deadline_at,
             token: self.token,
             kernel: self.kernel,
             threshold: self.threshold,
@@ -429,6 +437,18 @@ impl<'e> Policy<'e> {
     /// mid-iteration).
     pub fn deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(d);
+        self
+    }
+
+    /// *Absolute* wall-clock deadline: the algorithm abandons un-started
+    /// chunks once `Instant::now()` passes `at`.  Unlike
+    /// [`Policy::deadline`] the budget is not re-armed at algorithm
+    /// entry, so callers that queued the work earlier (the wire
+    /// front-end's coalescing window) charge the queueing delay against
+    /// the same budget.  Composes with `deadline` and `token`: the
+    /// earliest-firing source wins.
+    pub fn deadline_at(mut self, at: Instant) -> Self {
+        self.deadline_at = Some(at);
         self
     }
 
@@ -474,12 +494,23 @@ impl<'e> Policy<'e> {
     /// policy is not cancellable (the hot path stays check-free).
     /// Deadlines are armed *now* (algorithm entry).
     pub fn effective_token(&self) -> Option<CancelToken> {
-        match (self.token, self.deadline) {
+        let mut tok = match (self.token, self.deadline) {
             (None, None) => None,
             (Some(t), None) => Some(t.clone()),
             (Some(t), Some(d)) => Some(t.child_with_deadline(d)),
             (None, Some(d)) => Some(CancelToken::with_deadline(d)),
+        };
+        if let Some(at) = self.deadline_at {
+            // Absolute deadline: the remaining budget (possibly zero —
+            // already expired) hangs as a child off whatever the relative
+            // sources produced, so the earliest source still wins.
+            let remaining = at.saturating_duration_since(Instant::now());
+            tok = Some(match tok {
+                Some(t) => t.child_with_deadline(remaining),
+                None => CancelToken::with_deadline(remaining),
+            });
         }
+        tok
     }
 
     pub fn mode(&self) -> ExecMode {
@@ -545,6 +576,7 @@ impl std::fmt::Debug for Policy<'_> {
             .field("tile", &self.tile)
             .field("hint", &self.hint)
             .field("deadline", &self.deadline)
+            .field("deadline_at", &self.deadline_at.is_some())
             .field("token", &self.token.is_some())
             .field("kernel", &self.kernel)
             .field("threshold", &self.threshold)
@@ -1055,6 +1087,26 @@ mod tests {
             for_each(&par().on(&hpx).threads(2), 0..100, |_r| {}),
             ExecResult::Done
         );
+    }
+
+    #[test]
+    fn absolute_deadline_expired_on_arrival_reports_cancelled() {
+        let hpx = HpxMpRuntime::new(OmpRuntime::for_tests(2));
+        // A deadline instant already in the past (the wire path's "spent
+        // its whole budget queueing" case): nothing may run.
+        let pol = par().on(&hpx).threads(2).deadline_at(Instant::now());
+        let ran = AtomicU32::new(0);
+        let res = for_each(&pol, 0..100, |r| {
+            ran.fetch_add((r.end - r.start) as u32, Ordering::SeqCst);
+        });
+        assert!(matches!(res, ExecResult::Cancelled { .. }), "{res:?}");
+        assert_eq!(ran.load(Ordering::SeqCst), 0);
+        // A generous absolute deadline completes normally.
+        let pol = par()
+            .on(&hpx)
+            .threads(2)
+            .deadline_at(Instant::now() + Duration::from_secs(60));
+        assert_eq!(for_each(&pol, 0..100, |_r| {}), ExecResult::Done);
     }
 
     #[test]

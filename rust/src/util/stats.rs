@@ -64,6 +64,98 @@ pub fn percentile(samples: &[f64], q: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
+/// Per-request serving statistics shared by the in-process serving
+/// scenario (`coordinator::serve`) and the wire front-end (`net`), so
+/// both report the identical row schema (ISSUE 9): latencies, shed /
+/// retry / deadline accounting, and the derived p50/p99 + goodput.
+///
+/// One accumulator per client (or connection); [`RequestStats::merge`]
+/// folds them into the run-level aggregate.
+#[derive(Clone, Debug, Default)]
+pub struct RequestStats {
+    /// Per-request latency in seconds (completed requests only).
+    pub latencies_s: Vec<f64>,
+    /// Requests rejected by the load shedder (never executed, never timed).
+    pub shed: usize,
+    /// Backoff attempts taken before submit-or-shed decisions.
+    pub retries: usize,
+    /// Completed requests that finished after their deadline.
+    pub deadline_misses: usize,
+    /// Completed requests that finished within their deadline (equals
+    /// `completed()` when no deadline is configured).
+    pub in_deadline: usize,
+    /// Requests that returned an error outcome (wire: `Status::Error`).
+    pub failed: usize,
+}
+
+impl RequestStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            latencies_s: Vec::with_capacity(n),
+            ..Self::default()
+        }
+    }
+
+    /// Record one completed request: its latency and whether it blew its
+    /// deadline (`missed = false` when no deadline is configured).
+    pub fn record(&mut self, latency_s: f64, missed: bool) {
+        self.latencies_s.push(latency_s);
+        if missed {
+            self.deadline_misses += 1;
+        } else {
+            self.in_deadline += 1;
+        }
+    }
+
+    /// Fold another accumulator (one client / connection) into this one.
+    pub fn merge(&mut self, other: &RequestStats) {
+        self.latencies_s.extend_from_slice(&other.latencies_s);
+        self.shed += other.shed;
+        self.retries += other.retries;
+        self.deadline_misses += other.deadline_misses;
+        self.in_deadline += other.in_deadline;
+        self.failed += other.failed;
+    }
+
+    /// Requests that actually completed (timed).
+    pub fn completed(&self) -> usize {
+        self.latencies_s.len()
+    }
+
+    /// p50 latency in microseconds (0 when nothing completed).
+    pub fn p50_us(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            0.0
+        } else {
+            percentile(&self.latencies_s, 50.0) * 1e6
+        }
+    }
+
+    /// p99 latency in microseconds (0 when nothing completed).
+    pub fn p99_us(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            0.0
+        } else {
+            percentile(&self.latencies_s, 99.0) * 1e6
+        }
+    }
+
+    /// Completed requests per wall second.
+    pub fn reqs_per_sec(&self, wall_s: f64) -> f64 {
+        self.completed() as f64 / wall_s.max(1e-9)
+    }
+
+    /// Requests completed *within* their deadline per wall second — the
+    /// serving metric shedding is supposed to protect.
+    pub fn goodput_per_sec(&self, wall_s: f64) -> f64 {
+        self.in_deadline as f64 / wall_s.max(1e-9)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +185,41 @@ mod tests {
     fn median_odd() {
         let s = Summary::of(&[9.0, 1.0, 5.0]);
         assert_eq!(s.median, 5.0);
+    }
+
+    #[test]
+    fn request_stats_record_merge_and_derived_metrics() {
+        let mut a = RequestStats::new();
+        a.record(0.001, false);
+        a.record(0.002, true);
+        a.shed = 3;
+        a.retries = 5;
+        let mut b = RequestStats::with_capacity(4);
+        b.record(0.004, false);
+        b.failed = 1;
+        let mut total = RequestStats::new();
+        total.merge(&a);
+        total.merge(&b);
+        assert_eq!(total.completed(), 3);
+        assert_eq!(total.in_deadline, 2);
+        assert_eq!(total.deadline_misses, 1);
+        assert_eq!(total.shed, 3);
+        assert_eq!(total.retries, 5);
+        assert_eq!(total.failed, 1);
+        assert_eq!(total.p50_us(), 2000.0);
+        assert_eq!(total.p99_us(), 4000.0);
+        assert!((total.reqs_per_sec(1.0) - 3.0).abs() < 1e-12);
+        assert!((total.goodput_per_sec(2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_stats_empty_is_all_zero() {
+        let s = RequestStats::new();
+        assert_eq!(s.completed(), 0);
+        assert_eq!(s.p50_us(), 0.0);
+        assert_eq!(s.p99_us(), 0.0);
+        assert_eq!(s.reqs_per_sec(0.0), 0.0);
+        assert_eq!(s.goodput_per_sec(1.0), 0.0);
     }
 
     #[test]
