@@ -1,0 +1,250 @@
+//! Dist ablation (ISSUE 10): does sharding the serving stack across
+//! worker *processes* buy throughput over one in-process server, and
+//! what does the distributed `dmatdmatmult` cost against the
+//! single-process packed kernel?
+//!
+//! For every (shards × offered rate) cell the bench spawns a fresh
+//! worker fleet (`ShardPool` + `Router`, the exact `hpxmp serve
+//! --shards` stack, workers being real child processes of the `hpxmp`
+//! binary) behind a wire front-end on an ephemeral loopback port, and
+//! drives it with the same seeded open-loop generator as the
+//! single-process arm:
+//!
+//! * `single`  — PR 9 in-process server (`WireServer::start_tcp`), all
+//!   cores on one runtime;
+//! * `dist-S`  — S worker processes with the cores split between them,
+//!   requests forwarded by connection key.
+//!
+//! After the grid, the **scatter/gather probe** times `dist_matmul`
+//! (broadcast B, scatter A row bands, gather C over remote futures)
+//! against `packed_matmul` and checks the gather bitwise.
+//!
+//! Emits `results/BENCH_dist.json`:
+//!
+//! ```json
+//! { "bench": "dist",
+//!   "rows": [ {"rate": 1000, "shards": 2, "mode": "dist",
+//!              "reqs_per_sec": r, "goodput_per_sec": g,
+//!              "p50_us": p, "p99_us": q, "shed": s, "lost": l}, ... ],
+//!   "dist_mmult": {"n": 256, "dist_ms": d, "single_ms": s,
+//!                  "bitwise": true},
+//!   "throughput_sharded_vs_single": x }
+//! ```
+//!
+//! The headline `throughput_sharded_vs_single` is the best
+//! dist/single completed-throughput ratio over rates at shards >= 2
+//! (>= 1.0 is the ISSUE 10 acceptance bar: process isolation must not
+//! cost throughput at some operating point).  `BENCH_SHARDS` /
+//! `BENCH_RATES` override the grids; `BENCH_SMOKE=1` shrinks durations
+//! for CI.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hpxmp::amt::PolicyKind;
+use hpxmp::blaze::{kernel, DynVector};
+use hpxmp::dist::{dist_matmul, Router, ShardCfg, ShardPool};
+use hpxmp::net::{
+    BatchCfg, Dist, LoadgenCfg, LoadgenReport, WireAddr, WireOp, WireServer, WireStats,
+};
+use hpxmp::omp::{icv, OmpRuntime};
+
+mod common;
+
+struct Cell {
+    rate: usize,
+    shards: usize,
+    mode: &'static str,
+    report: LoadgenReport,
+}
+
+fn loadgen(addr: WireAddr, rate: usize, conns: usize, duration: Duration) -> LoadgenReport {
+    hpxmp::net::run_loadgen(&LoadgenCfg {
+        addr,
+        op: WireOp::Daxpy,
+        n: hpxmp::net::default_wire_n(WireOp::Daxpy),
+        rate: rate as f64,
+        conns,
+        dist: Dist::Poisson,
+        duration,
+        deadline_us: 0,
+        seed: 0x5eed_d157,
+    })
+    .expect("loadgen run")
+}
+
+/// Single-process baseline: the PR 9 in-process server on all cores.
+fn run_single(workers: usize, rate: usize, conns: usize, duration: Duration) -> Cell {
+    let rt = OmpRuntime::new(workers, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(workers);
+    let server =
+        WireServer::start_tcp(rt, "127.0.0.1:0", BatchCfg::default()).expect("bind wire server");
+    let addr = WireAddr::Tcp(server.local_addr().expect("tcp addr").to_string());
+    let report = loadgen(addr, rate, conns, duration);
+    server.drain(Duration::from_secs(5));
+    Cell { rate, shards: 1, mode: "single", report }
+}
+
+/// Dist arm: a fresh worker fleet behind the shard router, cores split
+/// between the processes.
+fn run_dist(
+    shards: usize,
+    workers: usize,
+    rate: usize,
+    conns: usize,
+    duration: Duration,
+) -> Option<Cell> {
+    let mut cfg = ShardCfg::new(shards, (workers / shards).max(1)).expect("shard cfg");
+    cfg.program = PathBuf::from(env!("CARGO_BIN_EXE_hpxmp"));
+    let mut pool = ShardPool::start(cfg).expect("start pool");
+    if !pool.wait_ready(Duration::from_secs(10)) {
+        eprintln!("[dist] fleet of {shards} never came up; skipping cell");
+        pool.shutdown();
+        return None;
+    }
+    let stats = Arc::new(WireStats::default());
+    let router = Router::new(&pool, stats.clone(), 4096);
+    let server = WireServer::start_with(router, stats, &[WireAddr::Tcp("127.0.0.1:0".into())])
+        .expect("bind dist front-end");
+    let addr = WireAddr::Tcp(server.local_addr().expect("tcp addr").to_string());
+    let report = loadgen(addr, rate, conns, duration);
+    server.drain(Duration::from_secs(5));
+    drop(server);
+    pool.shutdown();
+    Some(Cell { rate, shards, mode: "dist", report })
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let workers = icv::num_procs().max(2);
+    let rates = common::rates_grid();
+    let shards_grid = common::env_grid("BENCH_SHARDS", &[1, 2]);
+    let conns = 8usize;
+    let duration = if smoke {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    eprintln!(
+        "[dist] shards {shards_grid:?} x rates {rates:?}, {workers} cores, {conns} conns, \
+         {}ms per cell",
+        duration.as_millis()
+    );
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for &rate in &rates {
+        let start = cells.len();
+        cells.push(run_single(workers, rate, conns, duration));
+        for &shards in &shards_grid {
+            if let Some(c) = run_dist(shards, workers, rate, conns, duration) {
+                cells.push(c);
+            }
+        }
+        for c in &cells[start..] {
+            println!(
+                "rate {:>6} {:<8} shards {:>2} -> {:>9.1} req/s  p50 {:>8.0}us  \
+                 p99 {:>8.0}us  shed {:>5}  lost {:>4}",
+                c.rate,
+                c.mode,
+                c.shards,
+                c.report.reqs_per_sec(),
+                c.report.stats.p50_us(),
+                c.report.stats.p99_us(),
+                c.report.stats.shed,
+                c.report.lost,
+            );
+        }
+    }
+
+    // Headline: best dist/single completed-throughput ratio at >= 2
+    // process shards (same offered rate in both arms).
+    let mut ratio: Option<f64> = None;
+    for &rate in &rates {
+        let single = cells
+            .iter()
+            .find(|c| c.mode == "single" && c.rate == rate)
+            .map(|c| c.report.reqs_per_sec());
+        for &shards in shards_grid.iter().filter(|&&s| s >= 2) {
+            let dist = cells
+                .iter()
+                .find(|c| c.mode == "dist" && c.shards == shards && c.rate == rate)
+                .map(|c| c.report.reqs_per_sec());
+            if let (Some(s), Some(d)) = (single, dist) {
+                if s > 0.0 {
+                    let r = d / s;
+                    ratio = Some(ratio.map_or(r, |t: f64| t.max(r)));
+                }
+            }
+        }
+    }
+    let ratio = ratio.unwrap_or(0.0);
+    println!("throughput sharded vs single: {ratio:.3}x");
+
+    // Scatter/gather probe: distributed dmatdmatmult against the
+    // single-process packed kernel, timed and checked bitwise.
+    let n = if smoke { 192 } else { 512 };
+    let a = DynVector::random(n * n, 0xD157_A).as_slice().to_vec();
+    let b = DynVector::random(n * n, 0xD157_B).as_slice().to_vec();
+    let mmult_shards = shards_grid.iter().copied().filter(|&s| s >= 2).max().unwrap_or(2);
+    let mut cfg = ShardCfg::new(mmult_shards, (workers / mmult_shards).max(1)).expect("shard cfg");
+    cfg.program = PathBuf::from(env!("CARGO_BIN_EXE_hpxmp"));
+    let mut pool = ShardPool::start(cfg).expect("start pool");
+    let (dist_ms, bitwise) = if pool.wait_ready(Duration::from_secs(10)) {
+        let t0 = Instant::now();
+        let c = dist_matmul(&pool, &a, &b, n).expect("dist mmult");
+        let dist_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut want = vec![0.0f64; n * n];
+        kernel::packed_matmul(&a, &b, n, n, n, &mut want);
+        let bitwise = c
+            .iter()
+            .zip(&want)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        (dist_ms, bitwise)
+    } else {
+        eprintln!("[dist] mmult fleet never came up; recording a miss");
+        (f64::NAN, false)
+    };
+    pool.shutdown();
+    let t0 = Instant::now();
+    let mut single_c = vec![0.0f64; n * n];
+    kernel::packed_matmul(&a, &b, n, n, n, &mut single_c);
+    let single_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "dist mmult n={n} @{mmult_shards} shards: {dist_ms:.1}ms vs single {single_ms:.1}ms, \
+         bitwise {bitwise}"
+    );
+
+    let mut json = String::from("{\n  \"bench\": \"dist\",\n  \"rows\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"rate\": {}, \"shards\": {}, \"mode\": \"{}\", \"reqs_per_sec\": {:.2}, \
+             \"goodput_per_sec\": {:.2}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \
+             \"shed\": {}, \"lost\": {}}}{}\n",
+            c.rate,
+            c.shards,
+            c.mode,
+            c.report.reqs_per_sec(),
+            c.report.goodput_per_sec(),
+            c.report.stats.p50_us(),
+            c.report.stats.p99_us(),
+            c.report.stats.shed,
+            c.report.lost,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"dist_mmult\": {{\"n\": {n}, \"shards\": {mmult_shards}, \
+         \"dist_ms\": {dist_ms:.2}, \"single_ms\": {single_ms:.2}, \"bitwise\": {bitwise}}},\n  \
+         \"throughput_sharded_vs_single\": {ratio:.3}\n}}\n"
+    ));
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    let path = dir.join("BENCH_dist.json");
+    std::fs::write(&path, json).expect("write BENCH_dist.json");
+    println!("{}", path.display());
+    // Fail the bench *after* the artifact is on disk, so a CI miss still
+    // uploads the numbers that show what went wrong.
+    assert!(bitwise, "distributed mmult must be bitwise identical to the oracle");
+}

@@ -429,6 +429,107 @@ impl<T: Send + Sync + 'static> Future<T> {
     }
 }
 
+/// Registry of promises whose producer lives in **another address
+/// space** (ISSUE 10): the coordinator registers an entry per task it
+/// ships to a worker process, hands the `Future<T>` to the waiter, and
+/// fulfils the entry when the completion frame arrives.  The entry `tag`
+/// identifies the producer (the dist layer packs `shard slot` and link
+/// generation into it) so that when a worker dies, [`fail_tag`] resolves
+/// exactly its in-flight futures `Panicked` — a dead producer can never
+/// hang a waiter, and a respawned worker (new generation, new tag) is
+/// unaffected.  Dropping the registry itself resolves the remainder via
+/// the `Promise` drop backstop, so there is no leak path.
+///
+/// [`fail_tag`]: RemoteRegistry::fail_tag
+pub struct RemoteRegistry<T: Send + Sync + 'static> {
+    next: AtomicUsize,
+    entries: Mutex<std::collections::HashMap<u64, RemoteEntry<T>>>,
+}
+
+struct RemoteEntry<T: Send + Sync + 'static> {
+    tag: u64,
+    promise: Promise<T>,
+}
+
+impl<T: Send + Sync + 'static> Default for RemoteRegistry<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Send + Sync + 'static> RemoteRegistry<T> {
+    pub fn new() -> Self {
+        Self {
+            next: AtomicUsize::new(0),
+            entries: Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Create one remote promise under `tag`; returns the wire id a
+    /// completion must quote and the future the waiter holds.  Ids start
+    /// at 1 and never repeat (0 stays free as a wire sentinel).
+    pub fn register(&self, tag: u64) -> (u64, Future<T>) {
+        let id = self.next.fetch_add(1, Ordering::Relaxed) as u64 + 1;
+        let promise = Promise::new();
+        let future = promise.get_future();
+        lock_conts(&self.entries).insert(id, RemoteEntry { tag, promise });
+        (id, future)
+    }
+
+    /// Resolve entry `id` with `outcome`.  Returns whether the entry was
+    /// live — `false` for ids already resolved (e.g. failed by
+    /// [`RemoteRegistry::fail_tag`] racing a late completion frame),
+    /// which callers treat as a benign duplicate.
+    pub fn fulfil(&self, id: u64, outcome: Outcome<T>) -> bool {
+        let entry = lock_conts(&self.entries).remove(&id);
+        match entry {
+            // Outside the lock: fulfilment runs inline hooks.
+            Some(e) => {
+                e.promise.set_outcome(outcome);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resolve every entry registered under `tag` as `Panicked` — the
+    /// producer process died.  Returns how many futures were failed.
+    pub fn fail_tag(&self, tag: u64) -> usize {
+        let drained: Vec<Promise<T>> = {
+            let mut map = lock_conts(&self.entries);
+            let ids: Vec<u64> = map
+                .iter()
+                .filter(|(_, e)| e.tag == tag)
+                .map(|(id, _)| *id)
+                .collect();
+            ids.iter().filter_map(|id| map.remove(id)).map(|e| e.promise).collect()
+        };
+        let n = drained.len();
+        for p in drained {
+            p.set_panicked();
+        }
+        n
+    }
+
+    /// Resolve every live entry as `Cancelled` — orderly shutdown with
+    /// work still in flight.  Returns how many futures were cancelled.
+    pub fn cancel_all(&self) -> usize {
+        let drained: Vec<Promise<T>> =
+            lock_conts(&self.entries).drain().map(|(_, e)| e.promise).collect();
+        let n = drained.len();
+        for p in drained {
+            p.set_cancelled();
+        }
+        n
+    }
+
+    /// Live (registered, unresolved) entries — the coordinator-side leak
+    /// gauge `tests/dist.rs` asserts returns to 0.
+    pub fn pending(&self) -> usize {
+        lock_conts(&self.entries).len()
+    }
+}
+
 /// Join N futures into one `Future<()>` that becomes ready when every
 /// input has (`hpx::when_all` shape, completion-only: inputs are shared
 /// futures, so values stay retrievable from the inputs themselves).
@@ -638,6 +739,51 @@ mod tests {
         assert!(!joined.is_ready(), "join waits for every input");
         drop(q); // -> Panicked
         assert!(joined.wait_outcome().is_panicked(), "worst outcome wins");
+    }
+
+    #[test]
+    fn remote_registry_fulfils_by_id() {
+        let reg: RemoteRegistry<usize> = RemoteRegistry::new();
+        let (id, fut) = reg.register(1);
+        assert!(id > 0);
+        assert_eq!(reg.pending(), 1);
+        assert!(reg.fulfil(id, Outcome::Value(99)));
+        assert_eq!(fut.get(), 99);
+        assert_eq!(reg.pending(), 0);
+        // A late duplicate (or unknown id) is a benign no-op.
+        assert!(!reg.fulfil(id, Outcome::Value(1)));
+        assert!(!reg.fulfil(12345, Outcome::Cancelled));
+    }
+
+    #[test]
+    fn remote_registry_fail_tag_kills_only_that_producer() {
+        let reg: RemoteRegistry<usize> = RemoteRegistry::new();
+        let (_, dead_a) = reg.register(7);
+        let (_, dead_b) = reg.register(7);
+        let (live_id, live) = reg.register(8);
+        assert_eq!(reg.fail_tag(7), 2);
+        assert!(dead_a.wait_outcome().is_panicked());
+        assert!(dead_b.wait_outcome().is_panicked());
+        assert!(!live.is_ready(), "other producer's entries must survive");
+        assert_eq!(reg.pending(), 1);
+        assert!(reg.fulfil(live_id, Outcome::Value(3)));
+        assert_eq!(live.get(), 3);
+    }
+
+    #[test]
+    fn remote_registry_cancel_all_and_drop_backstop() {
+        let reg: RemoteRegistry<usize> = RemoteRegistry::new();
+        let (_, a) = reg.register(1);
+        assert_eq!(reg.cancel_all(), 1);
+        assert!(a.wait_outcome().is_cancelled());
+        assert_eq!(reg.pending(), 0);
+
+        // Dropping the registry with live entries must fail them fast
+        // (promise-drop backstop), never leave a waiter hanging.
+        let reg: RemoteRegistry<usize> = RemoteRegistry::new();
+        let (_, orphan) = reg.register(1);
+        drop(reg);
+        assert!(orphan.wait_outcome().is_panicked());
     }
 
     #[test]

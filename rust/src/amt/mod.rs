@@ -39,7 +39,7 @@ pub mod worker;
 
 pub use arena::Payload;
 pub use cancel::CancelToken;
-pub use future::{when_all, Future, Outcome, Promise};
+pub use future::{when_all, Future, Outcome, Promise, RemoteRegistry};
 pub use park::IdleMode;
 pub use policy::PolicyKind;
 pub use scheduler::{Scheduler, Tuning, MAX_INLINE_DEPTH};

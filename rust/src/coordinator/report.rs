@@ -81,6 +81,21 @@ pub fn write_scaling(dir: impl AsRef<Path>, r: &ScalingResult) -> Result<String>
     Ok(out)
 }
 
+/// Render a per-slot count vector as a compact bracketed list, e.g.
+/// `[12, 9, 14]`.  Used by `hpxmp serve --shards` to print per-shard
+/// routing totals on its status line.
+pub fn render_counts(counts: &[usize]) -> String {
+    let mut s = String::from("[");
+    for (i, c) in counts.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&c.to_string());
+    }
+    s.push(']');
+    s
+}
+
 /// Append a named summary line to `results/summary.txt` (used by benches
 /// so `cargo bench` leaves a machine-readable trail).
 pub fn append_summary(dir: impl AsRef<Path>, line: &str) -> Result<()> {
@@ -114,6 +129,13 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("fig3_daxpy_heatmap.csv")).unwrap();
         assert!(csv.starts_with("threads,size,"));
         assert_eq!(csv.lines().count(), 5); // header + 4 cells
+    }
+
+    #[test]
+    fn counts_render_bracketed() {
+        assert_eq!(render_counts(&[]), "[]");
+        assert_eq!(render_counts(&[7]), "[7]");
+        assert_eq!(render_counts(&[12, 9, 14]), "[12, 9, 14]");
     }
 
     #[test]

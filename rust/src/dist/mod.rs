@@ -1,0 +1,91 @@
+//! Distributed hpxMP (ISSUE 10): multi-process sharding with remote
+//! futures over the wire layer.
+//!
+//! The paper's runtime futurizes work *within* one process; this module
+//! extends the same futurized engine across process boundaries.  Three
+//! layers (DESIGN.md §15):
+//!
+//! * [`proto`] — dist message frames riding the PR 9 wire layout
+//!   (submit / broadcast / band / completion / stats / shutdown), plus
+//!   [`DistLink`], the liveness-tracked write half both sides share.
+//! * [`worker`] — the `hpxmp worker` process: an AMT runtime fed by a
+//!   coordinator link, replying through the same [`Coalescer`] stack as
+//!   the in-process server.
+//! * [`shard`] — the coordinator: a supervised worker-process pool
+//!   ([`ShardPool`]), the request [`Router`] behind
+//!   `hpxmp serve --shards`, and the scatter/gather distributed
+//!   [`dist_matmul`].
+//!
+//! The glue is the **remote future**: every task shipped to a worker is
+//! an entry in a [`RemoteRegistry`](crate::amt::RemoteRegistry), and the
+//! waiter's `Future<Response>` resolves through the ordinary
+//! [`Outcome`](crate::amt::Outcome) channel — `Value` from a completion
+//! frame, `Panicked` when the producer process died, `Cancelled` on
+//! shutdown.  A dead worker can never hang a waiter.
+//!
+//! [`Coalescer`]: crate::net::batch::Coalescer
+
+pub mod proto;
+pub mod shard;
+pub mod worker;
+
+pub use proto::{DistLink, DistMsg, DIST_MMULT_MAX_N};
+pub use shard::{dist_matmul, Router, ShardCfg, ShardPool};
+pub use worker::{run_worker, WorkerCfg};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-global dist counters (coordinator side), mirroring the
+/// arena/metrics pattern: cheap relaxed atomics bumped on the hot paths,
+/// snapshotted by [`stats`] for `hpxmp info` and the serve status line.
+pub(crate) struct Counters {
+    pub routed: AtomicUsize,
+    pub bands: AtomicUsize,
+    pub fulfilled: AtomicUsize,
+    pub failed: AtomicUsize,
+    pub cancelled: AtomicUsize,
+    pub reroutes: AtomicUsize,
+    pub reconnects: AtomicUsize,
+}
+
+pub(crate) static COUNTERS: Counters = Counters {
+    routed: AtomicUsize::new(0),
+    bands: AtomicUsize::new(0),
+    fulfilled: AtomicUsize::new(0),
+    failed: AtomicUsize::new(0),
+    cancelled: AtomicUsize::new(0),
+    reroutes: AtomicUsize::new(0),
+    reconnects: AtomicUsize::new(0),
+};
+
+/// Snapshot of the coordinator-side dist counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DistStats {
+    /// Serving tasks forwarded to workers (all shards).
+    pub routed: usize,
+    /// Matmul row bands scattered.
+    pub bands: usize,
+    /// Remote futures resolved by a completion frame.
+    pub fulfilled: usize,
+    /// Remote futures failed because their worker died.
+    pub failed: usize,
+    /// Remote futures cancelled by pool shutdown.
+    pub cancelled: usize,
+    /// Forwards that probed past a dead home shard.
+    pub reroutes: usize,
+    /// Worker processes respawned after a death.
+    pub reconnects: usize,
+}
+
+/// Read the process-global dist counters (coordinator side).
+pub fn stats() -> DistStats {
+    DistStats {
+        routed: COUNTERS.routed.load(Ordering::Relaxed),
+        bands: COUNTERS.bands.load(Ordering::Relaxed),
+        fulfilled: COUNTERS.fulfilled.load(Ordering::Relaxed),
+        failed: COUNTERS.failed.load(Ordering::Relaxed),
+        cancelled: COUNTERS.cancelled.load(Ordering::Relaxed),
+        reroutes: COUNTERS.reroutes.load(Ordering::Relaxed),
+        reconnects: COUNTERS.reconnects.load(Ordering::Relaxed),
+    }
+}

@@ -1,0 +1,518 @@
+//! Dist message frames: the coordinator↔worker protocol (ISSUE 10).
+//!
+//! Dist messages ride the exact same wire layout as the serving frames
+//! ([`crate::net::frame`]): a little-endian `u32` length prefix, the
+//! [`PROTO_VERSION`] byte, a `u64` id, two bytes, two `u32`s, and an f64
+//! payload.  Reusing the layout means the dist transport reuses
+//! [`FrameBuf`] reassembly, [`read_into`](frame::read_into) /
+//! [`write_frame`](frame::write_frame), the [`MAX_FRAME_LEN`] cap, and
+//! the fixed-offset version contract (a foreign-version frame still
+//! yields an addressable [`FrameError::BadVersion`]) — only the header
+//! *interpretation* differs:
+//!
+//! ```text
+//! len:u32 | ver:u8 | id:u64 | kind:u8 | b1:u8 | w0:u32 | n:u32 | payload f64*
+//! ```
+//!
+//! `kind` selects the [`DistMsg`] variant; `id` is a task id for
+//! submit/complete frames and reused as a `u64` stats word for
+//! [`DistMsg::StatsReply`].  The taxonomy (DESIGN.md §15):
+//!
+//! | kind | message      | direction | meaning                                 |
+//! |------|--------------|-----------|-----------------------------------------|
+//! | 0    | `Hello`      | w → c     | worker announces slot + thread count    |
+//! | 1    | `Submit`     | c → w     | one serving-kernel task                 |
+//! | 2    | `BroadcastB` | c → w     | cache the shared B operand for mmult    |
+//! | 3    | `SubmitBand` | c → w     | one A row-band of a distributed mmult   |
+//! | 4    | `Complete`   | w → c     | task outcome (status + reply payload)   |
+//! | 5    | `StatsReq`   | c → w     | poll worker counters                    |
+//! | 6    | `StatsReply` | w → c     | tasks done + pending                    |
+//! | 7    | `Shutdown`   | c → w     | drain and exit                          |
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::net::batch::ReplySink;
+use crate::net::frame::{
+    self, FrameError, Response, Status, WireOp, HDR_LEN, PROTO_VERSION,
+};
+use crate::net::server::WireStream;
+
+/// Dimension cap for distributed `dmatdmatmult`: one `BroadcastB` frame
+/// carries the full n×n B, so n² doubles must fit under
+/// [`frame::MAX_FRAME_LEN`] (1000² × 8 B = 8 MB > header room would
+/// overflow; 1000 keeps the body at 7.63 MiB, inside the 8 MiB cap).
+pub const DIST_MMULT_MAX_N: usize = 1000;
+
+/// One decoded dist message (see the module-level taxonomy table).
+#[derive(Clone, Debug)]
+pub enum DistMsg {
+    /// Worker → coordinator, first frame on a link: which shard slot
+    /// this process was spawned for and how many AMT workers it runs.
+    Hello {
+        /// Shard slot index assigned at spawn (`--slot`).
+        slot: u32,
+        /// AMT worker threads in the process (`--threads`).
+        threads: u32,
+    },
+    /// Coordinator → worker: one serving-kernel task, same semantics as
+    /// a wire [`crate::net::frame::Request`] but addressed by `task_id`.
+    Submit {
+        /// Coordinator-assigned task id (the remote-future id).
+        task_id: u64,
+        /// Kernel to run.
+        op: WireOp,
+        /// Wall-clock budget in µs from worker-side decode; 0 = none.
+        deadline_us: u32,
+        /// Operand dimension.
+        n: u32,
+        /// Request payload, `op.payload_len(n)` doubles.
+        payload: Vec<f64>,
+    },
+    /// Coordinator → worker: cache the shared B operand (row-major n×n)
+    /// for subsequent [`DistMsg::SubmitBand`] frames.
+    BroadcastB {
+        /// Matrix edge.
+        n: u32,
+        /// Row-major B, n² doubles.
+        b: Vec<f64>,
+    },
+    /// Coordinator → worker: compute rows `[row0, row0 + rows)` of
+    /// `C = A · B` against the last broadcast B.  `rows` is implied by
+    /// the payload length (`payload.len() / n`).
+    SubmitBand {
+        /// Coordinator-assigned task id (the remote-future id).
+        task_id: u64,
+        /// Matrix edge (must match the cached broadcast).
+        n: u32,
+        /// First global row index of this band (for C placement).
+        row0: u32,
+        /// The band's rows of A, row-major, `rows × n` doubles.
+        a_rows: Vec<f64>,
+    },
+    /// Worker → coordinator: outcome of a `Submit` or `SubmitBand`.
+    Complete {
+        /// Task id this completion fulfils.
+        task_id: u64,
+        /// Outcome status (same byte as the serving protocol).
+        status: Status,
+        /// Completed, but after its deadline (goodput miss).
+        deadline_missed: bool,
+        /// Dimension echoed from the task.
+        n: u32,
+        /// Reply payload (empty unless `status == Ok`).
+        payload: Vec<f64>,
+    },
+    /// Coordinator → worker: report counters.
+    StatsReq,
+    /// Worker → coordinator: counters at poll time.
+    StatsReply {
+        /// Tasks completed since the process started.
+        done: u64,
+        /// Tasks admitted but not yet completed.
+        pending: u32,
+    },
+    /// Coordinator → worker: drain in-flight tasks and exit.
+    Shutdown,
+}
+
+impl DistMsg {
+    /// The wire `kind` byte for this message.
+    pub fn kind(&self) -> u8 {
+        match self {
+            DistMsg::Hello { .. } => 0,
+            DistMsg::Submit { .. } => 1,
+            DistMsg::BroadcastB { .. } => 2,
+            DistMsg::SubmitBand { .. } => 3,
+            DistMsg::Complete { .. } => 4,
+            DistMsg::StatsReq => 5,
+            DistMsg::StatsReply { .. } => 6,
+            DistMsg::Shutdown => 7,
+        }
+    }
+}
+
+/// Encode one dist message into a fresh frame (length prefix included).
+pub fn encode(msg: &DistMsg) -> Vec<u8> {
+    let (id, b1, w0, n, payload): (u64, u8, u32, u32, &[f64]) = match msg {
+        DistMsg::Hello { slot, threads } => (0, 0, *slot, *threads, &[]),
+        DistMsg::Submit {
+            task_id,
+            op,
+            deadline_us,
+            n,
+            payload,
+        } => (*task_id, op.code(), *deadline_us, *n, payload),
+        DistMsg::BroadcastB { n, b } => (0, 0, 0, *n, b),
+        DistMsg::SubmitBand {
+            task_id,
+            n,
+            row0,
+            a_rows,
+        } => (*task_id, 0, *row0, *n, a_rows),
+        DistMsg::Complete {
+            task_id,
+            status,
+            deadline_missed,
+            n,
+            payload,
+        } => (
+            *task_id,
+            status.code() | ((*deadline_missed as u8) << 4),
+            0,
+            *n,
+            payload,
+        ),
+        DistMsg::StatsReq => (0, 0, 0, 0, &[]),
+        DistMsg::StatsReply { done, pending } => (*done, 0, *pending, 0, &[]),
+        DistMsg::Shutdown => (0, 0, 0, 0, &[]),
+    };
+    let body_len = HDR_LEN + payload.len() * 8;
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(PROTO_VERSION);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.push(msg.kind());
+    out.push(b1);
+    out.extend_from_slice(&w0.to_le_bytes());
+    out.extend_from_slice(&n.to_le_bytes());
+    frame::put_f64s(&mut out, payload);
+    out
+}
+
+/// Decode one complete dist frame body (the bytes after the length
+/// prefix, as popped by [`FrameBuf::next_body`](frame::FrameBuf)).
+pub fn decode(body: &[u8]) -> Result<DistMsg, FrameError> {
+    if body.len() < HDR_LEN {
+        return Err(FrameError::Truncated);
+    }
+    // Fixed-offset contract, same as the serving decoder: the id is
+    // readable before the version check so mismatches stay addressable.
+    let id = u64::from_le_bytes(body[1..9].try_into().expect("8 bytes"));
+    if body[0] != PROTO_VERSION {
+        return Err(FrameError::BadVersion {
+            req_id: id,
+            got: body[0],
+        });
+    }
+    let kind = body[9];
+    let b1 = body[10];
+    let w0 = u32::from_le_bytes(body[11..15].try_into().expect("4 bytes"));
+    let n = u32::from_le_bytes(body[15..19].try_into().expect("4 bytes"));
+    let payload = &body[HDR_LEN..];
+    let length_err = |expect: usize| FrameError::LengthMismatch {
+        req_id: id,
+        expect,
+        got: payload.len(),
+    };
+    match kind {
+        0 => Ok(DistMsg::Hello {
+            slot: w0,
+            threads: n,
+        }),
+        1 => {
+            let op = WireOp::from_code(b1).ok_or(FrameError::BadOp {
+                req_id: id,
+                code: b1,
+            })?;
+            if n == 0 || n > op.max_n() {
+                return Err(FrameError::BadDim { req_id: id, n });
+            }
+            let expect = op.payload_len(n) * 8;
+            if payload.len() != expect {
+                return Err(length_err(expect));
+            }
+            Ok(DistMsg::Submit {
+                task_id: id,
+                op,
+                deadline_us: w0,
+                n,
+                payload: frame::get_f64s(payload),
+            })
+        }
+        2 => {
+            if n == 0 || n as usize > DIST_MMULT_MAX_N {
+                return Err(FrameError::BadDim { req_id: id, n });
+            }
+            let expect = n as usize * n as usize * 8;
+            if payload.len() != expect {
+                return Err(length_err(expect));
+            }
+            Ok(DistMsg::BroadcastB {
+                n,
+                b: frame::get_f64s(payload),
+            })
+        }
+        3 => {
+            if n == 0 || n as usize > DIST_MMULT_MAX_N {
+                return Err(FrameError::BadDim { req_id: id, n });
+            }
+            if payload.is_empty() || payload.len() % (n as usize * 8) != 0 {
+                return Err(length_err(n as usize * 8));
+            }
+            Ok(DistMsg::SubmitBand {
+                task_id: id,
+                n,
+                row0: w0,
+                a_rows: frame::get_f64s(payload),
+            })
+        }
+        4 => {
+            let status = Status::from_code(b1 & 0x0F).ok_or(FrameError::BadStatus {
+                req_id: id,
+                code: b1 & 0x0F,
+            })?;
+            Ok(DistMsg::Complete {
+                task_id: id,
+                status,
+                deadline_missed: b1 & 0x10 != 0,
+                n,
+                payload: frame::get_f64s(payload),
+            })
+        }
+        5 => Ok(DistMsg::StatsReq),
+        6 => Ok(DistMsg::StatsReply {
+            done: id,
+            pending: w0,
+        }),
+        7 => Ok(DistMsg::Shutdown),
+        other => Err(FrameError::BadOp {
+            req_id: id,
+            code: other,
+        }),
+    }
+}
+
+/// One direction of a coordinator↔worker connection: a mutex-serialized
+/// write half plus a liveness flag.  Every sender (router forwards,
+/// band scatter, worker completions) goes through [`DistLink::send`];
+/// the first write error marks the link dead so later sends fail fast
+/// instead of blocking on a broken socket.
+pub struct DistLink {
+    stream: Mutex<WireStream>,
+    alive: AtomicBool,
+}
+
+impl DistLink {
+    /// Wrap a connected write half.
+    pub fn new(stream: WireStream) -> Self {
+        Self {
+            stream: Mutex::new(stream),
+            alive: AtomicBool::new(true),
+        }
+    }
+
+    /// Encode and write one message; returns `false` (and marks the
+    /// link dead) if the link is already dead or the write fails.
+    pub fn send(&self, msg: &DistMsg) -> bool {
+        if !self.alive() {
+            return false;
+        }
+        let bytes = encode(msg);
+        let mut stream = self.stream.lock().expect("dist link poisoned");
+        if frame::write_frame(&mut *stream, &bytes).is_err() {
+            self.kill();
+            return false;
+        }
+        true
+    }
+
+    /// Whether the link has seen no write failure and no explicit kill.
+    pub fn alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// Mark the link dead (reader saw EOF / decode error, or the peer
+    /// process was reaped).  Idempotent.
+    pub fn kill(&self) {
+        self.alive.store(false, Ordering::Release);
+    }
+}
+
+/// The worker-side engine replies through its link: a serving
+/// [`Response`] becomes a [`DistMsg::Complete`] addressed by the task
+/// id, so the whole Engine/Coalescer reply path (including shed and
+/// expired outcomes) emits completion frames with no dist-specific
+/// branches in `net/batch.rs`.
+impl ReplySink for DistLink {
+    fn send(&self, resp: &Response) {
+        DistLink::send(
+            self,
+            &DistMsg::Complete {
+                task_id: resp.req_id,
+                status: resp.status,
+                deadline_missed: resp.deadline_missed,
+                n: resp.n,
+                payload: resp.payload.clone(),
+            },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame::FrameBuf;
+
+    fn roundtrip(msg: &DistMsg) -> DistMsg {
+        let bytes = encode(msg);
+        let mut fb = FrameBuf::new();
+        fb.extend(&bytes);
+        let body = fb.next_body().expect("frame ok").expect("complete");
+        let got = decode(body).expect("decode ok");
+        assert!(fb.next_body().expect("clean").is_none());
+        got
+    }
+
+    #[test]
+    fn every_kind_roundtrips() {
+        let got = roundtrip(&DistMsg::Hello { slot: 3, threads: 4 });
+        assert!(matches!(got, DistMsg::Hello { slot: 3, threads: 4 }));
+
+        let got = roundtrip(&DistMsg::Submit {
+            task_id: 42,
+            op: WireOp::Daxpy,
+            deadline_us: 500,
+            n: 4,
+            payload: vec![1.0, 2.0, 3.0, 4.0],
+        });
+        match got {
+            DistMsg::Submit {
+                task_id,
+                op,
+                deadline_us,
+                n,
+                payload,
+            } => {
+                assert_eq!(task_id, 42);
+                assert_eq!(op, WireOp::Daxpy);
+                assert_eq!(deadline_us, 500);
+                assert_eq!(n, 4);
+                assert_eq!(payload, vec![1.0, 2.0, 3.0, 4.0]);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        let got = roundtrip(&DistMsg::BroadcastB {
+            n: 2,
+            b: vec![1.0, 2.0, 3.0, 4.0],
+        });
+        match got {
+            DistMsg::BroadcastB { n, b } => {
+                assert_eq!(n, 2);
+                assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0]);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        let got = roundtrip(&DistMsg::SubmitBand {
+            task_id: 9,
+            n: 2,
+            row0: 6,
+            a_rows: vec![0.5; 4],
+        });
+        match got {
+            DistMsg::SubmitBand {
+                task_id,
+                n,
+                row0,
+                a_rows,
+            } => {
+                assert_eq!((task_id, n, row0), (9, 2, 6));
+                assert_eq!(a_rows.len(), 4);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        let got = roundtrip(&DistMsg::Complete {
+            task_id: 42,
+            status: Status::Expired,
+            deadline_missed: true,
+            n: 4,
+            payload: vec![],
+        });
+        match got {
+            DistMsg::Complete {
+                task_id,
+                status,
+                deadline_missed,
+                n,
+                payload,
+            } => {
+                assert_eq!(task_id, 42);
+                assert_eq!(status, Status::Expired);
+                assert!(deadline_missed);
+                assert_eq!(n, 4);
+                assert!(payload.is_empty());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        assert!(matches!(roundtrip(&DistMsg::StatsReq), DistMsg::StatsReq));
+        let got = roundtrip(&DistMsg::StatsReply {
+            done: u64::MAX - 1,
+            pending: 7,
+        });
+        assert!(matches!(
+            got,
+            DistMsg::StatsReply { done, pending: 7 } if done == u64::MAX - 1
+        ));
+        assert!(matches!(roundtrip(&DistMsg::Shutdown), DistMsg::Shutdown));
+    }
+
+    #[test]
+    fn dist_frames_share_the_version_contract() {
+        let mut bytes = encode(&DistMsg::Submit {
+            task_id: 77,
+            op: WireOp::VAdd,
+            deadline_us: 0,
+            n: 2,
+            payload: vec![1.0, 2.0],
+        });
+        bytes[4] = PROTO_VERSION + 1;
+        let mut fb = FrameBuf::new();
+        fb.extend(&bytes);
+        let body = fb.next_body().expect("frame ok").expect("complete");
+        let err = decode(body).unwrap_err();
+        assert!(matches!(err, FrameError::BadVersion { .. }));
+        assert_eq!(err.req_id(), Some(77));
+    }
+
+    #[test]
+    fn malformed_dist_frames_are_rejected() {
+        // Unknown kind byte.
+        let mut bytes = encode(&DistMsg::Shutdown);
+        bytes[13] = 99; // kind sits at body[9] = frame[4 + 9]
+        let mut fb = FrameBuf::new();
+        fb.extend(&bytes);
+        let body = fb.next_body().unwrap().unwrap();
+        assert!(matches!(decode(body), Err(FrameError::BadOp { code: 99, .. })));
+
+        // Band payload not divisible by the row length.
+        let bytes = encode(&DistMsg::SubmitBand {
+            task_id: 1,
+            n: 3,
+            row0: 0,
+            a_rows: vec![0.0; 4],
+        });
+        let mut fb = FrameBuf::new();
+        fb.extend(&bytes);
+        let body = fb.next_body().unwrap().unwrap();
+        assert!(matches!(
+            decode(body),
+            Err(FrameError::LengthMismatch { .. })
+        ));
+
+        // Broadcast over the dist dimension cap.
+        let mut bytes = encode(&DistMsg::BroadcastB {
+            n: 2,
+            b: vec![0.0; 4],
+        });
+        let bad_n = (DIST_MMULT_MAX_N as u32 + 1).to_le_bytes();
+        bytes[19..23].copy_from_slice(&bad_n); // n sits at body[15..19]
+        let mut fb = FrameBuf::new();
+        fb.extend(&bytes);
+        let body = fb.next_body().unwrap().unwrap();
+        assert!(matches!(decode(body), Err(FrameError::BadDim { .. })));
+    }
+}

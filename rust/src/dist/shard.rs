@@ -1,0 +1,708 @@
+//! Coordinator side of dist (ISSUE 10): the worker-process pool, the
+//! shard router, and the distributed matrix product.
+//!
+//! The coordinator owns a fleet of `hpxmp worker` child processes.  Each
+//! worker dials back over TCP, says [`DistMsg::Hello`], and from then on
+//! is addressed through a [`WorkerLink`] whose **tag** packs its shard
+//! slot and a monotonically increasing link generation.  Every task
+//! shipped to a worker is first registered in a
+//! [`RemoteRegistry`]`<Response>` under that tag, so the failure story
+//! is uniform (DESIGN.md §15):
+//!
+//! * completion frame arrives → `fulfil(id, Value)` resolves the future;
+//! * the worker process dies → the reader thread's `fail_tag` resolves
+//!   exactly its in-flight futures `Panicked` (a respawned worker gets a
+//!   fresh generation, so its tag never collides with the corpse's);
+//! * pool shutdown → `cancel_all` resolves the remainder `Cancelled`.
+//!
+//! A waiter therefore always gets *some* outcome — a dead worker can
+//! never hang a remote future, and the registry's `pending()` gauge
+//! returning to 0 is the coordinator-side leak check `tests/dist.rs`
+//! asserts.
+//!
+//! [`Router`] implements the wire server's
+//! [`RequestHandler`] so `hpxmp serve --shards N` reuses the whole PR 9
+//! connection layer unchanged: decoded client requests are forwarded by
+//! request key (`req_id >> 32`, i.e. the loadgen connection index) with
+//! linear probing past dead shards, and each reply is written by the
+//! remote future's completion hook.
+
+use std::net::TcpListener;
+use std::os::unix::io::AsRawFd;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::amt::{when_all, Future, Outcome, RemoteRegistry};
+use crate::blaze::kernel::PACKED_ROW_BAND;
+use crate::net::batch::{ReplySink, WireStats};
+use crate::net::frame::{self, FrameBuf, Request, Response, Status};
+use crate::net::server::{RequestHandler, WireStream};
+
+use super::proto::{self, DistLink, DistMsg, DIST_MMULT_MAX_N};
+use super::COUNTERS;
+
+/// Configuration for a worker-process pool.
+#[derive(Clone, Debug)]
+pub struct ShardCfg {
+    /// Worker processes (shard slots).
+    pub shards: usize,
+    /// AMT worker threads per process.
+    pub threads_per: usize,
+    /// Executable to spawn as `<program> worker --connect ...` — the
+    /// `hpxmp` binary itself (tests pass `CARGO_BIN_EXE_hpxmp`).
+    pub program: PathBuf,
+    /// Respawn a worker whose process died (tests disable this to pin
+    /// down the no-survivor path).
+    pub respawn: bool,
+    /// `--stall-us` forwarded to workers (tests use it to hold tasks in
+    /// flight across a kill; 0 = none).
+    pub stall_us: u64,
+}
+
+impl ShardCfg {
+    /// Pool config spawning the current executable, with respawn on and
+    /// no stall.
+    pub fn new(shards: usize, threads_per: usize) -> std::io::Result<Self> {
+        Ok(Self {
+            shards,
+            threads_per,
+            program: std::env::current_exe()?,
+            respawn: true,
+            stall_us: 0,
+        })
+    }
+}
+
+/// One live coordinator→worker connection.  `tag` feeds the remote
+/// registry: slot in the high half, link generation in the low half, so
+/// a dead link's futures are failed without touching its replacement's.
+struct WorkerLink {
+    slot: usize,
+    gen: u64,
+    tx: Arc<DistLink>,
+}
+
+impl WorkerLink {
+    fn tag(&self) -> u64 {
+        ((self.slot as u64) << 32) | (self.gen & 0xFFFF_FFFF)
+    }
+}
+
+/// Shared pool state: links, children, the remote-future registry.
+struct PoolState {
+    cfg: ShardCfg,
+    /// Dial-back address handed to children (`tcp:127.0.0.1:port`).
+    connect_addr: String,
+    links: Mutex<Vec<Option<Arc<WorkerLink>>>>,
+    children: Mutex<Vec<Option<Child>>>,
+    gen: AtomicU64,
+    registry: RemoteRegistry<Response>,
+    shutdown: AtomicBool,
+    reader_handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Tasks forwarded per shard slot (the `serve --shards` status line).
+    routed: Vec<AtomicUsize>,
+    /// One distributed mmult at a time: bands of concurrent products
+    /// would interleave `BroadcastB` frames and corrupt the cached B.
+    mmult_gate: Mutex<()>,
+}
+
+/// A running pool of worker processes; dropping it shuts the fleet down
+/// (shutdown frames, then reaping) and resolves every in-flight remote
+/// future.
+pub struct ShardPool {
+    state: Arc<PoolState>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Bind the dial-back listener, spawn `cfg.shards` worker processes,
+    /// and start the accept/reader threads.  Workers connect
+    /// asynchronously — gate on [`ShardPool::wait_ready`] before
+    /// demanding full capacity.
+    pub fn start(cfg: ShardCfg) -> std::io::Result<ShardPool> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let port = listener.local_addr()?.port();
+        let shards = cfg.shards;
+        let state = Arc::new(PoolState {
+            connect_addr: format!("tcp:127.0.0.1:{port}"),
+            links: Mutex::new((0..shards).map(|_| None).collect()),
+            children: Mutex::new((0..shards).map(|_| None).collect()),
+            gen: AtomicU64::new(0),
+            registry: RemoteRegistry::new(),
+            shutdown: AtomicBool::new(false),
+            reader_handles: Mutex::new(Vec::new()),
+            routed: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            mmult_gate: Mutex::new(()),
+            cfg,
+        });
+        for slot in 0..shards {
+            let child = spawn_child(&state, slot)?;
+            state.children.lock().expect("children poisoned")[slot] = Some(child);
+        }
+        let accept = {
+            let st = state.clone();
+            std::thread::Builder::new()
+                .name("hpxmp-dist-accept".into())
+                .spawn(move || accept_loop(listener, &st))
+                .expect("spawn dist acceptor")
+        };
+        Ok(ShardPool {
+            state,
+            accept: Some(accept),
+        })
+    }
+
+    /// Block until every slot has a live link, up to `timeout`; returns
+    /// whether the fleet came up in time.
+    pub fn wait_ready(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.live() == self.state.cfg.shards {
+                return true;
+            }
+            if Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Slots with a live worker link right now.
+    pub fn live(&self) -> usize {
+        self.state
+            .links
+            .lock()
+            .expect("links poisoned")
+            .iter()
+            .flatten()
+            .filter(|w| w.tx.alive())
+            .count()
+    }
+
+    /// Configured shard count.
+    pub fn shards(&self) -> usize {
+        self.state.cfg.shards
+    }
+
+    /// Remote futures registered but not yet resolved — the
+    /// coordinator-side leak gauge (0 once drained).
+    pub fn pending_remote(&self) -> usize {
+        self.state.registry.pending()
+    }
+
+    /// Tasks forwarded per shard slot since start.
+    pub fn routed_per_shard(&self) -> Vec<usize> {
+        self.state
+            .routed
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Kill the worker process in `slot` (test hook for the
+    /// worker-death paths).  The reader thread notices EOF, fails the
+    /// slot's in-flight futures, and — when `cfg.respawn` — starts a
+    /// replacement.
+    pub fn kill_worker(&self, slot: usize) {
+        let child = self.state.children.lock().expect("children poisoned")[slot].take();
+        if let Some(mut ch) = child {
+            let _ = ch.kill();
+            let _ = ch.wait();
+        }
+    }
+
+    /// Orderly shutdown: flag first (stops respawns and new forwards),
+    /// shutdown frames to live workers, cancel every in-flight remote
+    /// future, then reap children and join the pool threads.
+    /// Idempotent; also runs from `Drop`.
+    pub fn shutdown(&mut self) {
+        if self.state.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        {
+            let links = self.state.links.lock().expect("links poisoned");
+            for wl in links.iter().flatten() {
+                wl.tx.send(&DistMsg::Shutdown);
+            }
+        }
+        let cancelled = self.state.registry.cancel_all();
+        if cancelled > 0 {
+            COUNTERS.cancelled.fetch_add(cancelled, Ordering::Relaxed);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Give workers a bounded window to drain and exit on their own
+        // before the hard kill.
+        let deadline = Instant::now() + Duration::from_secs(1);
+        loop {
+            let mut all_done = true;
+            {
+                let mut children = self.state.children.lock().expect("children poisoned");
+                for slot in children.iter_mut() {
+                    if let Some(ch) = slot {
+                        match ch.try_wait() {
+                            Ok(Some(_)) => *slot = None,
+                            _ => all_done = false,
+                        }
+                    }
+                }
+            }
+            if all_done || Instant::now() > deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        {
+            let mut children = self.state.children.lock().expect("children poisoned");
+            for slot in children.iter_mut() {
+                if let Some(mut ch) = slot.take() {
+                    let _ = ch.kill();
+                    let _ = ch.wait();
+                }
+            }
+        }
+        let handles: Vec<JoinHandle<()>> = self
+            .state
+            .reader_handles
+            .lock()
+            .expect("reader handles poisoned")
+            .drain(..)
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn spawn_child(state: &PoolState, slot: usize) -> std::io::Result<Child> {
+    let mut cmd = Command::new(&state.cfg.program);
+    cmd.arg("worker")
+        .arg("--connect")
+        .arg(&state.connect_addr)
+        .arg("--threads")
+        .arg(state.cfg.threads_per.to_string())
+        .arg("--slot")
+        .arg(slot.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null());
+    if state.cfg.stall_us > 0 {
+        cmd.arg("--stall-us").arg(state.cfg.stall_us.to_string());
+    }
+    cmd.spawn()
+}
+
+fn accept_loop(listener: TcpListener, state: &Arc<PoolState>) {
+    let fd = listener.as_raw_fd();
+    while !state.shutdown.load(Ordering::Acquire) {
+        let mut pfd = libc::pollfd {
+            fd,
+            events: libc::POLLIN,
+            revents: 0,
+        };
+        // SAFETY: polling one valid listener fd with a bounded timeout.
+        let rc = unsafe { libc::poll(&mut pfd, 1, 100) };
+        if rc <= 0 || pfd.revents & libc::POLLIN == 0 {
+            continue;
+        }
+        match listener.accept() {
+            Ok((s, _)) => {
+                let _ = s.set_nodelay(true);
+                let stream = WireStream::Tcp(s);
+                let st = state.clone();
+                let h = std::thread::Builder::new()
+                    .name("hpxmp-dist-rd".into())
+                    .spawn(move || reader_loop(stream, &st))
+                    .expect("spawn dist reader");
+                state
+                    .reader_handles
+                    .lock()
+                    .expect("reader handles poisoned")
+                    .push(h);
+            }
+            Err(_) => continue,
+        }
+    }
+}
+
+/// Per-connection reader: installs the link on `Hello`, fulfils remote
+/// futures on `Complete`, and on EOF/desync runs the worker-death path.
+fn reader_loop(mut stream: WireStream, state: &Arc<PoolState>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut fb = FrameBuf::new();
+    let mut tmp = vec![0u8; 64 * 1024];
+    let mut link: Option<Arc<WorkerLink>> = None;
+    'conn: loop {
+        if state.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        loop {
+            let msg = match fb.next_body() {
+                Ok(Some(body)) => match proto::decode(body) {
+                    Ok(m) => m,
+                    // Addressable decode error: streams still in sync.
+                    Err(e) if e.req_id().is_some() => continue,
+                    Err(_) => break 'conn,
+                },
+                Ok(None) => break,
+                Err(_) => break 'conn,
+            };
+            match msg {
+                DistMsg::Hello { slot, .. } => {
+                    if link.is_some() {
+                        continue; // duplicate hello: ignore
+                    }
+                    let slot = slot as usize;
+                    if slot >= state.cfg.shards {
+                        break 'conn;
+                    }
+                    let write_half = match stream.try_clone() {
+                        Ok(w) => w,
+                        Err(_) => break 'conn,
+                    };
+                    let _ = write_half.set_write_timeout(Some(Duration::from_secs(5)));
+                    let gen = state.gen.fetch_add(1, Ordering::AcqRel) + 1;
+                    let wl = Arc::new(WorkerLink {
+                        slot,
+                        gen,
+                        tx: Arc::new(DistLink::new(write_half)),
+                    });
+                    state.links.lock().expect("links poisoned")[slot] = Some(wl.clone());
+                    link = Some(wl);
+                }
+                DistMsg::Complete {
+                    task_id,
+                    status,
+                    deadline_missed,
+                    n,
+                    payload,
+                } => {
+                    let resolved = state.registry.fulfil(
+                        task_id,
+                        Outcome::Value(Response {
+                            req_id: task_id,
+                            status,
+                            deadline_missed,
+                            n,
+                            payload,
+                        }),
+                    );
+                    if resolved {
+                        COUNTERS.fulfilled.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                // Worker→coordinator stats polling is driven by the
+                // status loop when it wants numbers; everything else in
+                // this direction is noise.
+                _ => {}
+            }
+        }
+        match frame::read_into(&mut stream, &mut fb, &mut tmp) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    if let Some(wl) = link {
+        on_worker_death(state, &wl);
+    }
+}
+
+/// The race-ordered death path: kill the link *first* (so no new send
+/// succeeds), unlink the slot only if this link is still current, fail
+/// the tag's in-flight futures, then reap and (optionally) respawn.
+fn on_worker_death(state: &Arc<PoolState>, wl: &Arc<WorkerLink>) {
+    wl.tx.kill();
+    let was_current = {
+        let mut links = state.links.lock().expect("links poisoned");
+        match &links[wl.slot] {
+            Some(cur) if cur.gen == wl.gen => {
+                links[wl.slot] = None;
+                true
+            }
+            _ => false,
+        }
+    };
+    let failed = state.registry.fail_tag(wl.tag());
+    if failed > 0 {
+        COUNTERS.failed.fetch_add(failed, Ordering::Relaxed);
+    }
+    if was_current && !state.shutdown.load(Ordering::Acquire) {
+        let child = state.children.lock().expect("children poisoned")[wl.slot].take();
+        if let Some(mut ch) = child {
+            let _ = ch.kill();
+            let _ = ch.wait();
+        }
+        if state.cfg.respawn {
+            if let Ok(ch) = spawn_child(state, wl.slot) {
+                state.children.lock().expect("children poisoned")[wl.slot] = Some(ch);
+                COUNTERS.reconnects.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl PoolState {
+    /// Ship one serving request to the shard owning `key`, probing
+    /// linearly past dead slots.  Registration happens *before* the
+    /// send, so a worker dying mid-send is covered by `fail_tag`; a send
+    /// that fails outright resolves its own entry `Panicked`.  All slots
+    /// dead → an already-`Panicked` future (never a hang).
+    fn forward(&self, key: u64, req: &Request) -> Future<Response> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Future::with_outcome(Outcome::Panicked);
+        }
+        let shards = self.cfg.shards;
+        let home = (key % shards as u64) as usize;
+        for attempt in 0..shards {
+            let slot = (home + attempt) % shards;
+            let Some(wl) = self.links.lock().expect("links poisoned")[slot].clone() else {
+                continue;
+            };
+            if !wl.tx.alive() {
+                continue;
+            }
+            let (id, fut) = self.registry.register(wl.tag());
+            let sent = wl.tx.send(&DistMsg::Submit {
+                task_id: id,
+                op: req.op,
+                deadline_us: req.deadline_us,
+                n: req.n,
+                payload: req.payload.clone(),
+            });
+            if !sent {
+                // Entry is ours to resolve (registered after any
+                // fail_tag that raced the death we just observed).
+                let _ = self.registry.fulfil(id, Outcome::Panicked);
+                continue;
+            }
+            if !wl.tx.alive() {
+                // Link died between send and here: fail_tag may or may
+                // not have drained the entry — either way this resolves
+                // it (duplicate fulfil is a benign no-op).
+                let _ = self.registry.fulfil(id, Outcome::Panicked);
+            }
+            self.routed[slot].fetch_add(1, Ordering::Relaxed);
+            COUNTERS.routed.fetch_add(1, Ordering::Relaxed);
+            if attempt > 0 {
+                COUNTERS.reroutes.fetch_add(1, Ordering::Relaxed);
+            }
+            return fut;
+        }
+        Future::with_outcome(Outcome::Panicked)
+    }
+}
+
+/// The dist front-end's [`RequestHandler`]: decoded client requests are
+/// forwarded to the shard pool and answered from the remote future's
+/// completion hook.  Plugging this into
+/// [`WireServer::start_with`](crate::net::server::WireServer::start_with)
+/// is the whole of `hpxmp serve --shards N`.
+pub struct Router {
+    pool: Arc<PoolState>,
+    stats: Arc<WireStats>,
+    max_pending: usize,
+}
+
+impl Router {
+    /// Build a router over `pool`, accounting into `stats`, shedding
+    /// beyond `max_pending` in-flight requests.
+    pub fn new(pool: &ShardPool, stats: Arc<WireStats>, max_pending: usize) -> Arc<Router> {
+        Arc::new(Router {
+            pool: pool.state.clone(),
+            stats,
+            max_pending,
+        })
+    }
+}
+
+impl RequestHandler for Router {
+    fn submit(&self, req: Request, sink: Arc<dyn ReplySink>) {
+        if self.stats.pending.load(Ordering::Acquire) >= self.max_pending {
+            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            sink.send(&Response {
+                req_id: req.req_id,
+                status: Status::Shed,
+                deadline_missed: false,
+                n: req.n,
+                payload: Vec::new(),
+            });
+            return;
+        }
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.stats.pending.fetch_add(1, Ordering::AcqRel);
+        let client_id = req.req_id;
+        let n = req.n;
+        // Key on the connection half of the id (loadgen packs
+        // `conn << 32 | seq`): one client connection's requests stay on
+        // one shard, spreading connections across the fleet.
+        let key = req.req_id >> 32;
+        let fut = self.pool.forward(key, &req);
+        let stats = self.stats.clone();
+        // `on_ready` fires for every outcome — completion frame,
+        // fail_tag, cancel_all, or the promise-drop backstop — so the
+        // pending gauge decrement below runs exactly once per admitted
+        // request (the dist leak-freedom invariant).
+        fut.on_ready(move |out: &Outcome<Response>| {
+            let resp = match out {
+                Outcome::Value(r) => {
+                    match r.status {
+                        Status::Ok => {
+                            stats.ok.fetch_add(1, Ordering::Relaxed);
+                            if r.deadline_missed {
+                                stats.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Status::Shed => {
+                            stats.shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Status::Expired => {
+                            stats.expired.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Status::Error | Status::BadRequest => {
+                            stats.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Response {
+                        req_id: client_id,
+                        status: r.status,
+                        deadline_missed: r.deadline_missed,
+                        n: r.n,
+                        payload: r.payload.clone(),
+                    }
+                }
+                Outcome::Cancelled | Outcome::Panicked => {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    Response {
+                        req_id: client_id,
+                        status: Status::Error,
+                        deadline_missed: false,
+                        n,
+                        payload: Vec::new(),
+                    }
+                }
+            };
+            sink.send(&resp);
+            stats.pending.fetch_sub(1, Ordering::AcqRel);
+        });
+    }
+}
+
+/// Distributed `C = A · B` (row-major n×n): broadcast B to every live
+/// worker, scatter A in row bands round-robin, gather C through
+/// [`when_all`] over the bands' remote futures.  Bands lost to a worker
+/// death are re-scattered to survivors (or respawns) on later rounds.
+///
+/// Bitwise identical to [`crate::blaze::kernel::packed_matmul`] for any
+/// row split: every path packs the *full* B once and accumulates each C
+/// element over ascending-k strips, so the per-element operation order
+/// is independent of where the rows land.
+pub fn dist_matmul(pool: &ShardPool, a: &[f64], b: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    if n == 0 || n > DIST_MMULT_MAX_N {
+        return Err(format!("dist mmult: n={n} outside 1..={DIST_MMULT_MAX_N}"));
+    }
+    assert_eq!(a.len(), n * n, "A must be n x n");
+    assert_eq!(b.len(), n * n, "B must be n x n");
+    let state = &pool.state;
+    let _gate = state.mmult_gate.lock().expect("mmult gate poisoned");
+    let mut c = vec![0.0f64; n * n];
+    // Band size: ~2 bands per shard for load balance, rounded up to the
+    // packed row band so splits are cheap (any split is bitwise-safe).
+    let chunk = n
+        .div_ceil(state.cfg.shards.max(1) * 2)
+        .div_ceil(PACKED_ROW_BAND)
+        .max(1)
+        * PACKED_ROW_BAND;
+    let mut todo: Vec<(usize, usize)> = (0..n)
+        .step_by(chunk)
+        .map(|r0| (r0, (r0 + chunk).min(n)))
+        .collect();
+    for round in 0..3 {
+        if todo.is_empty() {
+            break;
+        }
+        if round > 0 {
+            // A lost band means a worker just died; give a respawn a
+            // beat to dial back in before re-scattering.
+            std::thread::sleep(Duration::from_millis(300));
+        }
+        let live: Vec<Arc<WorkerLink>> = state
+            .links
+            .lock()
+            .expect("links poisoned")
+            .iter()
+            .flatten()
+            .filter(|w| w.tx.alive())
+            .cloned()
+            .collect();
+        if live.is_empty() {
+            continue;
+        }
+        // (Re-)broadcast B: a respawned worker has no cached operand.
+        let live: Vec<Arc<WorkerLink>> = live
+            .into_iter()
+            .filter(|w| {
+                w.tx.send(&DistMsg::BroadcastB {
+                    n: n as u32,
+                    b: b.to_vec(),
+                })
+            })
+            .collect();
+        if live.is_empty() {
+            continue;
+        }
+        let mut futs = Vec::with_capacity(todo.len());
+        let mut meta = Vec::with_capacity(todo.len());
+        for (i, &(r0, r1)) in todo.iter().enumerate() {
+            let wl = &live[i % live.len()];
+            let (id, fut) = state.registry.register(wl.tag());
+            let sent = wl.tx.send(&DistMsg::SubmitBand {
+                task_id: id,
+                n: n as u32,
+                row0: r0 as u32,
+                a_rows: a[r0 * n..r1 * n].to_vec(),
+            });
+            if !sent || !wl.tx.alive() {
+                let _ = state.registry.fulfil(id, Outcome::Panicked);
+            }
+            COUNTERS.bands.fetch_add(1, Ordering::Relaxed);
+            futs.push(fut);
+            meta.push((r0, r1));
+        }
+        when_all(&futs).wait();
+        let mut next = Vec::new();
+        for (fut, (r0, r1)) in futs.iter().zip(meta) {
+            match fut.try_outcome() {
+                Some(Outcome::Value(resp))
+                    if resp.status == Status::Ok && resp.payload.len() == (r1 - r0) * n =>
+                {
+                    c[r0 * n..r1 * n].copy_from_slice(&resp.payload);
+                }
+                _ => next.push((r0, r1)),
+            }
+        }
+        todo = next;
+    }
+    if !todo.is_empty() {
+        return Err(format!(
+            "dist mmult: {} row bands unserved after retries",
+            todo.len()
+        ));
+    }
+    Ok(c)
+}

@@ -1,0 +1,293 @@
+//! The worker-process side of dist (ISSUE 10): `hpxmp worker --connect`.
+//!
+//! A worker is one OS process running its own AMT runtime.  It dials
+//! the coordinator, announces itself with [`DistMsg::Hello`], and then
+//! serves two kinds of work off one blocking read loop:
+//!
+//! * [`DistMsg::Submit`] — a serving-kernel task.  It goes straight
+//!   into the PR 9 [`Coalescer`]/[`Engine`] stack (same batching,
+//!   backpressure, and deadline machinery as the in-process server);
+//!   the engine's reply sink is the [`DistLink`] back to the
+//!   coordinator, so every outcome — Ok, Shed, Expired, Error — leaves
+//!   as a [`DistMsg::Complete`] frame with no dist-specific branches in
+//!   the engine.
+//! * [`DistMsg::BroadcastB`] + [`DistMsg::SubmitBand`] — the
+//!   distributed `dmatdmatmult`.  B is packed once per broadcast; each
+//!   band is futurized over the local runtime with the same
+//!   packed-band kernel the single-process path uses, so the scattered
+//!   product is bitwise identical to the serial oracle for *any* row
+//!   split (per-element accumulation order depends only on ascending-k
+//!   strips, not on where the rows land).
+//!
+//! EOF or a framing error on the coordinator link is the worker's cue
+//! to drain and exit: an orphaned worker never lingers past its
+//! coordinator.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::amt::{Outcome, PolicyKind};
+use crate::blaze::kernel::{self, pack_a_band, pack_b_band, packed_a_len, packed_b_len, PACKED_ROW_BAND};
+use crate::blaze::ops::SendPtr;
+use crate::net::batch::{BatchCfg, Coalescer, Engine, ReplySink, WireStats};
+use crate::net::frame::{self, FrameBuf, Request, Status};
+use crate::net::server::{WireAddr, WireStream};
+use crate::omp::OmpRuntime;
+use crate::par::{exec, ExecMode, HpxMpRuntime, Policy};
+
+use super::proto::{self, DistLink, DistMsg};
+
+/// Configuration for one worker process (`hpxmp worker`).
+#[derive(Clone, Debug)]
+pub struct WorkerCfg {
+    /// Coordinator address to dial (`--connect`).
+    pub connect: WireAddr,
+    /// AMT worker threads for the in-process runtime (`--threads`).
+    pub threads: usize,
+    /// Shard slot this process fills, echoed in `Hello` (`--slot`).
+    pub slot: u32,
+    /// Artificial delay before handling each submit, µs (`--stall-us`;
+    /// tests use it to hold tasks in flight across a kill).
+    pub stall_us: u64,
+}
+
+/// The per-broadcast cached B operand: packed once, shared by every
+/// band task until the next broadcast replaces it.
+#[derive(Clone)]
+struct Bcast {
+    n: u32,
+    b_pack: Arc<Vec<f64>>,
+}
+
+/// Run one worker process to completion: dial the coordinator, say
+/// hello, serve submits until shutdown/EOF, drain, exit.  This is the
+/// whole body of the `hpxmp worker` subcommand.
+pub fn run_worker(cfg: &WorkerCfg) -> std::io::Result<()> {
+    let mut read_half = WireStream::connect(&cfg.connect)?;
+    let write_half = read_half.try_clone()?;
+    let _ = write_half.set_write_timeout(Some(Duration::from_secs(5)));
+    let link = Arc::new(DistLink::new(write_half));
+    link.send(&DistMsg::Hello {
+        slot: cfg.slot,
+        threads: cfg.threads as u32,
+    });
+
+    let rt = OmpRuntime::new(cfg.threads, PolicyKind::PriorityLocal);
+    rt.icv.set_nthreads(cfg.threads);
+    let stats = Arc::new(WireStats::default());
+    let bcfg = BatchCfg::default();
+    let coal = Coalescer::new(Arc::new(Engine::new(rt.clone(), bcfg, stats.clone())), bcfg);
+    let batcher = {
+        let c = coal.clone();
+        std::thread::Builder::new()
+            .name("hpxmp-dist-batch".into())
+            .spawn(move || c.run_batcher())
+            .expect("spawn dist batcher")
+    };
+    let exec_rt = HpxMpRuntime::new(rt);
+
+    let bcast: Mutex<Option<Bcast>> = Mutex::new(None);
+    let band_inflight = Arc::new(AtomicUsize::new(0));
+    let band_done = Arc::new(AtomicU64::new(0));
+
+    let mut fb = FrameBuf::new();
+    let mut tmp = vec![0u8; 64 * 1024];
+    'link: loop {
+        loop {
+            let msg = match fb.next_body() {
+                Ok(Some(body)) => match proto::decode(body) {
+                    Ok(m) => m,
+                    // Addressable decode error: the frame was framed but
+                    // invalid — the streams are still in sync, skip it.
+                    Err(e) if e.req_id().is_some() => continue,
+                    // Desync (oversized/truncated): the byte stream is
+                    // unrecoverable, same policy as the serving shards.
+                    Err(_) => break 'link,
+                },
+                Ok(None) => break,
+                Err(_) => break 'link,
+            };
+            match msg {
+                DistMsg::Submit {
+                    task_id,
+                    op,
+                    deadline_us,
+                    n,
+                    payload,
+                } => {
+                    if cfg.stall_us > 0 {
+                        std::thread::sleep(Duration::from_micros(cfg.stall_us));
+                    }
+                    let sink: Arc<dyn ReplySink> = link.clone();
+                    coal.submit(
+                        Request {
+                            req_id: task_id,
+                            op,
+                            deadline_us,
+                            n,
+                            payload,
+                        },
+                        sink,
+                    );
+                }
+                DistMsg::BroadcastB { n, b } => {
+                    let dim = n as usize;
+                    let mut b_pack = vec![0.0f64; packed_b_len(dim, dim)];
+                    pack_b_band(&b, dim, dim, 0, dim, &mut b_pack);
+                    *bcast.lock().expect("bcast poisoned") = Some(Bcast {
+                        n,
+                        b_pack: Arc::new(b_pack),
+                    });
+                }
+                DistMsg::SubmitBand {
+                    task_id,
+                    n,
+                    row0: _,
+                    a_rows,
+                } => {
+                    if cfg.stall_us > 0 {
+                        std::thread::sleep(Duration::from_micros(cfg.stall_us));
+                    }
+                    let cached = bcast.lock().expect("bcast poisoned").clone();
+                    match cached {
+                        Some(bc) if bc.n == n => run_band(
+                            &exec_rt,
+                            &link,
+                            &band_inflight,
+                            &band_done,
+                            bc.b_pack,
+                            task_id,
+                            n as usize,
+                            a_rows,
+                        ),
+                        // No (or mismatched) broadcast: the band cannot
+                        // be computed — fail it addressably so the
+                        // coordinator's future resolves instead of
+                        // hanging.
+                        _ => {
+                            link.send(&DistMsg::Complete {
+                                task_id,
+                                status: Status::Error,
+                                deadline_missed: false,
+                                n,
+                                payload: Vec::new(),
+                            });
+                        }
+                    }
+                }
+                DistMsg::StatsReq => {
+                    let s = &stats;
+                    let done = (s.ok.load(Ordering::Relaxed)
+                        + s.errors.load(Ordering::Relaxed)
+                        + s.expired.load(Ordering::Relaxed)
+                        + s.shed.load(Ordering::Relaxed))
+                        as u64
+                        + band_done.load(Ordering::Relaxed);
+                    let pending =
+                        (s.pending() + band_inflight.load(Ordering::Acquire)) as u32;
+                    link.send(&DistMsg::StatsReply { done, pending });
+                }
+                DistMsg::Shutdown => break 'link,
+                // Worker-bound directions only; anything else is noise.
+                DistMsg::Hello { .. } | DistMsg::Complete { .. } | DistMsg::StatsReply { .. } => {}
+            }
+        }
+        match frame::read_into(&mut read_half, &mut fb, &mut tmp) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+
+    // Orderly drain: flush the coalescer, then give in-flight batches
+    // and band joins a bounded window to write their completions before
+    // the process (and its half of the socket) goes away.
+    coal.shutdown();
+    let _ = batcher.join();
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while (stats.pending() > 0 || band_inflight.load(Ordering::Acquire) > 0)
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    Ok(())
+}
+
+/// Futurize one mmult row band over the local runtime and send its
+/// completion from the join continuation.  `a_rows` is this band's
+/// `rows × dim` slice of A; the output band of C is `rows × dim`.
+#[allow(clippy::too_many_arguments)]
+fn run_band(
+    exec_rt: &HpxMpRuntime,
+    link: &Arc<DistLink>,
+    inflight: &Arc<AtomicUsize>,
+    band_done: &Arc<AtomicU64>,
+    b_pack: Arc<Vec<f64>>,
+    task_id: u64,
+    dim: usize,
+    a_rows: Vec<f64>,
+) {
+    let rows = a_rows.len() / dim;
+    let mut out = vec![0.0f64; rows * dim];
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    let a_rows = Arc::new(a_rows);
+    let units = rows.div_ceil(PACKED_ROW_BAND) as i64;
+    let body: Arc<dyn Fn(std::ops::Range<i64>) + Send + Sync> = {
+        let a_rows = a_rows.clone();
+        Arc::new(move |r: std::ops::Range<i64>| {
+            for g in r {
+                let i0 = g as usize * PACKED_ROW_BAND;
+                let i1 = (i0 + PACKED_ROW_BAND).min(rows);
+                let mut a_pack = vec![0.0f64; packed_a_len(i1 - i0, dim)];
+                pack_a_band(&a_rows, dim, i0, i1, &mut a_pack);
+                // SAFETY: rows [i0, i1) of the band's output buffer are
+                // this unit's exclusive rectangle (unit indices are
+                // claimed exactly once), and the buffer outlives the
+                // join (moved into `on_ready`, which only fires after
+                // every chunk arrived).
+                unsafe {
+                    kernel::packed_band_mm_ptr(
+                        &a_pack, i1 - i0, &b_pack, dim, dim, out_ptr, dim, i0, 0,
+                    );
+                }
+            }
+        })
+    };
+    inflight.fetch_add(1, Ordering::AcqRel);
+    let pol = Policy::with_mode(ExecMode::Task).on(exec_rt);
+    let join = exec::for_each_async(&pol, 0..units, body);
+    let link = link.clone();
+    let inflight = inflight.clone();
+    let band_done = band_done.clone();
+    join.on_ready(move |outcome: &Outcome<()>| {
+        let out = out;
+        let msg = match outcome {
+            Outcome::Value(()) => DistMsg::Complete {
+                task_id,
+                status: Status::Ok,
+                deadline_missed: false,
+                n: dim as u32,
+                payload: out,
+            },
+            Outcome::Cancelled => DistMsg::Complete {
+                task_id,
+                status: Status::Expired,
+                deadline_missed: true,
+                n: dim as u32,
+                payload: Vec::new(),
+            },
+            Outcome::Panicked => DistMsg::Complete {
+                task_id,
+                status: Status::Error,
+                deadline_missed: false,
+                n: dim as u32,
+                payload: Vec::new(),
+            },
+        };
+        link.send(&msg);
+        band_done.fetch_add(1, Ordering::Relaxed);
+        inflight.fetch_sub(1, Ordering::AcqRel);
+    });
+}

@@ -24,6 +24,9 @@
 //! * [`net`] — the socket front-end: a length-prefixed kernel-request
 //!   protocol over TCP/UDS, same-kernel request batching, and
 //!   admission-coupled backpressure (serve at wire speed).
+//! * [`dist`] — distributed hpxMP: multi-process sharding with remote
+//!   futures over the wire layer (worker fleet, shard router, scattered
+//!   matrix product).
 //! * [`coordinator`] — the Blazemark-style benchmark harness regenerating
 //!   every figure of the paper's evaluation, plus conformance reports.
 //! * [`util`] — in-tree substrates (RNG, stats, CSV, CLI, property tests).
@@ -32,6 +35,7 @@ pub mod amt;
 pub mod baseline;
 pub mod blaze;
 pub mod coordinator;
+pub mod dist;
 pub mod net;
 pub mod omp;
 pub mod par;

@@ -10,6 +10,9 @@
 //! hpxmp dataflow [--sizes a,b,c]          fork-join vs futurized dataflow mmult
 //! hpxmp serve    [--clients M --mix m]    multi-tenant serving: shared vs per-client
 //! hpxmp serve    --listen <addr> [...]    wire server (TCP/UDS, coalescing front-end)
+//! hpxmp serve    --listen <addr> --shards N  dist front-end over a worker-process fleet
+//! hpxmp worker   --connect <addr> [...]   dist worker process (spawned by the coordinator)
+//! hpxmp dist-mmult [--shards N --size n]  distributed matmul vs single-process oracle
 //! hpxmp loadgen  [--addr a --rate R]      open-loop load generator for the wire server
 //! hpxmp offload  [--size N]               three-layer PJRT smoke run
 //! hpxmp policies [--tasks N]              AMT policy ablation
@@ -36,7 +39,7 @@ const VALUE_OPTS: &[&str] = &[
     "op", "threads", "workers", "policy", "sizes", "out", "size", "tasks", "clients", "requests",
     "mix", "exec", "tile", "deadline-us", "retries", "kernel", "threshold", "pattern", "width",
     "steps", "grain-us", "listen", "addr", "rate", "conns", "dist", "duration", "coalesce-us",
-    "max-batch", "max-pending", "seed",
+    "max-batch", "max-pending", "seed", "connect", "slot", "stall-us", "shards",
 ];
 
 fn main() {
@@ -58,6 +61,8 @@ fn main() {
             "scaling" => cmd_scaling(&args, mode),
             "dataflow" => cmd_dataflow(&args),
             "serve" => cmd_serve(&args, mode),
+            "worker" => cmd_worker(&args),
+            "dist-mmult" => cmd_dist_mmult(&args),
             "loadgen" => cmd_loadgen(&args),
             "offload" => cmd_offload(&args),
             "policies" => cmd_policies(&args),
@@ -97,7 +102,7 @@ fn kernel_variant(args: &Args) -> anyhow::Result<exec::KernelVariant> {
 fn print_help() {
     println!(
         "hpxmp — OpenMP-over-AMT runtime (hpxMP reproduction)\n\n\
-         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|serve|loadgen|offload|policies|taskbench> [options]\n\n\
+         usage: hpxmp <info|conformance|heatmap|scaling|dataflow|serve|worker|dist-mmult|loadgen|offload|policies|taskbench> [options]\n\n\
          options:\n\
            --op <dvecdvecadd|daxpy|dmatdmatadd|dmatdmatmult|dmatdvecmult|all>\n\
            --exec <seq|par|task>     execution policy for every kernel (env: HPXMP_EXEC;\n\
@@ -117,6 +122,11 @@ fn print_help() {
            --shed                    shed requests when the runtime is saturated (serve)\n\
            --retries N               backoff attempts before a shed (serve; default 2)\n\
            --listen <addr>           serve the wire protocol on tcp:host:port or uds:/path\n\
+           --shards N                serve --listen through N worker processes (dist mode;\n\
+                                     requests are routed by key with failover to survivors)\n\
+           --connect <addr>          worker: coordinator address to dial back (required)\n\
+           --slot N                  worker: shard slot announced in the hello (default 0)\n\
+           --stall-us D              worker: artificial delay before each task (tests)\n\
            --coalesce-us W           wire coalescing window in us (serve --listen; default 150;\n\
                                      env HPXMP_COALESCE=0 disables batching)\n\
            --max-batch N             flush a coalescing bucket at N requests (default 32)\n\
@@ -214,6 +224,14 @@ fn cmd_info(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
         println!(
             "  task arena       : {} fresh, {} reused, {} boxed-fallback, {} recycled, {} freed",
             a.fresh_allocs, a.reuses, a.fallbacks, a.recycled, a.freed
+        );
+    }
+    {
+        let d = hpxmp::dist::stats();
+        println!(
+            "  dist             : {} routed, {} bands, {} fulfilled, {} failed, {} cancelled, \
+             {} reroutes, {} respawns",
+            d.routed, d.bands, d.fulfilled, d.failed, d.cancelled, d.reroutes, d.reconnects
         );
     }
     println!(
@@ -433,6 +451,9 @@ fn cmd_serve(args: &Args, mode: ExecMode) -> anyhow::Result<()> {
 /// killed), printing the wire counters once per second.
 fn cmd_serve_wire(args: &Args, listen: &str) -> anyhow::Result<()> {
     use hpxmp::net::{BatchCfg, WireAddr, WireServer};
+    if args.get_usize("shards", 0) > 0 {
+        return cmd_serve_dist(args, listen);
+    }
     let addr = WireAddr::parse(listen).map_err(|e| anyhow::anyhow!(e))?;
     let workers = args.get_usize("workers", icv::num_procs().max(2));
     let policy = match args.get("policy") {
@@ -490,6 +511,129 @@ fn cmd_serve_wire(args: &Args, listen: &str) -> anyhow::Result<()> {
         }
     }
     server.drain(std::time::Duration::from_secs(5));
+    Ok(())
+}
+
+/// `hpxmp serve --listen <addr> --shards N` (ISSUE 10): the dist
+/// front-end.  Spawns and supervises N `hpxmp worker` processes, binds
+/// the same wire protocol, and routes decoded requests to the fleet by
+/// request key with failover to survivors; replies are written by the
+/// remote futures' completion hooks.
+fn cmd_serve_dist(args: &Args, listen: &str) -> anyhow::Result<()> {
+    use hpxmp::dist::{Router, ShardCfg, ShardPool};
+    use hpxmp::net::{WireAddr, WireServer, WireStats};
+    let addr = WireAddr::parse(listen).map_err(|e| anyhow::anyhow!(e))?;
+    let shards = args.get_usize("shards", 2);
+    let workers = args.get_usize("workers", icv::num_procs().max(2));
+    let threads_per = (workers / shards).max(1);
+    let max_pending = args.get_usize("max-pending", 1024);
+    let mut cfg = ShardCfg::new(shards, threads_per)?;
+    cfg.stall_us = args.get_usize("stall-us", 0) as u64;
+    let mut pool = ShardPool::start(cfg)?;
+    if !pool.wait_ready(std::time::Duration::from_secs(10)) {
+        anyhow::bail!("dist: only {}/{} workers connected", pool.live(), shards);
+    }
+    let stats = Arc::new(WireStats::default());
+    let router = Router::new(&pool, stats.clone(), max_pending);
+    let server = WireServer::start_with(router, stats, &[addr.clone()])?;
+    let bound = server
+        .local_addr()
+        .map(|a| format!("tcp:{a}"))
+        .unwrap_or_else(|| addr.to_string());
+    println!(
+        "dist front-end on {bound}: {shards} worker processes x {threads_per} threads, \
+         pending cap {max_pending}, {} server threads",
+        server.thread_count()
+    );
+    let duration = args.get_usize("duration", 0);
+    let start = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(1));
+        let s = server.stats();
+        let d = hpxmp::dist::stats();
+        use std::sync::atomic::Ordering::Relaxed;
+        println!(
+            "t={:>4}s conns {} reqs {} ok {} shed {} errors {} pending {} | live {}/{} \
+             routed {} remote-pending {} reroutes {} respawns {}",
+            start.elapsed().as_secs(),
+            s.accepted.load(Relaxed),
+            s.requests.load(Relaxed),
+            s.ok.load(Relaxed),
+            s.shed.load(Relaxed),
+            s.errors.load(Relaxed),
+            s.pending(),
+            pool.live(),
+            shards,
+            report::render_counts(&pool.routed_per_shard()),
+            pool.pending_remote(),
+            d.reroutes,
+            d.reconnects
+        );
+        if duration > 0 && start.elapsed().as_secs() >= duration as u64 {
+            break;
+        }
+    }
+    server.drain(std::time::Duration::from_secs(5));
+    drop(server);
+    pool.shutdown();
+    Ok(())
+}
+
+/// `hpxmp worker` (ISSUE 10): one dist worker process.  Spawned by the
+/// coordinator (`serve --shards` / `dist-mmult`); dials `--connect`,
+/// serves submits on its own AMT runtime, exits on shutdown or when the
+/// coordinator goes away.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    use hpxmp::dist::{run_worker, WorkerCfg};
+    use hpxmp::net::WireAddr;
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --connect <addr>"))?;
+    let cfg = WorkerCfg {
+        connect: WireAddr::parse(connect).map_err(|e| anyhow::anyhow!("--connect: {e}"))?,
+        threads: args.get_usize("threads", 2),
+        slot: args.get_usize("slot", 0) as u32,
+        stall_us: args.get_usize("stall-us", 0) as u64,
+    };
+    run_worker(&cfg)?;
+    Ok(())
+}
+
+/// `hpxmp dist-mmult` (ISSUE 10): distributed `C = A · B` across a
+/// worker fleet, checked bitwise against the single-process packed
+/// oracle.
+fn cmd_dist_mmult(args: &Args) -> anyhow::Result<()> {
+    use hpxmp::blaze::{kernel, DynMatrix};
+    use hpxmp::dist::{dist_matmul, ShardCfg, ShardPool};
+    let shards = args.get_usize("shards", 2);
+    let n = args.get_usize("size", 256);
+    let seed = args.get_usize("seed", 0x5eed) as u64;
+    let workers = args.get_usize("workers", icv::num_procs().max(2));
+    let threads_per = (workers / shards).max(1);
+    let mut pool = ShardPool::start(ShardCfg::new(shards, threads_per)?)?;
+    if !pool.wait_ready(std::time::Duration::from_secs(10)) {
+        anyhow::bail!("dist: only {}/{} workers connected", pool.live(), shards);
+    }
+    let a = DynMatrix::random(n, n, seed);
+    let b = DynMatrix::random(n, n, seed ^ 0x9E37_79B9);
+    let t0 = std::time::Instant::now();
+    let c = dist_matmul(&pool, a.as_slice(), b.as_slice(), n).map_err(|e| anyhow::anyhow!(e))?;
+    let dist_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = std::time::Instant::now();
+    let mut oracle = vec![0.0f64; n * n];
+    kernel::packed_matmul(a.as_slice(), b.as_slice(), n, n, n, &mut oracle);
+    let oracle_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let bitwise = c
+        .iter()
+        .zip(&oracle)
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    println!(
+        "dist-mmult n={n} over {shards} workers x {threads_per} threads: {dist_ms:.1} ms \
+         (single-process packed oracle {oracle_ms:.1} ms), bitwise {}",
+        if bitwise { "IDENTICAL" } else { "MISMATCH" }
+    );
+    pool.shutdown();
+    anyhow::ensure!(bitwise, "distributed product differs from the oracle");
     Ok(())
 }
 

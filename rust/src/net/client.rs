@@ -2,14 +2,12 @@
 //! seeded open-loop load generator behind `hpxmp loadgen`.
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
-use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::blaze::DynVector;
-use crate::net::frame::{encode_request, FrameBuf, Request, Response, REQ_ID_OFFSET, WireOp};
+use crate::net::frame::{self, encode_request, FrameBuf, Request, Response, REQ_ID_OFFSET, WireOp};
 use crate::net::server::{WireAddr, WireStream};
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::RequestStats;
@@ -39,14 +37,7 @@ fn to_io<E: std::error::Error + Send + Sync + 'static>(e: E) -> std::io::Error {
 
 impl WireClient {
     pub fn connect(addr: &WireAddr) -> std::io::Result<Self> {
-        let stream = match addr {
-            WireAddr::Tcp(hp) => {
-                let s = std::net::TcpStream::connect(hp.as_str())?;
-                let _ = s.set_nodelay(true);
-                WireStream::Tcp(s)
-            }
-            WireAddr::Uds(p) => WireStream::Uds(UnixStream::connect(p)?),
-        };
+        let stream = WireStream::connect(addr)?;
         stream.set_read_timeout(Some(Duration::from_secs(10)))?;
         Ok(Self {
             stream,
@@ -58,29 +49,27 @@ impl WireClient {
     /// Send raw bytes on the connection (tests use this to inject
     /// malformed or truncated frames).
     pub fn send_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
-        self.stream.write_all(bytes)
+        frame::write_frame(&mut self.stream, bytes)
     }
 
     /// Send one request without waiting (pipelining).
     pub fn send(&mut self, req: &Request) -> std::io::Result<()> {
-        self.stream.write_all(&encode_request(req))
+        frame::write_frame(&mut self.stream, &encode_request(req))
     }
 
     /// Receive the next response frame (blocking, read-timeout bounded).
     pub fn recv(&mut self) -> std::io::Result<Response> {
+        let mut tmp = [0u8; 64 * 1024];
         loop {
             if let Some(resp) = self.buf.next_response().map_err(to_io)? {
                 return Ok(resp);
             }
-            let mut tmp = [0u8; 64 * 1024];
-            let k = self.stream.read(&mut tmp)?;
-            if k == 0 {
+            if frame::read_into(&mut self.stream, &mut self.buf, &mut tmp)? == 0 {
                 return Err(std::io::Error::new(
                     std::io::ErrorKind::UnexpectedEof,
                     "server closed connection",
                 ));
             }
-            self.buf.extend(&tmp[..k]);
         }
     }
 
@@ -189,14 +178,7 @@ pub fn run_loadgen(cfg: &LoadgenCfg) -> std::io::Result<LoadgenReport> {
     let mut receivers = Vec::new();
     let sent_total = Arc::new(AtomicUsize::new(0));
     for conn_idx in 0..cfg.conns {
-        let stream = match &cfg.addr {
-            WireAddr::Tcp(hp) => {
-                let s = std::net::TcpStream::connect(hp.as_str())?;
-                let _ = s.set_nodelay(true);
-                WireStream::Tcp(s)
-            }
-            WireAddr::Uds(p) => WireStream::Uds(UnixStream::connect(p)?),
-        };
+        let stream = WireStream::connect(&cfg.addr)?;
         let reader = stream.try_clone()?;
         reader.set_read_timeout(Some(Duration::from_millis(50)))?;
         let outstanding: Arc<Mutex<HashMap<u64, Instant>>> =
@@ -252,7 +234,7 @@ fn sender_loop(
             .as_slice()
             .to_vec()
     };
-    let mut frame = encode_request(&Request {
+    let mut template = encode_request(&Request {
         req_id: 0,
         op: cfg.op,
         deadline_us: cfg.deadline_us,
@@ -280,12 +262,12 @@ fn sender_loop(
             ));
         }
         let req_id = (conn_idx << 32) | seq;
-        frame[REQ_ID_OFFSET..REQ_ID_OFFSET + 8].copy_from_slice(&req_id.to_le_bytes());
+        template[REQ_ID_OFFSET..REQ_ID_OFFSET + 8].copy_from_slice(&req_id.to_le_bytes());
         outstanding
             .lock()
             .expect("outstanding map poisoned")
             .insert(req_id, Instant::now());
-        if stream.write_all(&frame).is_err() {
+        if frame::write_frame(&mut stream, &template).is_err() {
             // The send never made it; do not leave it looking lost.
             outstanding
                 .lock()
@@ -324,10 +306,9 @@ fn receiver_loop(
                 break;
             }
         }
-        match stream.read(&mut tmp) {
+        match frame::read_into(&mut stream, &mut buf, &mut tmp) {
             Ok(0) => break,
-            Ok(k) => {
-                buf.extend(&tmp[..k]);
+            Ok(_) => {
                 loop {
                     match buf.next_response() {
                         Ok(Some(resp)) => account(&mut stats, &resp, outstanding),

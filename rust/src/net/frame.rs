@@ -1,12 +1,19 @@
-//! Wire protocol for the kernel-serving front-end (ISSUE 9).
+//! Wire protocol for the kernel-serving front-end (ISSUE 9; version
+//! byte and the dist message frames that ride it: ISSUE 10).
 //!
 //! Every frame is a little-endian `u32` length prefix (bytes *after* the
-//! prefix) followed by an 18-byte header and an f64 payload:
+//! prefix) followed by a 19-byte header and an f64 payload:
 //!
 //! ```text
-//! request:  len:u32 | req_id:u64 | op:u8 | flags:u8 | deadline_us:u32 | n:u32 | payload f64*
-//! response: len:u32 | req_id:u64 | status:u8 | flags:u8 | reserved:u32 | n:u32 | payload f64*
+//! request:  len:u32 | ver:u8 | req_id:u64 | op:u8 | flags:u8 | deadline_us:u32 | n:u32 | payload f64*
+//! response: len:u32 | ver:u8 | req_id:u64 | status:u8 | flags:u8 | reserved:u32 | n:u32 | payload f64*
 //! ```
+//!
+//! * `ver` is the protocol version ([`PROTO_VERSION`]).  The version
+//!   byte and `req_id` sit at **fixed offsets in every version** — the
+//!   forward-compat contract that lets a server decode enough of a
+//!   foreign-version frame to answer [`Status::BadRequest`] (addressed
+//!   by `req_id`) instead of silently desyncing on an unknown layout.
 //!
 //! * `op` selects the kernel ([`WireOp`]); `n` is the operand dimension
 //!   (vector length / square-matrix edge).
@@ -34,8 +41,14 @@
 /// the dimension cap (512² doubles = 2 MiB) with room to spare.
 pub const MAX_FRAME_LEN: u32 = 8 << 20;
 
-/// Bytes in the fixed header after the length prefix.
-pub const HDR_LEN: usize = 18;
+/// Wire protocol version, the first body byte of every frame (serving
+/// *and* dist).  Bumped on any layout change; a mismatch decodes to
+/// [`FrameError::BadVersion`] and is answered `BadRequest`.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Bytes in the fixed header after the length prefix (version byte
+/// included).
+pub const HDR_LEN: usize = 19;
 
 /// The kernels the wire protocol serves — the same four the in-process
 /// serving mix cycles through.
@@ -203,6 +216,10 @@ pub enum FrameError {
     LengthMismatch { req_id: u64, expect: usize, got: usize },
     /// Unknown status code (client-side decode).
     BadStatus { req_id: u64, code: u8 },
+    /// Version byte differs from [`PROTO_VERSION`].  `req_id` is still
+    /// readable (fixed-offset contract), so the peer gets an addressed
+    /// `BadRequest` instead of a silent desync.
+    BadVersion { req_id: u64, got: u8 },
 }
 
 impl FrameError {
@@ -214,7 +231,8 @@ impl FrameError {
             FrameError::BadOp { req_id, .. }
             | FrameError::BadDim { req_id, .. }
             | FrameError::LengthMismatch { req_id, .. }
-            | FrameError::BadStatus { req_id, .. } => Some(req_id),
+            | FrameError::BadStatus { req_id, .. }
+            | FrameError::BadVersion { req_id, .. } => Some(req_id),
         }
     }
 }
@@ -230,24 +248,55 @@ impl std::fmt::Display for FrameError {
                 write!(f, "payload length {got} != expected {expect}")
             }
             FrameError::BadStatus { code, .. } => write!(f, "unknown status code {code}"),
+            FrameError::BadVersion { got, .. } => {
+                write!(f, "protocol version {got} != {PROTO_VERSION}")
+            }
         }
     }
 }
 
 impl std::error::Error for FrameError {}
 
-fn put_f64s(out: &mut Vec<u8>, vals: &[f64]) {
+/// Append `vals` little-endian — the payload codec shared by the
+/// serving frames and the dist message frames.
+pub(crate) fn put_f64s(out: &mut Vec<u8>, vals: &[f64]) {
     out.reserve(vals.len() * 8);
     for v in vals {
         out.extend_from_slice(&v.to_le_bytes());
     }
 }
 
-fn get_f64s(bytes: &[u8]) -> Vec<f64> {
+/// Decode a little-endian f64 payload (trailing partial chunks are a
+/// framing bug and are dropped by `chunks_exact`; decoders length-check
+/// before calling).
+pub(crate) fn get_f64s(bytes: &[u8]) -> Vec<f64> {
     bytes
         .chunks_exact(8)
         .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
         .collect()
+}
+
+/// One read into `buf` through `scratch`, returning the byte count (0 =
+/// EOF).  The single implementation behind every frame-reassembly read
+/// loop (server shards, blocking client, loadgen receivers, dist links)
+/// — previously copy-pasted per site.
+pub fn read_into<R: std::io::Read>(
+    stream: &mut R,
+    buf: &mut FrameBuf,
+    scratch: &mut [u8],
+) -> std::io::Result<usize> {
+    let k = stream.read(scratch)?;
+    if k > 0 {
+        buf.extend(&scratch[..k]);
+    }
+    Ok(k)
+}
+
+/// Write one already-encoded frame and push it to the wire (frames are
+/// the flush granularity everywhere: replies, submits, completions).
+pub fn write_frame<W: std::io::Write>(stream: &mut W, frame: &[u8]) -> std::io::Result<()> {
+    stream.write_all(frame)?;
+    stream.flush()
 }
 
 /// Encode a request into a fresh byte buffer (prefix included).
@@ -255,6 +304,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
     let body_len = HDR_LEN + req.payload.len() * 8;
     let mut out = Vec::with_capacity(4 + body_len);
     out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(PROTO_VERSION);
     out.extend_from_slice(&req.req_id.to_le_bytes());
     out.push(req.op.code());
     out.push(0); // request flags: reserved
@@ -269,6 +319,7 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
     let body_len = HDR_LEN + resp.payload.len() * 8;
     let mut out = Vec::with_capacity(4 + body_len);
     out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(PROTO_VERSION);
     out.extend_from_slice(&resp.req_id.to_le_bytes());
     out.push(resp.status.code());
     out.push(resp.deadline_missed as u8);
@@ -278,10 +329,11 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
     out
 }
 
-/// Byte offset of `req_id` within an encoded frame — lets the load
-/// generator patch a pre-encoded template per send instead of re-encoding
-/// the payload every request.
-pub const REQ_ID_OFFSET: usize = 4;
+/// Byte offset of `req_id` within an encoded frame (after the length
+/// prefix and version byte) — lets the load generator patch a
+/// pre-encoded template per send instead of re-encoding the payload
+/// every request.
+pub const REQ_ID_OFFSET: usize = 5;
 
 struct Header {
     req_id: u64,
@@ -295,12 +347,21 @@ fn split_header(body: &[u8]) -> Result<(Header, &[u8]), FrameError> {
     if body.len() < HDR_LEN {
         return Err(FrameError::Truncated);
     }
+    // req_id before the version check: both sit at fixed offsets in
+    // every protocol version, so a mismatched frame is still addressable.
+    let req_id = u64::from_le_bytes(body[1..9].try_into().expect("8 bytes"));
+    if body[0] != PROTO_VERSION {
+        return Err(FrameError::BadVersion {
+            req_id,
+            got: body[0],
+        });
+    }
     let hdr = Header {
-        req_id: u64::from_le_bytes(body[0..8].try_into().expect("8 bytes")),
-        b0: body[8],
-        b1: body[9],
-        w0: u32::from_le_bytes(body[10..14].try_into().expect("4 bytes")),
-        n: u32::from_le_bytes(body[14..18].try_into().expect("4 bytes")),
+        req_id,
+        b0: body[9],
+        b1: body[10],
+        w0: u32::from_le_bytes(body[11..15].try_into().expect("4 bytes")),
+        n: u32::from_le_bytes(body[15..19].try_into().expect("4 bytes")),
     };
     Ok((hdr, &body[HDR_LEN..]))
 }
@@ -536,6 +597,20 @@ mod tests {
         fb.extend(&encode_request(&req));
         let err = fb.next_request().unwrap_err();
         assert!(matches!(err, FrameError::LengthMismatch { .. }));
+        assert_eq!(err.req_id(), Some(req.req_id));
+    }
+
+    #[test]
+    fn version_mismatch_is_addressable_bad_version() {
+        let req = sample_request(WireOp::Daxpy, 4);
+        let mut bytes = encode_request(&req);
+        bytes[4] = PROTO_VERSION + 1; // foreign version byte
+        let mut fb = FrameBuf::new();
+        fb.extend(&bytes);
+        let err = fb.next_request().unwrap_err();
+        assert!(matches!(err, FrameError::BadVersion { .. }));
+        // The fixed-offset contract: the id survives the mismatch, so a
+        // server can answer BadRequest instead of silently desyncing.
         assert_eq!(err.req_id(), Some(req.req_id));
     }
 

@@ -28,8 +28,28 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::net::batch::{BatchCfg, Coalescer, Engine, ReplySink, WireStats};
-use crate::net::frame::{encode_response, FrameBuf, Response, Status};
+use crate::net::frame::{self, encode_response, FrameBuf, Request, Response, Status};
 use crate::omp::OmpRuntime;
+
+/// Where decoded requests go: the in-process [`Coalescer`] for a plain
+/// server, the dist shard router for `serve --shards` (ISSUE 10) — the
+/// IO layer is identical either way (connection reuse for the dist
+/// front-end).
+pub trait RequestHandler: Send + Sync {
+    fn submit(&self, req: Request, sink: Arc<dyn ReplySink>);
+    /// Called once from server shutdown, before threads are joined.
+    fn on_shutdown(&self) {}
+}
+
+impl RequestHandler for Coalescer {
+    fn submit(&self, req: Request, sink: Arc<dyn ReplySink>) {
+        Coalescer::submit(self, req, sink);
+    }
+
+    fn on_shutdown(&self) {
+        Coalescer::shutdown(self);
+    }
+}
 
 /// Listen / connect address: `tcp:host:port`, `uds:/path`, or a bare
 /// `host:port` (TCP).
@@ -72,6 +92,20 @@ pub enum WireStream {
 }
 
 impl WireStream {
+    /// Connect to a wire address (TCP with nodelay, or UDS) — the one
+    /// dialer behind the blocking client, the load generator, and the
+    /// dist worker links.
+    pub fn connect(addr: &WireAddr) -> std::io::Result<WireStream> {
+        Ok(match addr {
+            WireAddr::Tcp(hp) => {
+                let s = TcpStream::connect(hp.as_str())?;
+                let _ = s.set_nodelay(true);
+                WireStream::Tcp(s)
+            }
+            WireAddr::Uds(p) => WireStream::Uds(UnixStream::connect(p)?),
+        })
+    }
+
     fn as_raw_fd(&self) -> RawFd {
         match self {
             WireStream::Tcp(s) => s.as_raw_fd(),
@@ -93,7 +127,7 @@ impl WireStream {
         }
     }
 
-    fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+    pub(crate) fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
         match self {
             WireStream::Tcp(s) => s.set_write_timeout(t),
             WireStream::Uds(s) => s.set_write_timeout(t),
@@ -158,7 +192,7 @@ impl ReplySink for ConnTx {
         }
         let bytes = encode_response(resp);
         let mut s = self.stream.lock().expect("conn writer poisoned");
-        if s.write_all(&bytes).and_then(|_| s.flush()).is_err() {
+        if frame::write_frame(&mut *s, &bytes).is_err() {
             self.alive.store(false, Ordering::Release);
         }
     }
@@ -214,7 +248,7 @@ struct Conn {
 /// Running wire server; dropping it shuts everything down and joins all
 /// threads.
 pub struct WireServer {
-    coalescer: Arc<Coalescer>,
+    handler: Arc<dyn RequestHandler>,
     stats: Arc<WireStats>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
@@ -237,6 +271,27 @@ impl WireServer {
         let stats = Arc::new(WireStats::default());
         let engine = Arc::new(Engine::new(rt, cfg, stats.clone()));
         let coalescer = Coalescer::new(engine, cfg);
+        let batcher = {
+            let coal = coalescer.clone();
+            std::thread::Builder::new()
+                .name("hpxmp-wire-batch".into())
+                .spawn(move || coal.run_batcher())
+                .expect("spawn batcher")
+        };
+        let mut server = Self::start_with(coalescer, stats, addrs)?;
+        server.threads.push(batcher);
+        Ok(server)
+    }
+
+    /// Bind every address and start the acceptor/IO threads in front of
+    /// an arbitrary [`RequestHandler`] — how the dist shard router
+    /// reuses the whole connection layer (no batcher thread here; a
+    /// handler that needs one owns it).
+    pub fn start_with(
+        handler: Arc<dyn RequestHandler>,
+        stats: Arc<WireStats>,
+        addrs: &[WireAddr],
+    ) -> std::io::Result<WireServer> {
         let shutdown = Arc::new(AtomicBool::new(false));
 
         let mut listeners = Vec::new();
@@ -292,28 +347,19 @@ impl WireServer {
         }
         for (i, inbox) in shards.into_iter().enumerate() {
             let wake_rd = wake_fds[i].0;
-            let coal = coalescer.clone();
+            let handler = handler.clone();
             let stop = shutdown.clone();
             let stats = stats.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("hpxmp-wire-io{i}"))
-                    .spawn(move || shard_loop(&inbox, wake_rd, &coal, &stop, &stats))
+                    .spawn(move || shard_loop(&inbox, wake_rd, &*handler, &stop, &stats))
                     .expect("spawn io shard"),
-            );
-        }
-        {
-            let coal = coalescer.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name("hpxmp-wire-batch".into())
-                    .spawn(move || coal.run_batcher())
-                    .expect("spawn batcher"),
             );
         }
 
         Ok(WireServer {
-            coalescer,
+            handler,
             stats,
             shutdown,
             threads,
@@ -369,7 +415,7 @@ impl WireServer {
         if self.shutdown.swap(true, Ordering::AcqRel) {
             return;
         }
-        self.coalescer.shutdown();
+        self.handler.on_shutdown();
         for &(_, wr) in &self.wake_fds {
             let b = [1u8];
             // SAFETY: pipe write ends are open until the join below.
@@ -434,7 +480,7 @@ fn accept_loop(
 fn shard_loop(
     inbox: &ShardInbox,
     wake_rd: RawFd,
-    coal: &Coalescer,
+    handler: &dyn RequestHandler,
     stop: &AtomicBool,
     stats: &WireStats,
 ) {
@@ -491,7 +537,7 @@ fn shard_loop(
         for (idx, conn) in conns.iter_mut().enumerate() {
             let revents = pfds[idx + 1].revents;
             let ready = revents & (libc::POLLIN | libc::POLLHUP | libc::POLLERR) != 0;
-            if ready && !conn_readable(conn, coal, stats, &mut read_buf) {
+            if ready && !conn_readable(conn, handler, stats, &mut read_buf) {
                 dead.push(idx);
             }
         }
@@ -505,19 +551,18 @@ fn shard_loop(
 /// connection should be dropped (EOF, IO error, or protocol violation).
 fn conn_readable(
     conn: &mut Conn,
-    coal: &Coalescer,
+    handler: &dyn RequestHandler,
     stats: &WireStats,
     scratch: &mut [u8],
 ) -> bool {
-    match conn.stream.read(scratch) {
+    match frame::read_into(&mut conn.stream, &mut conn.buf, scratch) {
         Ok(0) => false,
-        Ok(k) => {
-            conn.buf.extend(&scratch[..k]);
+        Ok(_) => {
             loop {
                 match conn.buf.next_request() {
                     Ok(Some(req)) => {
                         let sink: Arc<dyn ReplySink> = conn.tx.clone();
-                        coal.submit(req, sink);
+                        handler.submit(req, sink);
                     }
                     Ok(None) => break true,
                     Err(e) => {

@@ -170,11 +170,22 @@ fn malformed_frames_get_bad_request_and_drop() {
     // Header n disagreeing with the payload length: same contract.
     let mut cl = WireClient::connect(&addr).expect("connect");
     let mut bytes = encode_request(&valid);
-    bytes[18..22].copy_from_slice(&5u32.to_le_bytes());
+    bytes[19..23].copy_from_slice(&5u32.to_le_bytes());
     cl.send_raw(&bytes).expect("send");
     let resp = cl.recv().expect("bad-request reply");
     assert_eq!(resp.req_id, 77);
     assert_eq!(resp.status, Status::BadRequest);
+
+    // Foreign protocol version: the fixed-offset contract keeps the id
+    // readable, so the reply is an addressed BadRequest, not a desync.
+    let mut cl = WireClient::connect(&addr).expect("connect");
+    let mut bytes = encode_request(&valid);
+    bytes[4] = 99; // version byte
+    cl.send_raw(&bytes).expect("send");
+    let resp = cl.recv().expect("bad-version reply");
+    assert_eq!(resp.req_id, 77);
+    assert_eq!(resp.status, Status::BadRequest);
+    assert!(cl.recv().is_err(), "mismatched version must drop the connection");
 
     // Oversized length prefix: no id to address -> silent hang-up.
     let mut cl = WireClient::connect(&addr).expect("connect");
